@@ -1,0 +1,63 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+# default repetition count; the paper uses 1000 — pass --reps 1000 to match
+# (results are stable well before that)
+DEFAULT_REPS = 200
+
+
+class Rows:
+    """Collects result rows and prints aligned tables + CSV lines."""
+
+    def __init__(self, title: str, columns: list[str]):
+        self.title = title
+        self.columns = columns
+        self.rows: list[list] = []
+
+    def add(self, *values) -> None:
+        self.rows.append(list(values))
+
+    def render(self) -> str:
+        w = [
+            max(len(str(c)), *(len(_fmt(r[i])) for r in self.rows))
+            if self.rows else len(str(c))
+            for i, c in enumerate(self.columns)
+        ]
+        out = [f"== {self.title} =="]
+        out.append("  ".join(str(c).ljust(w[i])
+                             for i, c in enumerate(self.columns)))
+        for r in self.rows:
+            out.append("  ".join(_fmt(v).ljust(w[i])
+                                 for i, v in enumerate(r)))
+        return "\n".join(out)
+
+    def csv(self) -> list[str]:
+        tag = self.title.split(":")[0].replace(" ", "_").lower()
+        lines = []
+        for r in self.rows:
+            lines.append(f"{tag}," + ",".join(_fmt(v) for v in r))
+        return lines
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def timed(fn, *args, reps: int = 5, **kwargs) -> tuple[float, object]:
+    out = None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / reps
+    return dt, out
+
+
+def mean(xs) -> float:
+    return float(np.mean(xs)) if len(xs) else float("nan")

@@ -1,0 +1,33 @@
+"""Paper Fig. 2/3 + Fig. 11: task speedup profiles — the Rodinia-style
+fixture and a synthetic sample (verifies the generator reproduces the
+described regimes: super-linear memory-bound, near-linear, saturating)."""
+
+from repro.core.device_spec import A100
+from repro.core.rodinia import rodinia_tasks
+from repro.core.synth import generate_tasks, workload
+
+from benchmarks.common import Rows
+
+
+def run(reps: int = 0) -> Rows:
+    rows = Rows(
+        "Fig 3/11: speedup vs slices (A100)",
+        ["task", "sp(2)", "sp(3)", "sp(4)", "sp(7)", "regime"],
+    )
+    for t in rodinia_tasks(A100)[:8]:
+        sp = {s: t.times[1] / t.times[s] for s in (2, 3, 4, 7)}
+        regime = (
+            "super-linear" if sp[7] > 7 else
+            "saturating" if sp[7] < 3 else "near-linear"
+        )
+        rows.add(t.name, sp[2], sp[3], sp[4], sp[7], regime)
+    cfg = workload("mixed", "wide", A100)
+    n_super = 0
+    tasks = generate_tasks(10, A100, cfg, seed=0)
+    for t in tasks:
+        sp = {s: t.times[1] / t.times[s] for s in (2, 3, 4, 7)}
+        if sp[2] > 2.0:
+            n_super += 1
+        rows.add(f"synth{t.id}", sp[2], sp[3], sp[4], sp[7], "synthetic")
+    assert n_super >= 1, "generator lost the super-linear regime"
+    return rows

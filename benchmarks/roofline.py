@@ -1,0 +1,81 @@
+"""Roofline table from the dry-run reports (EXPERIMENTS.md §Roofline) and
+the TPU-pod scheduling benchmark that consumes it.
+
+Reads ``reports/dryrun/*__single.json`` (written by
+``python -m repro.launch.dryrun --all``), prints the three roofline terms
+per (arch × shape), the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS and the
+MFU upper bound; then schedules a mixed job set on the TPU pod with FAR
+using the cost model calibrated to the same constants."""
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS
+from repro.core.costmodel import Job, job_to_task
+from repro.core.device_spec import TPU_POD_256
+from repro.core.far import rho, schedule_batch
+from repro.models.config import SHAPES
+
+from benchmarks.common import Rows
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "reports")
+# prefer the final (post-§Perf) dry-run reports; fall back to the baseline
+REPORT_DIR = (
+    os.path.join(_BASE, "dryrun_final")
+    if os.path.isdir(os.path.join(_BASE, "dryrun_final"))
+    else os.path.join(_BASE, "dryrun")
+)
+
+
+def run(reps: int = 0) -> Rows:
+    rows = Rows(
+        "Roofline (single pod, per device): terms in seconds/step",
+        ["arch", "shape", "compute", "memory", "collective", "bottleneck",
+         "useful/hlo", "mfu_ub", "fits_hbm"],
+    )
+    files = sorted(glob.glob(os.path.join(REPORT_DIR, "*__single.json")))
+    if not files:
+        rows.add("(run `python -m repro.launch.dryrun --all` first)",
+                 "", "", "", "", "", "", "")
+        return rows
+    for path in files:
+        with open(path) as f:
+            rep = json.load(f)
+        if rep.get("status") != "ok":
+            rows.add(rep["arch"], rep["shape"], "-", "-", "-",
+                     rep.get("status"), "-", "-",
+                     rep.get("reason", rep.get("error", ""))[:40])
+            continue
+        t = rep["roofline_s"]
+        rows.add(
+            rep["arch"], rep["shape"], t["compute"], t["memory"],
+            t["collective"], rep["bottleneck"],
+            rep["useful_flops_ratio"], rep["mfu_upper_bound"],
+            rep["fits_hbm"],
+        )
+    return rows
+
+
+def run_far_on_pod(reps: int = 0) -> Rows:
+    """FAR scheduling a mixed (arch × shape) job set on the TPU pod."""
+    rows = Rows(
+        "FAR on TPU_POD_256: mixed production job set",
+        ["jobs", "makespan_s", "rho", "alloc_sizes"],
+    )
+    jobs = []
+    jid = 0
+    for arch in ("qwen2.5-3b", "gemma3-12b", "qwen2-moe-a2.7b",
+                 "zamba2-2.7b", "xlstm-350m", "whisper-small"):
+        for shape in ("train_4k", "decode_32k"):
+            jobs.append(Job(jid, ARCHS[arch], SHAPES[shape],
+                            steps=200 + 50 * jid))
+            jid += 1
+    tasks = [job_to_task(j, TPU_POD_256) for j in jobs]
+    res = schedule_batch(tasks, TPU_POD_256)
+    sizes = sorted(
+        (it.task.name.split("/")[0], it.size) for it in res.schedule.items
+    )
+    rows.add(len(jobs), res.makespan, rho(res, tasks),
+             " ".join(f"{n}:{s}" for n, s in sizes[:6]) + " …")
+    return rows

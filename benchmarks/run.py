@@ -1,0 +1,73 @@
+"""Benchmark runner — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--reps N] [--only t4,t5]
+
+Prints each table and a machine-readable CSV block at the end
+(``table,<fields...>`` lines).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    fig3_speedups,
+    roofline,
+    t1_reconfig,
+    t3_sim_vs_exec,
+    t4_rho,
+    t5_vs_baselines,
+    t6_refinement,
+    t7_concat,
+    t9_multibatch,
+    t_cost,
+    t_online,
+)
+from benchmarks.common import DEFAULT_REPS
+
+MODULES = {
+    "t1": (t1_reconfig, "Table 1 reconfig times"),
+    "fig3": (fig3_speedups, "Fig 3 speedup profiles"),
+    "t3": (t3_sim_vs_exec, "Table 3 sim vs executed"),
+    "t4": (t4_rho, "Table 4 rho vs n"),
+    "t5": (t5_vs_baselines, "Table 5 vs baselines"),
+    "t6": (t6_refinement, "Table 6 refinement"),
+    "t7": (t7_concat, "Tables 7+8 concatenation"),
+    "t9": (t9_multibatch, "Table 9 multi-batch"),
+    "cost": (t_cost, "Scheduler cost"),
+    "online": (t_online, "Online vs batched FAR"),
+    "roofline": (roofline, "Roofline from dry-run"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=DEFAULT_REPS,
+                    help="repetitions per config (paper used 1000)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys, e.g. t4,t5")
+    args = ap.parse_args()
+
+    keys = list(MODULES) if not args.only else args.only.split(",")
+    all_csv: list[str] = []
+    for key in keys:
+        mod, desc = MODULES[key]
+        t0 = time.time()
+        rows = mod.run(reps=args.reps)
+        print(rows.render())
+        print(f"   [{desc}: {time.time() - t0:.1f}s]\n")
+        all_csv.extend(rows.csv())
+        if key == "roofline" and hasattr(mod, "run_far_on_pod"):
+            rows2 = mod.run_far_on_pod()
+            print(rows2.render())
+            print()
+            all_csv.extend(rows2.csv())
+
+    print("== CSV ==")
+    for line in all_csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

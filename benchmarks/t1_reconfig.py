@@ -1,0 +1,16 @@
+"""Paper Table 1: instance create/destroy times per device and size."""
+
+from repro.core.device_spec import A30, A100, H100, TPU_POD_256
+
+from benchmarks.common import Rows
+
+
+def run(reps: int = 0) -> Rows:
+    rows = Rows(
+        "Table 1: reconfiguration times (s)",
+        ["device", "size", "create", "destroy"],
+    )
+    for spec in (A30, A100, H100, TPU_POD_256):
+        for s in spec.sizes:
+            rows.add(spec.name, s, spec.t_create[s], spec.t_destroy[s])
+    return rows

@@ -1,0 +1,46 @@
+"""Paper §6.4: ρ = makespan / area-lower-bound.
+
+§6.4.1 (Rodinia fixture, paper: 1.22) and Table 4 (synthetic, WideTimes,
+ρ vs n for the three scaling mixes; paper: 1.20-1.23 at n=10 down to
+1.01-1.02 at n=35)."""
+
+import numpy as np
+
+from repro.core.device_spec import A30, A100
+from repro.core.far import rho, schedule_batch
+from repro.core.rodinia import rodinia_tasks
+from repro.core.synth import generate_tasks, workload
+
+from benchmarks.common import Rows
+
+
+def run(reps: int = 100) -> Rows:
+    rows = Rows(
+        "Table 4 / §6.4: rho vs optimum lower bound (A100, WideTimes)",
+        ["config", "n", "rho_mean", "paper"],
+    )
+    tasks = rodinia_tasks(A100)
+    r = schedule_batch(tasks, A100)
+    rows.add("rodinia-fixture(16)", 16, rho(r, tasks), 1.22)
+    t30 = rodinia_tasks(A30)
+    r30 = schedule_batch(t30, A30)
+    rows.add("rodinia-fixture/A30", 16, rho(r30, t30), "~1.01")
+
+    paper = {
+        ("poor", 10): 1.23, ("poor", 15): 1.08, ("poor", 20): 1.04,
+        ("poor", 25): 1.03, ("poor", 30): 1.02, ("poor", 35): 1.02,
+        ("mixed", 10): 1.20, ("mixed", 15): 1.08, ("mixed", 20): 1.04,
+        ("mixed", 25): 1.03, ("mixed", 30): 1.02, ("mixed", 35): 1.02,
+        ("good", 10): 1.21, ("good", 15): 1.07, ("good", 20): 1.05,
+        ("good", 25): 1.03, ("good", 30): 1.02, ("good", 35): 1.01,
+    }
+    for scaling in ("poor", "mixed", "good"):
+        cfg = workload(scaling, "wide", A100)
+        for n in (10, 15, 20, 25, 30, 35):
+            vals = []
+            for seed in range(reps):
+                ts = generate_tasks(n, A100, cfg, seed=seed)
+                vals.append(rho(schedule_batch(ts, A100), ts))
+            rows.add(f"{scaling}Scaling", n, float(np.mean(vals)),
+                     paper[(scaling, n)])
+    return rows

@@ -1,0 +1,64 @@
+"""Paper Table 5 (+ Fig. 12): σ_A = makespan(A) / makespan(FAR).
+
+Baselines: MISO-OPT [31], FixPart(1,...,1), FixPartBest, FixPart(7).
+Paper row order and values are printed alongside ours."""
+
+import numpy as np
+
+from repro.core.baselines import (
+    fix_part, fix_part_best, miso_opt, partition_of_ones, partition_whole,
+)
+from repro.core.device_spec import A100
+from repro.core.far import schedule_batch
+from repro.core.rodinia import rodinia_tasks
+from repro.core.synth import ALL_WORKLOADS, generate_tasks, workload
+
+from benchmarks.common import Rows
+
+PAPER = {
+    ("poor", "narrow"): (1.19, 1.25, 1.24, 3.29),
+    ("poor", "wide"): (1.55, 1.29, 1.22, 3.39),
+    ("mixed", "narrow"): (1.62, 1.39, 1.13, 2.17),
+    ("mixed", "wide"): (2.03, 1.47, 1.09, 2.16),
+    ("good", "narrow"): (1.83, 1.61, 1.00, 1.31),
+    ("good", "wide"): (2.14, 1.78, 1.01, 1.28),
+}
+
+
+def run(reps: int = 100) -> Rows:
+    rows = Rows(
+        "Table 5: sigma vs FAR (A100, n=15)",
+        ["workload", "miso", "ones", "best", "whole",
+         "paper(miso,ones,best,whole)"],
+    )
+    tasks = rodinia_tasks(A100)
+    far = schedule_batch(tasks, A100).makespan
+    rows.add(
+        "rodinia-fixture",
+        miso_opt(tasks, A100).makespan / far,
+        fix_part(tasks, A100, partition_of_ones(A100)).makespan / far,
+        fix_part_best(tasks, A100)[0].makespan / far,
+        fix_part(tasks, A100, partition_whole(A100)).makespan / far,
+        "(2.10,2.18,1.16,1.26)",
+    )
+    for scaling, times in ALL_WORKLOADS:
+        cfg = workload(scaling, times, A100)
+        sig = {k: [] for k in ("miso", "ones", "best", "whole")}
+        for seed in range(reps):
+            ts = generate_tasks(15, A100, cfg, seed=seed)
+            f = schedule_batch(ts, A100).makespan
+            sig["miso"].append(miso_opt(ts, A100).makespan / f)
+            sig["ones"].append(
+                fix_part(ts, A100, partition_of_ones(A100)).makespan / f
+            )
+            sig["best"].append(fix_part_best(ts, A100)[0].makespan / f)
+            sig["whole"].append(
+                fix_part(ts, A100, partition_whole(A100)).makespan / f
+            )
+        rows.add(
+            cfg.name,
+            *(float(np.mean(sig[k])) for k in ("miso", "ones", "best",
+                                               "whole")),
+            str(PAPER[(scaling, times)]),
+        )
+    return rows

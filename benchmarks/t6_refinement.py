@@ -1,0 +1,42 @@
+"""Paper Table 6: refinement (phase 3) contribution p_ref and op counts."""
+
+import numpy as np
+
+from repro.core.device_spec import A100
+from repro.core.far import schedule_batch
+from repro.core.synth import ALL_WORKLOADS, generate_tasks, workload
+
+from benchmarks.common import Rows
+
+PAPER_PREF = {
+    ("poor", "narrow"): (0.31, 13.15, 11.45),
+    ("poor", "wide"): (0.28, 14.98, 8.76),
+    ("mixed", "narrow"): (0.76, 13.87, 9.04),
+    ("mixed", "wide"): (3.21, 11.45, 9.01),
+    ("good", "narrow"): (0.78, 13.44, 7.54),
+    ("good", "wide"): (1.34, 12.56, 9.32),
+}
+
+
+def run(reps: int = 100) -> Rows:
+    rows = Rows(
+        "Table 6: refinement contribution (A100)",
+        ["workload", "n", "p_ref_%", "moves", "swaps", "paper_p_ref"],
+    )
+    for scaling, times in ALL_WORKLOADS:
+        cfg = workload(scaling, times, A100)
+        for idx, n in enumerate((10, 20, 30)):
+            prefs, moves, swaps = [], [], []
+            for seed in range(reps):
+                ts = generate_tasks(n, A100, cfg, seed=seed)
+                r_no = schedule_batch(ts, A100, refine=False)
+                r_yes = schedule_batch(ts, A100, refine=True)
+                prefs.append(
+                    (r_no.makespan / r_yes.makespan - 1.0) * 100
+                )
+                moves.append(r_yes.refine_stats.moves)
+                swaps.append(r_yes.refine_stats.swaps)
+            rows.add(cfg.name, n, float(np.mean(prefs)),
+                     float(np.mean(moves)), float(np.mean(swaps)),
+                     PAPER_PREF[(scaling, times)][idx])
+    return rows

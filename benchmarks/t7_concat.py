@@ -1,0 +1,50 @@
+"""Paper Tables 7+8: concatenation contribution at batch seams.
+
+Pairwise protocol: schedule B_k and B_{k+1} with FAR, commit B_k, then
+splice B_{k+1} three ways — trivial barrier, reversed with per-slice
+overlap (§4.2), reversed + seam move/swap (§4.3) — and report the
+improvement percentages and the number of seam operations."""
+
+import numpy as np
+
+from repro.core.device_spec import A100
+from repro.core.far import schedule_batch
+from repro.core.multibatch import Tail, concatenate
+from repro.core.synth import ALL_WORKLOADS, generate_tasks, workload
+
+from benchmarks.common import Rows
+
+
+def run(reps: int = 100) -> Rows:
+    rows = Rows(
+        "Tables 7+8: seam concatenation (A100, pairwise)",
+        ["workload", "n", "p_rev_%", "p_move/swap_%", "moves", "swaps"],
+    )
+    for scaling, times in ALL_WORKLOADS:
+        cfg = workload(scaling, times, A100)
+        for n in (10, 20, 30):
+            p_rev, p_ms, nm, ns = [], [], [], []
+            for seed in range(reps):
+                b1 = generate_tasks(n, A100, cfg, seed=2 * seed)
+                b2 = generate_tasks(n, A100, cfg, seed=2 * seed + 1,
+                                    id_offset=1000)
+                f1 = schedule_batch(b1, A100)
+                tail = concatenate(
+                    f1.assignment, Tail.empty(A100), mode="reverse",
+                    reverse=False,
+                ).tail
+                f2 = schedule_batch(b2, A100)
+                triv = concatenate(f2.assignment, tail, mode="trivial")
+                rev = concatenate(f2.assignment, tail, mode="reverse",
+                                  reverse=True)
+                ms = concatenate(f2.assignment, tail, mode="move_swap",
+                                 reverse=True)
+                t = triv.schedule.makespan
+                p_rev.append((t / rev.schedule.makespan - 1) * 100)
+                p_ms.append((t / ms.schedule.makespan - 1) * 100)
+                nm.append(ms.moves)
+                ns.append(ms.swaps)
+            rows.add(cfg.name, n, float(np.mean(p_rev)),
+                     float(np.mean(p_ms)), float(np.mean(nm)),
+                     float(np.mean(ns)))
+    return rows

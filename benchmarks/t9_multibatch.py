@@ -1,0 +1,44 @@
+"""Paper Table 9: multi-batch error vs the offline area lower bound.
+
+p = (makespan / baseline_multibatch - 1)·100 over a long chain of FAR
+batches spliced online.  NOTE (EXPERIMENTS.md): the paper reports 84-95%
+here, which is inconsistent with its own per-batch ρ ≤ 1.08 under any
+work-conserving concatenation (trivial chaining of batches with ρ≈1.05
+yields p≈5-25%); our concatenation is work-conserving, so our numbers are
+far lower.  We report trivial vs move_swap to isolate the seam gain."""
+
+import numpy as np
+
+from repro.core.device_spec import A100
+from repro.core.multibatch import MultiBatchScheduler, multibatch_baseline
+from repro.core.synth import generate_tasks, workload
+
+from benchmarks.common import Rows
+
+
+def run(reps: int = 0, n_batches: int = 60) -> Rows:
+    rows = Rows(
+        "Table 9: multi-batch p vs offline lower bound (A100, WideTimes)",
+        ["config", "n", "p_trivial_%", "p_move/swap_%", "paper_%"],
+    )
+    paper = {("poor", 10): 84.42, ("poor", 20): 95.21, ("poor", 30): 92.32,
+             ("mixed", 10): 89.56, ("mixed", 20): 93.01,
+             ("mixed", 30): 90.21,
+             ("good", 10): 82.67, ("good", 20): 94.46, ("good", 30): 92.32}
+    for scaling in ("poor", "mixed", "good"):
+        cfg = workload(scaling, "wide", A100)
+        for n in (10, 20, 30):
+            batches = [
+                generate_tasks(n, A100, cfg, seed=s, id_offset=10_000 * s)
+                for s in range(n_batches)
+            ]
+            lb = multibatch_baseline(batches, A100)
+            out = {}
+            for mode in ("trivial", "move_swap"):
+                mb = MultiBatchScheduler(A100, mode=mode)
+                for b in batches:
+                    mb.add_batch(b)
+                out[mode] = (mb.makespan / lb - 1) * 100
+            rows.add(f"{scaling}Scaling", n, out["trivial"],
+                     out["move_swap"], paper[(scaling, n)])
+    return rows

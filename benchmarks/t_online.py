@@ -1,0 +1,36 @@
+"""Online vs offline (batched FAR) — quantifies what batching buys
+(the paper's §2.3 argument and §7 future work)."""
+
+import numpy as np
+
+from repro.core.device_spec import A100
+from repro.core.far import schedule_batch
+from repro.core.online import OnlineScheduler
+from repro.core.problem import validate_schedule
+from repro.core.synth import generate_tasks, workload
+
+from benchmarks.common import Rows
+
+
+def run(reps: int = 40) -> Rows:
+    rows = Rows(
+        "Online greedy vs offline FAR (A100)",
+        ["workload", "n", "omega_online/omega_FAR", "theory_bound"],
+    )
+    reps = max(10, min(reps, 60))
+    for scaling in ("poor", "mixed", "good"):
+        cfg = workload(scaling, "wide", A100)
+        for n in (10, 20):
+            ratios = []
+            for seed in range(reps):
+                tasks = generate_tasks(n, A100, cfg, seed=seed)
+                far = schedule_batch(tasks, A100)
+                online = OnlineScheduler(A100)
+                for t in tasks:
+                    online.submit(t)
+                sched = online.schedule()
+                validate_schedule(sched, tasks)
+                ratios.append(sched.makespan / far.makespan)
+            rows.add(cfg.name, n, float(np.mean(ratios)),
+                     "2*rho (batched, [38])")
+    return rows

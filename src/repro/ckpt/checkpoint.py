@@ -1,0 +1,134 @@
+"""Atomic npz checkpointing for pytrees.
+
+Layout: ``<dir>/step_<n>/state.npz`` + ``meta.json``; writes go to a
+``.tmp`` sibling and are renamed only after fsync, so a crash mid-write
+never corrupts the latest checkpoint (restart picks the newest complete
+step directory).  Pytree structure is recorded as flattened key paths.
+
+On a real multi-host pod each host writes its own addressable shards
+(``jax.experimental.multihost_utils``); in this single-process container
+arrays are fully addressable and saved whole.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import numpy as np
+
+Params = Any
+_SEP = "/"
+
+
+def _flatten(tree: Params) -> dict[str, np.ndarray]:
+    """Flatten to npz-safe arrays.  Non-native dtypes (bfloat16, fp8 — the
+    ml_dtypes family numpy cannot serialise) are stored as same-width uint
+    views with the true dtype recorded in the key (``name@bfloat16``)."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or not isinstance(
+            arr.dtype.type(0).item(), (int, float, complex, bool)
+        ):
+            width = arr.dtype.itemsize
+            uint = {1: np.uint8, 2: np.uint16, 4: np.uint32}[width]
+            flat[f"{key}@{leaf.dtype.name}"] = arr.view(uint)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Params,
+    extra_meta: dict | None = None,
+    keep: int = 3,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    np.savez(os.path.join(tmp, "state.npz"), **flat)
+    meta = {"step": step, **(extra_meta or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, d, "meta.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str, like: Params, step: int | None = None
+) -> tuple[Params, dict]:
+    """Restore into the structure (and dtypes) of ``like``."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "state.npz")) as data:
+        flat = dict(data)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+
+    # resolve tagged dtypes back to real arrays
+    import ml_dtypes  # shipped with jax
+
+    resolved: dict[str, np.ndarray] = {}
+    for key, arr in flat.items():
+        if "@" in key:
+            base, dname = key.rsplit("@", 1)
+            dt = np.dtype(getattr(ml_dtypes, dname, dname))
+            resolved[base] = arr.view(dt)
+        else:
+            resolved[key] = arr
+
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for pth, leaf in leaves_like:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in pth
+        )
+        if key not in resolved:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = resolved[key]
+        out.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out
+    ), meta

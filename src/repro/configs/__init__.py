@@ -1,0 +1,49 @@
+"""Assigned architecture registry: ``get(name)`` / ``ARCHS`` / ``--arch``.
+
+One module per architecture with the exact public config (see each file's
+source tag) plus a ``smoke()`` reduced config of the same family for CPU
+tests.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ArchConfig
+
+from repro.configs import (
+    chameleon_34b,
+    gemma3_12b,
+    gemma_2b,
+    moonshot_v1_16b_a3b,
+    qwen1_5_110b,
+    qwen2_5_3b,
+    qwen2_moe_a2_7b,
+    whisper_small,
+    xlstm_350m,
+    zamba2_2_7b,
+)
+
+_MODULES = (
+    qwen2_moe_a2_7b,
+    moonshot_v1_16b_a3b,
+    qwen2_5_3b,
+    qwen1_5_110b,
+    gemma3_12b,
+    gemma_2b,
+    chameleon_34b,
+    xlstm_350m,
+    zamba2_2_7b,
+    whisper_small,
+)
+
+ARCHS: dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+SMOKES: dict[str, ArchConfig] = {m.CONFIG.name: m.smoke() for m in _MODULES}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return SMOKES[name]

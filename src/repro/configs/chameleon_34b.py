@@ -1,0 +1,29 @@
+"""chameleon-34b [vlm] — arXiv:2405.09818 (tier: unverified).
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.
+Early-fusion VLM: images are VQ-quantised into the token vocabulary, so
+the backbone is a plain decoder LM over the fused token stream (the VQ
+tokenizer frontend is outside the assigned scope).
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    source="arXiv:2405.09818; unverified",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=128, n_heads=8, n_kv_heads=2,
+        d_ff=256, vocab_size=512,
+    )

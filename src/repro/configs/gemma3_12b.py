@@ -1,0 +1,34 @@
+"""gemma3-12b [dense] — hf:google/gemma-3 family (tier: unverified).
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144,
+5:1 local:global sliding-window attention (window 1024), 128k context,
+head_dim=256, tied embeddings (gemma family).
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    head_dim=256,
+    local_global=5,
+    sliding_window=1024,
+    activation="geglu",
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=6, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=16, sliding_window=16,
+    )

@@ -1,0 +1,30 @@
+"""gemma-2b [dense] — arXiv:2403.08295 (tier: hf).
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000,
+GeGLU, head_dim=256, tied embeddings.
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16384,
+    vocab_size=256000,
+    head_dim=256,
+    activation="geglu",
+    tie_embeddings=True,
+    source="arXiv:2403.08295; hf",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+        d_ff=128, vocab_size=512, head_dim=16,
+    )

@@ -1,0 +1,31 @@
+"""moonshot-v1-16b-a3b [moe] — hf:moonshotai/Moonlight-16B-A3B (tier: hf).
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840,
+MoE: 64 routed experts, top-6 (kimi/moonlight).
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    n_experts=64,
+    n_shared_experts=0,
+    top_k=6,
+    expert_d_ff=1408,
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, expert_d_ff=96, n_experts=8, top_k=2, vocab_size=512,
+    )

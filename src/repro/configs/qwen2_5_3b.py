@@ -1,0 +1,28 @@
+"""qwen2.5-3b [dense] — hf:Qwen/Qwen2.5 family (tier: hf).
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936, QKV bias.
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=160, vocab_size=512,
+    )

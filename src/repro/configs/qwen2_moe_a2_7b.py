@@ -1,0 +1,36 @@
+"""qwen2-moe-a2.7b [moe] — hf:Qwen/Qwen1.5-MoE-A2.7B (tier: hf).
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936,
+MoE: 4 shared + 60 routed experts, top-4.
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    n_experts=60,
+    n_shared_experts=4,
+    top_k=4,
+    expert_d_ff=1408,
+    # §Perf H3: 4 dead expert slots let EP shard 64 ways instead of
+    # paying intra-expert-TP partial-sum all-reduces on [G,E,C,D]
+    expert_pad=4,
+    qkv_bias=True,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B; hf",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, expert_d_ff=96, n_experts=8, n_shared_experts=2,
+        vocab_size=512,
+    )

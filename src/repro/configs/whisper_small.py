@@ -1,0 +1,31 @@
+"""whisper-small [audio] — arXiv:2212.04356 (tier: unverified).
+
+Enc-dec: 12+12L d_model=768 12H d_ff=3072 vocab=51865 (padded to 51968
+for even TP shards).  Conv/mel frontend is a stub: input_specs() provides
+precomputed frame embeddings [B, 1500, 768].
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    encoder_layers=12,
+    encoder_frames=1500,
+    qkv_bias=True,
+    source="arXiv:2212.04356; unverified",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, encoder_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=512, encoder_frames=20,
+    )

@@ -1,0 +1,29 @@
+"""xlstm-350m [ssm] — arXiv:2405.04517 (tier: unverified).
+
+24L d_model=1024 4H vocab=50304; alternating sLSTM + mLSTM blocks
+(1 sLSTM per 8 blocks here), matrix-memory mLSTM with expansion 2.
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    ssm_expand=2,
+    slstm_every=8,
+    source="arXiv:2405.04517; unverified",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        vocab_size=512, slstm_every=2,
+    )

@@ -1,0 +1,32 @@
+"""zamba2-2.7b [hybrid] — arXiv:2411.15242 (tier: hf).
+
+54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000, ssm_state=64.
+Mamba2 backbone with one shared attention+MLP transformer block applied
+every 6 layers (single parameter set, reused).
+"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    shared_attn_every=6,
+    source="arXiv:2411.15242; hf",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512, ssm_state=8, shared_attn_every=2,
+    )

@@ -1,0 +1,54 @@
+"""FAR — the paper's contribution: moldable task scheduling with dynamic
+repartitioning for MIG-style reconfigurable accelerators."""
+
+from repro.core.allocations import allocation_family, first_allocation
+from repro.core.device_spec import (
+    A30,
+    A100,
+    H100,
+    SPECS,
+    TPU_POD_256,
+    TPU_SUPERPOD_512,
+    DeviceSpec,
+    InstanceNode,
+    multi_gpu,
+)
+from repro.core.far import FARResult, rho, schedule_batch
+from repro.core.multibatch import (
+    ConcatResult,
+    MultiBatchScheduler,
+    Tail,
+    concatenate,
+    multibatch_baseline,
+)
+from repro.core.problem import (
+    InfeasibleScheduleError,
+    ReconfigEvent,
+    Schedule,
+    ScheduledTask,
+    Task,
+    area_lower_bound,
+    lower_bound,
+    validate_schedule,
+)
+from repro.core.refine import RefineStats, refine_assignment
+from repro.core.repartition import (
+    Assignment,
+    alive_at_end,
+    list_schedule_allocation,
+    replay,
+)
+
+__all__ = [
+    "A30", "A100", "H100", "SPECS", "TPU_POD_256", "TPU_SUPERPOD_512",
+    "DeviceSpec", "InstanceNode", "multi_gpu",
+    "Task", "Schedule", "ScheduledTask", "ReconfigEvent",
+    "InfeasibleScheduleError", "validate_schedule",
+    "area_lower_bound", "lower_bound",
+    "allocation_family", "first_allocation",
+    "Assignment", "list_schedule_allocation", "replay", "alive_at_end",
+    "RefineStats", "refine_assignment",
+    "FARResult", "schedule_batch", "rho",
+    "MultiBatchScheduler", "Tail", "ConcatResult", "concatenate",
+    "multibatch_baseline",
+]

@@ -1,0 +1,52 @@
+"""FAR Phase 1: the Turek-style family of allocations (paper §3.1).
+
+First allocation: each task gets the minimum slice count minimising its
+*work* ``s * t_i(s)``.  Each successive allocation widens the currently
+longest task to its next work-minimising larger size; when the longest task
+cannot grow, the family ends.  Family size is O(|C_G| * n).
+
+Only monotony point 1 (time non-increasing in slices) is assumed — the
+method is explicitly safe for the non-monotone-work profiles MIG exhibits
+(paper §2.4).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.device_spec import DeviceSpec
+from repro.core.problem import Task
+
+Allocation = tuple[int, ...]  # size per task, indexed like the batch
+
+
+def first_allocation(tasks: Sequence[Task], spec: DeviceSpec) -> Allocation:
+    sizes = spec.sizes
+    return tuple(t.min_work_size(sizes) for t in tasks)
+
+
+def _next_size(task: Task, current: int, sizes: Sequence[int]) -> int | None:
+    """argmin_{s>current} s*t(s), or None when current is already max."""
+    bigger = [s for s in sizes if s > current]
+    if not bigger:
+        return None
+    return min(bigger, key=lambda s: (s * task.times[s], s))
+
+
+def allocation_family(
+    tasks: Sequence[Task], spec: DeviceSpec
+) -> list[Allocation]:
+    """Generate the whole family (paper §3.1 recurrence)."""
+    if not tasks:
+        return [()]
+    sizes = spec.sizes
+    alloc = list(first_allocation(tasks, spec))
+    family = [tuple(alloc)]
+    while True:
+        # the longest task under the current allocation
+        j = max(range(len(tasks)), key=lambda i: tasks[i].times[alloc[i]])
+        nxt = _next_size(tasks[j], alloc[j], sizes)
+        if nxt is None:
+            return family
+        alloc[j] = nxt
+        family.append(tuple(alloc))

@@ -1,0 +1,143 @@
+"""Comparison schedulers (paper §6.5): MISO-OPT and FixPart.
+
+* ``miso_opt`` — the MISO optimizer of Li et al. [31] as described by the
+  paper: tasks are taken in FIFO order; at each round the scheduler picks
+  the valid partition ``P = {I_0, …, I_{|P|-1}}`` maximising the *sum of
+  speedups* of the next ``|P|`` FIFO tasks on those instances, runs them,
+  and repartitions when the round completes.  Partition changes pay the
+  sequentialised create/destroy costs.  Its weakness (paper Fig. 12): the
+  partition choice ignores task durations, so long and short tasks co-run
+  and instances idle waiting for the round's stragglers.
+
+* ``fix_part`` — a fixed partition chosen before execution; FIFO tasks run
+  on the first instance to free up.  No reconfiguration at all (and no
+  reconfiguration cost).  ``fix_part_best`` scans every valid partition.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.device_spec import DeviceSpec, InstanceNode
+from repro.core.problem import (
+    ReconfigEvent,
+    Schedule,
+    ScheduledTask,
+    Task,
+)
+
+
+def speedup(task: Task, size: int, base: int) -> float:
+    return task.times[base] / task.times[size]
+
+
+def miso_opt(tasks: Sequence[Task], spec: DeviceSpec) -> Schedule:
+    """Round-based MISO-OPT (paper §6.5 description of [31])."""
+    base = min(spec.sizes)
+    fifo = list(tasks)
+    items: list[ScheduledTask] = []
+    reconfigs: list[ReconfigEvent] = []
+    now = 0.0
+    reconfig_end = 0.0
+    current: tuple[InstanceNode, ...] | None = None
+
+    def ordered(p: tuple[InstanceNode, ...]) -> list[InstanceNode]:
+        return sorted(p, key=lambda n: (n.tree, n.start))
+
+    while fifo:
+        # choose the partition maximising the sum of speedups of the next
+        # |P| FIFO tasks (tasks beyond the queue contribute nothing)
+        best_p = None
+        best_gain = float("-inf")
+        for p in spec.valid_partitions:
+            inst = ordered(p)
+            gain = sum(
+                speedup(t, i.size, base)
+                for t, i in zip(fifo, inst)
+            )
+            # normalise nothing: the paper states the plain sum
+            if gain > best_gain + 1e-12:
+                best_gain = gain
+                best_p = inst
+        assert best_p is not None
+        # reconfigure: destroy instances that disappear, create the new ones
+        if current is None:
+            prev_keys = set()
+        else:
+            prev_keys = {n.key for n in current}
+        new_keys = {n.key for n in best_p}
+        if current is not None:
+            for n in current:
+                if n.key not in new_keys:
+                    reconfig_end = max(reconfig_end, now)
+                    b = reconfig_end
+                    reconfig_end += spec.t_destroy[n.size]
+                    reconfigs.append(ReconfigEvent("destroy", n, b, reconfig_end))
+        for n in best_p:
+            if n.key not in prev_keys:
+                reconfig_end = max(reconfig_end, now)
+                b = reconfig_end
+                reconfig_end += spec.t_create[n.size]
+                reconfigs.append(ReconfigEvent("create", n, b, reconfig_end))
+        start = max(now, reconfig_end)
+        current = tuple(best_p)
+        # run one task per instance; the round ends when all of them finish
+        round_end = start
+        for inst in best_p:
+            if not fifo:
+                break
+            task = fifo.pop(0)
+            items.append(ScheduledTask(task, inst, start, inst.size))
+            round_end = max(round_end, start + task.times[inst.size])
+        now = round_end
+
+    return Schedule(spec=spec, items=items, reconfigs=reconfigs)
+
+
+def fix_part(
+    tasks: Sequence[Task],
+    spec: DeviceSpec,
+    partition: Sequence[InstanceNode],
+) -> Schedule:
+    """FIFO on a fixed partition; no reconfiguration cost (paper §6.5)."""
+    import heapq
+
+    items: list[ScheduledTask] = []
+    heap: list[tuple[float, int, InstanceNode]] = []
+    for i, inst in enumerate(
+        sorted(partition, key=lambda n: (n.tree, n.start))
+    ):
+        heapq.heappush(heap, (0.0, i, inst))
+    seq = len(heap)
+    for task in tasks:
+        end, _, inst = heapq.heappop(heap)
+        items.append(ScheduledTask(task, inst, end, inst.size))
+        heapq.heappush(heap, (end + task.times[inst.size], seq, inst))
+        seq += 1
+    return Schedule(spec=spec, items=items, reconfigs=[])
+
+
+def fix_part_best(
+    tasks: Sequence[Task], spec: DeviceSpec
+) -> tuple[Schedule, tuple[InstanceNode, ...]]:
+    """FixPartBest: the fixed partition with the smallest makespan."""
+    best: tuple[Schedule, tuple[InstanceNode, ...]] | None = None
+    for p in spec.valid_partitions:
+        sched = fix_part(tasks, spec, p)
+        if best is None or sched.makespan < best[0].makespan:
+            best = (sched, p)
+    assert best is not None
+    return best
+
+
+def partition_of_ones(spec: DeviceSpec) -> tuple[InstanceNode, ...]:
+    """FixPart(1,...,1): every slice its own instance (where valid)."""
+    for p in spec.valid_partitions:
+        if all(n.size == 1 for n in p):
+            return p
+    raise ValueError(f"{spec.name} has no all-ones partition")
+
+
+def partition_whole(spec: DeviceSpec) -> tuple[InstanceNode, ...]:
+    """FixPart(#slices): one instance per tree root (whole device)."""
+    return tuple(spec.roots)

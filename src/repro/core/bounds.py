@@ -1,0 +1,94 @@
+"""Approximation-factor certificates (paper §5).
+
+The List-Scheduling argument bounds phase 2's makespan by a combination of
+the total task area and the longest task (the form required by Turek's
+Theorem 1), which then yields a factor for the whole moldable problem:
+
+* A30 (4 slices, full binary tree):  ω ≤ ¼·area + ¾·h_max  ⇒  factor 7/4.
+* A100/H100: three-case analysis over the idle-slice patterns of the
+  irregular tree  ⇒  factor 2.
+* general full binary tree over s slices (our TPU pods): the A30 argument
+  goes through verbatim (every node's ancestors cover all larger sizes, so
+  no gaps before the critical task's start)  ⇒  ω ≤ (1/s)·area +
+  ((s-1)/s)·h_max  ⇒  factor (2s-1)/s < 2; with g devices, (2gs-1)/(gs).
+
+These are *upper bounds excluding reconfiguration cost* (paper §5).  The
+functions below compute the certified factor for a spec and check a
+schedule against its Theorem-1-style bound — both are exercised by the
+property tests.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.device_spec import DeviceSpec, InstanceNode
+from repro.core.problem import Schedule, Task, area_lower_bound
+
+
+def _is_full_binary(node: InstanceNode) -> bool:
+    if not node.children:
+        return node.size == 1
+    if len(node.children) == 1:
+        return False
+    sizes_ok = sum(c.size for c in node.children) == node.size
+    halves = all(c.size == node.size // 2 for c in node.children)
+    return sizes_ok and halves and all(_is_full_binary(c) for c in node.children)
+
+
+def approximation_factor(spec: DeviceSpec) -> float:
+    """Certified moldable approximation factor for phase 2 on ``spec``."""
+    s = spec.n_slices
+    if all(_is_full_binary(r) for r in spec.roots):
+        # paper §5.1 generalised: (2s-1)/s  (A30: s=4 -> 7/4; g A30s:
+        # (8g-1)/(4g); TPU pod s=8 -> 15/8)
+        return (2 * s - 1) / s
+    if spec.name.startswith(("A100", "H100")) or (
+        len(spec.roots) >= 1
+        and all(r.size == 7 for r in spec.roots)
+    ):
+        # paper §5.2: max(7/6 + 5/6, 7/4, 7/5 + 3/5) = 2 per device; the
+        # multi-device extension keeps the per-case area argument with
+        # g*7 slices but the same gap patterns, still bounded by 2.
+        return 2.0
+    # conservative fallback: list scheduling with possible single-slice gaps
+    return 2.0
+
+
+def theorem1_rigid_bound(
+    schedule: Schedule, tasks: Sequence[Task] | None = None
+) -> float:
+    """The Theorem-1-form bound on phase 2's *rigid* makespan for the sizes
+    actually allotted (reconfigurations excluded), i.e.
+
+        A30-like:  (1/s)·area + ((s-1)/s)·h_max
+        A100/H100: max(area/6 + 5/6·h_max, area/4, area/5 + 3/5·h_max)
+
+    Checking ``makespan_without_reconfig <= theorem1_rigid_bound`` certifies
+    the §5 analysis on concrete instances.
+    """
+    spec = schedule.spec
+    area = schedule.work_area()
+    h_max = max((it.duration for it in schedule.items), default=0.0)
+    if all(_is_full_binary(r) for r in spec.roots):
+        s = spec.n_slices
+        return area / s + (s - 1) / s * h_max
+    if all(r.size == 7 for r in spec.roots):
+        g = len(spec.roots)
+        return max(
+            area / (6 * g) + 5 / 6 * h_max,
+            area / (4 * g),
+            area / (5 * g) + 3 / 5 * h_max,
+        )
+    # generic list-scheduling fallback (always valid): area/1 ... trivial
+    return area + h_max
+
+
+def certified_gap(result_makespan: float, tasks: Sequence[Task],
+                  spec: DeviceSpec) -> float:
+    """makespan / (factor · area-lower-bound): ≤ 1 certifies optimal-factor
+    behaviour on this instance (only a sanity ceiling — the bound compares
+    against ω*, which the area baseline under-estimates)."""
+    return result_makespan / (
+        approximation_factor(spec) * area_lower_bound(tasks, spec)
+    )

@@ -1,0 +1,316 @@
+"""Device specifications for MIG-style reconfigurable accelerators.
+
+The paper (§1.2) relies on exactly two structural properties of MIG:
+
+  (P1) instances are organised hierarchically (a *repartitioning tree*:
+       an instance is split into disjoint child instances);
+  (P2) the valid partitions are precisely the combinations of disjoint
+       instances (antichains of the tree that tile the device).
+
+``DeviceSpec`` encodes a device as such a tree (or forest, for multi-GPU /
+multi-pod setups, paper §3.2 "multiple A30s"), together with the instance
+sizes ``C_G`` and the reconfiguration-cost tables (paper Table 1).
+
+Paper-faithful specs: ``A30``, ``A100``, ``H100``.
+TPU-adapted specs (DESIGN.md §2): ``TPU_POD_256`` (8 pod-slices of 32 chips,
+full binary tree) and ``TPU_SUPERPOD_512`` (two such pods as a forest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import cached_property
+from typing import Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceNode:
+    """One node of a repartitioning tree.
+
+    Attributes:
+      tree: index of the tree in the forest (one tree per GPU/pod).
+      start: first slice index covered by the *footprint* of this instance.
+      size: the instance size in ``C_G`` terms (what ``t_i`` is indexed by —
+        the number of slices whose compute the task may use).
+      footprint: number of consecutive slices *blocked* by this instance.
+        Usually ``== size``; the A100/H100 "3-slice instance on S0..S2 with
+        S3's memory" has size 3 but footprint 4 (S3 sits idle but reserved,
+        paper §1.2 / §5.2 case 3).
+      children: child nodes the instance repartitions into.
+    """
+
+    tree: int
+    start: int
+    size: int
+    footprint: int
+    children: tuple["InstanceNode", ...] = ()
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def key(self) -> tuple[int, int, int, int]:
+        """Stable identity of the node inside its spec."""
+        return (self.tree, self.start, self.size, self.footprint)
+
+    @property
+    def slices(self) -> tuple[int, ...]:
+        """Slice indexes whose *compute* the instance uses."""
+        return tuple(range(self.start, self.start + self.size))
+
+    @property
+    def blocked(self) -> tuple[int, ...]:
+        """Slice indexes reserved by the instance (compute + idle)."""
+        return tuple(range(self.start, self.start + self.footprint))
+
+    def __repr__(self) -> str:  # compact, used in schedule dumps
+        tag = f"T{self.tree}[{self.start}:{self.start + self.footprint}]"
+        if self.footprint != self.size:
+            tag += f"(={self.size})"
+        return tag
+
+
+def _binary_tree(tree: int, start: int, size: int) -> InstanceNode:
+    """Full binary repartitioning tree over ``size`` slices (power of two)."""
+    if size == 1:
+        return InstanceNode(tree, start, 1, 1)
+    half = size // 2
+    return InstanceNode(
+        tree, start, size, size,
+        children=(_binary_tree(tree, start, half),
+                  _binary_tree(tree, start + half, half)),
+    )
+
+
+def _a100_tree(tree: int = 0) -> InstanceNode:
+    """A100/H100 repartitioning tree (paper Fig. 4).
+
+    7 -> (4 on S0..S3, 3 on S4..S6)
+    the 4 repartitions into the special 3-with-S3-idle instance, which in
+    turn repartitions into 2+2 (re-enabling S3); 3 -> 2+1; 2 -> 1+1.
+    """
+    ones = [InstanceNode(tree, s, 1, 1) for s in range(7)]
+    two_01 = InstanceNode(tree, 0, 2, 2, (ones[0], ones[1]))
+    two_23 = InstanceNode(tree, 2, 2, 2, (ones[2], ones[3]))
+    two_45 = InstanceNode(tree, 4, 2, 2, (ones[4], ones[5]))
+    three_idle = InstanceNode(tree, 0, 3, 4, (two_01, two_23))  # S3 idle
+    four = InstanceNode(tree, 0, 4, 4, (three_idle,))
+    three_r = InstanceNode(tree, 4, 3, 3, (two_45, ones[6]))
+    return InstanceNode(tree, 0, 7, 7, (four, three_r))
+
+
+def _a30_tree(tree: int = 0) -> InstanceNode:
+    """A30 repartitioning tree (paper Fig. 4): 4 -> 2+2 -> (1+1)x2."""
+    ones = [InstanceNode(tree, s, 1, 1) for s in range(4)]
+    two_01 = InstanceNode(tree, 0, 2, 2, (ones[0], ones[1]))
+    two_23 = InstanceNode(tree, 2, 2, 2, (ones[2], ones[3]))
+    return InstanceNode(tree, 0, 4, 4, (two_01, two_23))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """A reconfigurable device (or homogeneous group of them).
+
+    Attributes:
+      name: e.g. ``"A100"``.
+      roots: one repartitioning tree per physical device (paper §3.2 allows a
+        forest for multi-GPU; we use it for multi-pod too).
+      sizes: the instance sizes ``C_G`` (sorted ascending).
+      t_create / t_destroy: reconfiguration cost per instance size, seconds
+        (paper Table 1).
+      chips_per_slice: TPU adaptation — how many chips one slice stands for
+        (1 for the GPU models).
+    """
+
+    name: str
+    roots: tuple[InstanceNode, ...]
+    sizes: tuple[int, ...]
+    t_create: Mapping[int, float]
+    t_destroy: Mapping[int, float]
+    chips_per_slice: int = 1
+
+    # -- structure ---------------------------------------------------------
+    @cached_property
+    def nodes(self) -> tuple[InstanceNode, ...]:
+        """All instance nodes, BFS order, roots first."""
+        out: list[InstanceNode] = []
+        frontier = list(self.roots)
+        while frontier:
+            node = frontier.pop(0)
+            out.append(node)
+            frontier.extend(node.children)
+        return tuple(out)
+
+    @cached_property
+    def n_slices(self) -> int:
+        return sum(r.footprint for r in self.roots)
+
+    @cached_property
+    def nodes_by_size(self) -> Mapping[int, tuple[InstanceNode, ...]]:
+        by: dict[int, list[InstanceNode]] = {s: [] for s in self.sizes}
+        for node in self.nodes:
+            by[node.size].append(node)
+        return {s: tuple(v) for s, v in by.items()}
+
+    def node_by_key(self, key: tuple[int, int, int, int]) -> InstanceNode:
+        for node in self.nodes:
+            if node.key == key:
+                return node
+        raise KeyError(key)
+
+    @cached_property
+    def valid_partitions(self) -> tuple[tuple[InstanceNode, ...], ...]:
+        """Enumerate valid partitions = antichains of disjoint nodes that
+        tile each tree (paper Fig. 1: 5 for A30, 19 for A100/H100).
+
+        A node "tiles" its footprint; the special A100 3-instance tiles
+        4 slices (S3 idle). Enumerated per tree and combined.
+        """
+
+        def tilings(node: InstanceNode) -> list[tuple[InstanceNode, ...]]:
+            options: list[tuple[InstanceNode, ...]] = [(node,)]
+            if node.children:
+                # children of a node partition its footprint between them
+                child_opts = [tilings(c) for c in node.children]
+                for combo in itertools.product(*child_opts):
+                    merged = tuple(itertools.chain.from_iterable(combo))
+                    options.append(merged)
+            return options
+
+        per_tree = [tilings(r) for r in self.roots]
+        out = []
+        for combo in itertools.product(*per_tree):
+            out.append(tuple(itertools.chain.from_iterable(combo)))
+        # dedupe (chains like 4 -> 3' produce the same multiset never; but
+        # keep deterministic order)
+        seen = set()
+        uniq = []
+        for p in out:
+            k = tuple(sorted(n.key for n in p))
+            if k not in seen:
+                seen.add(k)
+                uniq.append(p)
+        return tuple(uniq)
+
+    def is_feasible_instance_set(self, nodes: Sequence[InstanceNode]) -> bool:
+        """(P2): any set of pairwise-disjoint tree nodes is a sub-partition."""
+        blocked: set[tuple[int, int]] = set()
+        node_keys = {n.key for n in self.nodes}
+        for node in nodes:
+            if node.key not in node_keys:
+                return False
+            cells = {(node.tree, s) for s in node.blocked}
+            if blocked & cells:
+                return False
+            blocked |= cells
+        return True
+
+    # -- fault tolerance (DESIGN.md §8) -------------------------------------
+    def degrade(self, dead_slices: Sequence[tuple[int, int]]) -> "DeviceSpec":
+        """Return a spec with every instance touching a dead (tree, slice)
+        removed — the subtree rooted at the smallest healthy ancestors
+        survives. Used by the elastic runtime on node failure."""
+        dead = set(dead_slices)
+
+        def prune(node: InstanceNode) -> list[InstanceNode]:
+            """Largest healthy subtrees under ``node`` (forest roots)."""
+            hit = any((node.tree, s) in dead for s in node.blocked)
+            if not hit:
+                return [node]
+            out: list[InstanceNode] = []
+            for child in node.children:
+                out.extend(prune(child))
+            return out
+
+        new_roots = [n for root in self.roots for n in prune(root)]
+        sizes = tuple(sorted({n.size for r in new_roots
+                              for n in _iter_nodes(r)}))
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}-degraded",
+            roots=tuple(new_roots),
+            sizes=sizes,
+        )
+
+
+def _iter_nodes(root: InstanceNode):
+    yield root
+    for c in root.children:
+        yield from _iter_nodes(c)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful GPU specs (reconfig times: paper Table 1, seconds)
+# ---------------------------------------------------------------------------
+
+A30 = DeviceSpec(
+    name="A30",
+    roots=(_a30_tree(),),
+    sizes=(1, 2, 4),
+    t_create={1: 0.11, 2: 0.12, 4: 0.13},
+    t_destroy={1: 0.10, 2: 0.10, 4: 0.10},
+)
+
+A100 = DeviceSpec(
+    name="A100",
+    roots=(_a100_tree(),),
+    sizes=(1, 2, 3, 4, 7),
+    t_create={1: 0.16, 2: 0.17, 3: 0.20, 4: 0.21, 7: 0.24},
+    t_destroy={1: 0.20, 2: 0.20, 3: 0.21, 4: 0.21, 7: 0.22},
+)
+
+H100 = DeviceSpec(
+    name="H100",
+    roots=(_a100_tree(),),
+    sizes=(1, 2, 3, 4, 7),
+    t_create={1: 0.16, 2: 0.21, 3: 0.33, 4: 0.38, 7: 0.42},
+    t_destroy={1: 0.21, 2: 0.23, 3: 0.25, 4: 0.26, 7: 0.26},
+)
+
+
+def multi_gpu(spec: DeviceSpec, count: int) -> DeviceSpec:
+    """Forest of ``count`` identical devices (paper §3.2)."""
+    roots = []
+    for g in range(count):
+        base = spec.roots[0]
+
+        def retree(node: InstanceNode, tree: int) -> InstanceNode:
+            return InstanceNode(
+                tree, node.start, node.size, node.footprint,
+                tuple(retree(c, tree) for c in node.children),
+            )
+
+        roots.append(retree(base, g))
+    return dataclasses.replace(
+        spec, name=f"{spec.name}x{count}", roots=tuple(roots)
+    )
+
+
+# ---------------------------------------------------------------------------
+# TPU-adapted specs (DESIGN.md §2): a v5e pod of 256 chips carved into 8
+# pod-slices of 32 chips each ((2,16) blocks of the (16,16) mesh).  Instance
+# formation cost models sub-mesh (re)formation: barrier + runtime re-init,
+# scaled mildly with size (measured MIG times are the GPU analogue; for TPU
+# we budget 1-4 s, dominated by coordination, NOT compile — compile caches
+# are warm in steady state).
+# ---------------------------------------------------------------------------
+
+TPU_POD_256 = DeviceSpec(
+    name="TPU_POD_256",
+    roots=(_binary_tree(0, 0, 8),),
+    sizes=(1, 2, 4, 8),
+    t_create={1: 1.0, 2: 1.2, 4: 1.6, 8: 2.4},
+    t_destroy={1: 0.5, 2: 0.6, 4: 0.8, 8: 1.2},
+    chips_per_slice=32,
+)
+
+TPU_SUPERPOD_512 = dataclasses.replace(
+    multi_gpu(TPU_POD_256, 2), name="TPU_SUPERPOD_512"
+)
+
+SPECS: dict[str, DeviceSpec] = {
+    "A30": A30,
+    "A100": A100,
+    "H100": H100,
+    "TPU_POD_256": TPU_POD_256,
+    "TPU_SUPERPOD_512": TPU_SUPERPOD_512,
+}

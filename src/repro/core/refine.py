@@ -1,0 +1,237 @@
+"""FAR Phase 3: schedule refinement by task moves and swaps
+(paper §3.3, Algorithm 2).
+
+Iteratively finds *critical* instances (their slices reach the makespan),
+and either **moves** one of their tasks to the same-size alternative
+instance with the earliest completion, or **swaps** a pair of tasks with it.
+The candidate task (or pair) is chosen so the transferred duration is as
+close as possible to half the available margin ``(ω − end(Iᵃ)) / 2`` — the
+margin is split between the two instances, so a balanced split is best.
+The search walks the critical subtree in reverse BFS (leaves → root) and an
+iteration ends when every opened node is closed; refinement ends when the
+root opens (or an iteration cap is hit).
+
+Bookkeeping between iterations uses reconfiguration-free times, exactly like
+the paper (Algorithm 2 line 26 defers the full recomputation); the final
+schedule is re-derived with :func:`~repro.core.repartition.replay`, and the
+whole refinement is guarded to never return something worse than its input.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+from repro.core.device_spec import DeviceSpec, InstanceNode
+from repro.core.problem import EPS, Schedule
+from repro.core.repartition import Assignment, NodeKey, replay
+
+
+@dataclasses.dataclass
+class RefineStats:
+    moves: int = 0
+    swaps: int = 0
+    iterations: int = 0
+    improvement: float = 0.0  # makespan(before) / makespan(after) - 1
+
+
+def _parent_map(spec: DeviceSpec) -> dict[NodeKey, InstanceNode | None]:
+    parents: dict[NodeKey, InstanceNode | None] = {}
+    for root in spec.roots:
+        parents[root.key] = None
+        stack = [root]
+        while stack:
+            node = stack.pop()
+            for child in node.children:
+                parents[child.key] = node
+                stack.append(child)
+    return parents
+
+
+def _slice_ends_no_reconfig(
+    assignment: Assignment, replay_kwargs: dict
+) -> dict[tuple[int, int], float]:
+    kw = dict(replay_kwargs)
+    kw["include_reconfig"] = False
+    return replay(assignment, **kw).slice_end_times()
+
+
+def _node_end(node: InstanceNode, ends: dict[tuple[int, int], float]) -> float:
+    return max((ends[(node.tree, s)] for s in node.slices), default=0.0)
+
+
+def _sorted_insert(lst: list[int], tid: int, assignment: Assignment, size: int) -> None:
+    """Insert task id keeping the node list LPT-ordered (desc by duration)."""
+    times = [-assignment.tasks[t].times[size] for t in lst]
+    pos = bisect.bisect_left(times, -assignment.tasks[tid].times[size])
+    lst.insert(pos, tid)
+
+
+def _best_move(
+    assignment: Assignment, key: NodeKey, margin: float
+) -> int | None:
+    """Task of node ``key`` with duration < margin, closest to margin/2."""
+    size = key[2]
+    lst = assignment.node_tasks.get(key, [])
+    if not lst or margin <= EPS:
+        return None
+    # list is LPT (desc); build ascending durations for binary search
+    asc = sorted(lst, key=lambda t: assignment.tasks[t].times[size])
+    durs = [assignment.tasks[t].times[size] for t in asc]
+    hi = bisect.bisect_left(durs, margin - EPS)  # durations strictly < margin
+    if hi == 0:
+        return None
+    target = margin / 2.0
+    pos = bisect.bisect_left(durs, target, 0, hi)
+    cands = [i for i in (pos - 1, pos) if 0 <= i < hi]
+    best = min(cands, key=lambda i: abs(durs[i] - target))
+    return asc[best]
+
+
+def _best_swap(
+    assignment: Assignment, key_i: NodeKey, key_a: NodeKey, margin: float
+) -> tuple[int, int] | None:
+    """Pair (T_k of I, T_j of Iᵃ) with 0 < dur_k - dur_j < margin, the
+    difference closest to margin/2 (two-pointer over the sorted lists)."""
+    size = key_i[2]
+    li = assignment.node_tasks.get(key_i, [])
+    la = assignment.node_tasks.get(key_a, [])
+    if not li or not la or margin <= EPS:
+        return None
+    di = sorted(
+        ((assignment.tasks[t].times[size], t) for t in li)
+    )
+    da = sorted(
+        ((assignment.tasks[t].times[size], t) for t in la)
+    )
+    target = margin / 2.0
+    best: tuple[float, int, int] | None = None  # (|diff-target|, tk, tj)
+    j = 0
+    for dk, tk in di:
+        # advance j while the diff is still >= margin (too big)
+        while j < len(da) and dk - da[j][0] >= margin - EPS:
+            j += 1
+        for dj, tj in da[j:]:
+            diff = dk - dj
+            if diff <= EPS:
+                break  # da ascending -> diffs only shrink further
+            score = abs(diff - target)
+            if best is None or score < best[0]:
+                best = (score, tk, tj)
+    if best is None:
+        return None
+    return best[1], best[2]
+
+
+def refine_assignment(
+    assignment: Assignment,
+    max_iterations: int = 64,
+    min_rel_improvement: float = 0.0,
+    replay_kwargs: dict | None = None,
+) -> tuple[Assignment, Schedule, RefineStats]:
+    """Algorithm 2.  Returns (assignment, schedule, stats); never worse than
+    the input (guarded by a final replay comparison).
+
+    ``replay_kwargs`` (release / alive / direction) retarget the engine at
+    the multi-batch seam (paper §4.3): the slice-release times of the
+    previous batch then shape the critical slices and margins."""
+    spec = assignment.spec
+    rkw = dict(replay_kwargs or {})
+    parents = _parent_map(spec)
+    leaves = [n for n in spec.nodes if not n.children]
+    nodes_by_size: dict[int, list[InstanceNode]] = {}
+    for n in spec.nodes:
+        nodes_by_size.setdefault(n.size, []).append(n)
+
+    base_sched = replay(assignment, **rkw)
+    best_assign = assignment.copy()
+    best_makespan = base_sched.makespan
+    stats = RefineStats()
+
+    work = assignment.copy()
+    stop = False
+    while not stop and stats.iterations < max_iterations:
+        stats.iterations += 1
+        ends = _slice_ends_no_reconfig(work, rkw)
+        omega = max(ends.values(), default=0.0)
+        if omega <= EPS:
+            break
+        # line 5: open the leaves whose slices reach the makespan
+        queue: list[InstanceNode] = [
+            leaf for leaf in leaves
+            if ends[(leaf.tree, leaf.start)] >= omega - EPS
+        ]
+        opened = {leaf.key for leaf in queue}
+        edited = False
+        while queue:  # lines 6-24
+            inst = queue.pop(0)
+            if parents[inst.key] is None and not _can_act(
+                work, inst, nodes_by_size, ends, omega
+            ):
+                stop = True  # lines 8-10: root opened with nothing to do
+                break
+            # line 11: alternative same-size instance with min end
+            alts = [
+                a for a in nodes_by_size.get(inst.size, [])
+                if a.key != inst.key
+            ]
+            acted = False
+            if alts and work.node_tasks.get(inst.key):
+                alt = min(alts, key=lambda a: (_node_end(a, ends), a.key))
+                margin = omega - _node_end(alt, ends)
+                # lines 12-16: move
+                tid = _best_move(work, inst.key, margin)
+                if tid is not None:
+                    work.node_tasks[inst.key].remove(tid)
+                    lst = work.node_tasks.setdefault(alt.key, [])
+                    _sorted_insert(lst, tid, work, alt.size)
+                    stats.moves += 1
+                    acted = edited = True
+                else:
+                    # lines 18-22: swap
+                    pair = _best_swap(work, inst.key, alt.key, margin)
+                    if pair is not None:
+                        tk, tj = pair
+                        work.node_tasks[inst.key].remove(tk)
+                        work.node_tasks[alt.key].remove(tj)
+                        _sorted_insert(
+                            work.node_tasks[alt.key], tk, work, alt.size
+                        )
+                        _sorted_insert(
+                            work.node_tasks[inst.key], tj, work, inst.size
+                        )
+                        stats.swaps += 1
+                        acted = edited = True
+                if acted:
+                    ends = _slice_ends_no_reconfig(work, rkw)  # line 16/22
+            if not acted:  # lines 23-24: open the parent
+                parent = parents[inst.key]
+                if parent is None:
+                    stop = True
+                    break
+                if parent.key not in opened:
+                    opened.add(parent.key)
+                    queue.append(parent)
+        # line 26 equivalent: full timing recomputation + acceptance guard
+        if edited:
+            sched = replay(work, **rkw)
+            if sched.makespan < best_makespan - EPS:
+                rel = best_makespan / sched.makespan - 1.0
+                best_makespan = sched.makespan
+                best_assign = work.copy()
+                if rel < min_rel_improvement:
+                    break
+        else:
+            break
+
+    final = replay(best_assign, **rkw)
+    stats.improvement = (
+        base_sched.makespan / final.makespan - 1.0 if final.makespan > 0 else 0.0
+    )
+    return best_assign, final, stats
+
+
+def _can_act(assignment, inst, nodes_by_size, ends, omega) -> bool:
+    """Cheap check whether the root node could still move/swap anything."""
+    alts = [a for a in nodes_by_size.get(inst.size, []) if a.key != inst.key]
+    return bool(alts and assignment.node_tasks.get(inst.key))

@@ -1,0 +1,304 @@
+"""FAR Phase 2: rigid scheduling of one allocation by instance
+repartitioning (paper §3.2, Algorithm 1).
+
+LPT-ordered list scheduling on the device's repartitioning tree: the next
+instance to host a task is the first to be released (min-heap on end time),
+an instance with no remaining same-size tasks is repartitioned into its
+children, and all creations/destructions are charged sequentially through a
+global ``reconfig_end`` (the NVIDIA driver serialises them, paper §2.1).
+
+Two artefacts are produced:
+
+* an :class:`Assignment` — the repartitioning tree with an ordered task list
+  per node (the paper's "output tree");
+* a :class:`~repro.core.problem.Schedule` — begin times + reconfiguration
+  windows, extracted from the assignment by :func:`replay` (the paper's
+  "BFS traversal of the output tree"), which charges a destruction only
+  when a descendant actually hosts tasks.
+
+``replay`` is the single timing authority: phase 3 (refinement) and the
+multi-batch concatenation edit the assignment and re-derive times with it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+from repro.core.allocations import Allocation
+from repro.core.device_spec import DeviceSpec, InstanceNode
+from repro.core.problem import ReconfigEvent, Schedule, ScheduledTask, Task
+
+NodeKey = tuple[int, int, int, int]
+
+
+@dataclasses.dataclass
+class Assignment:
+    """Tasks assigned, in execution order, to repartitioning-tree nodes."""
+
+    spec: DeviceSpec
+    tasks: dict[int, Task]              # task id -> Task
+    node_tasks: dict[NodeKey, list[int]]  # node key -> ordered task ids
+
+    def copy(self) -> "Assignment":
+        return Assignment(
+            self.spec,
+            dict(self.tasks),
+            {k: list(v) for k, v in self.node_tasks.items()},
+        )
+
+    def size_of(self, key: NodeKey) -> int:
+        return key[2]
+
+    def active_keys(self) -> set[NodeKey]:
+        return {k for k, v in self.node_tasks.items() if v}
+
+
+def list_schedule_allocation(
+    tasks: Sequence[Task],
+    allocation: Allocation,
+    spec: DeviceSpec,
+) -> Assignment:
+    """Algorithm 1 — returns the output tree (assignment)."""
+    # lines 1-2: group by allocated size, LPT order within each group
+    groups: dict[int, list[Task]] = {s: [] for s in spec.sizes}
+    for task, size in zip(tasks, allocation):
+        groups[size].append(task)
+    for size, grp in groups.items():
+        grp.sort(key=lambda t: (-t.times[size], t.id))
+    remaining = len(tasks)
+
+    node_tasks: dict[NodeKey, list[int]] = {}
+    reconfig_end = 0.0  # line 3
+    heap: list[tuple[float, int, InstanceNode]] = []
+    seq = 0
+    for root in spec.roots:  # line 4
+        heapq.heappush(heap, (0.0, seq, root))
+        seq += 1
+
+    while heap:  # line 5
+        end, _, node = heapq.heappop(heap)  # line 6
+        grp = groups[node.size] if node.size in groups else []
+        if grp:  # lines 7-16: task placement
+            key = node.key
+            if key not in node_tasks:  # lines 8-11: charge creation
+                reconfig_end = max(reconfig_end, end)
+                reconfig_end += spec.t_create[node.size]
+                end = reconfig_end
+                node_tasks[key] = []
+            task = grp.pop(0)  # line 12: longest unscheduled of this size
+            node_tasks[key].append(task.id)
+            end += task.times[node.size]  # lines 13-15
+            remaining -= 1
+            heapq.heappush(heap, (end, seq, node))  # line 16
+            seq += 1
+        elif remaining > 0:  # lines 17-23: repartitioning
+            if node_tasks.get(node.key):  # lines 18-20: charge destruction
+                reconfig_end = max(reconfig_end, end)
+                reconfig_end += spec.t_destroy[node.size]
+            for child in node.children:  # lines 21-24
+                heapq.heappush(heap, (end, seq, child))
+                seq += 1
+        # else: all tasks scheduled -> the instance simply retires
+
+    assert remaining == 0, "Algorithm 1 failed to place every task"
+    return Assignment(
+        spec, {t.id: t for t in tasks}, node_tasks
+    )
+
+
+def replay(
+    assignment: Assignment,
+    release: dict | None = None,
+    include_reconfig: bool = True,
+    direction: str = "forward",
+    alive: dict[NodeKey, float] | None = None,
+) -> Schedule:
+    """Extract the canonical timed schedule from an assignment.
+
+    Deterministic event simulation that mirrors Algorithm 1's timing rules:
+    an instance is created (sequentially, through the global reconfiguration
+    window) when it first hosts a task, runs its tasks back-to-back, and is
+    destroyed when the schedule moves past it.
+
+    Args:
+      assignment: tree + ordered per-node task lists.
+      release: optional per-(tree, slice) release times — slices are not
+        available before these (used by multi-batch concatenation to splice
+        a batch after the previous one; paper §4).  May also contain the
+        key ``"reconfig"`` for the reconfiguration-sequence release time.
+      include_reconfig: when False, creations/destructions take zero time
+        (used by phase-3 bookkeeping between full recomputations).
+      direction: ``"forward"`` runs root -> leaves (Algorithm 1's order:
+        big instances first, destroy parent before children); ``"reverse"``
+        runs leaves -> root with each node's task list reversed (paper §4.2
+        batch reversal: small instances first, children destroyed before
+        their parent is created).
+      alive: instances still existing when this batch starts (carried over
+        from the previous batch), mapped to their busy-until time.  A
+        conflicting alive instance is destroyed (sequentially) before any
+        overlapping instance is created; an alive instance reused by this
+        batch skips its creation window entirely (paper §4.2: reconfigs are
+        "eliminated when the last instance of B_{k-1} coincides with the
+        first instance of B_k").
+    """
+    spec = assignment.spec
+    release = release or {}
+    alive = dict(alive or {})
+    active = assignment.active_keys()
+    t_create = spec.t_create if include_reconfig else {s: 0.0 for s in spec.sizes}
+    t_destroy = spec.t_destroy if include_reconfig else {s: 0.0 for s in spec.sizes}
+
+    items: list[ScheduledTask] = []
+    reconfigs: list[ReconfigEvent] = []
+    reconfig_end = float(release.get("reconfig", 0.0))
+    destroyed_alive: set[NodeKey] = set()
+
+    def node_release(node: InstanceNode) -> float:
+        return max(
+            (float(release.get((node.tree, s), 0.0)) for s in node.blocked),
+            default=0.0,
+        )
+
+    def clear_alive_conflicts(node: InstanceNode) -> None:
+        """Destroy carried-over instances overlapping ``node``'s footprint."""
+        nonlocal reconfig_end
+        cells = {(node.tree, s) for s in node.blocked}
+        for akey in sorted(alive):
+            if akey == node.key or akey in destroyed_alive:
+                continue
+            anode = spec.node_by_key(akey)
+            if not (cells & {(anode.tree, s) for s in anode.blocked}):
+                continue
+            reconfig_end = max(reconfig_end, alive[akey])
+            begin_d = reconfig_end
+            reconfig_end += t_destroy[anode.size]
+            reconfigs.append(ReconfigEvent("destroy", anode, begin_d, reconfig_end))
+            destroyed_alive.add(akey)
+
+    def run_node(node: InstanceNode, ready: float) -> float:
+        """Create (if needed), run tasks, return the node's task-end time."""
+        nonlocal reconfig_end
+        key = node.key
+        ready = max(ready, node_release(node))
+        if key in alive and key not in destroyed_alive:
+            # instance reuse across the batch seam: no creation window
+            t = max(ready, alive[key])
+        else:
+            clear_alive_conflicts(node)
+            reconfig_end = max(reconfig_end, ready)
+            begin_c = reconfig_end
+            reconfig_end += t_create[node.size]
+            reconfigs.append(ReconfigEvent("create", node, begin_c, reconfig_end))
+            t = reconfig_end
+        tids = assignment.node_tasks[key]
+        if direction == "reverse":
+            tids = list(reversed(tids))
+        for tid in tids:
+            task = assignment.tasks[tid]
+            items.append(ScheduledTask(task, node, t, node.size))
+            t += task.times[node.size]
+        return t
+
+    def destroy_node(node: InstanceNode, after: float) -> None:
+        nonlocal reconfig_end
+        reconfig_end = max(reconfig_end, after)
+        begin_d = reconfig_end
+        reconfig_end += t_destroy[node.size]
+        reconfigs.append(ReconfigEvent("destroy", node, begin_d, reconfig_end))
+
+    # Event-driven simulation.  Reconfiguration windows are appended to the
+    # sequentialised reconfiguration timeline strictly in event-time order
+    # (Algorithm 1 interleaves creations/destructions of different instances
+    # by their release times — processing a whole node atomically would
+    # wrongly serialise sibling creations behind a later destroy).
+    heap: list[tuple[float, int, str, InstanceNode]] = []
+    seq = 0
+
+    def push(when: float, what: str, node: InstanceNode) -> None:
+        nonlocal seq
+        heapq.heappush(heap, (when, seq, what, node))
+        seq += 1
+
+    if direction == "forward":
+        def subtree_active(node: InstanceNode) -> bool:
+            if node.key in active:
+                return True
+            return any(subtree_active(c) for c in node.children)
+
+        for root in spec.roots:
+            push(0.0, "visit", root)
+        while heap:
+            when, _, what, node = heapq.heappop(heap)
+            if what == "visit":
+                if node.key in active:
+                    node_end = run_node(node, when)
+                    push(node_end, "done", node)
+                else:
+                    push(when, "done", node)
+            else:  # done -> destroy (if needed) and release children
+                if not any(subtree_active(c) for c in node.children):
+                    continue
+                if node.key in active:
+                    destroy_node(node, when)
+                for child in node.children:
+                    if subtree_active(child):
+                        push(when, "visit", child)
+    elif direction == "reverse":
+        # leaves -> root: an active node waits for all its active strict
+        # descendants; it is destroyed iff an active strict ancestor exists.
+        anc: dict[NodeKey, list[NodeKey]] = {k: [] for k in active}
+        desc_count: dict[NodeKey, int] = {k: 0 for k in active}
+
+        def walk(node: InstanceNode, chain: list[NodeKey]) -> None:
+            """chain = active ancestors of ``node``, top-down."""
+            if node.key in active:
+                anc[node.key] = list(chain)
+                for a in chain:
+                    desc_count[a] += 1
+                chain = chain + [node.key]
+            for c in node.children:
+                walk(c, chain)
+
+        for root in spec.roots:
+            walk(root, [])
+
+        ready_t: dict[NodeKey, float] = {k: 0.0 for k in active}
+        for k in active:
+            if desc_count[k] == 0:
+                push(0.0, "visit", spec.node_by_key(k))
+        while heap:
+            when, _, what, node = heapq.heappop(heap)
+            key = node.key
+            if what == "visit":
+                node_end = run_node(node, when)
+                push(node_end, "done", node)
+            else:
+                if anc[key]:
+                    destroy_node(node, when)
+                for a in anc[key]:
+                    ready_t[a] = max(ready_t[a], when)
+                    desc_count[a] -= 1
+                    if desc_count[a] == 0:
+                        push(ready_t[a], "visit", spec.node_by_key(a))
+    else:
+        raise ValueError(f"unknown direction {direction!r}")
+
+    return Schedule(spec=spec, items=items, reconfigs=reconfigs)
+
+
+def alive_at_end(schedule: Schedule) -> dict[NodeKey, float]:
+    """Instances existing when the schedule finishes -> busy-until time."""
+    created: dict[NodeKey, float] = {}
+    for rc in schedule.reconfigs:
+        if rc.kind == "create":
+            created[rc.node.key] = rc.end
+        elif rc.kind == "destroy":
+            created.pop(rc.node.key, None)
+    out: dict[NodeKey, float] = {}
+    by_node = schedule.by_node()
+    for key, end_c in created.items():
+        lst = by_node.get(key, [])
+        out[key] = max([end_c] + [it.end for it in lst])
+    return out

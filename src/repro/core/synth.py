@@ -1,0 +1,162 @@
+"""Synthetic task-time generator (paper §6.3), reimplemented exactly.
+
+Each task "exploits well" up to a target instance size ``s_max`` drawn from
+the configured percentages ``p_s``.  Times are generated for every integer
+slice count, then restricted to ``C_G``:
+
+    t(1) ~ U(t_min, t_max)
+    t(s+1) = (s + r) / (s + 1) * t(s)
+
+with ``r`` drawn per increment from clipped normals by speedup type —
+super-linear  N(-0.25, 0.25) clipped to [-0.5, 0]
+near-linear   N( 0.10, 0.10) clipped to [ 0.0, 0.2]
+sub-linear    N( 0.75, 0.25) clipped to [ 0.5, 1.0]
+
+A ``p_sup`` fraction of each group starts memory-bound: super-linear
+increments until a Bernoulli(0.3)-per-slice transition to compute-bound,
+after which increments are sub-linear (paper §6.3's A30 walkthrough);
+compute-bound tasks scale near-linearly up to ``s_max``; all increments
+beyond ``s_max`` are sub-linear.  ``r <= 1`` guarantees monotone times
+(paper monotony point 1).
+
+Workload presets mirror the paper: PoorScaling / MixedScaling / GoodScaling
+× WideTimes / NarrowTimes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.device_spec import DeviceSpec
+from repro.core.problem import Task
+
+TRANSITION_P = 0.3  # memory-bound -> compute-bound, per slice increment
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    name: str
+    p_exploit: Mapping[int, float]   # instance size -> % of tasks (sums to 100)
+    p_sup: float = 50.0              # % of each group starting memory-bound
+    t_min: float = 1.0
+    t_max: float = 100.0
+
+
+def _r_super(rng: np.random.Generator) -> float:
+    return float(np.clip(rng.normal(-0.25, 0.25), -0.5, 0.0))
+
+
+def _r_near(rng: np.random.Generator) -> float:
+    return float(np.clip(rng.normal(0.10, 0.10), 0.0, 0.2))
+
+
+def _r_sub(rng: np.random.Generator) -> float:
+    return float(np.clip(rng.normal(0.75, 0.25), 0.5, 1.0))
+
+
+def _group_counts(n: int, cfg: WorkloadConfig) -> dict[int, int]:
+    """Floor the percentages, then iteratively bump the size farthest from
+    its exact share (paper §6.3 footnote 8)."""
+    sizes = sorted(cfg.p_exploit)
+    counts = {s: int(np.floor(n * cfg.p_exploit[s] / 100.0)) for s in sizes}
+    while sum(counts.values()) < n:
+        j = max(sizes, key=lambda s: n * cfg.p_exploit[s] / 100.0 - counts[s])
+        counts[j] += 1
+    return counts
+
+
+def generate_tasks(
+    n: int,
+    spec: DeviceSpec,
+    cfg: WorkloadConfig,
+    seed: int = 0,
+    id_offset: int = 0,
+) -> list[Task]:
+    rng = np.random.default_rng(seed)
+    max_size = max(spec.sizes)
+    counts = _group_counts(n, cfg)
+
+    tasks: list[Task] = []
+    tid = id_offset
+    for s_max, count in sorted(counts.items()):
+        n_sup = int(np.ceil(cfg.p_sup / 100.0 * count)) if s_max >= 2 else 0
+        for k in range(count):
+            memory_bound = k < n_sup
+            t = float(rng.uniform(cfg.t_min, cfg.t_max))
+            times = {1: t}
+            mb = memory_bound
+            for s in range(1, max_size):
+                if s + 1 > s_max:
+                    r = _r_sub(rng)
+                elif memory_bound:
+                    if mb:
+                        r = _r_super(rng)
+                        if rng.uniform() < TRANSITION_P:
+                            mb = False  # becomes compute-bound from next size
+                    else:
+                        r = _r_sub(rng)
+                else:
+                    r = _r_near(rng)
+                t = (s + r) / (s + 1) * t
+                times[s + 1] = t
+            profile = {s: times[s] for s in spec.sizes}
+            tasks.append(Task(id=tid, times=profile, name=f"synth{tid}"))
+            tid += 1
+    # deterministic shuffle so FIFO baselines do not see grouped sizes
+    order = rng.permutation(len(tasks))
+    return [
+        dataclasses.replace(tasks[i], id=id_offset + j)
+        for j, i in enumerate(order)
+    ]
+
+
+# --- paper workload presets (A100/H100 percentages, §6.3) -------------------
+
+def poor_scaling(spec: DeviceSpec) -> dict[int, float]:
+    sizes = spec.sizes
+    out = {s: 0.0 for s in sizes}
+    out[sizes[0]] = 50.0
+    out[sizes[1]] = 50.0
+    return out
+
+
+def mixed_scaling(spec: DeviceSpec) -> dict[int, float]:
+    share = 100.0 / len(spec.sizes)
+    return {s: share for s in spec.sizes}
+
+
+def good_scaling(spec: DeviceSpec) -> dict[int, float]:
+    sizes = spec.sizes
+    out = {s: 0.0 for s in sizes}
+    out[sizes[-2]] = 50.0
+    out[sizes[-1]] = 50.0
+    return out
+
+
+def workload(
+    scaling: str, times: str, spec: DeviceSpec, p_sup: float = 50.0
+) -> WorkloadConfig:
+    """Build one of the six paper workloads, e.g. ("mixed", "wide")."""
+    p = {
+        "poor": poor_scaling,
+        "mixed": mixed_scaling,
+        "good": good_scaling,
+    }[scaling](spec)
+    t_min, t_max = {"wide": (1.0, 100.0), "narrow": (90.0, 100.0)}[times]
+    return WorkloadConfig(
+        name=f"{scaling.capitalize()}Scaling,{times.capitalize()}Times",
+        p_exploit=p,
+        p_sup=p_sup,
+        t_min=t_min,
+        t_max=t_max,
+    )
+
+
+ALL_WORKLOADS: Sequence[tuple[str, str]] = (
+    ("poor", "narrow"), ("poor", "wide"),
+    ("mixed", "narrow"), ("mixed", "wide"),
+    ("good", "narrow"), ("good", "wide"),
+)

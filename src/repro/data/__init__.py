@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, TokenBatchIterator
+
+__all__ = ["SyntheticTokens", "TokenBatchIterator"]

@@ -1,0 +1,101 @@
+"""Deterministic synthetic token pipeline.
+
+A seeded, stateless source (batch ``i`` is a pure function of (seed, i), so
+restarts after checkpoint recovery replay the exact stream — fault
+tolerance needs no data-state checkpointing) with a host-side prefetch
+thread.  Each host materialises only its shard of the global batch
+(``host_slice``), the standard multi-host JAX pattern.
+
+The synthetic distribution is a Zipfian unigram mix with a Markov-ish
+repetition kick so the loss actually decreases during the example runs
+(pure-uniform tokens would pin CE at log V).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+
+class SyntheticTokens:
+    """Deterministic batch source: ``batch(i) -> {"tokens", "labels"}``."""
+
+    def __init__(
+        self,
+        vocab_size: int,
+        seq_len: int,
+        global_batch: int,
+        seed: int = 0,
+        zipf_a: float = 1.2,
+        repeat_p: float = 0.3,
+    ):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.zipf_a = zipf_a
+        self.repeat_p = repeat_p
+
+    def batch(self, index: int, host_id: int = 0, host_count: int = 1):
+        assert self.global_batch % host_count == 0
+        per_host = self.global_batch // host_count
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, index, host_id])
+        )
+        z = rng.zipf(self.zipf_a, size=(per_host, self.seq_len + 1))
+        toks = (z - 1) % self.vocab_size
+        # repetition kick: with prob repeat_p, copy the previous token + 1
+        rep = rng.random((per_host, self.seq_len)) < self.repeat_p
+        nxt = (toks[:, :-1] + 1) % self.vocab_size
+        toks[:, 1:] = np.where(rep, nxt, toks[:, 1:])
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+
+class TokenBatchIterator:
+    """Prefetching iterator over a SyntheticTokens source."""
+
+    def __init__(
+        self,
+        source: SyntheticTokens,
+        start_index: int = 0,
+        prefetch: int = 2,
+        host_id: int = 0,
+        host_count: int = 1,
+    ):
+        self.source = source
+        self.index = start_index
+        self.host_id = host_id
+        self.host_count = host_count
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        i = self.index
+        while not self._stop.is_set():
+            b = self.source.batch(i, self.host_id, self.host_count)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((i, b), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            i += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        i, b = self._q.get()
+        self.index = i + 1
+        return b
+
+    def close(self):
+        self._stop.set()

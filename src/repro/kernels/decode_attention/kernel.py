@@ -1,0 +1,122 @@
+"""Single-token decode attention Pallas TPU kernel.
+
+The decode hot spot is bandwidth: one query row against a KV cache of up to
+500k entries.  Grid = (batch, kv_heads, kv_blocks) with the kv-block axis
+minor/sequential; the online-softmax running stats for the *whole GQA
+group* of this kv head ([G, hd] accumulator) sit in VMEM scratch, so every
+cache byte is read exactly once and the arithmetic rides the MXU via
+[G, bk] score tiles.  A boolean validity mask handles rolling-window caches
+and partially-filled buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _da_kernel(
+    q_ref,      # [1, 1, G, hd]
+    k_ref,      # [1, bk, 1, hd]
+    v_ref,
+    valid_ref,  # [bk] bool
+    o_ref,      # [1, 1, G, hd]
+    m_ref, l_ref, acc_ref,   # scratch: [G], [G], [G, hd]
+    *,
+    scale: float,
+    softcap: float,
+    n_blocks: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)            # [bk, hd]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                          # [G, bk]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid_ref[...][None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0, :, 0].astype(jnp.float32)             # [bk, hd]
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == n_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "scale", "bk", "interpret")
+)
+def decode_attention(
+    q: jax.Array,       # [B, 1, H, hd]
+    k: jax.Array,       # [B, L, KV, hd]
+    v: jax.Array,
+    valid: jax.Array,   # [L] bool
+    *,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = hd ** -0.5
+    bk = min(bk, l)
+    assert l % bk == 0, (l, bk)
+    n_blocks = l // bk
+
+    # [B, KV, G, hd] query layout: all G queries of one kv head together
+    qt = q.reshape(b, kv, g, hd)
+
+    kernel = functools.partial(
+        _da_kernel, scale=scale, softcap=softcap, n_blocks=n_blocks
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, kh, ki: (b_, kh, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, kh, ki: (b_, ki, kh, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, kh, ki: (b_, ki, kh, 0)),
+            pl.BlockSpec((bk,), lambda b_, kh, ki: (ki,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd), lambda b_, kh, ki: (b_, kh, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, k, v, valid)
+    # out is [B, KV, G, hd] == attention for q-head (kh*g + gi)
+    return out.reshape(b, 1, h, hd)

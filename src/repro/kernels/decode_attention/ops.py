@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for decode attention (see flash_attention/ops.py)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, valid, *, softcap=0.0, scale=None, bk=512):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(
+        q, k, v, valid, softcap=softcap, scale=scale, bk=bk,
+        interpret=interpret,
+    )
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

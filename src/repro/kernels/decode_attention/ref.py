@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,      # [B, 1, H, hd]
+    k: jax.Array,      # [B, L, KV, hd]
+    v: jax.Array,
+    valid: jax.Array,  # [L] bool
+    *,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,162 @@
+"""Flash attention forward Pallas TPU kernel.
+
+Tiled online-softmax attention.  Grid = (batch, q_heads, q_blocks,
+kv_blocks); the kv dimension is the minor (sequential) grid axis, so the
+running max / sum / accumulator live in VMEM scratch and are carried across
+kv steps ("arbitrary" TPU grid semantics).  Block sizes are MXU-aligned
+(multiples of 128 on the sequence dims; head_dim is kept whole — 64…256 for
+the assigned archs).
+
+Supports causal masking, sliding-window masking, logit soft-capping and
+GQA (kv head = q head // group) without materialising the [Sq, Skv] score
+matrix in HBM.  VMEM footprint per step:
+  q tile  bq×hd, k/v tiles bk×hd, acc bq×hd (f32), m/l bq — with the
+  default bq=bk=256, hd≤256 that is ≤ 0.9 MB, far under the ~16 MB budget,
+  leaving room for double-buffered pipelining.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref,        # VMEM tiles
+    o_ref,                      # output tile
+    m_ref, l_ref, acc_ref,      # scratch: running max / sum / accumulator
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    bq: int,
+    bk: int,
+    n_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+
+    # skip fully-masked blocks (causal: ki beyond the diagonal; window:
+    # ki before the band) — cheap static-ish predicate on block indexes
+    run = jnp.bool_(True)
+    if causal:
+        run &= ki * bk <= qi * bq + bq - 1
+    if window:
+        run &= (ki + 1) * bk - 1 > qi * bq - window
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                       # [bq, bk]
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # [bq]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])                 # [bq, bk]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)             # [bk, hd]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "bq", "bk", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    if scale is None:
+        scale = hd ** -0.5
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    n_q, n_k = sq // bq, skv // bk
+
+    grid = (b, h, n_q, n_k)
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, n_kv_blocks=n_k,
+    )
+    # layout: [B, H, S, hd] blocks of [1, 1, bq|bk, hd]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, hd),
+                lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, hd),
+                lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, hd), lambda b_, h_, qi, ki: (b_, h_, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)  # [B, Sq, H, hd]

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for flash attention.
+
+On a TPU backend the Pallas kernel runs natively; elsewhere (this CPU
+container) ``interpret=True`` executes the kernel body in Python for
+correctness runs, and model code defaults to the XLA path anyway
+(``attention_impl="xla"``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+    bq=256, bk=256,
+):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        scale=scale, bq=bq, bk=bk, interpret=interpret,
+    )
+
+
+__all__ = ["flash_attention", "attention_ref"]

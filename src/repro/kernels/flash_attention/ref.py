@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,112 @@
+"""Fused sLSTM cell Pallas TPU kernel (EXPERIMENTS.md §Perf H1 follow-up).
+
+The sLSTM recurrence is inherently sequential; under XLA each timestep
+re-reads the four recurrent matrices from HBM, which made xlstm-350m's
+training memory term explode.  This kernel keeps the per-head recurrent
+weights **resident in VMEM** across the whole time loop and streams the
+gate pre-activations through in chunks:
+
+  grid = (batch, heads, time_chunks)   (time minor, sequential)
+  VMEM: rz/ri/rf/ro [D,D] (via BlockSpec, revisited per chunk but pinned
+        by the pipeline since the index map is constant in the chunk axis),
+        xs chunk [4, Tc, D], carry scratch c/n/h/m [D].
+
+HBM traffic per layer drops from O(T·D²) weight reads to O(T·D) activation
+streaming — the roofline projection that closes H1.
+
+Per-step math (stabilised, matches ``repro.models.xlstm.slstm_scan``):
+  z = tanh(zx + h·Rz); i = ix + h·Ri; f = fx + h·Rf; o = σ(ox + h·Ro)
+  m' = max(log σ(f) + m, i)
+  c' = e^{logσ(f)+m-m'}·c + e^{i-m'}·z ;  n' likewise ;  h' = o·c'/max(n',ε)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(
+    zx_ref, ix_ref, fx_ref, ox_ref,   # [1, 1, 1, Tc, D] gate pre-activations
+    rz_ref, ri_ref, rf_ref, ro_ref,   # [1, D, D] recurrent weights (VMEM)
+    h_out_ref,                        # [1, 1, 1, Tc, D]
+    c_ref, n_ref, h_ref, m_ref,       # scratch [1, D] f32 (carry)
+    *,
+    tc: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    rz = rz_ref[0].astype(jnp.float32)
+    ri = ri_ref[0].astype(jnp.float32)
+    rf = rf_ref[0].astype(jnp.float32)
+    ro = ro_ref[0].astype(jnp.float32)
+
+    def step(t, _):
+        h = h_ref[...]                                      # [1, D]
+        zt = zx_ref[0, 0, 0, t].astype(jnp.float32)[None] + h @ rz
+        it = ix_ref[0, 0, 0, t].astype(jnp.float32)[None] + h @ ri
+        ft = fx_ref[0, 0, 0, t].astype(jnp.float32)[None] + h @ rf
+        ot = ox_ref[0, 0, 0, t].astype(jnp.float32)[None] + h @ ro
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m_ref[...], it)
+        fp = jnp.exp(logf + m_ref[...] - m_new)
+        ip = jnp.exp(it - m_new)
+        c = fp * c_ref[...] + ip * zt
+        n = fp * n_ref[...] + ip
+        h_new = ot * c / jnp.maximum(n, 1e-6)
+        c_ref[...] = c
+        n_ref[...] = n
+        h_ref[...] = h_new
+        m_ref[...] = m_new
+        h_out_ref[0, 0, 0, t] = h_new[0].astype(h_out_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, tc, step, ())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def slstm_cell(
+    zx: jax.Array, ix: jax.Array, fx: jax.Array, ox: jax.Array,  # [B,T,H,D]
+    rz: jax.Array, ri: jax.Array, rf: jax.Array, ro: jax.Array,  # [H,D,D]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, h, d = zx.shape
+    tc = min(chunk, t)
+    assert t % tc == 0, (t, tc)
+    nc = t // tc
+
+    gates = [a.transpose(0, 2, 1, 3).reshape(b, h, nc, tc, d)
+             for a in (zx, ix, fx, ox)]
+
+    kernel = functools.partial(_slstm_kernel, tc=tc)
+    gate_spec = pl.BlockSpec(
+        (1, 1, 1, tc, d), lambda b_, h_, ci: (b_, h_, ci, 0, 0)
+    )
+    w_spec = pl.BlockSpec((1, d, d), lambda b_, h_, ci: (h_, 0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[gate_spec] * 4 + [w_spec] * 4,
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, tc, d), lambda b_, h_, ci: (b_, h_, ci, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, nc, tc, d), zx.dtype),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)] * 4,
+        interpret=interpret,
+    )(*gates, rz, ri, rf, ro)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)  # [B,T,H,D]

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the fused sLSTM cell."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.slstm_cell.kernel import slstm_cell as _kernel
+from repro.kernels.slstm_cell.ref import slstm_cell_ref
+
+
+def slstm_cell(zx, ix, fx, ox, rz, ri, rf, ro, *, chunk: int = 256):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(zx, ix, fx, ox, rz, ri, rf, ro, chunk=chunk,
+                   interpret=interpret)
+
+
+__all__ = ["slstm_cell", "slstm_cell_ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused sLSTM cell: the model-side scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.xlstm import slstm_scan
+
+
+def slstm_cell_ref(zx, ix, fx, ox, rz, ri, rf, ro) -> jax.Array:
+    hs, _ = slstm_scan(zx, ix, fx, ox,
+                       {"rz": rz, "ri": ri, "rf": rf, "ro": ro}, None)
+    return hs.astype(zx.dtype)

@@ -1,0 +1,121 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Grid = (batch, ssm_heads, chunks) with the chunk axis minor/sequential: the
+[N, P] inter-chunk state is carried in VMEM scratch while each grid step
+computes the within-chunk quadratic form on the MXU:
+
+    y[i]  = Σ_{j<=i} (C_i·B_j) exp(cum_i - cum_j) dt_j x_j  +  C_i·state·exp(cum_i)
+    state = state·exp(cum_last) + Σ_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+
+VMEM per step: x/B/C chunk tiles (c×P, c×N), the c×c decay-masked score
+tile and the [N, P] state — with c=256, N=P=64 that is ~0.6 MB.
+
+The pure-jnp oracle is ``repro.models.mamba2.ssd_chunked``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,     # [1, 1, c, P]
+    dt_ref,    # [1, 1, c]
+    a_ref,     # [1]
+    b_ref,     # [1, c, N]
+    c_ref,     # [1, c, N]
+    y_ref,     # [1, 1, c, P]
+    state_ref,  # scratch [N, P] f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)      # [c, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)    # [c]
+    a = a_ref[0].astype(jnp.float32)             # scalar
+    bm = b_ref[0, 0].astype(jnp.float32)         # [c, N]
+    cm = c_ref[0, 0].astype(jnp.float32)         # [c, N]
+
+    adt = dt * a                                  # [c], negative
+    cum = jnp.cumsum(adt)                         # [c]
+    atot = cum[-1]
+
+    # intra-chunk decay-masked scores
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dec = jnp.where(jj <= ii, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # [c, c]
+    w = scores * dec * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # [c, P]
+    # inter-chunk contribution
+    y += jax.lax.dot_general(
+        cm, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)[:, None]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    g = jnp.exp(atot - cum) * dt                  # [c]
+    state_ref[...] = state_ref[...] * jnp.exp(atot) + jax.lax.dot_general(
+        bm * g[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H] (post-softplus)
+    a: jax.Array,    # [H] negative
+    bmat: jax.Array,  # [B, S, N]
+    cmat: jax.Array,  # [B, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    xt = x.transpose(0, 2, 1, 3).reshape(b, h, nc, c, p)
+    dtt = dt.transpose(0, 2, 1).reshape(b, h, nc, c)
+    bt = bmat.reshape(b, nc, c, n)
+    ct = cmat.reshape(b, nc, c, n)
+
+    kernel = functools.partial(_ssd_kernel, chunk=c)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, c, p),
+                         lambda b_, h_, ci: (b_, h_, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b_, h_, ci: (b_, h_, ci, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, ci: (h_,)),
+            pl.BlockSpec((1, 1, c, n), lambda b_, h_, ci: (b_, ci, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda b_, h_, ci: (b_, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, c, p), lambda b_, h_, ci: (b_, h_, ci, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, nc, c, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a, bt, ct)
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for the SSD scan (see flash_attention/ops.py)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as _kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk: int = 256):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(x, dt, a, bmat, cmat, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["ssd_scan", "ssd_scan_ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SSD scan kernel: the model-side chunked scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat, chunk: int = 256) -> jax.Array:
+    y, _ = ssd_chunked(x, dt, a, bmat, cmat, chunk=chunk)
+    return y.astype(x.dtype)

@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  For every cell this script:
+
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. resolves the architecture's sharding rules on that mesh,
+  3. lowers the appropriate step (train_step / prefill_step / decode_step)
+     against ShapeDtypeStruct inputs (no allocation),
+  4. compiles it, and
+  5. records ``memory_analysis`` / ``cost_analysis`` / per-collective byte
+     counts (parsed from the optimised HLO, scan trip-counts applied) to
+     ``reports/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Any failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the framework, not in the run.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get
+from repro.launch.hlo_analysis import collective_traffic, summarize
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.models.config import SHAPES, input_specs, shape_applicable
+from repro.models.model import build_model
+from repro.parallel.sharding import make_rules
+from repro.parallel.steps import (
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False):
+    """Lower + compile one cell; returns the report dict."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh_shape_dict(mesh),
+                       batch_size=shape.global_batch)
+    model = build_model(cfg, impl="xla")
+
+    t0 = time.time()
+    with mesh:
+        specs = input_specs(cfg, shape)
+        if shape.kind == "train":
+            bundle = make_train_step(model, rules, mesh, shape)
+            state_sds = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.key(0))
+            )
+            args = (state_sds, specs)
+        elif shape.kind == "prefill":
+            bundle = make_prefill_step(model, rules, mesh, shape)
+            params_sds = model.param_shapes()
+            args = (params_sds, specs)
+        else:  # decode
+            bundle = make_decode_step(model, rules, mesh, shape)
+            params_sds = model.param_shapes()
+            cache_sds = model.cache_shapes(shape.global_batch, shape.seq_len)
+            args = (params_sds, cache_sds, specs["token"])
+
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate_argnums,
+        )
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_traffic(compiled.as_text())
+
+    report = summarize(
+        arch=arch, shape=shape, mesh=mesh, cfg=cfg,
+        mem=mem, cost=cost, coll=coll,
+        compile_s=time.time() - t0,
+        multi_pod=multi_pod,
+    )
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=REPORT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else sorted(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rep = lower_cell(arch, shape, multi_pod=multi)
+                    status = rep.get("status", "ok")
+                    print(f"[{status:7s}] {tag}  "
+                          + (f"compile={rep.get('compile_s', 0):.1f}s "
+                             f"mem/dev={rep.get('bytes_per_device', 0)/2**30:.2f}GiB"
+                             if status == "ok" else rep.get("reason", "")))
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    rep = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures.append(tag)
+                    print(f"[ERROR  ] {tag}  {e!r}")
+                with open(path, "w") as f:
+                    json.dump(rep, f, indent=2)
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,380 @@
+"""Optimised-HLO analysis for the roofline terms.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, but every
+model here scans over layer groups, so FLOPs/bytes/collective counts must
+be multiplied by loop trip counts.  This module parses the optimised HLO
+text into computations, builds the call graph (``fusion``/``call``/
+``while``/``conditional`` edges), reads each while's trip count from the
+comparison constant in its condition computation, and propagates
+multipliers from ENTRY.
+
+Per-op accounting (per device, SPMD-partitioned shapes):
+
+  * flops: ``dot`` ops — 2 · |result| · contracted-dim size (plus batch
+    handled implicitly via the result shape); convolutions 2·|out|·K·Cin.
+  * bytes: operand + result sizes of compute/data ops at fusion
+    granularity (a fusion is one memory pass — roofline-level estimate).
+  * collectives: bytes moved per device with per-primitive factors
+    (ring all-reduce moves ~2× the payload, others ~1×).
+
+The estimates are cross-checked against ``cost_analysis`` in the report
+(the latter is a lower bound since loops are counted once).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterable
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "u4": 1, "s4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# bytes-on-the-wire factor per payload byte (ring algorithms, large n)
+_COLL_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    if not dims:
+        return b
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _all_shape_bytes(text: str) -> int:
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(text))
+
+
+def _result_of(line: str) -> tuple[str, str] | None:
+    m = re.search(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]", line)
+    if m:
+        return m.group(1), m.group(2)
+    return None
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Computation name -> body lines (incl. the header for param types)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = [stripped]
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+_DEF_RE = re.compile(r"%([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _symbol_table(comps: dict[str, list[str]]) -> dict[str, tuple[str, str]]:
+    """name -> (dtype, dims) for every op result and computation param.
+    Tuple-typed results are skipped (we only need dot operand arrays)."""
+    tab: dict[str, tuple[str, str]] = {}
+    for lines in comps.values():
+        header, body = lines[0], lines[1:]
+        for m in _PARAM_RE.finditer(header):
+            tab.setdefault(m.group(1), (m.group(2), m.group(3)))
+        for line in body:
+            m = _DEF_RE.search(line)
+            if m and "= (" not in line.split(m.group(1))[0] + m.group(1):
+                name = m.group(1)
+                tab.setdefault(name, (m.group(2), m.group(3)))
+    return tab
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _dot_flops(line: str, symtab: dict[str, tuple[str, str]]) -> int:
+    res = _result_of(line)
+    if res is None:
+        return 0
+    out_elems = _elems(res[1])
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    mo = re.search(r"dot\(\s*%?([\w\.\-]+)", line)
+    if mc is None or mo is None:
+        return 2 * out_elems
+    lhs = symtab.get(mo.group(1))
+    if lhs is None:
+        return 2 * out_elems
+    lhs_dims = lhs[1].split(",") if lhs[1] else []
+    contract = 1
+    for idx in mc.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= int(lhs_dims[int(idx)])
+    return 2 * out_elems * contract
+
+
+_OP_RE = re.compile(r"=\s*\(?[a-z0-9]+\[[0-9,]*\][^\s]*\s+([a-z\-]+)[\.\(]")
+
+
+def analyze(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+    symtab = _symbol_table(comps)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: computation named main-ish
+        entry = next((c for c in comps if "main" in c), next(iter(comps)))
+
+    # --- per-computation raw stats + edges ---------------------------------
+    stats = {}
+    for name, lines in comps.items():
+        flops = 0
+        bytes_ = 0
+        coll: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+        coll_raw: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+        edges: list[tuple[str, str]] = []  # (callee, kind)
+        for line in lines[1:]:  # skip header
+            opm = _OP_RE.search(line)
+            op = opm.group(1) if opm else ""
+            if op == "dot":
+                flops += _dot_flops(line, symtab)
+                # lhs + rhs + out bytes
+                res = _result_of(line)
+                if res:
+                    bytes_ += _shape_bytes(*res)
+                for mo in re.finditer(r"dot\(([^)]*)\)", line):
+                    for nm in re.findall(r"%([\w\.\-]+)", mo.group(1)):
+                        opshape = symtab.get(nm)
+                        if opshape:
+                            bytes_ += _shape_bytes(*opshape)
+            elif op in ("fusion", "custom-call"):
+                bytes_ += _all_shape_bytes(line.split(", calls")[0]
+                                           .split(", metadata")[0])
+            elif op == "dynamic-update-slice":
+                # in-place update: traffic = the updated slice (operand 1),
+                # not the whole buffer (XLA aliases the result)
+                mo = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                if mo:
+                    names = re.findall(r"%([\w\.\-]+)", mo.group(1))
+                    if len(names) >= 2:
+                        upd = symtab.get(names[1])
+                        if upd:
+                            bytes_ += 2 * _shape_bytes(*upd)
+            elif op in ("dynamic-slice", "copy", "transpose", "reshape",
+                        "concatenate", "scatter", "gather", "reduce",
+                        "broadcast", "select", "add", "multiply",
+                        "convert", "iota", "pad", "slice"):
+                res = _result_of(line)
+                if res:
+                    bytes_ += 2 * _shape_bytes(*res)
+            for cname in COLLECTIVES:
+                if re.search(rf"\s{cname}[\.\(]", line) or \
+                   re.search(rf"{cname}-start[\.\(]", line):
+                    res = _result_of(line)
+                    if res:
+                        payload = _shape_bytes(*res)
+                        # CPU-backend artifact: bf16 matmuls are legalised
+                        # to f32, so collectives fed by convert fusions
+                        # carry 2x the bytes they would on a TPU.  Count
+                        # those at bf16 width (raw number kept separately).
+                        mo = re.search(rf"{cname}[\w\.]*\(\s*%([\w\.\-]+)",
+                                       line)
+                        src_name = mo.group(1) if mo else ""
+                        if res[0] == "f32" and "convert" in src_name:
+                            coll_raw[cname] += payload * _COLL_FACTOR[cname]
+                            payload = payload // 2
+                        else:
+                            coll_raw[cname] += payload * _COLL_FACTOR[cname]
+                        coll[cname] += payload * _COLL_FACTOR[cname]
+            # call edges
+            for attr, kind in (("calls", "fusion"), ("to_apply", "call"),
+                               ("body", "while_body"),
+                               ("condition", "while_cond")):
+                for m in re.finditer(rf"{attr}=%?([\w\.\-]+)", line):
+                    edges.append((m.group(1), kind))
+            m = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if m:
+                for b in m.group(1).split(","):
+                    edges.append((b.strip().lstrip("%"), "branch"))
+            if " while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb and mc:
+                    tc = _trip_count(comps.get(mc.group(1), []))
+                    edges.append((mb.group(1), f"trip:{tc}"))
+                    edges.append((mc.group(1), f"trip:{tc}"))
+        stats[name] = {
+            "flops": flops, "bytes": bytes_, "coll": coll,
+            "coll_raw": coll_raw, "edges": edges,
+        }
+
+    # --- propagate multipliers from entry -----------------------------------
+    # bytes inside fused computations are register/VMEM traffic, not HBM:
+    # only the fusion op's boundary (counted at the call site) moves HBM
+    # bytes, so a separate byte-multiplier stays 0 under fusion edges.
+    mult: dict[str, float] = {}
+    bmult: dict[str, float] = {}
+
+    def visit(name: str, m: float, bm: float) -> None:
+        if name not in stats:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        bmult[name] = bmult.get(name, 0.0) + bm
+        for callee, kind in stats[name]["edges"]:
+            if kind.startswith("trip:"):
+                visit(callee, m * float(kind.split(":")[1]),
+                      bm * float(kind.split(":")[1]))
+            elif kind in ("while_body", "while_cond"):
+                continue  # handled by trip edges
+            elif kind == "fusion":
+                visit(callee, m, 0.0)
+            else:
+                visit(callee, m, bm)
+
+    visit(entry, 1.0, 1.0)
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    total_coll: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    total_coll_raw: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    for name, st in stats.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        total_flops += st["flops"] * m
+        total_bytes += st["bytes"] * bmult.get(name, 0.0)
+        for c in COLLECTIVES:
+            total_coll[c] += st["coll"][c] * m
+            total_coll_raw[c] += st["coll_raw"][c] * m
+    return {
+        "flops_per_device": total_flops,
+        "bytes_per_device": total_bytes,
+        "collective_bytes_per_device": total_coll,
+        "collective_total": sum(total_coll.values()),
+        "collective_bytes_raw": total_coll_raw,
+        "collective_total_raw": sum(total_coll_raw.values()),
+        "n_computations": len(comps),
+    }
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Trip count of a jax-emitted while: the s32 comparison constant."""
+    cands = []
+    for line in cond_lines:
+        for m in re.finditer(r"s32\[\]\s+constant\((\d+)\)", line):
+            cands.append(int(m.group(1)))
+    return max(cands) if cands else 1
+
+
+def collective_traffic(hlo: str) -> dict:
+    return analyze(hlo)
+
+
+# ---------------------------------------------------------------------------
+# report assembly (used by dryrun.py / benchmarks.roofline)
+# ---------------------------------------------------------------------------
+
+# TPU v5e-like constants (DESIGN.md §6)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+HBM_CAP = 16 * 2**30
+ICI_BW = 50e9            # bytes/s per link; 2D torus budget below
+ICI_LINKS = 2            # usable link-pairs per chip for our collectives
+
+
+def summarize(*, arch, shape, mesh, cfg, mem, cost, coll, compile_s,
+              multi_pod) -> dict:
+    n_dev = mesh.devices.size
+    hlo_flops = coll["flops_per_device"]
+    hlo_bytes = coll["bytes_per_device"]
+    coll_bytes = coll["collective_total"]
+
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = coll_bytes / (ICI_BW * ICI_LINKS)
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+
+    # model flops (global): 6·N·D for train, 2·N·D for inference
+    n_params = (
+        cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    )
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1
+    )
+    factor = 6 if shape.kind == "train" else 2
+    model_flops = factor * n_params * tokens
+    model_flops_per_dev = model_flops / n_dev
+
+    report = {
+        "arch": arch,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": int(n_dev),
+        "status": "ok",
+        "compile_s": compile_s,
+        # memory_analysis (per device)
+        "bytes_per_device": int(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes
+        ),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "fits_hbm": bool(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes
+            < HBM_CAP
+        ),
+        # xla cost_analysis (loop bodies counted once — lower bound)
+        "xla_flops_lower_bound": float(cost.get("flops", 0.0)),
+        # loop-aware analyzer (per device)
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "collective_bytes_per_device": coll["collective_bytes_per_device"],
+        "collective_total_per_device": coll_bytes,
+        "collective_total_raw_f32_legalised": coll.get(
+            "collective_total_raw", coll_bytes
+        ),
+        # roofline
+        "roofline_s": terms,
+        "bottleneck": bottleneck,
+        "step_time_lower_bound_s": max(terms.values()),
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops_per_dev,
+        "useful_flops_ratio": (
+            model_flops_per_dev / hlo_flops if hlo_flops else 0.0
+        ),
+        "mfu_upper_bound": (
+            model_flops_per_dev / PEAK_FLOPS / max(terms.values())
+            if max(terms.values()) > 0 else 0.0
+        ),
+    }
+    return report

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  Shapes:
+
+  single pod : (16, 16)      axes ("data", "model")          = 256 chips
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model")   = 512 chips
+
+The ``pod`` axis is an outer data-parallel dimension (gradient all-reduce
+over DCI); ``model`` carries TP/EP/SP collectives over ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_submesh(devices, data: int, model: int, pod: int = 1):
+    """Mesh over an explicit device subset (FAR pod-slice instances)."""
+    import numpy as np
+
+    arr = np.asarray(devices)
+    if pod > 1:
+        arr = arr.reshape(pod, data, model)
+        return jax.sharding.Mesh(arr, ("pod", "data", "model"))
+    arr = arr.reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def mesh_shape_dict(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

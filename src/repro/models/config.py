@@ -1,0 +1,216 @@
+"""Architecture configuration and input-shape cells.
+
+Every assigned architecture is an :class:`ArchConfig`; the four assigned
+input shapes are :class:`ShapeConfig` instances.  ``input_specs`` yields
+``jax.ShapeDtypeStruct`` stand-ins for every model input of a given
+(arch × shape) cell — weak-type-correct, shardable, no device allocation —
+which is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture (exact public config; see src/repro/configs/)."""
+
+    name: str
+    family: str                     # dense | moe | vlm | ssm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    expert_pad: int = 0      # dead expert slots so EP divides the mesh axis
+    # --- attention details ---
+    qkv_bias: bool = False          # qwen-style QKV bias
+    sliding_window: int = 0         # window for local layers (0 = none)
+    local_global: int = 0           # gemma3: N local layers per 1 global
+    logit_softcap: float = 0.0
+    # --- activation / norms ---
+    activation: str = "swiglu"      # swiglu | geglu
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    # --- ssm / hybrid ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    shared_attn_every: int = 0      # zamba2: shared attn block period
+    slstm_every: int = 0            # xlstm: sLSTM block period (rest mLSTM)
+    # --- encoder-decoder (audio) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 1500      # stub frontend sequence length
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    # notes recorded in DESIGN.md (e.g. verification tier)
+    source: str = ""
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_experts_padded(self) -> int:
+        return self.n_experts + self.expert_pad
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        """Vocab padded so TP shards evenly (whisper's 51865 -> 51968)."""
+        return _round_up(self.vocab_size, multiple)
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used by the cost model & roofline)."""
+        d, v = self.d_model, self.padded_vocab()
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        qkv = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd)
+        out = (self.n_heads * hd) * d
+        attn = qkv + out
+        dense_mlp = 3 * d * self.d_ff if self.d_ff else 0
+        per_layer = attn + dense_mlp
+        if self.is_moe:
+            expert = 3 * d * self.expert_d_ff
+            moe = (self.n_experts + self.n_shared_experts) * expert + \
+                d * self.n_experts  # router
+            per_layer = attn + moe
+        if self.family in ("ssm", "hybrid"):
+            din = self.d_inner
+            mamba = (
+                d * 2 * din                 # in_proj (x, z)
+                + din * self.ssm_conv       # depthwise conv
+                + din * 2 * self.ssm_state  # B, C projections (approx)
+                + din                       # dt
+                + din * d                   # out proj
+            )
+            if self.family == "ssm":
+                per_layer = mamba if self.d_ff == 0 else mamba + dense_mlp
+            else:
+                # hybrid: mamba-only backbone layers; the shared
+                # attention+MLP transformer block is counted once below
+                per_layer = mamba
+        total = emb + self.n_layers * per_layer
+        if self.shared_attn_every:
+            total += attn + dense_mlp  # one shared transformer block
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + mlp; decoder adds cross-attn
+            total += self.encoder_layers * (attn + dense_mlp)
+            total += self.n_layers * attn  # cross-attention
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed top-k + shared)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        expert = 3 * d * self.expert_d_ff
+        active_moe = (self.top_k + self.n_shared_experts) * expert
+        full_moe = (self.n_experts + self.n_shared_experts) * expert
+        return self.param_count() - self.n_layers * (full_moe - active_moe)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES: Mapping[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, with the reason when skipped.
+
+    ``long_500k`` needs sub-quadratic attention: it runs for SSM / hybrid /
+    sliding-window archs and is skipped for pure full-attention ones
+    (DESIGN.md §4 lists the cells).
+    """
+    if shape.name == "long_500k":
+        subquadratic = (
+            cfg.family in ("ssm", "hybrid") or cfg.local_global > 0
+        )
+        if not subquadratic:
+            return False, "pure full-attention arch: 500k KV infeasible"
+        if cfg.is_encoder_decoder:
+            return False, "enc-dec decode beyond source length is undefined"
+    return True, ""
+
+
+def input_specs(
+    cfg: ArchConfig, shape: ShapeConfig
+) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every input of this cell.
+
+    train:   tokens + labels (the data pipeline emits both)
+    prefill: tokens
+    decode:  one new token per sequence (the cache itself is threaded by the
+             step function and derived separately via ``jax.eval_shape``).
+
+    ``[audio]`` uses the stub frontend: precomputed encoder frames.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.is_encoder_decoder:
+        frames = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+        )
+        if shape.kind == "train":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((b, s), tok),
+                "labels": jax.ShapeDtypeStruct((b, s), tok),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            }
+        return {"token": jax.ShapeDtypeStruct((b, 1), tok)}
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+    return {"token": jax.ShapeDtypeStruct((b, 1), tok)}

@@ -1,0 +1,484 @@
+"""Core neural layers (pure JAX, functional, logically-sharded).
+
+Every layer follows the same pattern:
+
+  * ``<layer>_init(rng, cfg, ...) -> params``  (pytree of jnp arrays)
+  * ``<layer>_specs(cfg, ...) -> pytree of logical-axis tuples`` matching the
+    param pytree leaf-for-leaf (resolved to NamedShardings by
+    ``repro.parallel.sharding``)
+  * ``<layer>_apply(params, x, ...) -> y``
+
+Computation is bf16 with fp32 softmax/norm/loss accumulation.  Activation
+sharding uses :func:`repro.parallel.sharding.logical`, a no-op outside a
+mesh context (single-device smoke tests).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import logical
+
+Params = Any
+DTYPE = jnp.bfloat16
+
+NEG_INF = -1e9  # additive mask value (safe in bf16)
+
+
+def _dense_init(rng, shape, scale_dim) -> jax.Array:
+    scale = 1.0 / np.sqrt(scale_dim)
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(cfg: ArchConfig, dim: int | None = None) -> Params:
+    return {"scale": jnp.ones((dim or cfg.d_model,), DTYPE)}
+
+
+def rmsnorm_specs(cfg: ArchConfig) -> Params:
+    return {"scale": (None,)}
+
+
+def rmsnorm_apply(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (whisper-style, with bias)
+# ---------------------------------------------------------------------------
+
+def layernorm_init(cfg: ArchConfig, dim: int | None = None) -> Params:
+    d = dim or cfg.d_model
+    return {"scale": jnp.ones((d,), DTYPE), "bias": jnp.zeros((d,), DTYPE)}
+
+
+def layernorm_specs(cfg: ArchConfig) -> Params:
+    return {"scale": (None,), "bias": (None,)}
+
+
+def layernorm_apply(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plain 2-matrix MLP (whisper-style GELU)
+# ---------------------------------------------------------------------------
+
+def mlp2_init(rng, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 2)
+    return {
+        "wi": _dense_init(ks[0], (d, f), d),
+        "bi": jnp.zeros((f,), DTYPE),
+        "wo": _dense_init(ks[1], (f, d), f),
+        "bo": jnp.zeros((d,), DTYPE),
+    }
+
+
+def mlp2_specs(cfg: ArchConfig) -> Params:
+    return {"wi": ("embed", "ff"), "bi": ("ff",),
+            "wo": ("ff", "embed"), "bo": (None,)}
+
+
+def mlp2_apply(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["wi"] + params["bi"])
+    h = logical(h, "batch", None, "act_ff")
+    return h @ params["wo"] + params["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [.., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [.., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention (full / causal / sliding window; KV-cache decode)
+# ---------------------------------------------------------------------------
+
+def attention_init(rng, cfg: ArchConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), d),
+        "wk": _dense_init(ks[1], (d, kv * hd), d),
+        "wv": _dense_init(ks[2], (d, kv * hd), d),
+        "wo": _dense_init(ks[3], (h * hd, d), h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), DTYPE)
+        p["bk"] = jnp.zeros((kv * hd,), DTYPE)
+        p["bv"] = jnp.zeros((kv * hd,), DTYPE)
+    return p
+
+
+def attention_specs(cfg: ArchConfig) -> Params:
+    p = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads",)
+        p["bk"] = ("kv_heads",)
+        p["bv"] = ("kv_heads",)
+    return p
+
+
+def _qkv(params: Params, cfg: ArchConfig, x: jax.Array):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    b, s = x.shape[0], x.shape[1]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    return q, k, v
+
+
+def _attn_weights(q, k, cfg: ArchConfig):
+    """[B,Sq,H,hd] x [B,Skv,KV,hd] -> [B,KV,G,Sq,Skv] logits in f32."""
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    g = h // kv
+    b, sq, _, hd = q.shape
+    qg = q.reshape(b, sq, kv, g, hd)
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32
+    )
+    logits = logits / np.sqrt(cfg.resolved_head_dim)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def _attn_out(weights, v, cfg: ArchConfig):
+    b, kv, g, sq, _ = weights.shape
+    out = jnp.einsum("bkgqs,bskh->bqkgh", weights.astype(v.dtype), v)
+    return out.reshape(b, sq, kv * g * v.shape[-1])
+
+
+def attention_mask(
+    sq: int,
+    skv: int,
+    causal: bool,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Additive mask [Sq, Skv] (0 or NEG_INF)."""
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# sequences past this length use query-chunked attention on the XLA path
+# (bounds the materialised score tile exactly like the Pallas kernel does)
+QCHUNK_THRESHOLD = 8192
+QCHUNK = 1024
+
+
+def _chunked_attention(q, k, v, cfg: ArchConfig, causal: bool, window: int):
+    """Scan over query chunks; scores tile is [.., QCHUNK, Skv]."""
+    b, s, h, hd = q.shape
+    c = QCHUNK
+    nq = s // c
+    qc = q.reshape(b, nq, c, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        qi, idx = args
+        qi = logical(qi, "batch", "q_seq", "act_heads", None)  # H5
+        logits = _attn_weights(qi, k, cfg)              # [B,KV,G,c,Skv]
+        mask = attention_mask(c, s, causal, window, q_offset=idx * c)
+        logits = logits + mask[None, None, None]
+        weights = jax.nn.softmax(logits, axis=-1)
+        return None, _attn_out(weights, v, cfg)          # [B,c,H*hd]
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3).reshape(b, s, -1)
+
+
+def attention_apply(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: jax.Array | None = None,
+    use_rope: bool = True,
+    impl: str = "xla",
+) -> jax.Array:
+    """Self-attention over full sequences (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = logical(q, "batch", "q_seq", "act_heads", None)
+    k = logical(k, "batch", None, "kv_heads", None)
+    v = logical(v, "batch", None, "kv_heads", None)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.logit_softcap,
+        )
+        out = out.reshape(b, s, -1)
+    elif s > QCHUNK_THRESHOLD and s % QCHUNK == 0:
+        out = _chunked_attention(q, k, v, cfg, causal, window)
+    else:
+        logits = _attn_weights(q, k, cfg)
+        mask = attention_mask(s, s, causal, window)
+        logits = logits + mask[None, None, None]
+        weights = jax.nn.softmax(logits, axis=-1)
+        out = _attn_out(weights, v, cfg)
+    out = logical(out, "batch", None, "act_heads")
+    return row_parallel(out, params["wo"])
+
+
+def row_parallel(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Row-parallel projection: the contraction dim is model-sharded, so
+    the partial sums cross the mesh.  Forcing a bf16 accumulator makes the
+    all-reduce/reduce-scatter move 2-byte words instead of the f32
+    accumulator XLA would otherwise reduce (§Perf H2a); each shard's local
+    dot still accumulates in f32 on the MXU."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    )
+
+
+def cross_attention_apply(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    kv_cache: tuple[jax.Array, jax.Array],
+) -> jax.Array:
+    """Cross-attention against precomputed encoder K/V (whisper decoder)."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    if cfg.qkv_bias:
+        q = q + params["bq"].reshape(h, hd)
+    k, v = kv_cache
+    logits = _attn_weights(q, k, cfg)
+    weights = jax.nn.softmax(logits, axis=-1)
+    out = _attn_out(weights, v, cfg)
+    return out @ params["wo"]
+
+
+def cross_attention_kv(params: Params, cfg: ArchConfig, enc: jax.Array):
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    b, s, _ = enc.shape
+    k = (enc @ params["wk"]).reshape(b, s, kvh, hd)
+    v = (enc @ params["wv"]).reshape(b, s, kvh, hd)
+    if cfg.qkv_bias:
+        k = k + params["bk"].reshape(kvh, hd)
+        v = v + params["bv"].reshape(kvh, hd)
+    return k, v
+
+
+# --- KV-cache decode --------------------------------------------------------
+
+def kv_cache_init(
+    cfg: ArchConfig, batch: int, length: int, n_layers: int
+) -> Params:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, length, kv, hd)
+    return {
+        "k": jnp.zeros(shape, DTYPE),
+        "v": jnp.zeros(shape, DTYPE),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def kv_cache_specs(cfg: ArchConfig) -> Params:
+    return {
+        "k": (None, "batch", None, "kv_heads", None),
+        "v": (None, "batch", None, "kv_heads", None),
+        "pos": (),
+    }
+
+
+def attention_decode(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,                 # [B, 1, D]
+    layer_cache: dict,            # {"k","v": [B, L, KV, hd]}
+    pos: jax.Array,               # scalar int32: index of the new token
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+    impl: str = "xla",
+) -> tuple[jax.Array, dict]:
+    """One decode step against a (possibly rolling) cache."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(params, cfg, x)
+    if use_rope:
+        posb = jnp.full((b, 1), pos)
+        q = rope(q, posb, cfg.rope_theta)
+        k = rope(k, posb, cfg.rope_theta)
+    length = layer_cache["k"].shape[1]
+    # window > 0 -> rolling cache of size `length` (== min(window, alloc))
+    slot = pos % jnp.int32(length) if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(
+        layer_cache["k"], k, (0, slot, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        layer_cache["v"], v, (0, slot, 0, 0)
+    )
+    # validity of cache entries
+    idx = jnp.arange(length)
+    if window > 0:
+        # entry at slot j holds absolute position p - ((p - j) mod L)
+        abs_pos = pos - (pos - idx) % length
+        valid = (abs_pos >= 0) & (abs_pos > pos - window)
+    else:
+        valid = idx <= pos
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+
+        out = da_ops.decode_attention(
+            q, ck, cv, valid, softcap=cfg.logit_softcap,
+            scale=1.0 / np.sqrt(hd),
+        )
+    else:
+        logits = _attn_weights(q, ck, cfg)  # [B,KV,G,1,L]
+        mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        logits = logits + mask[None, None, None, None, :]
+        weights = jax.nn.softmax(logits, axis=-1)
+        out = _attn_out(weights, cv, cfg)
+    out = out @ params["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+DECODE_MARGIN = 32  # headroom so decode steps never write past buffers
+
+
+def rolling_cache_len(window: int, length: int) -> int:
+    """Slot count for a sliding-window cache seeded with ``length`` tokens
+    and able to absorb DECODE_MARGIN more without wrongly evicting entries
+    still inside the window."""
+    return min(window, length + DECODE_MARGIN)
+
+
+def to_rolling(k: jax.Array, s: int, slots: int) -> jax.Array:
+    """Lay out prefill K/V [B, s, ...] into a rolling buffer of ``slots``
+    entries such that index == absolute position %% slots."""
+    if s >= slots:
+        return jnp.roll(k[:, -slots:], s % slots, axis=1)
+    pad = [(0, 0), (0, slots - s)] + [(0, 0)] * (k.ndim - 2)
+    return jnp.pad(k, pad)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": _dense_init(ks[0], (d, f), d),
+        "wg": _dense_init(ks[1], (d, f), d),
+        "wo": _dense_init(ks[2], (f, d), f),
+    }
+
+
+def mlp_specs(cfg: ArchConfig, expert: bool = False) -> Params:
+    ff = "expert_ff" if expert else "ff"
+    return {"wi": ("embed", ff), "wg": ("embed", ff), "wo": (ff, "embed")}
+
+
+def mlp_apply(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    act = jax.nn.gelu if cfg.activation == "geglu" else jax.nn.silu
+    h = act(x @ params["wg"]) * (x @ params["wi"])
+    h = logical(h, "batch", None, "act_ff")
+    return row_parallel(h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, cfg: ArchConfig) -> Params:
+    v, d = cfg.padded_vocab(), cfg.d_model
+    ks = jax.random.split(rng, 2)
+    p = {"table": _dense_init(ks[0], (v, d), d)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[1], (d, v), d)
+    return p
+
+
+def embedding_specs(cfg: ArchConfig) -> Params:
+    p = {"table": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("embed", "vocab")
+    return p
+
+
+def embed_apply(params: Params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = params["table"][tokens]  # gather over vocab-sharded table
+    if cfg.tie_embeddings:
+        x = x * np.sqrt(cfg.d_model)  # gemma-style scaling
+    return x.astype(DTYPE)
+
+
+def unembed_apply(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["table"].T
+    else:
+        logits = x @ params["unembed"]
+    return logical(logits, "batch", None, "act_vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy; fp32 accumulation over sharded vocab."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,459 @@
+"""Mamba2 (SSD) mixer + the zamba2 hybrid — the [hybrid] architecture
+(arXiv:2411.15242).
+
+The SSD (state-space dual) scan uses the chunked algorithm: within a chunk
+the recurrence is materialised as a decay-masked quadratic form (MXU
+friendly); across chunks a [B, H, N, P] state is carried by ``lax.scan``.
+Decode is the O(1) recurrent update.  This chunked scan is also the
+reference for the ``ssd_scan`` Pallas kernel.
+
+zamba2 block layout: ``n_layers`` Mamba2 layers with one *shared*
+transformer block (full attention + MLP, single parameter set) applied
+every ``shared_attn_every`` layers — scanned as groups of
+(``shared_attn_every`` mamba layers + shared block), the shared parameters
+captured by closure so they are reused, not stacked.  Simplifications vs
+the reference (DESIGN.md §9): the shared block consumes the hidden state
+directly (no embedding concat), and per-invocation LoRA deltas are omitted.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.parallel.sharding import logical
+
+Params = Any
+CHUNK = 256
+HEAD_P = 64  # SSD head dim
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H]   (post-softplus)
+    a: jax.Array,    # [H]         (negative; A = -exp(a_log))
+    bmat: jax.Array,  # [B, S, N]
+    cmat: jax.Array,  # [B, S, N]
+    chunk: int = CHUNK,
+    state: jax.Array | None = None,  # [B, H, N, P]
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    pad = (c - s % c) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // c
+
+    xr = x.reshape(b, nc, c, h, p)
+    dtr = dt.reshape(b, nc, c, h).astype(jnp.float32)
+    br = bmat.reshape(b, nc, c, n)
+    cr = cmat.reshape(b, nc, c, n)
+    ar = dtr * a.astype(jnp.float32)            # [B,NC,C,H], negative
+    cum = jnp.cumsum(ar, axis=2)                # within-chunk cumulative
+    atot = cum[:, :, -1]                        # [B,NC,H]
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def scan_chunk(carry, xs):
+        st = carry                                    # [B,H,N,P] f32
+        xc, dtc, bc, cc, cumc, atotc = xs
+        # decay L[i,j] = exp(cum_i - cum_j) for j <= i
+        dmat = cumc[:, :, None, :] - cumc[:, None, :, :]    # [B,Ci,Cj,H]
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        ldec = jnp.exp(dmat)
+        scores = jnp.einsum("bin,bjn->bij", cc, bc,
+                            preferred_element_type=jnp.float32)
+        w = scores[..., None] * ldec * dtc[:, None, :, :]   # [B,Ci,Cj,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w.astype(xc.dtype), xc)
+        # inter-chunk: y += C_i · state * exp(cum_i)
+        y_inter = jnp.einsum(
+            "bin,bhnp->bihp", cc.astype(jnp.float32), st
+        ) * jnp.exp(cumc)[..., None]
+        y = y_intra.astype(jnp.float32) + y_inter
+        # state update: st = st*exp(atot) + sum_j exp(atot-cum_j) dt_j B_j x_j
+        g = jnp.exp(atotc[:, None, :] - cumc) * dtc          # [B,C,H]
+        st = st * jnp.exp(atotc)[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", bc.astype(jnp.float32), g,
+            xc.astype(jnp.float32),
+        )
+        return st, y
+
+    if state is None:
+        state = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (
+        xr.transpose(1, 0, 2, 3, 4), dtr.transpose(1, 0, 2, 3),
+        br.transpose(1, 0, 2, 3), cr.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3), atot.transpose(1, 0, 2),
+    )
+    state, ys = jax.lax.scan(scan_chunk, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, p)[:, :s]
+    return y, state
+
+
+def ssd_step(
+    state: jax.Array,  # [B, H, N, P]
+    x: jax.Array,      # [B, H, P]
+    dt: jax.Array,     # [B, H]
+    a: jax.Array,      # [H]
+    bvec: jax.Array,   # [B, N]
+    cvec: jax.Array,   # [B, N]
+) -> tuple[jax.Array, jax.Array]:
+    dt = dt.astype(jnp.float32)
+    decay = jnp.exp(dt * a.astype(jnp.float32))          # [B,H]
+    upd = jnp.einsum(
+        "bn,bh,bhp->bhnp", bvec.astype(jnp.float32), dt, x.astype(jnp.float32)
+    )
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), state)
+    return state, y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):
+    """Depthwise causal conv. x [B,S,D], w [K,D]. Returns (y, new_cache)
+    where cache holds the last K-1 inputs."""
+    k = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    new_cache = xp[:, -(k - 1):] if k > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_cache
+
+
+def mamba_init(rng, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.d_inner
+    h = din // HEAD_P
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    ks = jax.random.split(rng, 7)
+    return {
+        "ln": layers.rmsnorm_init(cfg),
+        "in_x": layers._dense_init(ks[0], (d, din), d),
+        "in_z": layers._dense_init(ks[1], (d, din), d),
+        "in_b": layers._dense_init(ks[2], (d, n), d),
+        "in_c": layers._dense_init(ks[3], (d, n), d),
+        "in_dt": layers._dense_init(ks[4], (d, h), d),
+        "conv_x": (jax.random.normal(ks[5], (k, din)) * 0.1).astype(layers.DTYPE),
+        "dt_bias": jnp.zeros((h,), layers.DTYPE),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), layers.DTYPE),
+        "gn": layers.rmsnorm_init(cfg, din),
+        "out": layers._dense_init(ks[6], (din, d), din),
+    }
+
+
+def mamba_specs(cfg: ArchConfig) -> Params:
+    return {
+        "ln": layers.rmsnorm_specs(cfg),
+        "in_x": ("embed", "d_inner"),
+        "in_z": ("embed", "d_inner"),
+        "in_b": ("embed", None),
+        "in_c": ("embed", None),
+        "in_dt": ("embed", "ssm_heads"),
+        "conv_x": (None, "d_inner"),
+        "dt_bias": ("ssm_heads",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "gn": {"scale": (None,)},
+        "out": ("d_inner", "embed"),
+    }
+
+
+def _mamba_proj(p, cfg, xin):
+    b, s, _ = xin.shape
+    din = cfg.d_inner
+    h = din // HEAD_P
+    z = xin @ p["in_z"]
+    xl = xin @ p["in_x"]
+    bm = xin @ p["in_b"]
+    cm = xin @ p["in_c"]
+    dt = jax.nn.softplus(
+        (xin @ p["in_dt"] + p["dt_bias"]).astype(jnp.float32)
+    )
+    return z, xl, bm, cm, dt
+
+
+def mamba_apply(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    din = cfg.d_inner
+    h = din // HEAD_P
+    xin = layers.rmsnorm_apply(p["ln"], x)
+    z, xl, bm, cm, dt = _mamba_proj(p, cfg, xin)
+    xc, _ = _causal_conv(xl, p["conv_x"])
+    xh = xc.reshape(b, s, h, HEAD_P)
+    xh = logical(xh, "batch", None, "act_ssm_heads", None)
+    a = -jnp.exp(p["a_log"])
+    y, _ = ssd_chunked(xh, dt, a, bm, cm)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    yflat = y.reshape(b, s, din).astype(x.dtype)
+    yflat = layers.rmsnorm_apply(p["gn"], yflat * jax.nn.silu(z))
+    return x + yflat @ p["out"]
+
+
+def mamba_decode(p, cfg: ArchConfig, x, state):
+    """state = {"ssd": [B,H,N,P], "conv": [B,K-1,din]}."""
+    b = x.shape[0]
+    din = cfg.d_inner
+    h = din // HEAD_P
+    xin = layers.rmsnorm_apply(p["ln"], x)
+    z, xl, bm, cm, dt = _mamba_proj(p, cfg, xin)
+    xc, conv_cache = _causal_conv(xl, p["conv_x"], cache=state["conv"])
+    xh = xc.reshape(b, 1, h, HEAD_P)
+    a = -jnp.exp(p["a_log"])
+    ssd, y = ssd_step(
+        state["ssd"], xh[:, 0], dt[:, 0], a, bm[:, 0], cm[:, 0]
+    )
+    y = y + xh[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    yflat = y.reshape(b, 1, din).astype(x.dtype)
+    yflat = layers.rmsnorm_apply(p["gn"], yflat * jax.nn.silu(z))
+    return x + yflat @ p["out"], {"ssd": ssd, "conv": conv_cache}
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid builder
+# ---------------------------------------------------------------------------
+
+def build(cfg: ArchConfig, impl: str = "xla", remat: bool = True) -> Model:
+    every = cfg.shared_attn_every or 6
+    assert cfg.n_layers % every == 0
+    n_groups = cfg.n_layers // every
+    din = cfg.d_inner
+    h_ssm = din // HEAD_P
+    kconv = cfg.ssm_conv
+
+    def init(rng):
+        k_emb, k_blocks, k_shared = jax.random.split(rng, 3)
+        def one_group(key):
+            return jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[mamba_init(k, cfg) for k in jax.random.split(key, every)],
+            )
+        blocks = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one_group(k) for k in jax.random.split(k_blocks, n_groups)],
+        )
+        ks1, ks2, ks3 = jax.random.split(k_shared, 3)
+        shared = {
+            "ln1": layers.rmsnorm_init(cfg),
+            "attn": layers.attention_init(ks1, cfg),
+            "ln2": layers.rmsnorm_init(cfg),
+            "mlp": layers.mlp_init(ks2, cfg),
+        }
+        return {
+            "embed": layers.embedding_init(k_emb, cfg),
+            "blocks": blocks,
+            "shared": shared,
+            "final_ln": layers.rmsnorm_init(cfg),
+        }
+
+    def _prepend(specs, extra=1):
+        return jax.tree.map(
+            lambda sp: (None,) * extra + sp,
+            specs,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+
+    def param_specs():
+        return {
+            "embed": layers.embedding_specs(cfg),
+            "blocks": _prepend(mamba_specs(cfg), 2),
+            "shared": {
+                "ln1": layers.rmsnorm_specs(cfg),
+                "attn": layers.attention_specs(cfg),
+                "ln2": layers.rmsnorm_specs(cfg),
+                "mlp": layers.mlp_specs(cfg),
+            },
+            "final_ln": layers.rmsnorm_specs(cfg),
+        }
+
+    SHARED_WINDOW = 4096  # shared attn uses a sliding window so the hybrid
+    # stays sub-quadratic for the long_500k cell (DESIGN.md §4)
+
+    def _shared_apply(sp, x):
+        h = layers.attention_apply(
+            sp["attn"], cfg, layers.rmsnorm_apply(sp["ln1"], x),
+            causal=True, window=SHARED_WINDOW, impl=impl,
+        )
+        x = x + h
+        y = layers.mlp_apply(sp["mlp"], cfg,
+                             layers.rmsnorm_apply(sp["ln2"], x))
+        return x + y
+
+    def make_group_fwd(shared):
+        def group_fwd(x, gp):
+            for i in range(every):
+                mp = jax.tree.map(lambda a: a[i], gp)
+                x = mamba_apply(mp, cfg, x)
+            x = _shared_apply(shared, x)
+            return logical(x, "batch", "seq", None)
+        return group_fwd
+
+    def trunk(params, x):
+        group_fwd = make_group_fwd(params["shared"])
+        body_fn = (
+            jax.checkpoint(group_fwd,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+            if remat else group_fwd
+        )
+        def body(carry, gp):
+            return body_fn(carry, gp), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return layers.rmsnorm_apply(params["final_ln"], x)
+
+    def loss(params, batch):
+        x = layers.embed_apply(params["embed"], cfg, batch["tokens"])
+        x = logical(x, "batch", "seq", None)
+        x = trunk(params, x)
+        logits = layers.unembed_apply(params["embed"], cfg, x)
+        return layers.softmax_xent(logits, batch["labels"])
+
+    def init_cache(batch: int, length: int):
+        w = layers.rolling_cache_len(SHARED_WINDOW, length)
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "ssd": jnp.zeros(
+                (n_groups, every, batch, h_ssm, cfg.ssm_state, HEAD_P),
+                jnp.float32,
+            ),
+            "conv": jnp.zeros(
+                (n_groups, every, batch, kconv - 1, din), layers.DTYPE
+            ),
+            "attn": {
+                "k": jnp.zeros((n_groups, batch, w, kv, hd), layers.DTYPE),
+                "v": jnp.zeros((n_groups, batch, w, kv, hd), layers.DTYPE),
+            },
+        }
+
+    def cache_specs(batch: int, length: int):
+        return {
+            "pos": (),
+            "ssd": (None, None, "batch", "ssm_heads", None, None),
+            "conv": (None, None, "batch", None, "d_inner"),
+            "attn": {
+                "k": (None, "batch", None, "kv_heads", None),
+                "v": (None, "batch", None, "kv_heads", None),
+            },
+        }
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        w = layers.rolling_cache_len(SHARED_WINDOW, s)
+        x = layers.embed_apply(params["embed"], cfg, tokens)
+        shared = params["shared"]
+
+        def body(carry, gp):
+            x = carry
+            ssds, convs = [], []
+            for i in range(every):
+                mp = jax.tree.map(lambda a: a[i], gp)
+                xin = layers.rmsnorm_apply(mp["ln"], x)
+                z, xl, bm, cm, dt = _mamba_proj(mp, cfg, xin)
+                xc, _ = _causal_conv(xl, mp["conv_x"])
+                conv_cache = xl[:, -(kconv - 1):]
+                xh = xc.reshape(b, s, h_ssm, HEAD_P)
+                a = -jnp.exp(mp["a_log"])
+                y, st = ssd_chunked(xh, dt, a, bm, cm)
+                y = y + xh.astype(jnp.float32) * mp["d_skip"].astype(
+                    jnp.float32)[None, None, :, None]
+                yflat = y.reshape(b, s, din).astype(x.dtype)
+                yflat = layers.rmsnorm_apply(mp["gn"], yflat * jax.nn.silu(z))
+                x = x + yflat @ mp["out"]
+                ssds.append(st)
+                convs.append(conv_cache)
+            # shared attention with rolling window cache
+            xin = layers.rmsnorm_apply(shared["ln1"], x)
+            k, v = _shared_kv(shared, xin)
+            k = layers.to_rolling(k, s, w)
+            v = layers.to_rolling(v, s, w)
+            x = _shared_apply(shared, x)
+            return x, (jnp.stack(ssds), jnp.stack(convs), {"k": k, "v": v})
+
+        x, (ssds, convs, attn_kv) = jax.lax.scan(body, x, params["blocks"])
+        x = layers.rmsnorm_apply(params["final_ln"], x)
+        logits = layers.unembed_apply(params["embed"], cfg, x[:, -1:])
+        cache = {
+            "pos": jnp.array(s, jnp.int32),
+            "ssd": ssds,
+            "conv": convs,
+            "attn": attn_kv,
+        }
+        return logits, cache
+
+    def _shared_kv(sp, xin):
+        _, k, v = layers._qkv(sp["attn"], cfg, xin)
+        positions = jnp.arange(xin.shape[1])[None, :]
+        k = layers.rope(k, positions, cfg.rope_theta)
+        return k, v
+
+    def decode_step(params, cache, token):
+        pos = cache["pos"]
+        x = layers.embed_apply(params["embed"], cfg, token)
+        shared = params["shared"]
+        w = cache["attn"]["k"].shape[2]
+
+        def body(carry, scanned):
+            x = carry
+            gp, ssd_g, conv_g, kv_g = scanned
+            new_ssd, new_conv = [], []
+            for i in range(every):
+                mp = jax.tree.map(lambda a: a[i], gp)
+                st = {"ssd": ssd_g[i], "conv": conv_g[i]}
+                x, st2 = mamba_decode(mp, cfg, x, st)
+                new_ssd.append(st2["ssd"])
+                new_conv.append(st2["conv"])
+            hx, kv2 = layers.attention_decode(
+                shared["attn"], cfg, layers.rmsnorm_apply(shared["ln1"], x),
+                kv_g, pos, window=SHARED_WINDOW, impl=impl,
+            )
+            x = x + hx
+            y = layers.mlp_apply(shared["mlp"], cfg,
+                                 layers.rmsnorm_apply(shared["ln2"], x))
+            x = x + y
+            return x, (jnp.stack(new_ssd), jnp.stack(new_conv), kv2)
+
+        x, (ssds, convs, kvs) = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["ssd"], cache["conv"], cache["attn"]),
+        )
+        x = layers.rmsnorm_apply(params["final_ln"], x)
+        logits = layers.unembed_apply(params["embed"], cfg, x)
+        return logits, {
+            "pos": pos + 1, "ssd": ssds, "conv": convs, "attn": kvs,
+        }
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        param_specs=param_specs,
+        loss=loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_specs=cache_specs,
+    )

@@ -1,0 +1,59 @@
+"""The Model protocol: a uniform functional interface over all families.
+
+A :class:`Model` bundles pure functions (init / loss / prefill /
+decode_step) plus the logical sharding specs for parameters and caches.
+``build_model`` dispatches on the architecture family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.models.config import ArchConfig
+
+Params = Any
+Cache = Any
+Batch = dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Params]
+    param_specs: Callable[[], Params]          # logical-axis tuples
+    loss: Callable[[Params, Batch], jax.Array]
+    prefill: Callable[[Params, Batch], tuple[jax.Array, Cache]]
+    decode_step: Callable[[Params, Cache, jax.Array], tuple[jax.Array, Cache]]
+    init_cache: Callable[[int, int], Cache]    # (batch, length) -> cache
+    cache_specs: Callable[[int, int], Cache]   # logical-axis tuples
+
+    def param_shapes(self, rng=None) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def cache_shapes(self, batch: int, length: int) -> Cache:
+        return jax.eval_shape(lambda: self.init_cache(batch, length))
+
+
+def build_model(cfg: ArchConfig, impl: str = "xla", remat: bool = True) -> Model:
+    """impl: "xla" (lowers everywhere; used by the dry-run) or "pallas"
+    (TPU kernels for attention/scan hot spots)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+
+        return transformer.build(cfg, impl=impl, remat=remat)
+    if cfg.family == "ssm":
+        from repro.models import xlstm
+
+        return xlstm.build(cfg, impl=impl, remat=remat)
+    if cfg.family == "hybrid":
+        from repro.models import mamba2
+
+        return mamba2.build(cfg, impl=impl, remat=remat)
+    if cfg.family == "audio":
+        from repro.models import whisper
+
+        return whisper.build(cfg, impl=impl, remat=remat)
+    raise ValueError(f"unknown family {cfg.family!r}")

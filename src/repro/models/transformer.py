@@ -1,0 +1,376 @@
+"""Decoder-only transformer LM (dense / MoE / early-fusion VLM families).
+
+Layers are stacked into *groups* scanned with ``jax.lax.scan``:
+
+  * uniform archs: group = 1 layer, scanned ``n_layers`` times;
+  * gemma3-style local:global: group = ``local_global`` sliding-window
+    layers + 1 full-attention layer, scanned ``n_layers/(lg+1)`` times —
+    the 5 local layers are unrolled inside the scan body so the HLO stays
+    one-group-sized while the pattern is exact.
+
+Each group body is rematerialised (``jax.checkpoint``) during training so
+only the carried residual stream is saved per group; the residual carry is
+sequence-sharded over the ``model`` axis (sequence parallelism) between
+groups.
+
+KV caches: full-attention layers allocate ``length`` slots; sliding-window
+layers allocate ``min(window, length)`` rolling slots (this is what makes
+gemma3's ``long_500k`` cell fit: 8 global caches of 500k + 40 local caches
+of 1k, DESIGN.md §4/§5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.parallel.sharding import logical
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_groups, local_per_group).  local_per_group == 0 -> uniform arch."""
+    if cfg.local_global:
+        per = cfg.local_global + 1
+        assert cfg.n_layers % per == 0, (cfg.name, cfg.n_layers, per)
+        return cfg.n_layers // per, cfg.local_global
+    return cfg.n_layers, 0
+
+
+def _layer_init(rng, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(rng, 4)
+    p = {
+        "ln1": layers.rmsnorm_init(cfg),
+        "attn": layers.attention_init(ks[0], cfg),
+        "ln2": layers.rmsnorm_init(cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = layers.mlp_init(ks[2], cfg)
+    return p
+
+
+def _layer_specs(cfg: ArchConfig) -> Params:
+    p = {
+        "ln1": layers.rmsnorm_specs(cfg),
+        "attn": layers.attention_specs(cfg),
+        "ln2": layers.rmsnorm_specs(cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe.moe_specs(cfg)
+    else:
+        p["mlp"] = layers.mlp_specs(cfg)
+    return p
+
+
+def _stack(tree_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *tree_list)
+
+
+def _prepend_spec(specs, extra: int = 1):
+    """Add leading (unsharded) stacking dims to every leaf spec tuple."""
+    return jax.tree.map(
+        lambda spec: (None,) * extra + spec,
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _layer_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    window: int,
+    impl: str,
+    positions=None,
+) -> jax.Array:
+    h = layers.attention_apply(
+        p["attn"], cfg, layers.rmsnorm_apply(p["ln1"], x),
+        causal=True, window=window, positions=positions, impl=impl,
+    )
+    # sequence-parallel residual (§Perf H2b): constraining the residual to
+    # seq-sharding turns the row-parallel partial-sum all-reduces into
+    # reduce-scatter(+later all-gather) pairs — half the wire bytes, and
+    # every elementwise/norm op between them runs on 1/16th of the tokens
+    x = logical(x + h, "batch", "seq", None)
+    y = layers.rmsnorm_apply(p["ln2"], x)
+    if cfg.is_moe:
+        y = moe.moe_apply(p["moe"], cfg, y)
+    else:
+        y = layers.mlp_apply(p["mlp"], cfg, y)
+    return logical(x + y, "batch", "seq", None)
+
+
+def _layer_decode(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    window: int,
+    impl: str,
+) -> tuple[jax.Array, dict]:
+    h, new_cache = layers.attention_decode(
+        p["attn"], cfg, layers.rmsnorm_apply(p["ln1"], x), cache, pos,
+        window=window, impl=impl,
+    )
+    x = x + h
+    y = layers.rmsnorm_apply(p["ln2"], x)
+    if cfg.is_moe:
+        y = moe.moe_apply(p["moe"], cfg, y)
+    else:
+        y = layers.mlp_apply(p["mlp"], cfg, y)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model builder
+# ---------------------------------------------------------------------------
+
+def build(cfg: ArchConfig, impl: str = "xla", remat: bool = True) -> Model:
+    n_groups, n_local = group_layout(cfg)
+    window = cfg.sliding_window
+
+    # ---- init / specs ------------------------------------------------------
+    def init(rng) -> Params:
+        k_emb, k_blocks, k_final = jax.random.split(rng, 3)
+        def one_group(key):
+            if n_local:
+                k_loc, k_glob = jax.random.split(key)
+                return {
+                    "local": _stack([
+                        _layer_init(k, cfg)
+                        for k in jax.random.split(k_loc, n_local)
+                    ]),
+                    "global": _layer_init(k_glob, cfg),
+                }
+            return _layer_init(key, cfg)
+        blocks = _stack([
+            one_group(k) for k in jax.random.split(k_blocks, n_groups)
+        ])
+        return {
+            "embed": layers.embedding_init(k_emb, cfg),
+            "blocks": blocks,
+            "final_ln": layers.rmsnorm_init(cfg),
+        }
+
+    def param_specs() -> Params:
+        if n_local:
+            group = {
+                "local": _prepend_spec(_layer_specs(cfg)),
+                "global": _layer_specs(cfg),
+            }
+        else:
+            group = _layer_specs(cfg)
+        return {
+            "embed": layers.embedding_specs(cfg),
+            "blocks": _prepend_spec(group),
+            "final_ln": layers.rmsnorm_specs(cfg),
+        }
+
+    # ---- forward (train / prefill trunk) ------------------------------------
+    def group_fwd(x, gp):
+        if n_local:
+            for i in range(n_local):
+                lp = jax.tree.map(lambda a: a[i], gp["local"])
+                x = _layer_apply(lp, cfg, x, window=window, impl=impl)
+            x = _layer_apply(gp["global"], cfg, x, window=0, impl=impl)
+        else:
+            # uniform archs: window applies to every layer (0 = full attn)
+            x = _layer_apply(gp, cfg, x, window=window, impl=impl)
+        return logical(x, "batch", "seq", None)
+
+    if remat:
+        group_fwd_ck = jax.checkpoint(
+            group_fwd, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    else:
+        group_fwd_ck = group_fwd
+
+    def trunk(params, x):
+        x = logical(x, "batch", "seq", None)
+        def body(carry, gp):
+            return group_fwd_ck(carry, gp), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return layers.rmsnorm_apply(params["final_ln"], x)
+
+    # ---- loss ---------------------------------------------------------------
+    def loss(params, batch) -> jax.Array:
+        x = layers.embed_apply(params["embed"], cfg, batch["tokens"])
+        x = trunk(params, x)
+        logits = layers.unembed_apply(params["embed"], cfg, x)
+        return layers.softmax_xent(logits, batch["labels"])
+
+    # ---- caches --------------------------------------------------------------
+    DECODE_MARGIN = layers.DECODE_MARGIN
+
+    def _cache_lengths(length: int) -> tuple[int, int]:
+        """(local rolling slots, global slots) for a cache holding `length`
+        tokens with room to append."""
+        glob = length + DECODE_MARGIN
+        loc = layers.rolling_cache_len(window, length) if window else glob
+        return loc, glob
+
+    def init_cache(batch: int, length: int):
+        loc_len, glob_len = _cache_lengths(length)
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        def kvz(n, ln):
+            shape = (n_groups,) + ((n,) if n else ()) + (batch, ln, kv, hd)
+            return {
+                "k": jnp.zeros(shape, layers.DTYPE),
+                "v": jnp.zeros(shape, layers.DTYPE),
+            }
+        cache = {"pos": jnp.zeros((), jnp.int32)}
+        if n_local:
+            cache["local"] = kvz(n_local, loc_len)
+            cache["global"] = kvz(0, glob_len)
+        else:
+            cache["global"] = kvz(0, loc_len if window else glob_len)
+        return cache
+
+    def cache_specs(batch: int, length: int):
+        # global caches: heads-sharded when possible, else length-sharded
+        # (flash-decoding, §Perf H4); rolling local caches stay unsharded
+        glob = lambda extra: {
+            "k": (None,) * extra + ("batch", "kv_len", "kv_heads", None),
+            "v": (None,) * extra + ("batch", "kv_len", "kv_heads", None),
+        }
+        loc = lambda extra: {
+            "k": (None,) * extra + ("batch", None, "kv_heads", None),
+            "v": (None,) * extra + ("batch", None, "kv_heads", None),
+        }
+        spec = {"pos": ()}
+        if n_local:
+            spec["local"] = loc(2)
+            spec["global"] = glob(1)
+        else:
+            spec["global"] = glob(1) if not window else loc(1)
+        return spec
+
+    # ---- prefill --------------------------------------------------------------
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = layers.embed_apply(params["embed"], cfg, tokens)
+        x = logical(x, "batch", "seq", None)
+        loc_len, glob_len = _cache_lengths(s)
+
+        def _rolling(k):
+            return layers.to_rolling(k, s, loc_len)
+
+        def _padded(k):
+            pad = glob_len - s
+            return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+        def body(carry, gp):
+            x = carry
+            outs = {}
+            if n_local:
+                lks, lvs = [], []
+                for i in range(n_local):
+                    lp = jax.tree.map(lambda a: a[i], gp["local"])
+                    k, v = _prefill_kv(lp, cfg, x)
+                    lks.append(_rolling(k))
+                    lvs.append(_rolling(v))
+                    x = _layer_apply(lp, cfg, x, window=window, impl=impl)
+                gk, gv = _prefill_kv(gp["global"], cfg, x)
+                x = _layer_apply(gp["global"], cfg, x, window=0, impl=impl)
+                outs["local"] = {"k": jnp.stack(lks), "v": jnp.stack(lvs)}
+                outs["global"] = {"k": _padded(gk), "v": _padded(gv)}
+            else:
+                gk, gv = _prefill_kv(gp, cfg, x)
+                w = window or 0
+                if w:
+                    gk, gv = _rolling(gk), _rolling(gv)
+                else:
+                    gk, gv = _padded(gk), _padded(gv)
+                x = _layer_apply(gp, cfg, x, window=w, impl=impl)
+                outs["global"] = {"k": gk, "v": gv}
+            return logical(x, "batch", "seq", None), outs
+
+        x, kvs = jax.lax.scan(body, x, params["blocks"])
+        x = layers.rmsnorm_apply(params["final_ln"], x)
+        logits = layers.unembed_apply(params["embed"], cfg, x[:, -1:])
+        cache = {"pos": jnp.array(s, jnp.int32)}
+        if n_local:
+            cache["local"] = kvs["local"]
+            cache["global"] = kvs["global"]
+        else:
+            cache["global"] = kvs["global"]
+        return logits, cache
+
+    def _prefill_kv(p, cfg_, x):
+        q, k, v = layers._qkv(p["attn"], cfg_,
+                              layers.rmsnorm_apply(p["ln1"], x))
+        positions = jnp.arange(x.shape[1])[None, :]
+        k = layers.rope(k, positions, cfg_.rope_theta)
+        return k, v
+
+    # ---- decode ----------------------------------------------------------------
+    def decode_step(params, cache, token):
+        pos = cache["pos"]
+        x = layers.embed_apply(params["embed"], cfg, token)  # [B,1,D]
+
+        def body(carry, scanned):
+            x = carry
+            gp, gc = scanned
+            new_c = {}
+            if n_local:
+                nk, nv = [], []
+                for i in range(n_local):
+                    lp = jax.tree.map(lambda a: a[i], gp["local"])
+                    lc = {
+                        "k": gc["local"]["k"][i],
+                        "v": gc["local"]["v"][i],
+                    }
+                    x, c2 = _layer_decode(
+                        lp, cfg, x, lc, pos, window=window, impl=impl
+                    )
+                    nk.append(c2["k"])
+                    nv.append(c2["v"])
+                x, cg = _layer_decode(
+                    gp["global"], cfg, x, gc["global"], pos, window=0,
+                    impl=impl,
+                )
+                new_c["local"] = {"k": jnp.stack(nk), "v": jnp.stack(nv)}
+                new_c["global"] = cg
+            else:
+                w = window or 0
+                x, cg = _layer_decode(
+                    gp, cfg, x, gc["global"], pos, window=w, impl=impl
+                )
+                new_c["global"] = cg
+            return x, new_c
+
+        scan_cache = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], scan_cache))
+        x = layers.rmsnorm_apply(params["final_ln"], x)
+        logits = layers.unembed_apply(params["embed"], cfg, x)
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        param_specs=param_specs,
+        loss=loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_specs=cache_specs,
+    )

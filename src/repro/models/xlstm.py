@@ -1,0 +1,541 @@
+"""xLSTM (sLSTM + mLSTM blocks) — the [ssm] architecture (arXiv:2405.04517).
+
+* **mLSTM**: matrix-memory cell with exponential input/forget gates.  The
+  training path uses the *chunkwise-parallel* form (intra-chunk quadratic
+  attention-like einsums + inter-chunk state recurrence under a
+  ``lax.scan``), numerically stabilised in log-space with a running max
+  ``m``.  Decode is the O(1) single-step recurrence.
+* **sLSTM**: scalar-memory cell with per-head block-diagonal recurrent
+  weights; inherently sequential, computed with ``lax.scan`` over time.
+
+Block layout follows the paper's residual pre-norm backbone: every
+``slstm_every``-th block is an sLSTM block, the rest are mLSTM blocks
+(xlstm-350m: 24 blocks, d_model 1024, 4 heads).  Simplifications vs the
+reference implementation (recorded in DESIGN.md §9): the mLSTM up-projection
+uses factor 2 without the causal-conv branch; the sLSTM block's gated
+feed-forward uses factor 4/3 SwiGLU.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.parallel.sharding import logical
+
+Params = Any
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel (train) and recurrent (decode)
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(
+    q: jax.Array,  # [B, S, H, K] (K = key/query dim per head)
+    k: jax.Array,
+    v: jax.Array,  # [B, S, H, V]
+    ig: jax.Array,  # [B, S, H] input gate pre-activation
+    fg: jax.Array,  # [B, S, H] forget gate pre-activation
+    chunk: int = CHUNK,
+) -> jax.Array:
+    """Stabilised chunkwise mLSTM. Returns h: [B, S, H, V]."""
+    out, _ = _mlstm_chunk_with_state(q, k, v, ig, fg, chunk)
+    return out
+
+
+def mlstm_step(
+    state: dict,  # {"c": [B,H,dk,dv], "n": [B,H,dk], "m": [B,H]}
+    q: jax.Array, k: jax.Array, v: jax.Array,  # [B,H,dk/dv]
+    ig: jax.Array, fg: jax.Array,              # [B,H]
+) -> tuple[dict, jax.Array]:
+    dk = q.shape[-1]
+    q = q.astype(jnp.float32) / np.sqrt(dk)
+    k = k.astype(jnp.float32) / np.sqrt(dk)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    ig = ig.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state["m"], ig)
+    fprime = jnp.exp(logf + state["m"] - m_new)
+    iprime = jnp.exp(ig - m_new)
+    c = state["c"] * fprime[..., None, None] + iprime[..., None, None] * (
+        k[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n = state["n"] * fprime[..., None] + iprime[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"c": c, "n": n, "m": m_new}, h
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — sequential scan
+# ---------------------------------------------------------------------------
+
+def slstm_scan(
+    zx: jax.Array, ix: jax.Array, fx: jax.Array, ox: jax.Array,  # [B,S,H,D]
+    r: dict,                                   # recurrent weights [H,D,D] x4
+    state: dict | None,                        # {"c","n","h","m": [B,H,D]}
+) -> tuple[jax.Array, dict]:
+    b, s, h, d = zx.shape
+    if state is None:
+        z0 = jnp.zeros((b, h, d), jnp.float32)
+        state = {"c": z0, "n": z0, "h": z0, "m": jnp.full((b, h, d), -jnp.inf)}
+
+    def step(carry, xs):
+        zt, it, ft, ot = xs  # [B,H,D] each
+        hprev = carry["h"]
+        rec = lambda w: jnp.einsum("bhd,hde->bhe", hprev, w.astype(jnp.float32))
+        zt = jnp.tanh(zt.astype(jnp.float32) + rec(r["rz"]))
+        it = it.astype(jnp.float32) + rec(r["ri"])
+        ft = ft.astype(jnp.float32) + rec(r["rf"])
+        ot = jax.nn.sigmoid(ot.astype(jnp.float32) + rec(r["ro"]))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + carry["m"], it)
+        fp = jnp.exp(logf + carry["m"] - m_new)
+        ip = jnp.exp(it - m_new)
+        c = fp * carry["c"] + ip * zt
+        n = fp * carry["n"] + ip
+        hnew = ot * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": hnew, "m": m_new}, hnew
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (zx, ix, fx, ox))
+    # remat the step: the backward pass recomputes gates from the carried
+    # state instead of saving ~20 f32 [S,B,H,D] residual buffers
+    # (EXPERIMENTS.md §Perf H1)
+    state, hs = jax.lax.scan(jax.checkpoint(step), state, xs)
+    return hs.transpose(1, 0, 2, 3), state  # [B,S,H,D]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _mlstm_block_init(rng, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dk = din // h
+    ks = jax.random.split(rng, 8)
+    return {
+        "ln": layers.rmsnorm_init(cfg),
+        "up_x": layers._dense_init(ks[0], (d, din), d),
+        "up_z": layers._dense_init(ks[1], (d, din), d),
+        "wq": layers._dense_init(ks[2], (din, din), din),
+        "wk": layers._dense_init(ks[3], (din, din), din),
+        "wv": layers._dense_init(ks[4], (din, din), din),
+        "w_ig": layers._dense_init(ks[5], (din, h), din),
+        "w_fg": layers._dense_init(ks[6], (din, h), din),
+        "b_ig": jnp.zeros((h,), layers.DTYPE),
+        "b_fg": jnp.full((h,), 3.0, layers.DTYPE),  # open forget gates
+        "gn": layers.rmsnorm_init(cfg, din),
+        "down": layers._dense_init(ks[7], (din, d), din),
+    }
+
+
+def _mlstm_block_specs(cfg: ArchConfig) -> Params:
+    return {
+        "ln": layers.rmsnorm_specs(cfg),
+        "up_x": ("embed", "d_inner"),
+        "up_z": ("embed", "d_inner"),
+        "wq": ("d_inner", None),
+        "wk": ("d_inner", None),
+        "wv": ("d_inner", None),
+        "w_ig": ("d_inner", None),
+        "w_fg": ("d_inner", None),
+        "b_ig": (None,),
+        "b_fg": (None,),
+        "gn": {"scale": (None,)},
+        "down": ("d_inner", "embed"),
+    }
+
+
+def _mlstm_qkvg(p, cfg, xin):
+    b, s, _ = xin.shape
+    h = cfg.n_heads
+    din = cfg.ssm_expand * cfg.d_model
+    dk = din // h
+    xu = xin @ p["up_x"]
+    z = xin @ p["up_z"]
+    q = (xu @ p["wq"]).reshape(b, s, h, dk)
+    k = (xu @ p["wk"]).reshape(b, s, h, dk)
+    v = (xu @ p["wv"]).reshape(b, s, h, dk)
+    ig = xu @ p["w_ig"] + p["b_ig"]
+    fg = xu @ p["w_fg"] + p["b_fg"]
+    return z, q, k, v, ig, fg
+
+
+def _mlstm_block_apply(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    xin = layers.rmsnorm_apply(p["ln"], x)
+    z, q, k, v, ig, fg = _mlstm_qkvg(p, cfg, xin)
+    hcell = mlstm_chunkwise(q, k, v, ig, fg)
+    b, s = x.shape[:2]
+    hflat = hcell.reshape(b, s, -1).astype(x.dtype)
+    hflat = layers.rmsnorm_apply(p["gn"], hflat) * jax.nn.silu(z)
+    return x + hflat @ p["down"]
+
+
+def _mlstm_block_decode(p, cfg, x, state):
+    xin = layers.rmsnorm_apply(p["ln"], x)  # [B,1,D]
+    z, q, k, v, ig, fg = _mlstm_qkvg(p, cfg, xin)
+    state, h = mlstm_step(
+        state, q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]
+    )
+    b = x.shape[0]
+    hflat = h.reshape(b, 1, -1).astype(x.dtype)
+    hflat = layers.rmsnorm_apply(p["gn"], hflat) * jax.nn.silu(z)
+    return x + hflat @ p["down"], state
+
+
+def _slstm_block_init(rng, cfg: ArchConfig) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(rng, 7)
+    f_in = int(d * 4 / 3)
+    return {
+        "ln": layers.rmsnorm_init(cfg),
+        "w_in": layers._dense_init(ks[0], (d, 4 * d), d),  # z,i,f,o stacked
+        "r": {
+            "rz": layers._dense_init(ks[1], (h, hd, hd), hd),
+            "ri": layers._dense_init(ks[2], (h, hd, hd), hd),
+            "rf": layers._dense_init(ks[3], (h, hd, hd), hd),
+            "ro": layers._dense_init(ks[4], (h, hd, hd), hd),
+        },
+        "gn": layers.rmsnorm_init(cfg, d),
+        "ln2": layers.rmsnorm_init(cfg),
+        "ff": layers.mlp_init(ks[5], cfg, d_ff=f_in),
+    }
+
+
+def _slstm_block_specs(cfg: ArchConfig) -> Params:
+    return {
+        "ln": layers.rmsnorm_specs(cfg),
+        "w_in": ("embed", None),
+        "r": {k: (None, None, None) for k in ("rz", "ri", "rf", "ro")},
+        "gn": {"scale": (None,)},
+        "ln2": layers.rmsnorm_specs(cfg),
+        "ff": {"wi": ("embed", None), "wg": ("embed", None),
+               "wo": (None, "embed")},
+    }
+
+
+def _slstm_gates(p, cfg, xin):
+    b, s, d = xin.shape
+    h = cfg.n_heads
+    hd = d // h
+    g = (xin @ p["w_in"]).reshape(b, s, 4, h, hd)
+    return tuple(g[:, :, i] for i in range(4))  # z,i,f,o: [B,S,H,hd]
+
+
+def _slstm_block_apply(p, cfg: ArchConfig, x, state=None):
+    xin = layers.rmsnorm_apply(p["ln"], x)
+    zx, ix, fx, ox = _slstm_gates(p, cfg, xin)
+    hs, state = slstm_scan(zx, ix, fx, ox, p["r"], state)
+    b, s = x.shape[:2]
+    hflat = layers.rmsnorm_apply(p["gn"], hs.reshape(b, s, -1).astype(x.dtype))
+    x = x + hflat
+    y = layers.rmsnorm_apply(p["ln2"], x)
+    act = jax.nn.silu
+    y = act(y @ p["ff"]["wg"]) * (y @ p["ff"]["wi"])
+    return x + y @ p["ff"]["wo"], state
+
+
+# ---------------------------------------------------------------------------
+# model builder
+# ---------------------------------------------------------------------------
+
+def build(cfg: ArchConfig, impl: str = "xla", remat: bool = True) -> Model:
+    every = cfg.slstm_every or 8
+    n_groups = cfg.n_layers // every
+    n_m = every - 1  # mLSTM blocks per group (last block is sLSTM)
+    assert cfg.n_layers % every == 0
+
+    din = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    dk = din // h
+    hd = cfg.d_model // h
+
+    def init(rng):
+        k_emb, k_blocks, _ = jax.random.split(rng, 3)
+        def one_group(key):
+            km, ks_ = jax.random.split(key)
+            return {
+                "mlstm": jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[_mlstm_block_init(k, cfg)
+                      for k in jax.random.split(km, n_m)],
+                ),
+                "slstm": _slstm_block_init(ks_, cfg),
+            }
+        blocks = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one_group(k) for k in jax.random.split(k_blocks, n_groups)],
+        )
+        return {
+            "embed": layers.embedding_init(k_emb, cfg),
+            "blocks": blocks,
+            "final_ln": layers.rmsnorm_init(cfg),
+        }
+
+    def _prepend(specs, extra=1):
+        return jax.tree.map(
+            lambda sp: (None,) * extra + sp,
+            specs,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+
+    def param_specs():
+        group = {
+            "mlstm": _prepend(_mlstm_block_specs(cfg)),
+            "slstm": _slstm_block_specs(cfg),
+        }
+        return {
+            "embed": layers.embedding_specs(cfg),
+            "blocks": _prepend(group),
+            "final_ln": layers.rmsnorm_specs(cfg),
+        }
+
+    def group_fwd(x, gp):
+        for i in range(n_m):
+            mp = jax.tree.map(lambda a: a[i], gp["mlstm"])
+            x = _mlstm_block_apply(mp, cfg, x)
+        x, _ = _slstm_block_apply(gp["slstm"], cfg, x)
+        return logical(x, "batch", "seq", None)
+
+    body_fn = (
+        jax.checkpoint(group_fwd,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+        if remat else group_fwd
+    )
+
+    def trunk(params, x):
+        def body(carry, gp):
+            return body_fn(carry, gp), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return layers.rmsnorm_apply(params["final_ln"], x)
+
+    def loss(params, batch):
+        x = layers.embed_apply(params["embed"], cfg, batch["tokens"])
+        x = trunk(params, x)
+        logits = layers.unembed_apply(params["embed"], cfg, x)
+        return layers.softmax_xent(logits, batch["labels"])
+
+    # ---- recurrent caches ----------------------------------------------------
+    def init_cache(batch: int, length: int):
+        del length  # recurrent state is O(1) in sequence length
+        f32 = jnp.float32
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "mlstm": {
+                "c": jnp.zeros((n_groups, n_m, batch, h, dk, dk), f32),
+                "n": jnp.zeros((n_groups, n_m, batch, h, dk), f32),
+                "m": jnp.full((n_groups, n_m, batch, h), -jnp.inf, f32),
+            },
+            "slstm": {
+                "c": jnp.zeros((n_groups, batch, h, hd), f32),
+                "n": jnp.zeros((n_groups, batch, h, hd), f32),
+                "h": jnp.zeros((n_groups, batch, h, hd), f32),
+                "m": jnp.full((n_groups, batch, h, hd), -jnp.inf, f32),
+            },
+        }
+
+    def cache_specs(batch: int, length: int):
+        return {
+            "pos": (),
+            "mlstm": {
+                "c": (None, None, "batch", None, "d_inner", None),
+                "n": (None, None, "batch", None, "d_inner"),
+                "m": (None, None, "batch", None),
+            },
+            "slstm": {
+                k: (None, "batch", None, None) for k in ("c", "n", "h", "m")
+            },
+        }
+
+    # NOTE: prefill for recurrent archs = run the recurrence over the prompt
+    # carrying exact states.  Implemented as a scan over time chunks with
+    # mlstm_chunkwise's carry exposed; for the serving path we use the exact
+    # step recurrence below (slow-but-correct reference); the chunked carry
+    # version is the Pallas/XLA production path.
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache = init_cache(b, s)
+
+        x = layers.embed_apply(params["embed"], cfg, tokens)
+
+        def body(carry, gp):
+            x = carry
+            new_mc = {"c": [], "n": [], "m": []}
+            for i in range(n_m):
+                mp = jax.tree.map(lambda a: a[i], gp["mlstm"])
+                xin = layers.rmsnorm_apply(mp["ln"], x)
+                z, q, k, v, ig, fg = _mlstm_qkvg(mp, cfg, xin)
+                hcell, fstate = _mlstm_chunk_with_state(q, k, v, ig, fg)
+                hflat = hcell.reshape(b, s, -1).astype(x.dtype)
+                hflat = layers.rmsnorm_apply(mp["gn"], hflat) * jax.nn.silu(z)
+                x = x + hflat @ mp["down"]
+                for key in new_mc:
+                    new_mc[key].append(fstate[key])
+            xs_, s2 = _slstm_block_apply(gp["slstm"], cfg, x, None)
+            x = xs_
+            stacked_mc = {
+                key: jnp.stack(new_mc[key]) for key in new_mc
+            }
+            return x, (stacked_mc, s2)
+
+        x, (mstates, sstates) = jax.lax.scan(
+            body, x, params["blocks"]
+        )
+        x = layers.rmsnorm_apply(params["final_ln"], x)
+        logits = layers.unembed_apply(params["embed"], cfg, x[:, -1:])
+        cache = {
+            "pos": jnp.array(s, jnp.int32),
+            "mlstm": mstates,
+            "slstm": sstates,
+        }
+        return logits, cache
+
+    def decode_step(params, cache, token):
+        x = layers.embed_apply(params["embed"], cfg, token)
+
+        def body(carry, scanned):
+            x = carry
+            gp, mc, sc = scanned
+            new_mc = {"c": [], "n": [], "m": []}
+            for i in range(n_m):
+                mp = jax.tree.map(lambda a: a[i], gp["mlstm"])
+                st = {k: mc[k][i] for k in ("c", "n", "m")}
+                x, st2 = _mlstm_block_decode(mp, cfg, x, st)
+                for key in new_mc:
+                    new_mc[key].append(st2[key])
+            x, s2 = _slstm_block_apply(gp["slstm"], cfg, x, sc)
+            stacked = {k: jnp.stack(new_mc[k]) for k in new_mc}
+            return x, (stacked, s2)
+
+        x, (mstates, sstates) = jax.lax.scan(
+            body, x, (params["blocks"], cache["mlstm"], cache["slstm"])
+        )
+        x = layers.rmsnorm_apply(params["final_ln"], x)
+        logits = layers.unembed_apply(params["embed"], cfg, x)
+        return logits, {
+            "pos": cache["pos"] + 1,
+            "mlstm": mstates,
+            "slstm": sstates,
+        }
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        param_specs=param_specs,
+        loss=loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_specs=cache_specs,
+    )
+
+
+def _mlstm_chunk_with_state(q, k, v, ig, fg, chunk: int = CHUNK):
+    """Chunkwise mLSTM that also returns the final (c, n, m) state."""
+    b, s, h, dk = q.shape
+    # reuse the scan from mlstm_chunkwise but capture the carry
+    c = min(chunk, s)
+    if s % c:
+        pad = c - s % c
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        # padded steps: ig = -inf (no input), fg = +inf (keep state)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e9)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=30.0)
+    hs, state = _chunkwise_impl(q, k, v, ig, fg, c)
+    return hs[:, :s], state
+
+
+def _chunkwise_impl(q, k, v, ig, fg, c):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    n_chunks = s // c
+    qq = q.reshape(b, n_chunks, c, h, dk) / np.sqrt(dk)
+    kk = k.reshape(b, n_chunks, c, h, dk) / np.sqrt(dk)
+    vv = v.reshape(b, n_chunks, c, h, dv)
+    igc = ig.reshape(b, n_chunks, c, h).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        fg.reshape(b, n_chunks, c, h).astype(jnp.float32)
+    )
+    bcum = jnp.cumsum(logf, axis=2)
+    btot = bcum[:, :, -1]
+    # NOTE (perf, EXPERIMENTS.md §Perf H1): the decay matrix and its row
+    # max are built *inside* the chunk scan — materialising them for every
+    # chunk up front ([B, NC, C, C, H]) made the memory roofline term
+    # explode (74 s/step on xlstm train_4k)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def scan_chunk(carry, xs):
+        csum, nsum, m_prev = carry
+        qc, kc, vc, ic, bc, btc = xs
+        dm = bc[:, :, None, :] - bc[:, None, :, :] + ic[:, None, :, :]
+        dm = jnp.where(tri[None, :, :, None], dm, -jnp.inf)
+        mi = jnp.max(dm, axis=2)
+        m_inter = m_prev[:, None, :] + bc
+        m = jnp.maximum(m_inter, mi)
+        sc = jnp.einsum("bihk,bjhk->bijh", qc, kc,
+                        preferred_element_type=jnp.float32)
+        wg = jnp.exp(dm - m[:, :, None, :])   # gate-only decay weights
+        w = sc * wg
+        h_intra = jnp.einsum(
+            "bijh,bjhv->bihv", w, vc.astype(jnp.float32)
+        )
+        n_intra = jnp.einsum("bijh,bjhk->bihk", wg, kc.astype(jnp.float32))
+        scale = jnp.exp(m_inter - m)
+        h_inter = jnp.einsum("bihk,bhkv->bihv", qc.astype(jnp.float32),
+                             csum) * scale[..., None]
+        n_inter = jnp.einsum("bihk,bhk->bih", qc.astype(jnp.float32),
+                             nsum) * scale
+        num = h_intra + h_inter
+        den = jnp.abs(
+            n_inter + jnp.einsum(
+                "bihk,bihk->bih", qc.astype(jnp.float32), n_intra
+            )
+        )
+        hout = num / jnp.maximum(den, jnp.exp(-m))[..., None]
+        m_next = jnp.maximum(
+            m_prev + btc, jnp.max(btc[:, None, :] - bc + ic, axis=1)
+        )
+        g_carry = jnp.exp(m_prev + btc - m_next)
+        g_in = jnp.exp(btc[:, None, :] - bc + ic - m_next[:, None, :])
+        csum = csum * g_carry[..., None, None] + jnp.einsum(
+            "bjhk,bjhv,bjh->bhkv", kc.astype(jnp.float32),
+            vc.astype(jnp.float32), g_in,
+        )
+        nsum = nsum * g_carry[..., None] + jnp.einsum(
+            "bjhk,bjh->bhk", kc.astype(jnp.float32), g_in
+        )
+        return (csum, nsum, m_next), hout
+
+    init = (
+        jnp.zeros((b, h, dk, dv), jnp.float32),
+        jnp.zeros((b, h, dk), jnp.float32),
+        jnp.full((b, h), -jnp.inf, jnp.float32),
+    )
+    xs = (
+        qq.transpose(1, 0, 2, 3, 4), kk.transpose(1, 0, 2, 3, 4),
+        vv.transpose(1, 0, 2, 3, 4), igc.transpose(1, 0, 2, 3),
+        bcum.transpose(1, 0, 2, 3), btot.transpose(1, 0, 2),
+    )
+    # remat each chunk: backward recomputes the intra-chunk quadratic form
+    # instead of saving [B,C,C,H] weight tensors per chunk (§Perf H1)
+    (csum, nsum, m_fin), hs = jax.lax.scan(
+        jax.checkpoint(scan_chunk), init, xs
+    )
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return out, {"c": csum, "n": nsum, "m": m_fin}

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    wsd_schedule,
+)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "global_norm",
+    "wsd_schedule",
+]

@@ -1,0 +1,100 @@
+"""AdamW with ZeRO-1-style sharded states.
+
+The first/second-moment trees are fp32 and inherit the *parameter*
+shardings leaf-for-leaf (so FSDP-sharded params get FSDP-sharded moments —
+the optimizer touches only local shards and pjit keeps the update local).
+Global-norm clipping runs in fp32 with a single scalar all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array       # int32 scalar
+    mu: Params            # fp32, sharded like params
+    nu: Params            # fp32, sharded like params
+
+
+def adamw_init(params: Params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+    )
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    state: AdamWState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> tuple[Params, AdamWState]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+def wsd_schedule(
+    peak_lr: float,
+    warmup: int,
+    total: int,
+    decay_frac: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    """Warmup-stable-decay schedule."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        stable = peak_lr
+        frac = (s - decay_start) / max(total - decay_start, 1)
+        decay = peak_lr * jnp.maximum(1.0 - frac, 0.05)
+        return jnp.where(
+            s < warmup, warm, jnp.where(s < decay_start, stable, decay)
+        )
+
+    return lr

@@ -1,0 +1,15 @@
+from repro.core.costmodel import Job, job_time, job_to_task, step_time
+from repro.runtime.executor import (
+    ExecutionEvent,
+    ExecutionResult,
+    Fault,
+    SimExecutor,
+    Slowdown,
+)
+from repro.runtime.elastic import ClusterManager
+
+__all__ = [
+    "Job", "job_time", "job_to_task", "step_time",
+    "SimExecutor", "ExecutionResult", "ExecutionEvent", "Fault", "Slowdown",
+    "ClusterManager",
+]

@@ -1,0 +1,164 @@
+"""Elastic cluster manager: FAR scheduling + fault recovery + stragglers.
+
+The control loop a 1000-node deployment needs, at pod scale:
+
+  1. jobs accumulate in a queue while the current batch executes (paper §1.3
+     scenario);
+  2. each batch is scheduled offline by FAR on the *current* device spec
+     and spliced after the live tail (paper §4 concatenation);
+  3. the executor plays the batch; on a pod-slice failure the spec is
+     degraded (subtree removal — healthy instances are untouched thanks to
+     isolation), killed jobs are resurrected from their last checkpoint as
+     *new* jobs (remaining steps only) and rejoin the queue — consistent
+     with the paper's no-preemption model: a restart is a new task;
+  4. straggler-flagged jobs are requeued the same way — because FAR is
+     moldable, the retry is free to pick a different instance size.
+
+FAR itself never needs global state, so pods joining/leaving between
+batches is just a different ``DeviceSpec`` — that is the elasticity story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.costmodel import Job, job_to_task
+from repro.core.device_spec import DeviceSpec, TPU_POD_256
+from repro.core.far import schedule_batch
+from repro.core.multibatch import Tail, concatenate
+from repro.core.problem import Schedule, Task
+from repro.runtime.executor import ExecutionResult, Fault, SimExecutor, Slowdown
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    jobs: list[Job]
+    schedule: Schedule
+    result: ExecutionResult
+    spec_name: str
+
+
+class ClusterManager:
+    def __init__(
+        self,
+        spec: DeviceSpec = TPU_POD_256,
+        concat_mode: str = "move_swap",
+        straggle_tol: float = 0.05,
+    ):
+        self.spec = spec
+        self.concat_mode = concat_mode
+        self.straggle_tol = straggle_tol
+        self.queue: list[Job] = []
+        self.tail = Tail.empty(spec)
+        self.history: list[BatchRecord] = []
+        self._flip = False
+        self._next_id = 0
+        self.clock = 0.0
+
+    # -- job intake -----------------------------------------------------------
+    def submit(self, job: Job) -> None:
+        self.queue.append(job)
+
+    def new_job(self, cfg, shape, steps, checkpoint_every=50) -> Job:
+        job = Job(self._next_id, cfg, shape, steps,
+                  checkpoint_every=checkpoint_every)
+        self._next_id += 1
+        return job
+
+    # -- one control-loop iteration --------------------------------------------
+    def run_batch(
+        self,
+        faults: Sequence[Fault] = (),
+        slowdowns: Sequence[Slowdown] = (),
+        max_jobs: int | None = None,
+    ) -> BatchRecord | None:
+        if not self.queue:
+            return None
+        take = self.queue if max_jobs is None else self.queue[:max_jobs]
+        self.queue = self.queue[len(take):]
+        jobs = list(take)
+        tasks: list[Task] = []
+        by_task_id: dict[int, Job] = {}
+        for job in jobs:
+            t = job_to_task(job, self.spec)
+            tasks.append(t)
+            by_task_id[t.id] = job
+
+        far = schedule_batch(tasks, self.spec)
+        out = concatenate(
+            far.assignment, self.tail, mode=self.concat_mode,
+            reverse=self._flip,
+        )
+        self._flip = not self._flip
+        self.tail = out.tail
+        schedule = out.schedule
+
+        executor = SimExecutor(
+            faults=faults, slowdowns=slowdowns,
+            straggle_tol=self.straggle_tol,
+        )
+        result = executor.run(schedule)
+        self.clock = max(self.clock, result.makespan)
+
+        # --- recovery: degrade spec, resurrect killed/straggling jobs --------
+        if faults:
+            self.spec = self.spec.degrade(
+                [(f.tree, f.slice_index) for f in faults]
+            )
+            self.tail = _prune_tail(self.tail, self.spec)
+        for tid, frac in result.killed.items():
+            job = by_task_id[tid]
+            done_steps = int(frac * job.steps)
+            ckpt_steps = (
+                done_steps // job.checkpoint_every * job.checkpoint_every
+            )
+            remaining = job.steps - ckpt_steps
+            if remaining > 0:
+                self.queue.append(dataclasses.replace(
+                    job,
+                    id=self._alloc_id(),
+                    steps=remaining,
+                    name=f"{job.label}~restart@{ckpt_steps}",
+                ))
+        for tid in result.stragglers:
+            # straggler jobs finished late; nothing to requeue, but record
+            pass
+
+        rec = BatchRecord(jobs, schedule, result, self.spec.name)
+        self.history.append(rec)
+        return rec
+
+    def _alloc_id(self) -> int:
+        self._next_id += 1
+        return 10_000 + self._next_id
+
+    # -- reporting ---------------------------------------------------------------
+    @property
+    def makespan(self) -> float:
+        return max((r.result.makespan for r in self.history), default=0.0)
+
+    def utilization(self) -> float:
+        """Busy slice-seconds / available slice-seconds."""
+        if not self.history:
+            return 0.0
+        busy = sum(
+            it.size * it.duration
+            for r in self.history
+            for it in r.schedule.items
+            if it.task.id in r.result.finished
+        )
+        return busy / (self.makespan * self.spec.n_slices)
+
+
+def _prune_tail(tail: Tail, spec: DeviceSpec) -> Tail:
+    """Drop tail state referring to instances that no longer exist."""
+    keys = {n.key for n in spec.nodes}
+    cells = {(r.tree, s) for r in spec.roots for s in r.blocked}
+    release = {
+        k: v for k, v in tail.release.items()
+        if k == "reconfig" or k in cells
+    }
+    alive = {k: v for k, v in tail.alive.items() if k in keys}
+    return Tail(release=release, alive=alive)

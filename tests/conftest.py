@@ -1,0 +1,6 @@
+import os
+import sys
+
+# keep single-device defaults for tests (the 512-device dry-run sets its own
+# XLA_FLAGS in a separate process); make src importable without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,83 @@
+"""Device-spec structure: valid partitions, trees, degradation."""
+
+import pytest
+
+from repro.core.device_spec import (
+    A30, A100, H100, TPU_POD_256, TPU_SUPERPOD_512, multi_gpu,
+)
+
+
+def test_partition_counts_match_paper_fig1():
+    assert len(A30.valid_partitions) == 5
+    assert len(A100.valid_partitions) == 19
+    assert len(H100.valid_partitions) == 19
+
+
+def test_partitions_tile_all_slices():
+    for spec in (A30, A100, TPU_POD_256):
+        for p in spec.valid_partitions:
+            blocked = sorted(
+                (node.tree, s) for node in p for s in node.blocked
+            )
+            want = sorted(
+                (r.tree, s) for r in spec.roots for s in r.blocked
+            )
+            assert blocked == want, (spec.name, p)
+
+
+def test_a100_has_no_2_4_1_style_invalid_partition():
+    # paper §2.3: 2-4-1 with the 4 in the middle is NOT a valid partition
+    for p in A100.valid_partitions:
+        sizes_at = sorted((n.start, n.size) for n in p)
+        assert (2, 4) not in sizes_at  # no 4-slice instance starting at S2
+
+
+def test_a100_special_three_instance_blocks_s3():
+    threes = [n for n in A100.nodes if n.size == 3]
+    assert len(threes) == 2
+    left = next(n for n in threes if n.start == 0)
+    assert left.footprint == 4  # S3 reserved-idle
+    right = next(n for n in threes if n.start == 4)
+    assert right.footprint == 3
+
+
+def test_disjoint_node_sets_are_feasible():
+    by_key = {(n.start, n.size): n for n in A100.nodes
+              if n.footprint == n.size}
+    four = next(n for n in A100.nodes if n.size == 4)
+    combo = [four, by_key[(4, 2)], by_key[(6, 1)]]  # 4 + (4,2) + (6,1)
+    assert A100.is_feasible_instance_set(combo)
+    seven = next(n for n in A100.nodes if n.size == 7)
+    bad = [seven, by_key[(0, 1)]]  # overlapping footprints
+    assert not A100.is_feasible_instance_set(bad)
+
+
+def test_multi_gpu_forest():
+    spec = multi_gpu(A30, 3)
+    assert spec.n_slices == 12
+    assert len(spec.roots) == 3
+    assert len(spec.valid_partitions) == 5 ** 3
+
+
+def test_superpod_is_two_pods():
+    assert TPU_SUPERPOD_512.n_slices == 16
+    assert len(TPU_SUPERPOD_512.roots) == 2
+
+
+@pytest.mark.parametrize("dead,expect_slices", [
+    ([(0, 0)], 7), ([(0, 0), (0, 7)], 6), ([(0, 3)], 7),
+])
+def test_degrade_removes_only_affected_subtrees(dead, expect_slices):
+    d = TPU_POD_256.degrade(dead)
+    assert d.n_slices == expect_slices
+    for r in d.roots:
+        for s in r.blocked:
+            assert (r.tree, s) not in set(dead)
+    # sizes remain schedulable subset
+    assert set(d.sizes) <= set(TPU_POD_256.sizes)
+
+
+def test_degrade_keeps_t_tables():
+    d = A100.degrade([(0, 6)])
+    for s in d.sizes:
+        assert s in d.t_create and s in d.t_destroy

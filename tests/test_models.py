@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (reduced configs, real forward/train
+steps, shape + NaN assertions) and decode-vs-prefill consistency."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SMOKES
+from repro.models.model import build_model
+
+
+def _batch(cfg, b=2, s=32):
+    out = {
+        "tokens": jax.random.randint(jax.random.key(1), (b, s), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.key(2), (b, s), 0,
+                                     cfg.vocab_size),
+    }
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            jax.random.key(3), (b, cfg.encoder_frames, cfg.d_model),
+            jnp.bfloat16,
+        )
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_smoke_forward_and_train_step(name):
+    cfg = SMOKES[name]
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), name
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert not bool(jnp.isnan(g.astype(jnp.float32)).any()), name
+
+
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_smoke_prefill_decode_shapes(name):
+    cfg = SMOKES[name]
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    pre_in = {k: v for k, v in batch.items() if k != "labels"}
+    logits, cache = model.prefill(params, pre_in)
+    assert logits.shape == (b, 1, cfg.padded_vocab())
+    tok = jnp.ones((b, 1), jnp.int32)
+    logits2, cache2 = model.decode_step(params, cache, tok)
+    assert logits2.shape == (b, 1, cfg.padded_vocab())
+    assert int(cache2["pos"]) == s + 1
+    assert not bool(jnp.isnan(logits2.astype(jnp.float32)).any()), name
+
+
+# decode-vs-prefill agreement: run in f32 so path divergence is visible
+# only as true math errors (bf16 tested separately at looser tolerance)
+@pytest.mark.parametrize("name", [
+    "qwen2.5-3b", "gemma3-12b", "qwen2-moe-a2.7b", "xlstm-350m",
+    "zamba2-2.7b", "whisper-small",
+])
+def test_decode_matches_prefill_f32(name):
+    from repro.models import layers
+
+    old = layers.DTYPE
+    layers.DTYPE = jnp.float32
+    try:
+        cfg = SMOKES[name]
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 36), 0,
+                                  cfg.vocab_size)
+        pre = {"tokens": toks[:, :32]}
+        full = {"tokens": toks}
+        if cfg.is_encoder_decoder:
+            frames = jax.random.normal(
+                jax.random.key(3), (2, cfg.encoder_frames, cfg.d_model),
+                jnp.float32,
+            )
+            pre["frames"] = frames
+            full["frames"] = frames
+        _, cache = model.prefill(params, pre)
+        for i in range(32, 36):
+            lg, cache = model.decode_step(params, cache, toks[:, i:i + 1])
+        lg_ref, _ = model.prefill(params, full)
+        err = float(jnp.max(jnp.abs(lg - lg_ref)))
+        assert err < 2e-3, (name, err)
+    finally:
+        layers.DTYPE = old
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "qwen1.5-110b": (105e9, 118e9),
+        "chameleon-34b": (32e9, 36e9),
+        "gemma3-12b": (10e9, 13e9),
+        "qwen2.5-3b": (2.8e9, 3.6e9),
+        "gemma-2b": (2.2e9, 2.8e9),
+        "zamba2-2.7b": (2.2e9, 2.9e9),
+        "xlstm-350m": (0.2e9, 0.45e9),
+        "whisper-small": (0.2e9, 0.45e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = ARCHS[name].param_count()
+        assert lo <= n <= hi, (name, n)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = ARCHS["qwen2-moe-a2.7b"]
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()
+    assert 2.2e9 < cfg.active_param_count() < 3.2e9
+
+
+def test_gemma3_local_global_cache_sizes():
+    """long-context: local layers allocate window-sized rolling caches."""
+    cfg = SMOKES["gemma3-12b"]
+    model = build_model(cfg)
+    cache = model.cache_shapes(1, 4096)
+    loc = cache["local"]["k"].shape
+    glob = cache["global"]["k"].shape
+    assert loc[3] <= cfg.sliding_window + 32
+    assert glob[2] >= 4096

@@ -1,0 +1,32 @@
+"""Online scheduler (paper §7 future work): feasibility + sanity."""
+
+from repro.core.device_spec import A100, TPU_POD_256
+from repro.core.far import schedule_batch
+from repro.core.online import OnlineScheduler
+from repro.core.problem import validate_schedule
+from repro.core.synth import generate_tasks, workload
+
+
+def test_online_always_feasible_and_bounded():
+    for spec in (A100, TPU_POD_256):
+        for seed in range(3):
+            tasks = generate_tasks(
+                12, spec, workload("mixed", "wide", spec), seed=seed
+            )
+            online = OnlineScheduler(spec)
+            for t in tasks:
+                online.submit(t)
+            sched = online.schedule()
+            validate_schedule(sched, tasks)
+            far = schedule_batch(tasks, spec)
+            assert sched.makespan >= far.makespan - 1e-6  # offline wins
+            assert sched.makespan <= 5 * far.makespan     # but sanely so
+
+
+def test_online_molds_to_different_sizes():
+    tasks = generate_tasks(
+        10, A100, workload("mixed", "wide", A100), seed=1
+    )
+    online = OnlineScheduler(A100)
+    sizes = {online.submit(t).size for t in tasks}
+    assert len(sizes) > 1  # actually exercises moldability

@@ -1,0 +1,131 @@
+"""FAR behaviour: feasibility, bounds, phase contributions, baselines."""
+
+import pytest
+
+from repro.core import (
+    A30, A100, TPU_POD_256,
+    Task, area_lower_bound, rho, schedule_batch, validate_schedule,
+)
+from repro.core.allocations import allocation_family, first_allocation
+from repro.core.baselines import (
+    fix_part, fix_part_best, miso_opt, partition_of_ones, partition_whole,
+)
+from repro.core.bounds import approximation_factor, theorem1_rigid_bound
+from repro.core.repartition import list_schedule_allocation, replay
+from repro.core.rodinia import TABLE3_KERNELS, rodinia_tasks
+from repro.core.synth import generate_tasks, workload
+
+
+def test_far_rodinia_valid_and_close_to_paper():
+    tasks = rodinia_tasks(A100)
+    res = schedule_batch(tasks, A100)
+    validate_schedule(res.schedule, tasks)
+    r = rho(res, tasks)
+    # paper reports 1.22 on their profiles; ours is a digitised fixture
+    assert r < 1.5, r
+    assert r < approximation_factor(A100)
+
+
+def test_far_a30_table3_batch():
+    tasks = rodinia_tasks(A30, TABLE3_KERNELS)
+    res = schedule_batch(tasks, A30)
+    validate_schedule(res.schedule, tasks)
+    assert rho(res, tasks) < 1.75
+
+
+@pytest.mark.parametrize("spec", [A30, A100, TPU_POD_256])
+@pytest.mark.parametrize("scaling,times", [("mixed", "wide"),
+                                           ("poor", "narrow"),
+                                           ("good", "wide")])
+def test_far_synthetic_validity_and_factor(spec, scaling, times):
+    for seed in range(3):
+        tasks = generate_tasks(18, spec, workload(scaling, times, spec),
+                               seed=seed)
+        res = schedule_batch(tasks, spec)
+        validate_schedule(res.schedule, tasks)
+        # certified approximation factor versus the area lower bound
+        # (reconfig excluded in the proof; it is tiny vs these durations)
+        factor = approximation_factor(spec)
+        lb = area_lower_bound(tasks, spec)
+        hmax = max(min(t.times.values()) for t in tasks)
+        assert res.makespan <= factor * max(lb, hmax) + 5.0
+
+
+def test_phase2_respects_theorem1_bound():
+    """List-scheduling bound (§5) holds for every allocation's schedule."""
+    for spec in (A30, A100):
+        tasks = generate_tasks(
+            15, spec, workload("mixed", "wide", spec), seed=7
+        )
+        for alloc in allocation_family(tasks, spec):
+            assign = list_schedule_allocation(tasks, alloc, spec)
+            sched = replay(assign, include_reconfig=False)
+            assert sched.makespan <= theorem1_rigid_bound(sched) + 1e-6
+
+
+def test_allocation_family_monotonicity():
+    spec = A100
+    tasks = generate_tasks(12, spec, workload("mixed", "wide", spec), seed=3)
+    fam = allocation_family(tasks, spec)
+    assert fam[0] == first_allocation(tasks, spec)
+    prev_area, prev_hmax = -1.0, float("inf")
+    for alloc in fam:
+        area = sum(s * t.times[s] for t, s in zip(tasks, alloc))
+        hmax = max(t.times[s] for t, s in zip(tasks, alloc))
+        assert area >= prev_area - 1e-9      # work non-decreasing
+        assert hmax <= prev_hmax + 1e-9      # longest task non-increasing
+        prev_area, prev_hmax = area, hmax
+    # family ends when the longest task is maximal
+    last = fam[-1]
+    j = max(range(len(tasks)), key=lambda i: tasks[i].times[last[i]])
+    assert last[j] == max(spec.sizes)
+
+
+def test_refinement_never_hurts():
+    spec = A100
+    for seed in range(5):
+        tasks = generate_tasks(20, spec, workload("mixed", "narrow", spec),
+                               seed=seed)
+        r_no = schedule_batch(tasks, spec, refine=False)
+        r_yes = schedule_batch(tasks, spec, refine=True)
+        assert r_yes.makespan <= r_no.makespan + 1e-9
+        validate_schedule(r_yes.schedule, tasks)
+
+
+def test_pruning_does_not_change_result():
+    spec = A100
+    tasks = generate_tasks(14, spec, workload("good", "wide", spec), seed=11)
+    a = schedule_batch(tasks, spec, prune=True)
+    b = schedule_batch(tasks, spec, prune=False)
+    assert abs(a.makespan - b.makespan) < 1e-9
+    assert a.evaluated <= b.evaluated
+
+
+def test_baselines_valid_and_far_wins_on_average():
+    spec = A100
+    wins = 0
+    for seed in range(6):
+        tasks = generate_tasks(15, spec, workload("mixed", "wide", spec),
+                               seed=seed)
+        far = schedule_batch(tasks, spec)
+        m = miso_opt(tasks, spec)
+        validate_schedule(m, tasks, check_reconfig=False)
+        f1 = fix_part(tasks, spec, partition_of_ones(spec))
+        validate_schedule(f1, tasks, check_reconfig=False)
+        fb, _ = fix_part_best(tasks, spec)
+        fw = fix_part(tasks, spec, partition_whole(spec))
+        assert far.makespan <= min(m.makespan, f1.makespan, fw.makespan) * 1.2
+        if far.makespan <= fb.makespan + 1e-9:
+            wins += 1
+    assert wins >= 4  # FAR beats even FixPartBest almost always
+
+
+def test_missing_profile_raises():
+    t = Task(0, {1: 3.0, 2: 2.0})  # no size-4/3/7 times
+    with pytest.raises(ValueError):
+        schedule_batch([t], A100)
+
+
+def test_empty_batch():
+    res = schedule_batch([], A100)
+    assert res.makespan == 0.0

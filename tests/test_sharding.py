@@ -1,0 +1,90 @@
+"""Sharding rules: every FULL config's param/cache spec must divide evenly
+on the production meshes (this is what makes the 40-cell dry-run pass)."""
+
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.config import SHAPES, shape_applicable
+from repro.models.model import build_model
+from repro.parallel.sharding import make_rules
+
+SINGLE = {"data": 16, "model": 16}
+MULTI = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisible(shapes_tree, specs_tree, rules, mesh_shape, tag):
+    shapes = jax.tree.leaves(shapes_tree)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    specs = jax.tree.leaves(specs_tree, is_leaf=is_spec)
+    assert len(shapes) == len(specs), tag
+    for sds, spec in zip(shapes, specs):
+        assert len(spec) == len(sds.shape), (tag, spec, sds.shape)
+        pspec = rules.spec(*spec)
+        for dim, axes in zip(sds.shape, pspec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            total = 1
+            for a in axes:
+                total *= mesh_shape[a]
+            assert dim % total == 0, (tag, spec, sds.shape, axes)
+
+
+@pytest.mark.parametrize("mesh_shape", [SINGLE, MULTI],
+                         ids=["single", "multi"])
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_full_config_param_shardings_divide(name, mesh_shape):
+    cfg = ARCHS[name]
+    model = build_model(cfg)
+    rules = make_rules(cfg, mesh_shape)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    _check_divisible(shapes, model.param_specs(), rules, mesh_shape, name)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_full_config_cache_shardings_divide(name):
+    cfg = ARCHS[name]
+    model = build_model(cfg)
+    for shape_name in ("decode_32k", "long_500k"):
+        shape = SHAPES[shape_name]
+        ok, _ = shape_applicable(cfg, shape)
+        if not ok:
+            continue
+        rules = make_rules(cfg, SINGLE, batch_size=shape.global_batch)
+        cache = model.cache_shapes(shape.global_batch, shape.seq_len)
+        specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        _check_divisible(cache, specs, rules, SINGLE,
+                         f"{name}/{shape_name}")
+
+
+def test_rules_fall_back_when_heads_do_not_divide():
+    cfg = ARCHS["gemma-2b"]  # 8 heads on a 16-way model axis
+    rules = make_rules(cfg, SINGLE)
+    assert rules.rules["heads"] == ()      # attention replicated
+    assert rules.rules["ff"] == ("model",)  # FFN still TP
+
+
+def test_moe_ep_vs_expert_tp_selection():
+    import dataclasses
+
+    r_moon = make_rules(ARCHS["moonshot-v1-16b-a3b"], SINGLE)
+    assert r_moon.rules["experts"] == ("model",)   # 64 experts: true EP
+    # qwen2-moe pads 60 -> 64 experts for EP (EXPERIMENTS.md §Perf H3b)
+    r_qwen = make_rules(ARCHS["qwen2-moe-a2.7b"], SINGLE)
+    assert ARCHS["qwen2-moe-a2.7b"].n_experts_padded == 64
+    assert r_qwen.rules["experts"] == ("model",)
+    # without padding the fallback is intra-expert tensor parallelism
+    unpadded = dataclasses.replace(ARCHS["qwen2-moe-a2.7b"], expert_pad=0)
+    r_tp = make_rules(unpadded, SINGLE)
+    assert r_tp.rules["experts"] == ()
+    assert r_tp.rules["expert_ff"] == ("model",)
+
+
+def test_fsdp_enabled_only_for_large_models():
+    big = make_rules(ARCHS["qwen1.5-110b"], SINGLE)
+    assert big.rules["embed"] == ("data",)
+    small = make_rules(ARCHS["xlstm-350m"], SINGLE)
+    assert small.rules["embed"] == ()
