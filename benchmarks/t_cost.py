@@ -1,10 +1,25 @@
 """Paper §6.4.2 / §6.5.2: scheduler compute cost vs batch size.
 
 Paper (C++, Ryzen 5 4600H): 12.3 ms / 532 ms / 1621 ms at n=100/500/1000.
-Ours is Python with an admissible allocation-family pruning (far.py), so
-we also report the number of allocations actually scheduled."""
+Ours is Python with an admissible allocation-family pruning (far.py), a
+warm-started family evaluation and the incremental timing engine
+(core/timing.py) on every refinement hot path.
 
+Besides the printed table, the run emits ``BENCH_sched_cost.json`` in the
+repo root: batch size -> p50/p95 scheduler latency with per-phase
+breakdown (family / evaluate / refine), plus the end-to-end speedup of
+the incremental-engine pipeline over the in-tree replay-per-query
+reference pipeline (``schedule_batch(use_engine=False)``) at n=200.
+Note the reference pipeline itself already contains this PR's replay
+micro-optimisations, so the recorded speedup *understates* the gain over
+the true pre-change code.
+"""
+
+import json
+import os
 import time
+
+import numpy as np
 
 from repro.core.baselines import fix_part, miso_opt, partition_of_ones
 from repro.core.device_spec import A100
@@ -13,27 +28,96 @@ from repro.core.synth import generate_tasks, workload
 
 from benchmarks.common import Rows
 
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_sched_cost.json")
+
+
+def _timed_runs(tasks, reps: int, use_engine: bool = True):
+    """Per-run wall times + per-phase medians for schedule_batch(refine=True)."""
+    times, phases = [], []
+    schedule_batch(tasks, A100, use_engine=use_engine)  # warm caches
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = schedule_batch(tasks, A100, use_engine=use_engine)
+        times.append(time.perf_counter() - t0)
+        phases.append(res.phase_s)
+    med_phase = {
+        k: float(np.median([p[k] for p in phases]) * 1e3)
+        for k in phases[0]
+    }
+    return np.asarray(times) * 1e3, med_phase, res
+
 
 def run(reps: int = 5) -> Rows:
+    reps = max(reps, 5)
     rows = Rows(
         "Scheduler cost (MixedScaling, WideTimes, A100)",
-        ["n", "far_ms", "evaluated/family", "miso_ms", "fixpart_ms",
-         "paper_far_ms"],
+        ["n", "far_p50_ms", "far_p95_ms", "evaluated/family",
+         "miso_ms", "fixpart_ms", "paper_far_ms"],
     )
-    paper = {100: 12.32, 500: 532.21, 1000: 1620.82}
-    for n in (100, 500, 1000):
-        ts = generate_tasks(n, A100, workload("mixed", "wide", A100), seed=0)
-        t0 = time.perf_counter()
-        res = None
-        for _ in range(reps):
-            res = schedule_batch(ts, A100)
-        far_ms = (time.perf_counter() - t0) / reps * 1e3
+    paper = {100: 12.32, 200: "-", 500: 532.21, 1000: 1620.82}
+    cfg = workload("mixed", "wide", A100)
+    report = {
+        "device": "A100",
+        "workload": cfg.name,
+        "metric": "schedule_batch(refine=True) end-to-end wall ms",
+        "entries": [],
+    }
+    for n in (100, 200, 500, 1000):
+        ts = generate_tasks(n, A100, cfg, seed=0)
+        times, med_phase, res = _timed_runs(ts, reps)
+        p50 = float(np.percentile(times, 50))
+        p95 = float(np.percentile(times, 95))
         t0 = time.perf_counter()
         miso_opt(ts, A100)
         miso_ms = (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
         fix_part(ts, A100, partition_of_ones(A100))
         fp_ms = (time.perf_counter() - t0) * 1e3
-        rows.add(n, far_ms, f"{res.evaluated}/{res.family_size}",
+        rows.add(n, p50, p95, f"{res.evaluated}/{res.family_size}",
                  miso_ms, fp_ms, paper[n])
+        report["entries"].append({
+            "n": n,
+            "p50_ms": p50,
+            "p95_ms": p95,
+            "phase_median_ms": med_phase,
+            "evaluated": res.evaluated,
+            "family_size": res.family_size,
+        })
+
+    # engine-vs-replay pipeline speedup at n=200 (acceptance tracking).
+    # The container's wall clock drifts ±30%, so the two pipelines are
+    # measured in strict alternation and the speedup is the median of the
+    # per-pair ratios — both sides of every ratio see the same machine
+    # state, unlike two sequential best-of-N blocks.
+    ts = generate_tasks(200, A100, cfg, seed=0)
+    schedule_batch(ts, A100, use_engine=True)
+    schedule_batch(ts, A100, use_engine=False)
+    eng_times, rep_times = [], []
+    for _ in range(max(reps, 15)):
+        t0 = time.perf_counter()
+        schedule_batch(ts, A100, use_engine=True)
+        eng_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        schedule_batch(ts, A100, use_engine=False)
+        rep_times.append(time.perf_counter() - t0)
+    eng_times = np.asarray(eng_times) * 1e3
+    rep_times = np.asarray(rep_times) * 1e3
+    speedup = float(np.median(rep_times / eng_times))
+    report["n200_engine_p50_ms"] = float(np.median(eng_times))
+    report["n200_engine_best_ms"] = float(np.min(eng_times))
+    report["n200_replay_path_p50_ms"] = float(np.median(rep_times))
+    report["n200_replay_path_best_ms"] = float(np.min(rep_times))
+    report["n200_speedup_engine_vs_replay_path"] = speedup
+    report["note"] = (
+        "replay path (use_engine=False) includes PR 1's replay "
+        "micro-optimisations, so this ratio understates the speedup over "
+        "the true pre-change code (the seed commit measured ~28.6 ms "
+        "median for this workload on the PR 1 container — a one-off "
+        "provenance data point, not reproduced by this script)"
+    )
+    with open(JSON_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows.add("n=200 speedup", f"{speedup:.1f}x", "(engine vs replay path)",
+             "", "", "", "")
     return rows

@@ -34,10 +34,13 @@ from repro.core.problem import (
 from repro.core.refine import RefineStats, refine_assignment
 from repro.core.repartition import (
     Assignment,
+    LPTGroups,
     alive_at_end,
     list_schedule_allocation,
+    list_schedule_groups,
     replay,
 )
+from repro.core.timing import ReplayEngine, TimingEngine, make_engine
 
 __all__ = [
     "A30", "A100", "H100", "SPECS", "TPU_POD_256", "TPU_SUPERPOD_512",
@@ -46,7 +49,9 @@ __all__ = [
     "InfeasibleScheduleError", "validate_schedule",
     "area_lower_bound", "lower_bound",
     "allocation_family", "first_allocation",
-    "Assignment", "list_schedule_allocation", "replay", "alive_at_end",
+    "Assignment", "list_schedule_allocation", "list_schedule_groups",
+    "LPTGroups", "replay", "alive_at_end",
+    "TimingEngine", "ReplayEngine", "make_engine",
     "RefineStats", "refine_assignment",
     "FARResult", "schedule_batch", "rho",
     "MultiBatchScheduler", "Tail", "ConcatResult", "concatenate",

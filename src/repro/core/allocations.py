@@ -12,17 +12,18 @@ method is explicitly safe for the non-monotone-work profiles MIG exhibits
 
 from __future__ import annotations
 
+import heapq
 from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec
-from repro.core.problem import Task
+from repro.core.problem import Task, min_work_size
 
 Allocation = tuple[int, ...]  # size per task, indexed like the batch
 
 
 def first_allocation(tasks: Sequence[Task], spec: DeviceSpec) -> Allocation:
     sizes = spec.sizes
-    return tuple(t.min_work_size(sizes) for t in tasks)
+    return tuple(min_work_size(t.times, sizes) for t in tasks)
 
 
 def _next_size(task: Task, current: int, sizes: Sequence[int]) -> int | None:
@@ -33,20 +34,54 @@ def _next_size(task: Task, current: int, sizes: Sequence[int]) -> int | None:
     return min(bigger, key=lambda s: (s * task.times[s], s))
 
 
+def allocation_family_deltas(
+    tasks: Sequence[Task], spec: DeviceSpec
+) -> tuple[Allocation, list[tuple[int, int]]]:
+    """The family as ``(first_allocation, [(task_index, new_size), ...])``.
+
+    Consecutive family members differ in exactly one task's size, so the
+    delta form is the natural one for warm-started phase-2 evaluation —
+    and it avoids materialising O(family · n) allocation tuples.
+
+    The longest task is tracked with a lazy max-heap instead of an O(n)
+    scan per step: only the widened task's duration changes, and durations
+    are non-increasing along the family (monotony point 1), so stale heap
+    entries are safely discarded on pop.  Entries are ``(-duration, id)``,
+    matching ``max``'s first-of-the-maxima tie-break exactly.
+    """
+    if not tasks:
+        return (), []
+    sizes = spec.sizes
+    first = first_allocation(tasks, spec)
+    alloc = list(first)
+    deltas: list[tuple[int, int]] = []
+    heap = [(-tasks[i].times[alloc[i]], i) for i in range(len(tasks))]
+    heapq.heapify(heap)
+    while True:
+        # the longest task under the current allocation
+        while True:
+            d, j = heap[0]
+            if -d == tasks[j].times[alloc[j]]:
+                break
+            heapq.heappop(heap)  # stale: task j has since been widened
+        nxt = _next_size(tasks[j], alloc[j], sizes)
+        if nxt is None:
+            return first, deltas
+        alloc[j] = nxt
+        heapq.heappush(heap, (-tasks[j].times[nxt], j))
+        deltas.append((j, nxt))
+
+
 def allocation_family(
     tasks: Sequence[Task], spec: DeviceSpec
 ) -> list[Allocation]:
-    """Generate the whole family (paper §3.1 recurrence)."""
+    """Generate the whole family (paper §3.1 recurrence) as full tuples."""
     if not tasks:
         return [()]
-    sizes = spec.sizes
-    alloc = list(first_allocation(tasks, spec))
-    family = [tuple(alloc)]
-    while True:
-        # the longest task under the current allocation
-        j = max(range(len(tasks)), key=lambda i: tasks[i].times[alloc[i]])
-        nxt = _next_size(tasks[j], alloc[j], sizes)
-        if nxt is None:
-            return family
-        alloc[j] = nxt
+    first, deltas = allocation_family_deltas(tasks, spec)
+    alloc = list(first)
+    family = [first]
+    for j, size in deltas:
+        alloc[j] = size
         family.append(tuple(alloc))
+    return family

@@ -47,9 +47,10 @@ class InstanceNode:
     children: tuple["InstanceNode", ...] = ()
 
     # -- identity ----------------------------------------------------------
-    @property
+    @cached_property
     def key(self) -> tuple[int, int, int, int]:
-        """Stable identity of the node inside its spec."""
+        """Stable identity of the node inside its spec (cached — the
+        scheduler hot paths read it millions of times)."""
         return (self.tree, self.start, self.size, self.footprint)
 
     @property
@@ -61,6 +62,19 @@ class InstanceNode:
     def blocked(self) -> tuple[int, ...]:
         """Slice indexes reserved by the instance (compute + idle)."""
         return tuple(range(self.start, self.start + self.footprint))
+
+    @cached_property
+    def blocked_cells(self) -> frozenset[tuple[int, int]]:
+        """``{(tree, slice)}`` cells reserved by the instance, precomputed
+        once — the conflict/release checks in replay, the timing engine and
+        schedule validation are hot enough that rebuilding this set per call
+        measurably dominates."""
+        return frozenset((self.tree, s) for s in self.blocked)
+
+    @cached_property
+    def compute_cells(self) -> tuple[tuple[int, int], ...]:
+        """``(tree, slice)`` cells whose *compute* the instance uses."""
+        return tuple((self.tree, s) for s in self.slices)
 
     def __repr__(self) -> str:  # compact, used in schedule dumps
         tag = f"T{self.tree}[{self.start}:{self.start + self.footprint}]"
@@ -151,11 +165,17 @@ class DeviceSpec:
             by[node.size].append(node)
         return {s: tuple(v) for s, v in by.items()}
 
+    @cached_property
+    def node_index(self) -> Mapping[tuple[int, int, int, int], InstanceNode]:
+        """O(1) node lookup by key (replay and the timing engine resolve
+        alive-instance keys on every evaluation)."""
+        return {node.key: node for node in self.nodes}
+
     def node_by_key(self, key: tuple[int, int, int, int]) -> InstanceNode:
-        for node in self.nodes:
-            if node.key == key:
-                return node
-        raise KeyError(key)
+        try:
+            return self.node_index[key]
+        except KeyError:
+            raise KeyError(key) from None
 
     @cached_property
     def valid_partitions(self) -> tuple[tuple[InstanceNode, ...], ...]:
@@ -194,11 +214,11 @@ class DeviceSpec:
     def is_feasible_instance_set(self, nodes: Sequence[InstanceNode]) -> bool:
         """(P2): any set of pairwise-disjoint tree nodes is a sub-partition."""
         blocked: set[tuple[int, int]] = set()
-        node_keys = {n.key for n in self.nodes}
+        node_keys = self.node_index
         for node in nodes:
             if node.key not in node_keys:
                 return False
-            cells = {(node.tree, s) for s in node.blocked}
+            cells = node.blocked_cells
             if blocked & cells:
                 return False
             blocked |= cells

@@ -21,15 +21,17 @@ import dataclasses
 import time
 from typing import Sequence
 
-from repro.core.allocations import Allocation, allocation_family
+from repro.core.allocations import Allocation, allocation_family_deltas
 from repro.core.device_spec import DeviceSpec
 from repro.core.problem import EPS, Schedule, Task, area_lower_bound
 from repro.core.refine import RefineStats, refine_assignment
 from repro.core.repartition import (
     Assignment,
+    LPTGroups,
     list_schedule_allocation,
     replay,
 )
+from repro.core.timing import chains_makespan
 
 
 @dataclasses.dataclass
@@ -43,6 +45,7 @@ class FARResult:
     refine_stats: RefineStats | None
     makespan_before_refine: float
     elapsed_s: float
+    phase_s: dict | None = None  # wall time per phase (family/evaluate/refine)
 
     @property
     def makespan(self) -> float:
@@ -56,14 +59,20 @@ def schedule_batch(
     max_refine_iterations: int = 64,
     prune: bool = True,
     deep_refine: bool = False,
+    use_engine: bool = True,
 ) -> FARResult:
     """Run FAR on one batch of tasks.
 
     ``deep_refine`` (beyond-paper) follows phase 3 with an exact-evaluation
     greedy move/swap search (the §4.3 seam engine against an empty tail):
-    each candidate edit is scored by a full replay, so it monotonically
-    improves and tends to pick up the last few percent on small batches
-    where the paper's margin heuristics run out."""
+    each candidate edit is scored exactly, so it monotonically improves and
+    tends to pick up the last few percent on small batches where the
+    paper's margin heuristics run out.
+
+    ``use_engine`` selects the incremental timing path (warm-started family
+    evaluation + engine-scored refinement, default) or the cold
+    replay-per-candidate reference path.  Both produce identical schedules;
+    the flag exists for the equivalence tests and perf baselines."""
     t0 = time.perf_counter()
     if not tasks:
         empty = Assignment(spec, {}, {})
@@ -71,60 +80,91 @@ def schedule_batch(
             replay(empty), empty, (), 1, 0, 0, None, 0.0,
             time.perf_counter() - t0,
         )
+    sizes_needed = set(spec.sizes)
     for task in tasks:
-        missing = [s for s in spec.sizes if s not in task.times]
-        if missing:
+        if not sizes_needed <= task.times.keys():
+            missing = [s for s in spec.sizes if s not in task.times]
             raise ValueError(
                 f"task {task.id} lacks times for sizes {missing} on {spec.name}"
             )
 
-    family = allocation_family(tasks, spec)
+    first, deltas = allocation_family_deltas(tasks, spec)
+    family_size = len(deltas) + 1
+    t1 = time.perf_counter()
 
-    best: tuple[float, int, Assignment, Schedule, Allocation] | None = None
+    # Phase 2: consecutive family allocations differ in exactly one task's
+    # size, so the per-size LPT groups are warm-started (bisect remove +
+    # insert) instead of re-grouped and re-sorted per allocation, and each
+    # candidate's makespan is read from the timing engine without building
+    # a full Schedule.  Only the winner is replayed into a Schedule.
+    groups = LPTGroups(tasks, first, spec) if use_engine else None
+    alloc = list(first)
+    best: tuple[float, int, Assignment, Allocation] | None = None
     evaluated = 0
-    for idx, alloc in enumerate(family):
+    idx = 0
+    while True:
         if prune and best is not None:
             area = sum(
                 s * t.times[s] for t, s in zip(tasks, alloc)
             )
             if area / spec.n_slices >= best[0] - EPS:
                 break  # all later allocations have >= area -> dominated
-        assignment = list_schedule_allocation(tasks, alloc, spec)
-        schedule = replay(assignment)
+        if groups is not None:
+            assignment, node_durs = groups.schedule_with_durs()
+            makespan = chains_makespan(spec, assignment.node_tasks, node_durs)
+        else:
+            assignment = list_schedule_allocation(tasks, tuple(alloc), spec)
+            makespan = replay(assignment).makespan
         evaluated += 1
-        if best is None or schedule.makespan < best[0] - EPS:
-            best = (schedule.makespan, idx, assignment, schedule, alloc)
+        if best is None or makespan < best[0] - EPS:
+            best = (makespan, idx, assignment, tuple(alloc))
+        if idx == len(deltas):
+            break
+        j, new_size = deltas[idx]
+        if groups is not None:
+            groups.move(tasks[j], alloc[j], new_size)
+        alloc[j] = new_size
+        idx += 1
 
     assert best is not None
-    makespan_p2, win_idx, assignment, schedule, alloc = best
+    makespan_p2, win_idx, assignment, winner_alloc = best
+    t2 = time.perf_counter()
 
     stats: RefineStats | None = None
+    schedule: Schedule
     if refine:
+        # the winner's un-refined Schedule is never consumed when phase 3
+        # runs (it re-derives the final one), so skip that replay entirely
         assignment, schedule, stats = refine_assignment(
-            assignment, max_iterations=max_refine_iterations
+            assignment, max_iterations=max_refine_iterations,
+            use_engine=use_engine,
         )
+    else:
+        schedule = replay(assignment)
     if deep_refine:
         from repro.core.multibatch import Tail, seam_refine
 
         assignment2, schedule2, mv, sw = seam_refine(
-            assignment, Tail.empty(spec), "forward"
+            assignment, Tail.empty(spec), "forward", use_engine=use_engine
         )
         if schedule2.makespan < schedule.makespan - EPS:
             assignment, schedule = assignment2, schedule2
             if stats is not None:
                 stats.moves += mv
                 stats.swaps += sw
+    t3 = time.perf_counter()
 
     return FARResult(
         schedule=schedule,
         assignment=assignment,
-        allocation=alloc,
-        family_size=len(family),
+        allocation=winner_alloc,
+        family_size=family_size,
         evaluated=evaluated,
         winner_index=win_idx,
         refine_stats=stats,
         makespan_before_refine=makespan_p2,
         elapsed_s=time.perf_counter() - t0,
+        phase_s={"family": t1 - t0, "evaluate": t2 - t1, "refine": t3 - t2},
     )
 
 

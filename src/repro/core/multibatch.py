@@ -25,8 +25,9 @@ from typing import Sequence
 from repro.core.device_spec import DeviceSpec
 from repro.core.far import FARResult, schedule_batch
 from repro.core.problem import Schedule, Task
-from repro.core.refine import refine_assignment
+from repro.core.refine import ChainViews, _best_move, _best_swap
 from repro.core.repartition import Assignment, NodeKey, alive_at_end, replay
+from repro.core.timing import make_engine
 
 
 @dataclasses.dataclass
@@ -87,6 +88,7 @@ def concatenate(
     tail: Tail,
     mode: str = "move_swap",
     reverse: bool = True,
+    use_engine: bool = True,
 ) -> ConcatResult:
     """Splice one batch's assignment after ``tail``.
 
@@ -96,6 +98,8 @@ def concatenate(
       mode: "trivial" | "reverse" | "move_swap".
       reverse: whether this batch is the reversed one (alternates between
         consecutive batches; ignored for mode="trivial").
+      use_engine: score seam edits with the incremental timing engine
+        (default) or with full replays — identical results.
     """
     if mode == "trivial":
         barrier = max(
@@ -115,8 +119,10 @@ def concatenate(
         # the best (never worse than trivial, by construction)
         candidates = [
             concatenate(assignment, tail, mode="trivial"),
-            concatenate(assignment, tail, mode="move_swap", reverse=False),
-            concatenate(assignment, tail, mode="move_swap", reverse=True),
+            concatenate(assignment, tail, mode="move_swap", reverse=False,
+                        use_engine=use_engine),
+            concatenate(assignment, tail, mode="move_swap", reverse=True,
+                        use_engine=use_engine),
         ]
         return min(candidates, key=lambda c: (
             c.schedule.makespan,
@@ -127,7 +133,7 @@ def concatenate(
     moves = swaps = 0
     if mode == "move_swap":
         assignment, sched, moves, swaps = seam_refine(
-            assignment, tail, direction
+            assignment, tail, direction, use_engine=use_engine
         )
     elif mode == "reverse":
         sched = replay(
@@ -139,57 +145,47 @@ def concatenate(
     return ConcatResult(sched, _tail_after(sched, tail), reverse, moves, swaps)
 
 
-def _sorted_insert(
-    lst: list[int], tid: int, assignment: Assignment, size: int
-) -> None:
-    import bisect
-
-    times = [-assignment.tasks[t].times[size] for t in lst]
-    bisect.insort  # (doc anchor)
-    pos = bisect.bisect_left(times, -assignment.tasks[tid].times[size])
-    lst.insert(pos, tid)
-
-
 def seam_refine(
     assignment: Assignment,
     tail: Tail,
     direction: str,
     max_edits: int = 32,
+    use_engine: bool = True,
 ) -> tuple[Assignment, Schedule, int, int]:
     """Paper §4.3: move/swap tasks of the incoming batch so they fill the
     idle gaps its slices have against the previous batch's release times.
 
     Candidates follow the phase-3 heuristics — the transferred duration
     should be closest to half the target instance's seam gap — but every
-    edit is evaluated exactly with :func:`replay` (makespan, then total
-    task-begin mass as compaction tie-break) and only kept when it improves.
+    edit is evaluated exactly (makespan, then total task-begin mass as
+    compaction tie-break) and only kept when it improves.  Candidate edits
+    are scored speculatively through the incremental timing engine
+    (apply → read → undo); ``use_engine=False`` scores each with a full
+    :func:`replay` instead, with identical results.
     """
     kwargs = dict(release=tail.release, alive=tail.alive, direction=direction)
+    eng = make_engine(assignment, use_engine=use_engine, **kwargs)
+    work = eng.assignment  # live view of the engine's chains
+    views = ChainViews(eng)
 
-    def measure(a: Assignment) -> tuple[tuple[float, float], Schedule]:
-        s = replay(a, **kwargs)
-        return (s.makespan, sum(it.begin for it in s.items)), s
+    def score_now() -> tuple[float, float]:
+        return (eng.makespan(), eng.begin_mass())
 
-    work = assignment.copy()
-    best_score, best_sched = measure(work)
+    best_score = score_now()
     moves = swaps = 0
     spec = assignment.spec
 
     for _ in range(max_edits):
-        sched = best_sched
         # per-instance chain ends: the seam margin between two same-size
         # instances is their imbalance end(I) - end(Iᵃ) (the idle the later
         # chain forces against the earlier one, paper §4.3)
-        node_end: dict[NodeKey, float] = {}
-        for it in sched.items:
-            k = it.node.key
-            node_end[k] = max(node_end.get(k, 0.0), it.end)
+        node_end: dict[NodeKey, float] = dict(eng.node_end_times())
         # same-size instances never used by this batch are still valid
         # move targets: their chains end at their slice release times
         def slice_release(node) -> float:
             return max(
-                float(tail.release.get((node.tree, s), 0.0))
-                for s in node.blocked
+                float(tail.release.get(cell, 0.0))
+                for cell in node.blocked_cells
             )
         used_sizes = {k[2] for k in node_end}
         for node in spec.nodes:
@@ -206,53 +202,33 @@ def seam_refine(
                 margin = node_end[ki] - node_end[ka]
                 if margin <= 0:
                     continue
-                tid = _best_move_candidate(work, ki, margin)
+                tid = _best_move(views, ki, margin)
                 if tid is not None:
                     candidate_edits.append(("move", ki, ka, tid))
-                pair = _best_swap_candidate(work, ki, ka, margin)
+                pair = _best_swap(views, ki, ka, margin)
                 if pair is not None:
                     candidate_edits.append(("swap", ki, ka, pair))
         best_edit = None
         for kind, ki, ka, payload in candidate_edits:
-            trial = work.copy()
             if kind == "move":
-                trial.node_tasks[ki].remove(payload)
-                _sorted_insert(
-                    trial.node_tasks.setdefault(ka, []), payload, trial, ka[2]
-                )
+                eng.apply_move(payload, dst=ka, src=ki)
             else:
                 tk, tj = payload
-                trial.node_tasks[ki].remove(tk)
-                trial.node_tasks[ka].remove(tj)
-                _sorted_insert(trial.node_tasks[ka], tk, trial, ka[2])
-                _sorted_insert(trial.node_tasks[ki], tj, trial, ki[2])
-            score, s = measure(trial)
+                eng.apply_swap(tk, tj)
+            score = score_now()
+            eng.undo()
             if score < best_score:
-                best_score, best_sched, best_edit = score, s, (kind, trial)
+                best_score, best_edit = score, (kind, ki, ka, payload)
         if best_edit is None:
             break
-        kind, work = best_edit
+        kind, ki, ka, payload = best_edit
         if kind == "move":
+            eng.apply_move(payload, dst=ka, src=ki)
             moves += 1
         else:
+            eng.apply_swap(*payload)
             swaps += 1
-    return work, best_sched, moves, swaps
-
-
-def _best_move_candidate(
-    assignment: Assignment, key: NodeKey, margin: float
-) -> int | None:
-    from repro.core.refine import _best_move
-
-    return _best_move(assignment, key, margin)
-
-
-def _best_swap_candidate(
-    assignment: Assignment, key_i: NodeKey, key_a: NodeKey, margin: float
-) -> tuple[int, int] | None:
-    from repro.core.refine import _best_swap
-
-    return _best_swap(assignment, key_i, key_a, margin)
+    return eng.export_assignment(), eng.schedule(), moves, swaps
 
 
 class MultiBatchScheduler:
@@ -267,20 +243,25 @@ class MultiBatchScheduler:
         spec: DeviceSpec,
         mode: str = "move_swap",
         refine: bool = True,
+        use_engine: bool = True,
     ) -> None:
         self.spec = spec
         self.mode = mode
         self.refine = refine
+        self.use_engine = use_engine
         self.tail = Tail.empty(spec)
         self.segments: list[Schedule] = []
         self.results: list[FARResult] = []
         self._flip = False
 
     def add_batch(self, tasks: Sequence[Task]) -> ConcatResult:
-        far = schedule_batch(tasks, self.spec, refine=self.refine)
+        far = schedule_batch(
+            tasks, self.spec, refine=self.refine, use_engine=self.use_engine
+        )
         self.results.append(far)
         out = concatenate(
-            far.assignment, self.tail, mode=self.mode, reverse=self._flip
+            far.assignment, self.tail, mode=self.mode, reverse=self._flip,
+            use_engine=self.use_engine,
         )
         if self.mode != "trivial":
             self._flip = not self._flip

@@ -6,9 +6,10 @@ repartitioning tree with per-node task lists) and, for each arriving task,
 trial-assigns it to every instance node at every moldable size and keeps
 the placement minimising ``completion + s·t(s)/#slices`` — its own finish
 time plus the machine-time it consumes spread over the slices (exact
-evaluation through :func:`~repro.core.repartition.replay`, so
-reconfiguration sequencing and tree feasibility are inherited rather than
-re-derived).  The area term is the online analogue of phase 1's min-work
+evaluation through the replay-equivalent
+:class:`~repro.core.timing.TimingEngine` — speculative append/undo per
+candidate — so reconfiguration sequencing and tree feasibility are
+inherited rather than re-derived).  The area term is the online analogue of phase 1's min-work
 molding: pure min-completion grabs the widest instance for every early
 task and starves the queue (measured 2.9-3.6x of offline FAR on
 PoorScaling; with the area term ~1.5-2x).
@@ -28,6 +29,7 @@ import dataclasses
 from repro.core.device_spec import DeviceSpec
 from repro.core.problem import Schedule, Task
 from repro.core.repartition import Assignment, replay
+from repro.core.timing import TimingEngine
 
 
 @dataclasses.dataclass
@@ -54,46 +56,39 @@ class OnlineScheduler:
         earlier-committed work as fixed (tasks are appended, never moved —
         no preemption, per the MIG model).
         """
-        best: tuple[float, int, tuple, Schedule] | None = None
+        best: tuple[float, int, tuple] | None = None
         self.assignment.tasks[task.id] = task
+        # one incremental engine per arrival: each candidate placement is a
+        # speculative append + timing read + undo instead of a full replay
+        eng = TimingEngine(self.assignment)
         for node in self.spec.nodes:
             if node.size not in task.times:
                 continue
-            lst = self.assignment.node_tasks.setdefault(node.key, [])
-            lst.append(task.id)
-            sched = replay(self.assignment)
-            mine = next(
-                it for it in sched.items if it.task.id == task.id
-            )
+            eng.apply_append(task.id, node.key)
+            begin, end = eng.task_begin_end(task.id)
+            eng.undo()
             area = node.size * task.times[node.size] / self.spec.n_slices
-            key = (mine.end + area, node.size, node.key)
+            key = (end + area, node.size, node.key)
             if (best is None or key < (best[0], best[1], best[2])) \
-               and mine.begin >= arrival - 1e-9:
-                best = (mine.end + area, node.size, node.key, sched)
-            lst.pop()
+               and begin >= arrival - 1e-9:
+                best = (end + area, node.size, node.key)
         if best is None:
             # arrival constraint unsatisfiable anywhere -> place for best
             # completion anyway (work-conserving)
             for node in self.spec.nodes:
                 if node.size not in task.times:
                     continue
-                lst = self.assignment.node_tasks.setdefault(node.key, [])
-                lst.append(task.id)
-                sched = replay(self.assignment)
-                mine = next(
-                    it for it in sched.items if it.task.id == task.id
-                )
-                if best is None or mine.end < best[0]:
-                    best = (mine.end, node.size, node.key, sched)
-                lst.pop()
+                eng.apply_append(task.id, node.key)
+                _, end = eng.task_begin_end(task.id)
+                eng.undo()
+                if best is None or end < best[0]:
+                    best = (end, node.size, node.key)
         assert best is not None, "no feasible size for task"
-        end, size, node_key, _ = best
+        _, size, node_key = best
         self.assignment.node_tasks.setdefault(node_key, []).append(task.id)
-        sched = replay(self.assignment)
-        mine = next(it for it in sched.items if it.task.id == task.id)
-        placement = OnlinePlacement(
-            task.id, node_key, size, mine.begin, mine.end
-        )
+        eng.apply_append(task.id, node_key)
+        begin, end = eng.task_begin_end(task.id)
+        placement = OnlinePlacement(task.id, node_key, size, begin, end)
         self.placements.append(placement)
         return placement
 

@@ -24,6 +24,19 @@ from repro.core.device_spec import DeviceSpec, InstanceNode
 EPS = 1e-9  # float tolerance for feasibility checks
 
 
+def min_work_size(times: Mapping[int, float], sizes: Sequence[int]) -> int:
+    """argmin_s s*times[s], ties toward fewer slices — THE molding rule
+    (paper phase 1).  Plain function so the phase-1 hot loop can call it
+    without method dispatch while sharing one implementation."""
+    best_s = sizes[0]
+    best_w = best_s * times[best_s]
+    for s in sizes[1:]:
+        w = s * times[s]
+        if w < best_w or (w == best_w and s < best_s):
+            best_w, best_s = w, s
+    return best_s
+
+
 @dataclasses.dataclass(frozen=True)
 class Task:
     """An independent task with a per-instance-size time profile."""
@@ -38,7 +51,7 @@ class Task:
     def min_work_size(self, sizes: Sequence[int]) -> int:
         """argmin_s s*t(s) — breaking ties toward fewer slices (paper picks
         the *minimum* number of slices that minimises the work)."""
-        return min(sizes, key=lambda s: (s * self.times[s], s))
+        return min_work_size(self.times, sizes)
 
     def check_time_monotone(self) -> bool:
         """Paper monotony point 1: t(s) non-increasing in s."""
@@ -149,7 +162,7 @@ def validate_schedule(
 ) -> None:
     """Raise :class:`InfeasibleScheduleError` on any constraint violation."""
     spec = schedule.spec
-    node_keys = {n.key for n in spec.nodes}
+    node_keys = spec.node_index
 
     # every instance is a tree node and every task molded to its size
     for it in schedule.items:
@@ -166,8 +179,8 @@ def validate_schedule(
     # constraint 1 (+2 via P2): footprint-overlapping instances never co-run
     per_cell: dict[tuple[int, int], list[ScheduledTask]] = {}
     for it in schedule.items:
-        for s in it.node.blocked:
-            per_cell.setdefault((it.node.tree, s), []).append(it)
+        for cell in it.node.blocked_cells:
+            per_cell.setdefault(cell, []).append(it)
     for cell, lst in per_cell.items():
         lst.sort(key=lambda it: it.begin)
         for a, b in zip(lst, lst[1:]):
@@ -219,8 +232,9 @@ def validate_schedule(
         bucket.setdefault(rc.node.key, []).append(rc)  # type: ignore[arg-type]
 
     windows: list[tuple[InstanceNode, float, float]] = []
+    node_index = spec.node_index
     for key, lst in by_node.items():
-        node = spec.node_by_key(key)
+        node = node_index[key]
         cs = creates.get(key, [])
         if not cs:
             raise InfeasibleScheduleError(f"instance {key} never created")
@@ -244,12 +258,11 @@ def validate_schedule(
                 f"creation of its instance completes"
             )
     for i, (na, ba, ea) in enumerate(windows):
-        ca = {(na.tree, s) for s in na.blocked}
+        ca = na.blocked_cells
         for nb, bb, eb in windows[i + 1:]:
             if na.key == nb.key:
                 continue
-            cb = {(nb.tree, s) for s in nb.blocked}
-            if not (ca & cb):
+            if not (ca & nb.blocked_cells):
                 continue
             if ba < eb - EPS and bb < ea - EPS:
                 raise InfeasibleScheduleError(

@@ -15,16 +15,23 @@ Bookkeeping between iterations uses reconfiguration-free times, exactly like
 the paper (Algorithm 2 line 26 defers the full recomputation); the final
 schedule is re-derived with :func:`~repro.core.repartition.replay`, and the
 whole refinement is guarded to never return something worse than its input.
+
+All intermediate timings come from the incremental
+:class:`~repro.core.timing.TimingEngine` (``use_engine=False`` flips to the
+replay-per-query reference evaluator with identical results — the engine's
+replay-equivalence contract makes the two paths bit-identical).
 """
 
 from __future__ import annotations
 
 import bisect
+import collections
 import dataclasses
 
 from repro.core.device_spec import DeviceSpec, InstanceNode
 from repro.core.problem import EPS, Schedule
 from repro.core.repartition import Assignment, NodeKey, replay
+from repro.core.timing import make_engine
 
 
 @dataclasses.dataclass
@@ -48,36 +55,58 @@ def _parent_map(spec: DeviceSpec) -> dict[NodeKey, InstanceNode | None]:
     return parents
 
 
-def _slice_ends_no_reconfig(
-    assignment: Assignment, replay_kwargs: dict
-) -> dict[tuple[int, int], float]:
-    kw = dict(replay_kwargs)
-    kw["include_reconfig"] = False
-    return replay(assignment, **kw).slice_end_times()
-
-
 def _node_end(node: InstanceNode, ends: dict[tuple[int, int], float]) -> float:
     return max((ends[(node.tree, s)] for s in node.slices), default=0.0)
 
 
-def _sorted_insert(lst: list[int], tid: int, assignment: Assignment, size: int) -> None:
-    """Insert task id keeping the node list LPT-ordered (desc by duration)."""
-    times = [-assignment.tasks[t].times[size] for t in lst]
-    pos = bisect.bisect_left(times, -assignment.tasks[tid].times[size])
-    lst.insert(pos, tid)
+class ChainViews:
+    """Sorted candidate views per node, cached on the engine's per-chain
+    edit version — phase 3 / §4.3 re-sort the same unchanged chains many
+    times per iteration otherwise."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._move: dict[NodeKey, tuple] = {}
+        self._swap: dict[NodeKey, tuple] = {}
+
+    def move_view(self, key: NodeKey) -> tuple[list[int], list[float]]:
+        """(task ids asc by duration — stable in chain order, durations)."""
+        ver = self.engine.chain_version(key)
+        hit = self._move.get(key)
+        if hit is not None and hit[0] == ver:
+            return hit[1], hit[2]
+        tasks = self.engine.tasks
+        size = key[2]
+        lst = self.engine.chains.get(key) or ()
+        asc = sorted(lst, key=lambda t: tasks[t].times[size])
+        durs = [tasks[t].times[size] for t in asc]
+        self._move[key] = (ver, asc, durs)
+        return asc, durs
+
+    def swap_view(self, key: NodeKey) -> list[tuple[float, int]]:
+        """(duration, task id) pairs sorted ascending (ties by id)."""
+        ver = self.engine.chain_version(key)
+        hit = self._swap.get(key)
+        if hit is not None and hit[0] == ver:
+            return hit[1]
+        tasks = self.engine.tasks
+        size = key[2]
+        lst = self.engine.chains.get(key) or ()
+        pairs = sorted((tasks[t].times[size], t) for t in lst)
+        self._swap[key] = (ver, pairs)
+        return pairs
 
 
 def _best_move(
-    assignment: Assignment, key: NodeKey, margin: float
+    views: ChainViews, key: NodeKey, margin: float
 ) -> int | None:
     """Task of node ``key`` with duration < margin, closest to margin/2."""
-    size = key[2]
-    lst = assignment.node_tasks.get(key, [])
-    if not lst or margin <= EPS:
+    if margin <= EPS:
         return None
-    # list is LPT (desc); build ascending durations for binary search
-    asc = sorted(lst, key=lambda t: assignment.tasks[t].times[size])
-    durs = [assignment.tasks[t].times[size] for t in asc]
+    # chain is LPT (desc); the view is ascending for binary search
+    asc, durs = views.move_view(key)
+    if not asc:
+        return None
     hi = bisect.bisect_left(durs, margin - EPS)  # durations strictly < margin
     if hi == 0:
         return None
@@ -89,21 +118,17 @@ def _best_move(
 
 
 def _best_swap(
-    assignment: Assignment, key_i: NodeKey, key_a: NodeKey, margin: float
+    views: ChainViews, key_i: NodeKey, key_a: NodeKey, margin: float
 ) -> tuple[int, int] | None:
     """Pair (T_k of I, T_j of Iᵃ) with 0 < dur_k - dur_j < margin, the
-    difference closest to margin/2 (two-pointer over the sorted lists)."""
-    size = key_i[2]
-    li = assignment.node_tasks.get(key_i, [])
-    la = assignment.node_tasks.get(key_a, [])
-    if not li or not la or margin <= EPS:
+    difference closest to margin/2 (two-pointer over the sorted lists).
+    ``key_i`` and ``key_a`` always have the same instance size."""
+    if margin <= EPS:
         return None
-    di = sorted(
-        ((assignment.tasks[t].times[size], t) for t in li)
-    )
-    da = sorted(
-        ((assignment.tasks[t].times[size], t) for t in la)
-    )
+    di = views.swap_view(key_i)
+    da = views.swap_view(key_a)
+    if not di or not da:
+        return None
     target = margin / 2.0
     best: tuple[float, int, int] | None = None  # (|diff-target|, tk, tj)
     j = 0
@@ -128,13 +153,17 @@ def refine_assignment(
     max_iterations: int = 64,
     min_rel_improvement: float = 0.0,
     replay_kwargs: dict | None = None,
+    use_engine: bool = True,
 ) -> tuple[Assignment, Schedule, RefineStats]:
     """Algorithm 2.  Returns (assignment, schedule, stats); never worse than
     the input (guarded by a final replay comparison).
 
     ``replay_kwargs`` (release / alive / direction) retarget the engine at
     the multi-batch seam (paper §4.3): the slice-release times of the
-    previous batch then shape the critical slices and margins."""
+    previous batch then shape the critical slices and margins.
+
+    ``use_engine`` selects the incremental timing engine (default) or the
+    replay-per-query reference evaluator — same results either way."""
     spec = assignment.spec
     rkw = dict(replay_kwargs or {})
     parents = _parent_map(spec)
@@ -143,28 +172,36 @@ def refine_assignment(
     for n in spec.nodes:
         nodes_by_size.setdefault(n.size, []).append(n)
 
-    base_sched = replay(assignment, **rkw)
-    best_assign = assignment.copy()
-    best_makespan = base_sched.makespan
     stats = RefineStats()
 
-    work = assignment.copy()
+    eng = make_engine(
+        assignment,
+        use_engine=use_engine,
+        release=rkw.get("release"),
+        alive=rkw.get("alive"),
+        direction=rkw.get("direction", "forward"),
+        include_reconfig=rkw.get("include_reconfig", True),
+    )
+    base_makespan = best_makespan = eng.makespan()
+    best_log_length = 0  # rollback token for the best-so-far state
+    work = eng.assignment  # live view: engine edits are visible here
+    views = ChainViews(eng)
     stop = False
     while not stop and stats.iterations < max_iterations:
         stats.iterations += 1
-        ends = _slice_ends_no_reconfig(work, rkw)
+        ends = eng.slice_end_times(include_reconfig=False)
         omega = max(ends.values(), default=0.0)
         if omega <= EPS:
             break
         # line 5: open the leaves whose slices reach the makespan
-        queue: list[InstanceNode] = [
+        queue = collections.deque(
             leaf for leaf in leaves
             if ends[(leaf.tree, leaf.start)] >= omega - EPS
-        ]
+        )
         opened = {leaf.key for leaf in queue}
         edited = False
         while queue:  # lines 6-24
-            inst = queue.pop(0)
+            inst = queue.popleft()
             if parents[inst.key] is None and not _can_act(
                 work, inst, nodes_by_size, ends, omega
             ):
@@ -180,30 +217,21 @@ def refine_assignment(
                 alt = min(alts, key=lambda a: (_node_end(a, ends), a.key))
                 margin = omega - _node_end(alt, ends)
                 # lines 12-16: move
-                tid = _best_move(work, inst.key, margin)
+                tid = _best_move(views, inst.key, margin)
                 if tid is not None:
-                    work.node_tasks[inst.key].remove(tid)
-                    lst = work.node_tasks.setdefault(alt.key, [])
-                    _sorted_insert(lst, tid, work, alt.size)
+                    eng.apply_move(tid, dst=alt.key, src=inst.key)
                     stats.moves += 1
                     acted = edited = True
                 else:
                     # lines 18-22: swap
-                    pair = _best_swap(work, inst.key, alt.key, margin)
+                    pair = _best_swap(views, inst.key, alt.key, margin)
                     if pair is not None:
                         tk, tj = pair
-                        work.node_tasks[inst.key].remove(tk)
-                        work.node_tasks[alt.key].remove(tj)
-                        _sorted_insert(
-                            work.node_tasks[alt.key], tk, work, alt.size
-                        )
-                        _sorted_insert(
-                            work.node_tasks[inst.key], tj, work, inst.size
-                        )
+                        eng.apply_swap(tk, tj)
                         stats.swaps += 1
                         acted = edited = True
                 if acted:
-                    ends = _slice_ends_no_reconfig(work, rkw)  # line 16/22
+                    ends = eng.slice_end_times(include_reconfig=False)
             if not acted:  # lines 23-24: open the parent
                 parent = parents[inst.key]
                 if parent is None:
@@ -214,19 +242,23 @@ def refine_assignment(
                     queue.append(parent)
         # line 26 equivalent: full timing recomputation + acceptance guard
         if edited:
-            sched = replay(work, **rkw)
-            if sched.makespan < best_makespan - EPS:
-                rel = best_makespan / sched.makespan - 1.0
-                best_makespan = sched.makespan
-                best_assign = work.copy()
+            makespan = eng.makespan()
+            if makespan < best_makespan - EPS:
+                rel = best_makespan / makespan - 1.0
+                best_makespan = makespan
+                best_log_length = eng.log_length
                 if rel < min_rel_improvement:
                     break
         else:
             break
 
-    final = replay(best_assign, **rkw)
+    # exact undo back to the accepted best state, then materialise once
+    eng.rollback(best_log_length)
+    best_assign = eng.export_assignment()
+    final = eng.schedule()
+    final_makespan = final.makespan
     stats.improvement = (
-        base_sched.makespan / final.makespan - 1.0 if final.makespan > 0 else 0.0
+        base_makespan / final_makespan - 1.0 if final_makespan > 0 else 0.0
     )
     return best_assign, final, stats
 

@@ -22,6 +22,7 @@ multi-batch concatenation edit the assignment and re-derive times with it.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 from typing import Sequence
@@ -67,45 +68,181 @@ def list_schedule_allocation(
         groups[size].append(task)
     for size, grp in groups.items():
         grp.sort(key=lambda t: (-t.times[size], t.id))
-    remaining = len(tasks)
+    return list_schedule_groups(tasks, groups, spec)
+
+
+def _list_schedule_arrays(
+    ids_by_size: dict[int, list[int]],
+    durs_by_size: dict[int, list[float]],
+    n_tasks: int,
+    spec: DeviceSpec,
+) -> tuple[dict[NodeKey, list[int]], dict[NodeKey, list[float]]]:
+    """Algorithm 1's heap phase over parallel (id, duration) arrays.
+
+    The arrays must be LPT-ordered per size (sorted by ``(-dur, id)``);
+    they are read through cursors and NOT consumed.  Returns the per-node
+    task-id chains plus the matching duration chains (the latter feed the
+    timing evaluators without re-resolving task profiles)."""
+    remaining = n_tasks
+    t_create = spec.t_create
+    t_destroy = spec.t_destroy
+    push = heapq.heappush
+    pop = heapq.heappop
+
+    cursor: dict[int, int] = {}
+    for s in spec.sizes:  # node sizes are always a subset of spec.sizes
+        ids_by_size.setdefault(s, [])
+        durs_by_size.setdefault(s, [])
+        cursor[s] = 0
 
     node_tasks: dict[NodeKey, list[int]] = {}
+    node_durs: dict[NodeKey, list[float]] = {}
     reconfig_end = 0.0  # line 3
     heap: list[tuple[float, int, InstanceNode]] = []
     seq = 0
     for root in spec.roots:  # line 4
-        heapq.heappush(heap, (0.0, seq, root))
+        push(heap, (0.0, seq, root))
         seq += 1
 
     while heap:  # line 5
-        end, _, node = heapq.heappop(heap)  # line 6
-        grp = groups[node.size] if node.size in groups else []
-        if grp:  # lines 7-16: task placement
+        end, _, node = pop(heap)  # line 6
+        size = node.size
+        gids = ids_by_size[size]
+        cur = cursor[size]
+        n_grp = len(gids)
+        if cur < n_grp:  # lines 7-16: task placement
             key = node.key
-            if key not in node_tasks:  # lines 8-11: charge creation
-                reconfig_end = max(reconfig_end, end)
-                reconfig_end += spec.t_create[node.size]
+            lst = node_tasks.get(key)
+            if lst is None:  # lines 8-11: charge creation
+                if end > reconfig_end:
+                    reconfig_end = end
+                reconfig_end += t_create[size]
                 end = reconfig_end
-                node_tasks[key] = []
-            task = grp.pop(0)  # line 12: longest unscheduled of this size
-            node_tasks[key].append(task.id)
-            end += task.times[node.size]  # lines 13-15
-            remaining -= 1
-            heapq.heappush(heap, (end, seq, node))  # line 16
+                lst = node_tasks[key] = []
+                node_durs[key] = []
+            dlst = node_durs[key]
+            gdurs = durs_by_size[size]
+            # place back-to-back while this node stays strictly earliest —
+            # skips the pop/push pair the heap round-trip would cost; with
+            # a strict ``<`` the visit order is identical to one-at-a-time
+            # (a pushed re-entry always carries the largest seq, so it only
+            # precedes entries with strictly larger end times)
+            while True:
+                lst.append(gids[cur])  # line 12: longest unscheduled
+                d = gdurs[cur]
+                dlst.append(d)
+                cur += 1
+                end += d  # lines 13-15
+                remaining -= 1
+                if cur >= n_grp or (heap and end >= heap[0][0]):
+                    break
+            cursor[size] = cur
+            push(heap, (end, seq, node))  # line 16
             seq += 1
         elif remaining > 0:  # lines 17-23: repartitioning
             if node_tasks.get(node.key):  # lines 18-20: charge destruction
-                reconfig_end = max(reconfig_end, end)
-                reconfig_end += spec.t_destroy[node.size]
+                if end > reconfig_end:
+                    reconfig_end = end
+                reconfig_end += t_destroy[size]
             for child in node.children:  # lines 21-24
-                heapq.heappush(heap, (end, seq, child))
+                push(heap, (end, seq, child))
                 seq += 1
         # else: all tasks scheduled -> the instance simply retires
 
     assert remaining == 0, "Algorithm 1 failed to place every task"
-    return Assignment(
-        spec, {t.id: t for t in tasks}, node_tasks
-    )
+    return node_tasks, node_durs
+
+
+def list_schedule_groups(
+    tasks: Sequence[Task],
+    groups: dict[int, list[Task]],
+    spec: DeviceSpec,
+    tasks_by_id: dict[int, Task] | None = None,
+) -> Assignment:
+    """Algorithm 1's heap phase over pre-built LPT groups.
+
+    ``groups`` must hold each size's tasks sorted by ``(-t.times[size],
+    t.id)``; they are read through per-size cursors and NOT consumed, so a
+    caller evaluating the whole Turek family can maintain the groups
+    incrementally across consecutive allocations (:class:`LPTGroups`)
+    instead of re-sorting from scratch.  ``tasks_by_id`` (optional) is
+    shared into the returned Assignment to skip rebuilding it per family
+    candidate."""
+    ids = {s: [t.id for t in grp] for s, grp in groups.items()}
+    durs = {s: [t.times[s] for t in grp] for s, grp in groups.items()}
+    node_tasks, _ = _list_schedule_arrays(ids, durs, len(tasks), spec)
+    if tasks_by_id is None:
+        tasks_by_id = {t.id: t for t in tasks}
+    return Assignment(spec, tasks_by_id, node_tasks)
+
+
+class LPTGroups:
+    """Per-size LPT-ordered task groups, warm-startable across the family.
+
+    Consecutive Turek-family allocations differ in exactly one task's size,
+    so phase 2 keeps one instance of this class and calls :meth:`move` per
+    family step — an O(group) bisect remove+insert instead of re-grouping
+    and re-sorting all n tasks.  The maintained order is the total order
+    ``(-t.times[size], t.id)``, hence bit-identical to a cold sort.
+    """
+
+    def __init__(self, tasks: Sequence[Task], allocation: Allocation,
+                 spec: DeviceSpec):
+        self.tasks = tasks
+        self.tasks_by_id = {t.id: t for t in tasks}
+        self.spec = spec
+        self.groups: dict[int, list[Task]] = {s: [] for s in spec.sizes}
+        for task, size in zip(tasks, allocation):
+            self.groups[size].append(task)
+        for size, grp in self.groups.items():
+            grp.sort(key=lambda t: (-t.times[size], t.id))
+        self._keys: dict[int, list[tuple[float, int]]] = {
+            s: [(-t.times[s], t.id) for t in grp]
+            for s, grp in self.groups.items()
+        }
+        # parallel id/duration arrays, consumed by _list_schedule_arrays
+        # without re-resolving Task objects per candidate
+        self._ids: dict[int, list[int]] = {
+            s: [t.id for t in grp] for s, grp in self.groups.items()
+        }
+        self._durs: dict[int, list[float]] = {
+            s: [t.times[s] for t in grp] for s, grp in self.groups.items()
+        }
+
+    def move(self, task: Task, old_size: int, new_size: int) -> None:
+        """Re-file ``task`` after the family widened it old_size→new_size."""
+        k_old = (-task.times[old_size], task.id)
+        keys = self._keys[old_size]
+        i = bisect.bisect_left(keys, k_old)
+        assert keys[i] == k_old and self.groups[old_size][i].id == task.id
+        keys.pop(i)
+        self.groups[old_size].pop(i)
+        self._ids[old_size].pop(i)
+        self._durs[old_size].pop(i)
+
+        k_new = (-task.times[new_size], task.id)
+        keys = self._keys[new_size]
+        j = bisect.bisect_left(keys, k_new)
+        keys.insert(j, k_new)
+        self.groups[new_size].insert(j, task)
+        self._ids[new_size].insert(j, task.id)
+        self._durs[new_size].insert(j, task.times[new_size])
+
+    def schedule(self) -> Assignment:
+        return self.schedule_with_durs()[0]
+
+    def schedule_with_durs(
+        self,
+    ) -> tuple[Assignment, dict[NodeKey, list[float]]]:
+        """Run Algorithm 1; also return the per-node duration chains (for
+        the lean makespan evaluator in :mod:`repro.core.timing`)."""
+        node_tasks, node_durs = _list_schedule_arrays(
+            self._ids, self._durs, len(self.tasks), self.spec
+        )
+        return (
+            Assignment(self.spec, self.tasks_by_id, node_tasks),
+            node_durs,
+        )
 
 
 def replay(
@@ -155,21 +292,23 @@ def replay(
     reconfig_end = float(release.get("reconfig", 0.0))
     destroyed_alive: set[NodeKey] = set()
 
+    alive_sorted = sorted(alive)
+
     def node_release(node: InstanceNode) -> float:
         return max(
-            (float(release.get((node.tree, s), 0.0)) for s in node.blocked),
+            (float(release.get(cell, 0.0)) for cell in node.blocked_cells),
             default=0.0,
         )
 
     def clear_alive_conflicts(node: InstanceNode) -> None:
         """Destroy carried-over instances overlapping ``node``'s footprint."""
         nonlocal reconfig_end
-        cells = {(node.tree, s) for s in node.blocked}
-        for akey in sorted(alive):
+        cells = node.blocked_cells
+        for akey in alive_sorted:
             if akey == node.key or akey in destroyed_alive:
                 continue
             anode = spec.node_by_key(akey)
-            if not (cells & {(anode.tree, s) for s in anode.blocked}):
+            if not (cells & anode.blocked_cells):
                 continue
             reconfig_end = max(reconfig_end, alive[akey])
             begin_d = reconfig_end
@@ -222,10 +361,18 @@ def replay(
         seq += 1
 
     if direction == "forward":
+        # memoized per replay: the naive recursion re-walks whole subtrees
+        # on every "done" event and measurably dominates small replays
+        _sub_act: dict[NodeKey, bool] = {}
+
         def subtree_active(node: InstanceNode) -> bool:
-            if node.key in active:
-                return True
-            return any(subtree_active(c) for c in node.children)
+            v = _sub_act.get(node.key)
+            if v is None:
+                v = node.key in active or any(
+                    subtree_active(c) for c in node.children
+                )
+                _sub_act[node.key] = v
+            return v
 
         for root in spec.roots:
             push(0.0, "visit", root)

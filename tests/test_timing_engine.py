@@ -1,0 +1,277 @@
+"""Replay-equivalence contract of the incremental timing engine.
+
+``TimingEngine`` promises: after ANY sequence of moves/swaps/appends and
+undos, every accessor returns exactly what a fresh ``replay()`` of the same
+assignment would — for both ``include_reconfig`` settings, both directions,
+and with/without seam carry-over state.  ``ReplayEngine`` is the reference
+implementation of the same API; these tests drive both through identical
+edit sequences and require *exact* (``==``, not EPS) agreement, plus
+end-to-end agreement of the engine-backed refinement paths with the
+replay-backed ones.
+"""
+
+import random
+
+import pytest
+
+from repro.core.device_spec import A30, A100, TPU_POD_256
+from repro.core.far import schedule_batch
+from repro.core.multibatch import MultiBatchScheduler, Tail, seam_refine
+from repro.core.problem import validate_schedule
+from repro.core.refine import refine_assignment
+from repro.core.repartition import (
+    LPTGroups,
+    list_schedule_allocation,
+    replay,
+)
+from repro.core.allocations import allocation_family
+from repro.core.synth import generate_tasks, workload
+from repro.core.timing import ReplayEngine, TimingEngine
+
+SPECS = (A30, A100, TPU_POD_256)
+
+
+def _assert_engines_agree(eng: TimingEngine, ref: ReplayEngine):
+    for flag in (True, False):
+        assert eng.makespan(flag) == ref.makespan(flag)
+        assert eng.slice_end_times(flag) == ref.slice_end_times(flag)
+        assert eng.node_end_times(flag) == ref.node_end_times(flag)
+        assert eng.begin_mass(flag) == ref.begin_mass(flag)
+    sched_e, sched_r = eng.schedule(), ref.schedule()
+    assert sched_e.items == sched_r.items
+    assert sched_e.reconfigs == sched_r.reconfigs
+
+
+def _random_edit(rng, eng, ref, spec):
+    """Apply one random valid edit to both engines; returns False if none."""
+    occupied = [k for k, v in eng.chains.items() if v]
+    if not occupied:
+        return False
+    kind = rng.choice(["move", "move", "swap"])
+    if kind == "move":
+        src = rng.choice(occupied)
+        tid = rng.choice(eng.chains[src])
+        dst = rng.choice([n.key for n in spec.nodes if n.key != src])
+        eng.apply_move(tid, dst=dst, src=src)
+        ref.apply_move(tid, dst=dst, src=src)
+    else:
+        if len(occupied) < 2:
+            return False
+        ka, kb = rng.sample(occupied, 2)
+        ta = rng.choice(eng.chains[ka])
+        tb = rng.choice(eng.chains[kb])
+        eng.apply_swap(ta, tb)
+        ref.apply_swap(ta, tb)
+    return True
+
+
+def _seam_tail(spec, seed):
+    mb = MultiBatchScheduler(spec, mode="trivial")
+    mb.add_batch(
+        generate_tasks(6, spec, workload("mixed", "wide", spec), seed=seed)
+    )
+    return mb.tail
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("direction", ["forward", "reverse"])
+@pytest.mark.parametrize("with_tail", [False, True])
+def test_engine_matches_replay_under_random_edits(spec, direction, with_tail):
+    rng = random.Random(1234 + spec.n_slices)
+    tasks = generate_tasks(
+        12, spec, workload("mixed", "wide", spec), seed=3, id_offset=100
+    )
+    fam = allocation_family(tasks, spec)
+    assignment = list_schedule_allocation(tasks, fam[len(fam) // 2], spec)
+    ctx = {}
+    if with_tail:
+        tail = _seam_tail(spec, seed=7)
+        ctx = dict(release=tail.release, alive=tail.alive)
+    eng = TimingEngine(assignment, direction=direction, **ctx)
+    ref = ReplayEngine(assignment, direction=direction, **ctx)
+    snapshot = {k: list(v) for k, v in eng.chains.items()}
+    _assert_engines_agree(eng, ref)
+    for _ in range(25):
+        if not _random_edit(rng, eng, ref, spec):
+            break
+        _assert_engines_agree(eng, ref)
+    # speculative use: undo everything, bit-identical initial state + timing
+    eng.undo_all()
+    ref.undo_all()
+    assert {k: v for k, v in eng.chains.items() if v} == \
+        {k: v for k, v in snapshot.items() if v}
+    _assert_engines_agree(eng, ref)
+
+
+def test_engine_undo_interleaved_with_evaluation():
+    spec = A100
+    tasks = generate_tasks(10, spec, workload("good", "wide", spec), seed=5)
+    assignment = schedule_batch(tasks, spec, refine=False).assignment
+    eng = TimingEngine(assignment)
+    rng = random.Random(99)
+    before = {
+        flag: (eng.makespan(flag), eng.slice_end_times(flag))
+        for flag in (True, False)
+    }
+    for _ in range(10):
+        ref = ReplayEngine(eng.export_assignment())
+        n_edits = rng.randint(1, 3)
+        done = 0
+        for _ in range(n_edits):
+            if _random_edit(rng, eng, ref, spec):
+                done += 1
+        _assert_engines_agree(eng, ref)
+        for _ in range(done):
+            eng.undo()
+        for flag in (True, False):
+            assert (eng.makespan(flag), eng.slice_end_times(flag)) \
+                == before[flag]
+
+
+def test_task_begin_end_matches_schedule():
+    spec = A100
+    tasks = generate_tasks(9, spec, workload("poor", "narrow", spec), seed=2)
+    assignment = schedule_batch(tasks, spec, refine=False).assignment
+    for direction in ("forward", "reverse"):
+        eng = TimingEngine(assignment, direction=direction)
+        sched = replay(assignment, direction=direction)
+        for it in sched.items:
+            assert eng.task_begin_end(it.task.id) == (it.begin, it.end)
+
+
+def test_lpt_groups_warm_start_matches_cold_sort():
+    spec = A100
+    tasks = generate_tasks(15, spec, workload("mixed", "wide", spec), seed=11)
+    fam = allocation_family(tasks, spec)
+    groups = LPTGroups(tasks, fam[0], spec)
+    for idx, alloc in enumerate(fam):
+        if idx:
+            prev = fam[idx - 1]
+            j = next(i for i in range(len(alloc)) if alloc[i] != prev[i])
+            groups.move(tasks[j], prev[j], alloc[j])
+        warm = groups.schedule()
+        cold = list_schedule_allocation(tasks, alloc, spec)
+        assert warm.node_tasks == cold.node_tasks
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_refine_engine_path_equals_replay_path(spec):
+    for scaling, times in (("mixed", "wide"), ("poor", "narrow"),
+                           ("good", "wide")):
+        for n in (10, 22):
+            tasks = generate_tasks(
+                n, spec, workload(scaling, times, spec), seed=n
+            )
+            base = schedule_batch(tasks, spec, refine=False).assignment
+            a_asgn, a_sched, a_stats = refine_assignment(base, use_engine=True)
+            b_asgn, b_sched, b_stats = refine_assignment(base, use_engine=False)
+            assert a_sched.makespan == b_sched.makespan
+            assert a_asgn.node_tasks == b_asgn.node_tasks
+            assert (a_stats.moves, a_stats.swaps, a_stats.iterations) == \
+                (b_stats.moves, b_stats.swaps, b_stats.iterations)
+
+
+def test_seam_refine_engine_path_equals_replay_path():
+    spec = A100
+    for seed in range(3):
+        tail = _seam_tail(spec, seed)
+        batch = generate_tasks(
+            10, spec, workload("mixed", "wide", spec),
+            seed=seed + 50, id_offset=500,
+        )
+        asgn = schedule_batch(batch, spec).assignment
+        for direction in ("forward", "reverse"):
+            a = seam_refine(asgn, tail, direction, use_engine=True)
+            b = seam_refine(asgn, tail, direction, use_engine=False)
+            assert a[1].makespan == b[1].makespan
+            assert a[0].node_tasks == b[0].node_tasks
+            assert a[2:] == b[2:]  # move/swap counts
+
+
+def test_schedule_batch_paths_identical_on_t4_t9_workloads():
+    """Acceptance: phase-3 + seam move/swap makespans identical between the
+    incremental-engine pipeline and the replay-per-query pipeline on the
+    benchmark workload family (t4-t9 use these generators)."""
+    spec = A100
+    for scaling, times in (("poor", "wide"), ("mixed", "wide"),
+                           ("good", "wide"), ("mixed", "narrow")):
+        cfg = workload(scaling, times, spec)
+        for n in (10, 30):
+            tasks = generate_tasks(n, spec, cfg, seed=n)
+            a = schedule_batch(tasks, spec, use_engine=True)
+            b = schedule_batch(tasks, spec, use_engine=False)
+            assert a.makespan == b.makespan
+            assert a.assignment.node_tasks == b.assignment.node_tasks
+            validate_schedule(a.schedule, tasks)
+        # multi-batch chain with seam move/swap (t9)
+        me = MultiBatchScheduler(spec, mode="move_swap", use_engine=True)
+        mr = MultiBatchScheduler(spec, mode="move_swap", use_engine=False)
+        for s in range(3):
+            b = generate_tasks(8, spec, cfg, seed=s, id_offset=10_000 * s)
+            me.add_batch(b)
+            mr.add_batch(b)
+        assert me.makespan == mr.makespan
+        assert me.tail.release == mr.tail.release
+
+
+def test_empty_and_single_task_engine():
+    spec = A100
+    from repro.core.repartition import Assignment
+
+    empty = Assignment(spec, {}, {})
+    eng = TimingEngine(empty)
+    assert eng.makespan() == 0.0
+    assert eng.schedule().items == []
+    t = generate_tasks(1, spec, workload("mixed", "wide", spec), seed=0)
+    asgn = schedule_batch(t, spec).assignment
+    _assert_engines_agree(TimingEngine(asgn), ReplayEngine(asgn))
+
+
+# --- property-based fuzz (runs only when hypothesis is installed) ----------
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.problem import Task
+
+    @st.composite
+    def assignment_and_edits(draw):
+        spec = {"A30": A30, "A100": A100, "TPU": TPU_POD_256}[
+            draw(st.sampled_from(["A30", "A100", "TPU"]))
+        ]
+        n = draw(st.integers(1, 8))
+        tasks = []
+        for i in range(n):
+            t1 = draw(st.floats(0.5, 100.0, allow_nan=False))
+            times, cur = {}, t1
+            for s in spec.sizes:
+                if s != min(spec.sizes):
+                    cur *= draw(st.floats(0.3, 1.0))
+                times[s] = cur
+            tasks.append(Task(id=i, times=times))
+        fam = allocation_family(tasks, spec)
+        alloc = fam[draw(st.integers(0, len(fam) - 1))]
+        seed = draw(st.integers(0, 2**16))
+        direction = draw(st.sampled_from(["forward", "reverse"]))
+        return spec, tasks, alloc, seed, direction
+
+    @settings(max_examples=30, deadline=None)
+    @given(assignment_and_edits())
+    def test_engine_equivalence_hypothesis(case):
+        spec, tasks, alloc, seed, direction = case
+        assignment = list_schedule_allocation(tasks, alloc, spec)
+        eng = TimingEngine(assignment, direction=direction)
+        ref = ReplayEngine(assignment, direction=direction)
+        rng = random.Random(seed)
+        _assert_engines_agree(eng, ref)
+        for _ in range(8):
+            if not _random_edit(rng, eng, ref, spec):
+                break
+            _assert_engines_agree(eng, ref)
+        eng.undo_all()
+        ref.undo_all()
+        _assert_engines_agree(eng, ref)
