@@ -1,15 +1,15 @@
 """Paper Table 5 (+ Fig. 12): σ_A = makespan(A) / makespan(FAR).
 
 Baselines: MISO-OPT [31], FixPart(1,...,1), FixPartBest, FixPart(7).
-Paper row order and values are printed alongside ours."""
+Every comparison is one loop over registered policy names
+(:func:`repro.core.policy.get_policy`); paper row order and values are
+printed alongside ours."""
 
 import numpy as np
 
-from repro.core.baselines import (
-    fix_part, fix_part_best, miso_opt, partition_of_ones, partition_whole,
-)
+from repro.core.baselines import partition_whole
 from repro.core.device_spec import A100
-from repro.core.far import schedule_batch
+from repro.core.policy import SchedulerConfig, get_policy
 from repro.core.rodinia import rodinia_tasks
 from repro.core.synth import ALL_WORKLOADS, generate_tasks, workload
 
@@ -24,6 +24,24 @@ PAPER = {
     ("good", "wide"): (2.14, 1.78, 1.01, 1.28),
 }
 
+CFG = SchedulerConfig()
+# column key -> (policy name, config): FixPart appears twice, once with the
+# all-ones default and once pinned to the whole-device partition
+BASELINES = {
+    "miso": ("miso", CFG),
+    "ones": ("fix-part", CFG),
+    "best": ("fix-part-best", CFG),
+    "whole": ("fix-part", CFG.replace(partition=partition_whole(A100))),
+}
+
+
+def _sigmas(tasks) -> dict[str, float]:
+    far = get_policy("far").plan(tasks, A100, CFG).makespan
+    return {
+        key: get_policy(name).plan(tasks, A100, cfg).makespan / far
+        for key, (name, cfg) in BASELINES.items()
+    }
+
 
 def run(reps: int = 100) -> Rows:
     rows = Rows(
@@ -31,34 +49,19 @@ def run(reps: int = 100) -> Rows:
         ["workload", "miso", "ones", "best", "whole",
          "paper(miso,ones,best,whole)"],
     )
-    tasks = rodinia_tasks(A100)
-    far = schedule_batch(tasks, A100).makespan
-    rows.add(
-        "rodinia-fixture",
-        miso_opt(tasks, A100).makespan / far,
-        fix_part(tasks, A100, partition_of_ones(A100)).makespan / far,
-        fix_part_best(tasks, A100)[0].makespan / far,
-        fix_part(tasks, A100, partition_whole(A100)).makespan / far,
-        "(2.10,2.18,1.16,1.26)",
-    )
+    sig = _sigmas(rodinia_tasks(A100))
+    rows.add("rodinia-fixture", *(sig[k] for k in BASELINES),
+             "(2.10,2.18,1.16,1.26)")
     for scaling, times in ALL_WORKLOADS:
         cfg = workload(scaling, times, A100)
-        sig = {k: [] for k in ("miso", "ones", "best", "whole")}
+        acc = {k: [] for k in BASELINES}
         for seed in range(reps):
             ts = generate_tasks(15, A100, cfg, seed=seed)
-            f = schedule_batch(ts, A100).makespan
-            sig["miso"].append(miso_opt(ts, A100).makespan / f)
-            sig["ones"].append(
-                fix_part(ts, A100, partition_of_ones(A100)).makespan / f
-            )
-            sig["best"].append(fix_part_best(ts, A100)[0].makespan / f)
-            sig["whole"].append(
-                fix_part(ts, A100, partition_whole(A100)).makespan / f
-            )
+            for k, v in _sigmas(ts).items():
+                acc[k].append(v)
         rows.add(
             cfg.name,
-            *(float(np.mean(sig[k])) for k in ("miso", "ones", "best",
-                                               "whole")),
+            *(float(np.mean(acc[k])) for k in BASELINES),
             str(PAPER[(scaling, times)]),
         )
     return rows

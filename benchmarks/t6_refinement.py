@@ -4,6 +4,7 @@ import numpy as np
 
 from repro.core.device_spec import A100
 from repro.core.far import schedule_batch
+from repro.core.policy import SchedulerConfig
 from repro.core.synth import ALL_WORKLOADS, generate_tasks, workload
 
 from benchmarks.common import Rows
@@ -29,8 +30,8 @@ def run(reps: int = 100) -> Rows:
             prefs, moves, swaps = [], [], []
             for seed in range(reps):
                 ts = generate_tasks(n, A100, cfg, seed=seed)
-                r_no = schedule_batch(ts, A100, refine=False)
-                r_yes = schedule_batch(ts, A100, refine=True)
+                r_no = schedule_batch(ts, A100, SchedulerConfig(refine=False))
+                r_yes = schedule_batch(ts, A100, SchedulerConfig(refine=True))
                 prefs.append(
                     (r_no.makespan / r_yes.makespan - 1.0) * 100
                 )

@@ -10,7 +10,8 @@ far lower.  We report trivial vs move_swap to isolate the seam gain."""
 import numpy as np
 
 from repro.core.device_spec import A100
-from repro.core.multibatch import MultiBatchScheduler, multibatch_baseline
+from repro.core.multibatch import MultiBatchScheduler
+from repro.core.policy import SchedulerConfig, get_policy
 from repro.core.synth import generate_tasks, workload
 
 from benchmarks.common import Rows
@@ -32,10 +33,13 @@ def run(reps: int = 0, n_batches: int = 60) -> Rows:
                 generate_tasks(n, A100, cfg, seed=s, id_offset=10_000 * s)
                 for s in range(n_batches)
             ]
-            lb = multibatch_baseline(batches, A100)
+            flat = [t for b in batches for t in b]
+            lb = get_policy("lower-bound").plan(flat, A100).makespan
             out = {}
             for mode in ("trivial", "move_swap"):
-                mb = MultiBatchScheduler(A100, mode=mode)
+                mb = MultiBatchScheduler(
+                    A100, config=SchedulerConfig(concat_mode=mode)
+                )
                 for b in batches:
                     mb.add_batch(b)
                 out[mode] = (mb.makespan / lb - 1) * 100

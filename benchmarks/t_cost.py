@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.baselines import fix_part, miso_opt, partition_of_ones
 from repro.core.device_spec import A100
 from repro.core.far import schedule_batch
+from repro.core.policy import SchedulerConfig
 from repro.core.synth import generate_tasks, workload
 
 from benchmarks.common import Rows
@@ -35,10 +36,11 @@ JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
 def _timed_runs(tasks, reps: int, use_engine: bool = True):
     """Per-run wall times + per-phase medians for schedule_batch(refine=True)."""
     times, phases = [], []
-    schedule_batch(tasks, A100, use_engine=use_engine)  # warm caches
+    cfg = SchedulerConfig(use_engine=use_engine)
+    schedule_batch(tasks, A100, cfg)  # warm caches
     for _ in range(reps):
         t0 = time.perf_counter()
-        res = schedule_batch(tasks, A100, use_engine=use_engine)
+        res = schedule_batch(tasks, A100, cfg)
         times.append(time.perf_counter() - t0)
         phases.append(res.phase_s)
     med_phase = {
@@ -91,15 +93,17 @@ def run(reps: int = 5) -> Rows:
     # per-pair ratios — both sides of every ratio see the same machine
     # state, unlike two sequential best-of-N blocks.
     ts = generate_tasks(200, A100, cfg, seed=0)
-    schedule_batch(ts, A100, use_engine=True)
-    schedule_batch(ts, A100, use_engine=False)
+    eng_cfg = SchedulerConfig(use_engine=True)
+    rep_cfg = SchedulerConfig(use_engine=False)
+    schedule_batch(ts, A100, eng_cfg)
+    schedule_batch(ts, A100, rep_cfg)
     eng_times, rep_times = [], []
     for _ in range(max(reps, 15)):
         t0 = time.perf_counter()
-        schedule_batch(ts, A100, use_engine=True)
+        schedule_batch(ts, A100, eng_cfg)
         eng_times.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        schedule_batch(ts, A100, use_engine=False)
+        schedule_batch(ts, A100, rep_cfg)
         rep_times.append(time.perf_counter() - t0)
     eng_times = np.asarray(eng_times) * 1e3
     rep_times = np.asarray(rep_times) * 1e3

@@ -2,7 +2,10 @@
 multi-tenant cluster where training/serving jobs of the 10 assigned
 architectures arrive over time, FAR molds each to a pod-slice count and
 schedules batches, seams are overlapped (§4), and a mid-run pod-slice
-failure triggers elastic degradation + checkpoint restarts.
+failure triggers elastic degradation + checkpoint restarts.  A second act
+runs the arrival-driven :class:`SchedulingService`: jobs trickle in with
+Poisson gaps, accumulate within a latency budget, flush through
+multi-batch FAR and fall back to greedy placement when the stream thins.
 
   PYTHONPATH=src python examples/multibatch_cluster.py
 """
@@ -10,10 +13,14 @@ failure triggers elastic degradation + checkpoint restarts.
 import itertools
 import sys
 
+import numpy as np
+
 sys.path.insert(0, "src")
 
 from repro.configs import ARCHS
+from repro.core import SchedulerConfig, SchedulingService, validate_schedule
 from repro.core.device_spec import TPU_POD_256
+from repro.core.synth import generate_tasks, workload
 from repro.models.config import SHAPES
 from repro.runtime import ClusterManager, Fault, Slowdown
 
@@ -55,5 +62,34 @@ def main() -> None:
           f"(busy slice-seconds / available)")
 
 
+def serve_demo() -> None:
+    """Latency-budget online serving on the same pod, 2-pod pool."""
+    svc = SchedulingService(
+        TPU_POD_256,
+        policy="far",
+        config=SchedulerConfig(max_wait_s=10.0, max_batch=12),
+        pool_size=2,
+    )
+    print(f"\n== SchedulingService on a {svc.spec.name} pool "
+          f"({svc.spec.n_slices} slices) ==")
+    cfg = workload("mixed", "wide", svc.spec)
+    tasks = generate_tasks(40, svc.spec, cfg, seed=7)
+    rng = np.random.default_rng(7)
+    # dense burst, then a sparse trickle that falls back to greedy placement
+    gaps = np.concatenate([rng.exponential(1.5, 30), rng.exponential(60.0, 10)])
+    for task, arrival in zip(tasks, np.cumsum(gaps)):
+        svc.submit(task, arrival=float(arrival))
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    delays = svc.stats.queue_delays()
+    print(f"{svc.stats.submitted} tasks -> {svc.stats.batches} FAR batches + "
+          f"{svc.stats.online_placements} greedy placements, "
+          f"makespan {svc.makespan:.1f}s")
+    print(f"queue delay p50 {np.percentile(delays, 50):.1f}s "
+          f"p95 {np.percentile(delays, 95):.1f}s "
+          f"(budget {svc.config.max_wait_s:.0f}s)")
+
+
 if __name__ == "__main__":
     main()
+    serve_demo()

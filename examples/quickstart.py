@@ -3,18 +3,17 @@
   PYTHONPATH=src python examples/quickstart.py
 
 Reproduces the paper's core loop in 30 lines: profile tasks per instance
-size, run the 3-phase FAR algorithm, print the resulting Gantt chart and
-the comparison against MISO-OPT / fixed partitions.
+size, run the 3-phase FAR algorithm through the policy registry, print the
+resulting Gantt chart and the comparison against every registered baseline
+policy (one loop over names — paper Fig. 12).
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import A100, rho, schedule_batch, validate_schedule
-from repro.core.baselines import (
-    fix_part, fix_part_best, miso_opt, partition_of_ones, partition_whole,
-)
+from repro.core import A100, SchedulerConfig, get_policy, rho, validate_schedule
+from repro.core.baselines import partition_whole
 from repro.core.rodinia import rodinia_tasks
 
 
@@ -32,26 +31,30 @@ def gantt(schedule, width: int = 72) -> str:
 
 def main() -> None:
     tasks = rodinia_tasks(A100)
-    result = schedule_batch(tasks, A100)
+    cfg = SchedulerConfig()
+    result = get_policy("far").plan(tasks, A100, cfg)
     validate_schedule(result.schedule, tasks)
+    far = result.extras["far"]
 
     print(f"FAR on A100: {len(tasks)} tasks, makespan "
           f"{result.makespan:.2f}s, rho={rho(result, tasks):.3f} "
           f"(paper: 1.22), scheduled in {result.elapsed_s * 1e3:.1f} ms")
-    print(f"phase 2 winner: allocation #{result.winner_index} of "
-          f"{result.family_size}; phase 3: {result.refine_stats.moves} "
-          f"moves, {result.refine_stats.swaps} swaps\n")
+    print(f"phase 2 winner: allocation #{far.winner_index} of "
+          f"{far.family_size}; phase 3: {far.refine_stats.moves} "
+          f"moves, {far.refine_stats.swaps} swaps\n")
     print(gantt(result.schedule))
 
-    far = result.makespan
     print("\nversus (paper Fig. 12):")
-    print(f"  MISO-OPT        {miso_opt(tasks, A100).makespan / far:.2f}x")
-    print(f"  FixPart(1x7)    "
-          f"{fix_part(tasks, A100, partition_of_ones(A100)).makespan / far:.2f}x")
-    print(f"  FixPartBest     "
-          f"{fix_part_best(tasks, A100)[0].makespan / far:.2f}x")
-    print(f"  FixPart(7)      "
-          f"{fix_part(tasks, A100, partition_whole(A100)).makespan / far:.2f}x")
+    baselines = [
+        ("MISO-OPT", "miso", cfg),
+        ("FixPart(1x7)", "fix-part", cfg),
+        ("FixPartBest", "fix-part-best", cfg),
+        ("FixPart(7)", "fix-part",
+         cfg.replace(partition=partition_whole(A100))),
+    ]
+    for label, name, c in baselines:
+        plan = get_policy(name).plan(tasks, A100, c)
+        print(f"  {label:<15s} {plan.makespan / result.makespan:.2f}x")
 
 
 if __name__ == "__main__":

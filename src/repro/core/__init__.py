@@ -13,14 +13,25 @@ from repro.core.device_spec import (
     InstanceNode,
     multi_gpu,
 )
-from repro.core.far import FARResult, rho, schedule_batch
+from repro.core.far import FARResult, far_schedule, rho, schedule_batch
 from repro.core.multibatch import (
     ConcatResult,
     MultiBatchScheduler,
     Tail,
     concatenate,
     multibatch_baseline,
+    tail_after,
 )
+from repro.core.online import OnlinePlacement, OnlineScheduler
+from repro.core.policy import (
+    PlanResult,
+    SchedulerConfig,
+    SchedulerPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+from repro.core.service import Decision, SchedulingService, ServiceStats
 from repro.core.problem import (
     InfeasibleScheduleError,
     ReconfigEvent,
@@ -53,7 +64,11 @@ __all__ = [
     "LPTGroups", "replay", "alive_at_end",
     "TimingEngine", "ReplayEngine", "make_engine",
     "RefineStats", "refine_assignment",
-    "FARResult", "schedule_batch", "rho",
+    "FARResult", "far_schedule", "schedule_batch", "rho",
     "MultiBatchScheduler", "Tail", "ConcatResult", "concatenate",
-    "multibatch_baseline",
+    "multibatch_baseline", "tail_after",
+    "OnlineScheduler", "OnlinePlacement",
+    "SchedulerConfig", "SchedulerPolicy", "PlanResult",
+    "register_policy", "get_policy", "available_policies",
+    "SchedulingService", "ServiceStats", "Decision",
 ]

@@ -12,6 +12,11 @@
 * ``fix_part`` — a fixed partition chosen before execution; FIFO tasks run
   on the first instance to free up.  No reconfiguration at all (and no
   reconfiguration cost).  ``fix_part_best`` scans every valid partition.
+
+All three are also registered scheduling policies (``"miso"``,
+``"fix-part"``, ``"fix-part-best"``) so baseline comparisons are one loop
+over :func:`~repro.core.policy.get_policy` names; ``"fix-part"`` reads its
+partition from ``SchedulerConfig.partition`` (default: all-ones).
 """
 
 from __future__ import annotations
@@ -19,6 +24,13 @@ from __future__ import annotations
 from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec, InstanceNode
+from repro.core.policy import (
+    BasePolicy,
+    PlanResult,
+    SchedulerConfig,
+    assignment_from_schedule,
+    register_policy,
+)
 from repro.core.problem import (
     ReconfigEvent,
     Schedule,
@@ -141,3 +153,51 @@ def partition_of_ones(spec: DeviceSpec) -> tuple[InstanceNode, ...]:
 def partition_whole(spec: DeviceSpec) -> tuple[InstanceNode, ...]:
     """FixPart(#slices): one instance per tree root (whole device)."""
     return tuple(spec.roots)
+
+
+def _bare(policy: str, schedule: Schedule, **extras) -> PlanResult:
+    """Adapt a bare baseline Schedule into the unified PlanResult."""
+    return PlanResult(
+        policy=policy,
+        schedule=schedule,
+        makespan=schedule.makespan,
+        assignment=assignment_from_schedule(schedule),
+        extras=extras,
+    )
+
+
+@register_policy("miso")
+class MISOPolicy(BasePolicy):
+    """MISO-OPT [31] as a registry policy."""
+
+    def _plan_fresh(
+        self, tasks: Sequence[Task], spec: DeviceSpec, config: SchedulerConfig
+    ) -> PlanResult:
+        return _bare(self.name, miso_opt(tasks, spec))
+
+
+@register_policy("fix-part")
+class FixPartPolicy(BasePolicy):
+    """FIFO on ``config.partition`` (default: the all-ones partition)."""
+
+    def _plan_fresh(
+        self, tasks: Sequence[Task], spec: DeviceSpec, config: SchedulerConfig
+    ) -> PlanResult:
+        partition = (
+            tuple(config.partition) if config.partition is not None
+            else partition_of_ones(spec)
+        )
+        return _bare(
+            self.name, fix_part(tasks, spec, partition), partition=partition
+        )
+
+
+@register_policy("fix-part-best")
+class FixPartBestPolicy(BasePolicy):
+    """FixPartBest: the fixed partition with the smallest makespan."""
+
+    def _plan_fresh(
+        self, tasks: Sequence[Task], spec: DeviceSpec, config: SchedulerConfig
+    ) -> PlanResult:
+        schedule, partition = fix_part_best(tasks, spec)
+        return _bare(self.name, schedule, partition=partition)

@@ -13,17 +13,31 @@ while ``h_max`` is non-increasing, so once ``area / #slices`` alone reaches
 the incumbent makespan every later allocation is dominated and the loop can
 stop.  This never changes the selected schedule, only skips provably-worse
 candidates.
+
+All knobs live in :class:`~repro.core.policy.SchedulerConfig`;
+``schedule_batch(tasks, spec, config=...)`` is the direct entry point and
+``get_policy("far").plan(...)`` the registry one.  The legacy boolean
+kwargs (``refine=``/``prune=``/``deep_refine=``/``use_engine=``) still
+work through a deprecation shim that names the config field to use.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Sequence
 
 from repro.core.allocations import Allocation, allocation_family_deltas
 from repro.core.device_spec import DeviceSpec
-from repro.core.problem import EPS, Schedule, Task, area_lower_bound
+from repro.core.policy import (
+    LEGACY_KWARGS,
+    BasePolicy,
+    PlanResult,
+    SchedulerConfig,
+    register_policy,
+)
+from repro.core.problem import Schedule, Task, area_lower_bound
 from repro.core.refine import RefineStats, refine_assignment
 from repro.core.repartition import (
     Assignment,
@@ -55,24 +69,62 @@ class FARResult:
 def schedule_batch(
     tasks: Sequence[Task],
     spec: DeviceSpec,
-    refine: bool = True,
-    max_refine_iterations: int = 64,
-    prune: bool = True,
-    deep_refine: bool = False,
-    use_engine: bool = True,
+    config: SchedulerConfig | None = None,
+    **legacy,
 ) -> FARResult:
-    """Run FAR on one batch of tasks.
+    """Run FAR on one batch of tasks (back-compat wrapper).
 
-    ``deep_refine`` (beyond-paper) follows phase 3 with an exact-evaluation
-    greedy move/swap search (the §4.3 seam engine against an empty tail):
-    each candidate edit is scored exactly, so it monotonically improves and
-    tends to pick up the last few percent on small batches where the
-    paper's margin heuristics run out.
+    Builds a :class:`SchedulerConfig` from the legacy boolean kwargs (each
+    emits a :class:`DeprecationWarning` naming the config field to use)
+    and delegates to the config-driven implementation.
+    """
+    if config is not None and not isinstance(config, SchedulerConfig):
+        # the pre-config signature took refine positionally third; reject
+        # loudly instead of silently binding a boolean to `config`
+        raise TypeError(
+            f"schedule_batch() third argument must be a SchedulerConfig, "
+            f"got {type(config).__name__}; legacy positional booleans "
+            f"moved to SchedulerConfig fields (e.g. SchedulerConfig("
+            f"refine=...))"
+        )
+    if legacy:
+        changes = {}
+        for name, value in legacy.items():
+            field = LEGACY_KWARGS.get(name)
+            if field is None:
+                raise TypeError(
+                    f"schedule_batch() got an unexpected keyword argument "
+                    f"{name!r}"
+                )
+            warnings.warn(
+                f"schedule_batch({name}=...) is deprecated; pass "
+                f"config=SchedulerConfig({field}=...) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            changes[field] = value
+        config = (config or SchedulerConfig()).replace(**changes)
+    return far_schedule(tasks, spec, config or SchedulerConfig())
 
-    ``use_engine`` selects the incremental timing path (warm-started family
-    evaluation + engine-scored refinement, default) or the cold
+
+def far_schedule(
+    tasks: Sequence[Task],
+    spec: DeviceSpec,
+    config: SchedulerConfig,
+) -> FARResult:
+    """The three FAR phases, driven entirely by ``config``.
+
+    ``config.deep_refine`` (beyond-paper) follows phase 3 with an
+    exact-evaluation greedy move/swap search (the §4.3 seam engine against
+    an empty tail): each candidate edit is scored exactly, so it
+    monotonically improves and tends to pick up the last few percent on
+    small batches where the paper's margin heuristics run out.
+
+    ``config.use_engine`` selects the incremental timing path (warm-started
+    family evaluation + engine-scored refinement, default) or the cold
     replay-per-candidate reference path.  Both produce identical schedules;
     the flag exists for the equivalence tests and perf baselines."""
+    eps = config.eps
     t0 = time.perf_counter()
     if not tasks:
         empty = Assignment(spec, {}, {})
@@ -97,17 +149,17 @@ def schedule_batch(
     # insert) instead of re-grouped and re-sorted per allocation, and each
     # candidate's makespan is read from the timing engine without building
     # a full Schedule.  Only the winner is replayed into a Schedule.
-    groups = LPTGroups(tasks, first, spec) if use_engine else None
+    groups = LPTGroups(tasks, first, spec) if config.use_engine else None
     alloc = list(first)
     best: tuple[float, int, Assignment, Allocation] | None = None
     evaluated = 0
     idx = 0
     while True:
-        if prune and best is not None:
+        if config.prune and best is not None:
             area = sum(
                 s * t.times[s] for t, s in zip(tasks, alloc)
             )
-            if area / spec.n_slices >= best[0] - EPS:
+            if area / spec.n_slices >= best[0] - eps:
                 break  # all later allocations have >= area -> dominated
         if groups is not None:
             assignment, node_durs = groups.schedule_with_durs()
@@ -116,7 +168,7 @@ def schedule_batch(
             assignment = list_schedule_allocation(tasks, tuple(alloc), spec)
             makespan = replay(assignment).makespan
         evaluated += 1
-        if best is None or makespan < best[0] - EPS:
+        if best is None or makespan < best[0] - eps:
             best = (makespan, idx, assignment, tuple(alloc))
         if idx == len(deltas):
             break
@@ -132,22 +184,23 @@ def schedule_batch(
 
     stats: RefineStats | None = None
     schedule: Schedule
-    if refine:
+    if config.refine:
         # the winner's un-refined Schedule is never consumed when phase 3
         # runs (it re-derives the final one), so skip that replay entirely
         assignment, schedule, stats = refine_assignment(
-            assignment, max_iterations=max_refine_iterations,
-            use_engine=use_engine,
+            assignment, max_iterations=config.max_refine_iterations,
+            use_engine=config.use_engine,
         )
     else:
         schedule = replay(assignment)
-    if deep_refine:
+    if config.deep_refine:
         from repro.core.multibatch import Tail, seam_refine
 
         assignment2, schedule2, mv, sw = seam_refine(
-            assignment, Tail.empty(spec), "forward", use_engine=use_engine
+            assignment, Tail.empty(spec), "forward",
+            use_engine=config.use_engine,
         )
-        if schedule2.makespan < schedule.makespan - EPS:
+        if schedule2.makespan < schedule.makespan - eps:
             assignment, schedule = assignment2, schedule2
             if stats is not None:
                 stats.moves += mv
@@ -168,6 +221,25 @@ def schedule_batch(
     )
 
 
-def rho(result: FARResult, tasks: Sequence[Task]) -> float:
+@register_policy("far")
+class FARPolicy(BasePolicy):
+    """The paper's FAR scheduler as a registry policy."""
+
+    def _plan_fresh(
+        self, tasks: Sequence[Task], spec: DeviceSpec, config: SchedulerConfig
+    ) -> PlanResult:
+        far = far_schedule(tasks, spec, config)
+        return PlanResult(
+            policy=self.name,
+            schedule=far.schedule,
+            makespan=far.makespan,
+            assignment=far.assignment,
+            elapsed_s=far.elapsed_s,
+            phase_s=far.phase_s,
+            extras={"far": far},
+        )
+
+
+def rho(result: FARResult | PlanResult, tasks: Sequence[Task]) -> float:
     """Paper §6.4 error-vs-optimum proxy: makespan / area lower bound."""
     return result.makespan / area_lower_bound(tasks, result.schedule.spec)

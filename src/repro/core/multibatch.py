@@ -23,8 +23,14 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec
-from repro.core.far import FARResult, schedule_batch
-from repro.core.problem import Schedule, Task
+from repro.core.policy import (
+    BasePolicy,
+    PlanResult,
+    SchedulerConfig,
+    get_policy,
+    register_policy,
+)
+from repro.core.problem import Schedule, Task, area_lower_bound
 from repro.core.refine import ChainViews, _best_move, _best_swap
 from repro.core.repartition import Assignment, NodeKey, alive_at_end, replay
 from repro.core.timing import make_engine
@@ -43,8 +49,18 @@ class Tail:
         rel["reconfig"] = 0.0
         return cls(release=rel, alive={})
 
+    def floored(self, t: float) -> "Tail":
+        """Tail with every release time (slices and the reconfiguration
+        sequence) floored at ``t`` — the serving causality rule: work
+        committed by a decision at time ``t`` may not be scheduled before
+        it."""
+        return Tail(
+            release={k: max(float(v), t) for k, v in self.release.items()},
+            alive=self.alive,
+        )
 
-def _tail_after(schedule: Schedule, prev: Tail) -> Tail:
+
+def tail_after(schedule: Schedule, prev: Tail) -> Tail:
     release = dict(prev.release)
     for cell, t in schedule.slice_end_times().items():
         release[cell] = max(release.get(cell, 0.0), t)
@@ -105,13 +121,9 @@ def concatenate(
         barrier = max(
             v for k, v in tail.release.items() if k != "reconfig"
         ) if len(tail.release) > 1 else 0.0
-        release = {k: max(float(v), barrier) for k, v in tail.release.items()
-                   if k != "reconfig"}
-        release["reconfig"] = max(
-            float(tail.release.get("reconfig", 0.0)), barrier
-        )
+        release = tail.floored(barrier).release
         sched = replay(assignment, release=release, alive=tail.alive)
-        return ConcatResult(sched, _tail_after(sched, tail), False)
+        return ConcatResult(sched, tail_after(sched, tail), False)
 
     if mode == "auto":
         # beyond-paper: with short tasks, reversal's extra reconfigurations
@@ -142,7 +154,7 @@ def concatenate(
         )
     else:
         raise ValueError(f"unknown mode {mode!r}")
-    return ConcatResult(sched, _tail_after(sched, tail), reverse, moves, swaps)
+    return ConcatResult(sched, tail_after(sched, tail), reverse, moves, swaps)
 
 
 def seam_refine(
@@ -232,10 +244,18 @@ def seam_refine(
 
 
 class MultiBatchScheduler:
-    """Online driver: FAR per batch + intelligent concatenation (paper §4).
+    """Online driver: one plan per batch + intelligent concatenation (§4).
 
-    Alternates schedule direction between consecutive batches so seams pair
-    similar instance sizes, and applies seam move/swap by default.
+    Each batch is planned cold by the registered ``policy`` (FAR by
+    default, but any name from :func:`~repro.core.policy.get_policy`
+    works — the plan only needs to carry an assignment) and its tree is
+    spliced after the committed tail.  Alternates schedule direction
+    between consecutive batches so seams pair similar instance sizes, and
+    applies seam move/swap by default.
+
+    ``config`` is authoritative when given; the legacy ``mode`` /
+    ``refine`` / ``use_engine`` parameters are only consulted to build a
+    default config when it is not.
     """
 
     def __init__(
@@ -244,30 +264,51 @@ class MultiBatchScheduler:
         mode: str = "move_swap",
         refine: bool = True,
         use_engine: bool = True,
+        policy: str = "far",
+        config: SchedulerConfig | None = None,
     ) -> None:
         self.spec = spec
-        self.mode = mode
-        self.refine = refine
-        self.use_engine = use_engine
+        if config is None:
+            config = SchedulerConfig(
+                refine=refine, use_engine=use_engine, concat_mode=mode
+            )
+        self.config = config
+        self.mode = config.concat_mode
+        self.policy = policy
         self.tail = Tail.empty(spec)
         self.segments: list[Schedule] = []
-        self.results: list[FARResult] = []
+        self.results: list[PlanResult] = []
         self._flip = False
 
-    def add_batch(self, tasks: Sequence[Task]) -> ConcatResult:
-        far = schedule_batch(
-            tasks, self.spec, refine=self.refine, use_engine=self.use_engine
-        )
-        self.results.append(far)
+    def add_batch(
+        self, tasks: Sequence[Task], not_before: float = 0.0
+    ) -> ConcatResult:
+        """Plan ``tasks`` cold and splice them after the tail.
+
+        ``not_before`` floors every release time (slices and the
+        reconfiguration sequence) — the serving facade passes its flush
+        time so nothing is scheduled before the decision that placed it.
+        """
+        plan = get_policy(self.policy).plan(tasks, self.spec, self.config)
+        self.results.append(plan)
+        tail = self.tail.floored(not_before) if not_before > 0.0 else self.tail
         out = concatenate(
-            far.assignment, self.tail, mode=self.mode, reverse=self._flip,
-            use_engine=self.use_engine,
+            plan.assignment, tail, mode=self.mode, reverse=self._flip,
+            use_engine=self.config.use_engine,
         )
         if self.mode != "trivial":
             self._flip = not self._flip
         self.tail = out.tail
         self.segments.append(out.schedule)
         return out
+
+    def adopt_segment(self, schedule: Schedule) -> None:
+        """Splice an externally-planned absolute-timed segment (e.g. the
+        serving facade's online-fallback placements) after the tail: the
+        segment joins the combined schedule and the tail advances exactly
+        as for a planned batch."""
+        self.tail = tail_after(schedule, self.tail)
+        self.segments.append(schedule)
 
     @property
     def makespan(self) -> float:
@@ -280,14 +321,32 @@ class MultiBatchScheduler:
         return Schedule(spec=self.spec, items=items, reconfigs=reconfigs)
 
 
+@register_policy("lower-bound")
+class LowerBoundPolicy(BasePolicy):
+    """Paper §6.4/§6.7.2 area bound as a (schedule-less) registry policy:
+    total minimum work spread evenly over the slices.  ``makespan`` is the
+    bound; the schedule is empty and the plan carries no assignment, so
+    this policy only serves as the denominator in comparisons."""
+
+    def plan(
+        self,
+        tasks: Sequence[Task],
+        spec: DeviceSpec,
+        config: SchedulerConfig | None = None,
+        tail: object | None = None,
+    ) -> PlanResult:
+        return PlanResult(
+            policy=self.name,
+            schedule=Schedule(spec=spec, items=[], reconfigs=[]),
+            makespan=area_lower_bound(tasks, spec),
+            tail=tail,
+        )
+
+
 def multibatch_baseline(
     batches: Sequence[Sequence[Task]], spec: DeviceSpec
 ) -> float:
-    """Paper §6.7.2 lower bound: total minimum area over all batches spread
-    evenly over the slices."""
-    total = sum(
-        min(s * t.times[s] for s in spec.sizes)
-        for batch in batches
-        for t in batch
-    )
-    return total / spec.n_slices
+    """Paper §6.7.2 lower bound over a batch chain (delegates to the
+    registered ``"lower-bound"`` policy on the flattened task list)."""
+    flat = [t for batch in batches for t in batch]
+    return get_policy("lower-bound").plan(flat, spec).makespan

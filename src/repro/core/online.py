@@ -14,6 +14,15 @@ molding: pure min-completion grabs the widest instance for every early
 task and starves the queue (measured 2.9-3.6x of offline FAR on
 PoorScaling; with the area term ~1.5-2x).
 
+One :class:`TimingEngine` persists across submits: each arrival costs only
+its speculative append/undo probes plus one committed append, and
+``schedule()`` / ``makespan`` are served straight from the engine (the
+replay-equivalence contract in ``tests/test_timing_engine.py`` guarantees
+they match a cold ``replay()`` bit-for-bit).  A ``release``/``alive``
+seam context makes the same greedy usable after a committed multi-batch
+tail — that is the :class:`~repro.core.service.SchedulingService` fallback
+path for urgent or trickling tasks.
+
 The paper's Theorem-from-[38] framing gives batched FAR a competitive
 ratio of 2ρ against the offline optimum; this greedy has no such guarantee
 and measures 1.3-3.2× of offline FAR on the paper's synthetic workloads
@@ -25,10 +34,18 @@ argument for the offline batched formulation, now quantified.
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec
+from repro.core.policy import (
+    BasePolicy,
+    PlanResult,
+    SchedulerConfig,
+    register_policy,
+)
 from repro.core.problem import Schedule, Task
-from repro.core.repartition import Assignment, replay
+from repro.core.repartition import Assignment, NodeKey
 from repro.core.timing import TimingEngine
 
 
@@ -42,25 +59,48 @@ class OnlinePlacement:
 
 
 class OnlineScheduler:
-    """Arrival-driven moldable placement on the repartitioning tree."""
+    """Arrival-driven moldable placement on the repartitioning tree.
 
-    def __init__(self, spec: DeviceSpec):
+    ``release``/``alive`` (the fields of a committed
+    :class:`~repro.core.multibatch.Tail`) seed the engine's seam context so
+    arrivals are placed *after* an already-committed schedule; both default
+    to a cold device.
+    """
+
+    def __init__(
+        self,
+        spec: DeviceSpec,
+        release: dict | None = None,
+        alive: dict[NodeKey, float] | None = None,
+    ):
         self.spec = spec
         self.assignment = Assignment(spec, {}, {})
         self.placements: list[OnlinePlacement] = []
+        # one persistent engine for the scheduler's lifetime; it shares the
+        # assignment's chains (copy_chains=False), so committed appends are
+        # visible in self.assignment without double bookkeeping
+        self._eng = TimingEngine(
+            self.assignment, release=release, alive=alive, copy_chains=False,
+        )
 
     def submit(self, task: Task, arrival: float = 0.0) -> OnlinePlacement:
         """Place ``task`` immediately; returns the chosen placement.
 
-        ``arrival`` is honoured as a lower bound on the start by treating
-        earlier-committed work as fixed (tasks are appended, never moved —
-        no preemption, per the MIG model).
+        ``arrival`` is a soft preference: placements starting before it
+        are filtered out while any candidate satisfies it, but the chain
+        model cannot hold a slice idle (tasks are appended back-to-back,
+        never delayed — no preemption, per the MIG model), so when every
+        chain would start early the task is placed for best completion
+        anyway.  For a *hard* floor, seed ``release`` with the decision
+        time — that is what
+        :class:`~repro.core.service.SchedulingService` does, making its
+        combined timeline causal.
         """
         best: tuple[float, int, tuple] | None = None
         self.assignment.tasks[task.id] = task
-        # one incremental engine per arrival: each candidate placement is a
-        # speculative append + timing read + undo instead of a full replay
-        eng = TimingEngine(self.assignment)
+        # each candidate placement is a speculative append + timing read +
+        # undo on the persistent engine instead of a full replay
+        eng = self._eng
         for node in self.spec.nodes:
             if node.size not in task.times:
                 continue
@@ -85,16 +125,60 @@ class OnlineScheduler:
                     best = (end, node.size, node.key)
         assert best is not None, "no feasible size for task"
         _, size, node_key = best
-        self.assignment.node_tasks.setdefault(node_key, []).append(task.id)
-        eng.apply_append(task.id, node_key)
+        eng.apply_append(task.id, node_key)  # commit (chains are shared)
         begin, end = eng.task_begin_end(task.id)
         placement = OnlinePlacement(task.id, node_key, size, begin, end)
         self.placements.append(placement)
         return placement
 
     def schedule(self) -> Schedule:
-        return replay(self.assignment)
+        """Full Schedule, bit-identical to a cold ``replay()`` of the
+        committed assignment under this scheduler's seam context."""
+        return self._eng.schedule()
 
     @property
     def makespan(self) -> float:
-        return self.schedule().makespan
+        return self._eng.makespan()
+
+
+@register_policy("online-greedy")
+class OnlineGreedyPolicy(BasePolicy):
+    """The arrival-order greedy as a registry policy.
+
+    Unlike the batch policies, tail-awareness is native: the tail's
+    ``release``/``alive`` context seeds the placement engine instead of a
+    post-hoc seam concatenation, because the greedy's whole point is that
+    its decisions see the committed state.
+    """
+
+    def plan(
+        self,
+        tasks: Sequence[Task],
+        spec: DeviceSpec,
+        config: SchedulerConfig | None = None,
+        tail: object | None = None,
+    ) -> PlanResult:
+        t0 = time.perf_counter()
+        if tail is None:
+            sched = OnlineScheduler(spec)
+        else:
+            sched = OnlineScheduler(
+                spec, release=tail.release, alive=tail.alive
+            )
+        for task in tasks:
+            sched.submit(task)
+        schedule = sched.schedule()
+        new_tail = None
+        if tail is not None:
+            from repro.core.multibatch import tail_after
+
+            new_tail = tail_after(schedule, tail)
+        return PlanResult(
+            policy=self.name,
+            schedule=schedule,
+            makespan=schedule.makespan,
+            assignment=sched.assignment,
+            tail=new_tail,
+            elapsed_s=time.perf_counter() - t0,
+            extras={"placements": sched.placements},
+        )

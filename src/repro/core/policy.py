@@ -1,0 +1,250 @@
+"""Unified scheduling service API: policies, config and plan results.
+
+The paper frames MIG scheduling as one problem with many strategies — FAR
+(§3), MISO-OPT and fixed partitions (§6.5), online greedy placement (§7).
+This module is the surface that makes them interchangeable:
+
+* :class:`SchedulerConfig` — one frozen knob object replacing the boolean
+  kwarg sprawl that had accumulated on ``schedule_batch`` (refinement
+  depth, pruning, engine selection, EPS, seam mode, latency budget, seed);
+* :class:`PlanResult` — the unified return type every strategy adapts
+  into (schedule, makespan, assignment, per-phase wall time, reconfig
+  events, policy-specific extras);
+* :class:`SchedulerPolicy` / :func:`register_policy` / :func:`get_policy`
+  — a string-keyed registry so consumers (benchmarks, the multi-batch
+  driver, the serving facade) run *any* strategy as one loop over names.
+
+Policies self-register where they are implemented (``far.py``,
+``baselines.py``, ``online.py``, ``multibatch.py``); :func:`get_policy`
+imports those modules lazily so ``import repro.core.policy`` alone never
+drags in the whole scheduler stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import time
+from typing import Callable, Protocol, Sequence, runtime_checkable
+
+from repro.core.device_spec import DeviceSpec
+from repro.core.problem import EPS, Schedule, Task, validate_schedule
+from repro.core.repartition import Assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """All scheduling knobs in one immutable value.
+
+    The first block mirrors the legacy ``schedule_batch`` booleans; the
+    second configures seam concatenation (multi-batch / tail-aware plans);
+    the third is the online-serving latency budget consumed by
+    :class:`~repro.core.service.SchedulingService`.
+    """
+
+    # -- FAR phases (legacy schedule_batch kwargs) --------------------------
+    refine: bool = True               # phase-3 move/swap refinement
+    max_refine_iterations: int = 64
+    prune: bool = True                # admissible phase-2 family pruning
+    deep_refine: bool = False         # beyond-paper exact greedy pass
+    use_engine: bool = True           # incremental TimingEngine vs replays
+    eps: float = EPS                  # float tolerance for comparisons
+
+    # -- seam concatenation (tail-aware planning) ---------------------------
+    concat_mode: str = "move_swap"    # "trivial" | "reverse" | "move_swap" | "auto"
+    reverse: bool = False             # play this segment leaves-first (§4.2)
+
+    # -- strategy-specific --------------------------------------------------
+    partition: tuple | None = None    # fix-part: instances to pin (None -> 1s)
+    seed: int | None = None           # reserved for randomized strategies
+
+    # -- online serving (SchedulingService latency budget) ------------------
+    max_wait_s: float = 0.25          # accumulate arrivals this long
+    max_batch: int = 32               # flush earlier once this many queue up
+    min_batch: int = 2                # smaller deadline flushes go online
+
+    def replace(self, **changes) -> "SchedulerConfig":
+        return dataclasses.replace(self, **changes)
+
+
+#: the legacy ``schedule_batch`` boolean kwargs and the config field each
+#: maps to — the deprecation shim names these in its warning.
+LEGACY_KWARGS: dict[str, str] = {
+    "refine": "refine",
+    "max_refine_iterations": "max_refine_iterations",
+    "prune": "prune",
+    "deep_refine": "deep_refine",
+    "use_engine": "use_engine",
+}
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """What every registered policy returns from ``plan``.
+
+    ``makespan`` is stored (not derived) so bound-only policies such as
+    ``"lower-bound"`` can report one without a schedule; for every
+    schedule-producing policy it equals ``schedule.makespan``.
+    ``extras`` carries the policy-specific result the legacy entry point
+    used to return (``FARResult`` under ``"far"``, the chosen partition
+    under ``"partition"``, online placements under ``"placements"``, the
+    seam ``ConcatResult`` under ``"concat"``).
+    """
+
+    policy: str
+    schedule: Schedule
+    makespan: float
+    assignment: Assignment | None = None
+    tail: object | None = None        # multibatch.Tail after a tail-aware plan
+    elapsed_s: float = 0.0
+    phase_s: dict[str, float] | None = None
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def reconfig_events(self) -> int:
+        return len(self.schedule.reconfigs)
+
+    def validate(
+        self, tasks: Sequence[Task] | None = None, check_reconfig: bool = True
+    ) -> None:
+        validate_schedule(self.schedule, tasks, check_reconfig=check_reconfig)
+
+
+@runtime_checkable
+class SchedulerPolicy(Protocol):
+    """The policy protocol: ``plan(tasks, spec, config, tail) -> PlanResult``."""
+
+    name: str
+
+    def plan(
+        self,
+        tasks: Sequence[Task],
+        spec: DeviceSpec,
+        config: SchedulerConfig | None = None,
+        tail: object | None = None,
+    ) -> PlanResult: ...
+
+
+class BasePolicy:
+    """Shared plumbing: timing, config defaulting and tail-aware splicing.
+
+    Subclasses implement ``_plan_fresh(tasks, spec, config) -> PlanResult``
+    for a cold device.  When ``tail`` (a :class:`~repro.core.multibatch.Tail`)
+    is given, the fresh plan's assignment is spliced after it with
+    :func:`~repro.core.multibatch.concatenate` under ``config.concat_mode``
+    (direction from ``config.reverse``) and the result carries the new tail.
+    """
+
+    name = "?"
+
+    def plan(
+        self,
+        tasks: Sequence[Task],
+        spec: DeviceSpec,
+        config: SchedulerConfig | None = None,
+        tail: object | None = None,
+    ) -> PlanResult:
+        cfg = config or SchedulerConfig()
+        t0 = time.perf_counter()
+        res = self._plan_fresh(tasks, spec, cfg)
+        res.policy = self.name
+        if tail is not None:
+            if res.assignment is None:
+                raise ValueError(
+                    f"policy {self.name!r} produced no assignment; "
+                    "tail-aware planning is unsupported"
+                )
+            from repro.core.multibatch import concatenate
+
+            out = concatenate(
+                res.assignment, tail, mode=cfg.concat_mode,
+                reverse=cfg.reverse, use_engine=cfg.use_engine,
+            )
+            res.schedule = out.schedule
+            res.makespan = out.schedule.makespan
+            res.tail = out.tail
+            res.extras["concat"] = out
+        res.elapsed_s = time.perf_counter() - t0
+        return res
+
+    def _plan_fresh(
+        self, tasks: Sequence[Task], spec: DeviceSpec, config: SchedulerConfig
+    ) -> PlanResult:
+        raise NotImplementedError
+
+
+def assignment_from_schedule(schedule: Schedule) -> Assignment:
+    """Adapt a bare :class:`Schedule` (MISO / FixPart output) into the
+    tree-chain :class:`Assignment` the seam machinery consumes: per-node
+    task lists in begin-time order."""
+    tasks = {it.task.id: it.task for it in schedule.items}
+    node_tasks = {
+        key: [it.task.id for it in lst]
+        for key, lst in schedule.by_node().items()
+    }
+    return Assignment(schedule.spec, tasks, node_tasks)
+
+
+# -- registry ---------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], SchedulerPolicy]] = {}
+_INSTANCES: dict[str, SchedulerPolicy] = {}
+
+#: modules whose import self-registers the built-in policies
+_BUILTIN_MODULES = (
+    "repro.core.far",
+    "repro.core.baselines",
+    "repro.core.online",
+    "repro.core.multibatch",
+)
+
+
+def register_policy(name: str):
+    """Class decorator: ``@register_policy("far")`` adds the policy class
+    to the registry under ``name`` (instantiated lazily, one singleton)."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        _INSTANCES.pop(name, None)
+        return cls
+
+    return deco
+
+
+def _ensure_builtins() -> None:
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+
+
+def get_policy(name: str) -> SchedulerPolicy:
+    """Look up a registered policy instance by name."""
+    if name not in _REGISTRY:
+        _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown scheduling policy {name!r}; "
+            f"available: {', '.join(sorted(_REGISTRY))}"
+        )
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def available_policies() -> list[str]:
+    """Sorted names of every registered policy."""
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+__all__ = [
+    "SchedulerConfig",
+    "PlanResult",
+    "SchedulerPolicy",
+    "BasePolicy",
+    "LEGACY_KWARGS",
+    "assignment_from_schedule",
+    "register_policy",
+    "get_policy",
+    "available_policies",
+]

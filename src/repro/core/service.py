@@ -1,0 +1,213 @@
+"""Arrival-driven scheduling service with a latency budget (ROADMAP
+"online serving at scale"; cf. Tan et al., serving DNN models on MIG).
+
+The paper's offline formulation needs batches; a serving frontend has
+arrivals.  :class:`SchedulingService` bridges the two with a classic
+latency-budget accumulator:
+
+* ``submit(task, arrival)`` queues the task.  Virtual time advances with
+  the (non-decreasing) arrival stamps;
+* once the **oldest** queued task has waited ``config.max_wait_s`` — or
+  ``config.max_batch`` tasks have queued up — the pending set is flushed
+  as one batch through a :class:`~repro.core.multibatch.MultiBatchScheduler`
+  under any registered policy, with tail-aware seam concatenation (§4);
+* a deadline flush smaller than ``config.min_batch`` (a slow trickle) and
+  ``urgent=True`` submits skip batching entirely: they are placed
+  immediately by the :class:`~repro.core.online.OnlineScheduler` greedy,
+  seeded with the committed tail's ``release``/``alive`` context so the
+  fallback lands in the same timeline as the batches;
+* multi-GPU pools come for free: ``pool_size=k`` schedules onto
+  ``device_spec.multi_gpu(spec, k)``.
+
+Everything is deterministic given the submission sequence — there is no
+RNG and no wall-clock dependence in any placement decision (wall time is
+only *measured*, for the decision-latency statistics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+from repro.core.device_spec import DeviceSpec, multi_gpu
+from repro.core.multibatch import MultiBatchScheduler
+from repro.core.online import OnlineScheduler
+from repro.core.policy import SchedulerConfig
+from repro.core.problem import Schedule, Task
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """How and when one task's placement was decided."""
+
+    task_id: int
+    arrival: float        # virtual time the task was submitted
+    decided_at: float     # virtual time the placement decision fired
+    route: str            # "batch" | "online"
+    flush_id: int         # which flush carried it
+    plan_wall_s: float    # wall-clock seconds the scheduler spent deciding
+
+    @property
+    def queue_delay(self) -> float:
+        """Virtual seconds the task waited for its decision."""
+        return self.decided_at - self.arrival
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    batches: int = 0
+    online_placements: int = 0
+    decisions: list[Decision] = dataclasses.field(default_factory=list)
+
+    def queue_delays(self) -> list[float]:
+        return [d.queue_delay for d in self.decisions]
+
+    def plan_wall_s(self) -> list[float]:
+        """Wall-clock decision latency of each flush (one entry per flush,
+        not per task)."""
+        seen: dict[int, float] = {}
+        for d in self.decisions:
+            seen[d.flush_id] = d.plan_wall_s
+        return [seen[k] for k in sorted(seen)]
+
+
+class SchedulingService:
+    """Facade: arrival batching within a latency budget + online fallback.
+
+    The service owns a :class:`MultiBatchScheduler` (the tail carrier);
+    batch flushes go through its registered policy, online fallbacks are
+    adopted into the same timeline via ``adopt_segment``.  Call ``drain()``
+    when the stream ends to flush whatever is still pending.
+    """
+
+    def __init__(
+        self,
+        spec: DeviceSpec,
+        policy: str = "far",
+        config: SchedulerConfig | None = None,
+        pool_size: int = 1,
+    ):
+        if pool_size > 1:
+            spec = multi_gpu(spec, pool_size)
+        self.spec = spec
+        self.config = config or SchedulerConfig()
+        self.policy = policy
+        self.mb = MultiBatchScheduler(spec, policy=policy, config=self.config)
+        self.pending: list[tuple[Task, float]] = []
+        self.now = 0.0
+        self.stats = ServiceStats()
+        self._flush_id = 0
+
+    # -- intake ------------------------------------------------------------
+    def submit(
+        self, task: Task, arrival: float | None = None, urgent: bool = False
+    ) -> None:
+        """Queue ``task`` at virtual time ``arrival`` (default: now).
+
+        Arrivals must be non-decreasing; ``urgent=True`` bypasses the
+        batching budget and places the task immediately.
+        """
+        arrival = self.now if arrival is None else float(arrival)
+        if arrival < self.now - 1e-9:
+            raise ValueError(
+                f"arrivals must be non-decreasing: {arrival} < {self.now}"
+            )
+        self.now = max(self.now, arrival)
+        self._advance(self.now)
+        self.stats.submitted += 1
+        if urgent:
+            self._route_online([(task, arrival)], decided_at=arrival)
+            return
+        self.pending.append((task, arrival))
+        if len(self.pending) >= self.config.max_batch:
+            self._flush_pending(decided_at=arrival)
+
+    def poll(self, now: float) -> None:
+        """Advance virtual time with no submission (fires due flushes)."""
+        if now < self.now - 1e-9:
+            raise ValueError(f"time must be non-decreasing: {now} < {self.now}")
+        self.now = max(self.now, now)
+        self._advance(self.now)
+
+    def flush(self) -> None:
+        """Force-flush everything pending at the current virtual time."""
+        if self.pending:
+            self._flush_pending(decided_at=self.now)
+
+    def drain(self) -> Schedule:
+        """Flush pending tasks and return the combined schedule so far."""
+        self.flush()
+        return self.mb.combined_schedule()
+
+    # -- internals ---------------------------------------------------------
+    def _advance(self, now: float) -> None:
+        # every pending task arrived within max_wait_s of the oldest (any
+        # later arrival would have fired this flush first), so one deadline
+        # empties the whole queue
+        if self.pending and now - self.pending[0][1] >= self.config.max_wait_s:
+            deadline = self.pending[0][1] + self.config.max_wait_s
+            self._flush_pending(decided_at=deadline)
+
+    def _flush_pending(self, decided_at: float) -> None:
+        batch, self.pending = self.pending, []
+        if len(batch) < self.config.min_batch:
+            # slow trickle: too few tasks accumulated within the budget for
+            # an offline batch to pay off — place them greedily instead
+            self._route_online(batch, decided_at)
+            return
+        t0 = time.perf_counter()
+        # nothing may start before the flush decision that placed it
+        self.mb.add_batch([task for task, _ in batch], not_before=decided_at)
+        wall = time.perf_counter() - t0
+        fid = self._next_flush_id()
+        self.stats.batches += 1
+        for task, arrival in batch:
+            self.stats.decisions.append(Decision(
+                task.id, arrival, decided_at, "batch", fid, wall,
+            ))
+
+    def _route_online(
+        self, batch: Sequence[tuple[Task, float]], decided_at: float
+    ) -> None:
+        if not batch:
+            return
+        t0 = time.perf_counter()
+        # floor the release context at the decision time: every placement
+        # begins >= decided_at >= its task's arrival, keeping the combined
+        # timeline causal (an unfloored release would let the greedy place
+        # work on idle slices before the task even arrived)
+        floored = self.mb.tail.floored(decided_at)
+        online = OnlineScheduler(
+            self.spec, release=floored.release, alive=floored.alive,
+        )
+        for task, arrival in batch:
+            online.submit(task, arrival=arrival)
+        self.mb.adopt_segment(online.schedule())
+        wall = time.perf_counter() - t0
+        fid = self._next_flush_id()
+        self.stats.online_placements += len(batch)
+        for task, arrival in batch:
+            self.stats.decisions.append(Decision(
+                task.id, arrival, decided_at, "online", fid, wall,
+            ))
+
+    def _next_flush_id(self) -> int:
+        self._flush_id += 1
+        return self._flush_id
+
+    # -- reporting ---------------------------------------------------------
+    @property
+    def makespan(self) -> float:
+        return self.mb.makespan
+
+    @property
+    def tail(self):
+        return self.mb.tail
+
+    def combined_schedule(self) -> Schedule:
+        return self.mb.combined_schedule()
+
+
+__all__ = ["SchedulingService", "ServiceStats", "Decision"]

@@ -26,8 +26,8 @@ from typing import Sequence
 
 from repro.core.costmodel import Job, job_to_task
 from repro.core.device_spec import DeviceSpec, TPU_POD_256
-from repro.core.far import schedule_batch
 from repro.core.multibatch import Tail, concatenate
+from repro.core.policy import SchedulerConfig, get_policy
 from repro.core.problem import Schedule, Task
 from repro.runtime.executor import ExecutionResult, Fault, SimExecutor, Slowdown
 
@@ -46,10 +46,17 @@ class ClusterManager:
         spec: DeviceSpec = TPU_POD_256,
         concat_mode: str = "move_swap",
         straggle_tol: float = 0.05,
+        policy: str = "far",
+        config: SchedulerConfig | None = None,
     ):
         self.spec = spec
-        self.concat_mode = concat_mode
         self.straggle_tol = straggle_tol
+        self.policy = policy
+        # config is authoritative when given; the legacy concat_mode param
+        # is only consulted to build the default (same rule as
+        # MultiBatchScheduler)
+        self.config = config or SchedulerConfig(concat_mode=concat_mode)
+        self.concat_mode = self.config.concat_mode
         self.queue: list[Job] = []
         self.tail = Tail.empty(spec)
         self.history: list[BatchRecord] = []
@@ -86,10 +93,10 @@ class ClusterManager:
             tasks.append(t)
             by_task_id[t.id] = job
 
-        far = schedule_batch(tasks, self.spec)
+        plan = get_policy(self.policy).plan(tasks, self.spec, self.config)
         out = concatenate(
-            far.assignment, self.tail, mode=self.concat_mode,
-            reverse=self._flip,
+            plan.assignment, self.tail, mode=self.concat_mode,
+            reverse=self._flip, use_engine=self.config.use_engine,
         )
         self._flip = not self._flip
         self.tail = out.tail

@@ -2,8 +2,10 @@
 
 from repro.core.device_spec import A100, TPU_POD_256
 from repro.core.far import schedule_batch
+from repro.core.multibatch import MultiBatchScheduler
 from repro.core.online import OnlineScheduler
 from repro.core.problem import validate_schedule
+from repro.core.repartition import replay
 from repro.core.synth import generate_tasks, workload
 
 
@@ -30,3 +32,40 @@ def test_online_molds_to_different_sizes():
     online = OnlineScheduler(A100)
     sizes = {online.submit(t).size for t in tasks}
     assert len(sizes) > 1  # actually exercises moldability
+
+
+def test_online_persistent_engine_matches_cold_replay():
+    """makespan/schedule are served from one long-lived engine; a cold
+    replay of the committed assignment is the oracle after every submit
+    (the timing-engine replay-equivalence contract, bit-for-bit)."""
+    tasks = generate_tasks(
+        10, A100, workload("mixed", "wide", A100), seed=2
+    )
+    online = OnlineScheduler(A100)
+    for t in tasks:
+        online.submit(t)
+        assert online.makespan == replay(online.assignment).makespan
+        cold = replay(online.assignment)
+        hot = online.schedule()
+        assert [(it.task.id, it.begin, it.node.key) for it in hot.items] == \
+            [(it.task.id, it.begin, it.node.key) for it in cold.items]
+
+
+def test_online_with_tail_context_extends_committed_schedule():
+    """Seeded with a committed tail, arrivals land after the released
+    slices and the combined (batch + online) schedule stays feasible."""
+    batch = generate_tasks(8, A100, workload("mixed", "wide", A100), seed=3)
+    mb = MultiBatchScheduler(A100, mode="trivial")
+    mb.add_batch(batch)
+    extra = generate_tasks(
+        4, A100, workload("mixed", "wide", A100), seed=4, id_offset=1_000
+    )
+    online = OnlineScheduler(
+        A100, release=mb.tail.release, alive=mb.tail.alive
+    )
+    for t in extra:
+        online.submit(t)
+    mb.adopt_segment(online.schedule())
+    validate_schedule(
+        mb.combined_schedule(), batch + extra, check_reconfig=False
+    )

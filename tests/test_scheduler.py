@@ -4,7 +4,8 @@ import pytest
 
 from repro.core import (
     A30, A100, TPU_POD_256,
-    Task, area_lower_bound, rho, schedule_batch, validate_schedule,
+    SchedulerConfig, Task, area_lower_bound, rho, schedule_batch,
+    validate_schedule,
 )
 from repro.core.allocations import allocation_family, first_allocation
 from repro.core.baselines import (
@@ -86,8 +87,8 @@ def test_refinement_never_hurts():
     for seed in range(5):
         tasks = generate_tasks(20, spec, workload("mixed", "narrow", spec),
                                seed=seed)
-        r_no = schedule_batch(tasks, spec, refine=False)
-        r_yes = schedule_batch(tasks, spec, refine=True)
+        r_no = schedule_batch(tasks, spec, SchedulerConfig(refine=False))
+        r_yes = schedule_batch(tasks, spec, SchedulerConfig(refine=True))
         assert r_yes.makespan <= r_no.makespan + 1e-9
         validate_schedule(r_yes.schedule, tasks)
 
@@ -95,8 +96,8 @@ def test_refinement_never_hurts():
 def test_pruning_does_not_change_result():
     spec = A100
     tasks = generate_tasks(14, spec, workload("good", "wide", spec), seed=11)
-    a = schedule_batch(tasks, spec, prune=True)
-    b = schedule_batch(tasks, spec, prune=False)
+    a = schedule_batch(tasks, spec, SchedulerConfig(prune=True))
+    b = schedule_batch(tasks, spec, SchedulerConfig(prune=False))
     assert abs(a.makespan - b.makespan) < 1e-9
     assert a.evaluated <= b.evaluated
 

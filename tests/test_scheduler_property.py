@@ -9,7 +9,7 @@ from hypothesis import given, settings
 
 from repro.core import (
     A30, A100, TPU_POD_256,
-    Task, schedule_batch, validate_schedule,
+    SchedulerConfig, Task, schedule_batch, validate_schedule,
 )
 from repro.core.bounds import theorem1_rigid_bound
 from repro.core.multibatch import MultiBatchScheduler, Tail, concatenate
@@ -64,7 +64,7 @@ def test_far_always_feasible(batch):
 def test_far_within_certified_factor_of_area_bound(batch):
     """ω(no reconfig) ≤ Theorem-1 bound for the winning allocation."""
     spec, tasks = batch
-    res = schedule_batch(tasks, spec, refine=False)
+    res = schedule_batch(tasks, spec, SchedulerConfig(refine=False))
     nr = replay(res.assignment, include_reconfig=False)
     assert nr.makespan <= theorem1_rigid_bound(nr) + 1e-6
 

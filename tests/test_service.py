@@ -1,0 +1,176 @@
+"""SchedulingService semantics: latency-budget flushing, online fallback
+for slow trickles, determinism, and tail reuse across flushes."""
+
+import pytest
+
+from repro.core import (
+    A100,
+    SchedulerConfig,
+    SchedulingService,
+    get_policy,
+    validate_schedule,
+)
+from repro.core.synth import generate_tasks, workload
+
+
+def _tasks(n, seed=0):
+    return generate_tasks(n, A100, workload("mixed", "wide", A100), seed=seed)
+
+
+def _cfg(**kw):
+    base = dict(max_wait_s=10.0, max_batch=32, min_batch=2)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def test_arrivals_within_budget_batch_together():
+    tasks = _tasks(8)
+    svc = SchedulingService(A100, config=_cfg())
+    # six tasks inside one 10s window, then one arrival past the deadline
+    for i, t in enumerate(tasks[:6]):
+        svc.submit(t, arrival=float(i))          # t = 0..5
+    assert svc.stats.batches == 0                # budget not yet expired
+    svc.submit(tasks[6], arrival=30.0)           # deadline 0+10 passed
+    assert svc.stats.batches == 1
+    batch_decisions = [d for d in svc.stats.decisions if d.route == "batch"]
+    assert {d.task_id for d in batch_decisions} == {t.id for t in tasks[:6]}
+    # all six were decided together at the first task's deadline
+    assert {d.decided_at for d in batch_decisions} == {10.0}
+    assert all(d.queue_delay <= 10.0 + 1e-9 for d in batch_decisions)
+    svc.submit(tasks[7], arrival=31.0)
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    assert svc.stats.batches == 2
+
+
+def test_slow_trickle_falls_back_to_online_placement():
+    tasks = _tasks(5, seed=2)
+    svc = SchedulingService(A100, config=_cfg(max_wait_s=5.0))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=i * 100.0)         # gaps far beyond the budget
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    assert svc.stats.batches == 0
+    assert svc.stats.online_placements == len(tasks)
+    assert all(d.route == "online" for d in svc.stats.decisions)
+
+
+def test_max_batch_flushes_early():
+    tasks = _tasks(4, seed=1)
+    svc = SchedulingService(A100, config=_cfg(max_batch=4))
+    for t in tasks:
+        svc.submit(t, arrival=0.0)               # same instant: budget never expires
+    assert svc.stats.batches == 1                # size cap fired instead
+    assert svc.stats.decisions[0].queue_delay == 0.0
+
+
+def test_urgent_bypasses_the_budget():
+    tasks = _tasks(3, seed=4)
+    svc = SchedulingService(A100, config=_cfg())
+    svc.submit(tasks[0], arrival=0.0)
+    svc.submit(tasks[1], arrival=1.0, urgent=True)
+    assert svc.stats.online_placements == 1      # placed immediately
+    assert len(svc.pending) == 1                 # the queued task stays queued
+    svc.submit(tasks[2], arrival=2.0)
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+
+
+def test_deterministic_under_fixed_seed():
+    def run():
+        svc = SchedulingService(A100, config=_cfg(max_wait_s=3.0))
+        arrival = 0.0
+        for i, t in enumerate(_tasks(14, seed=9)):
+            arrival += 0.5 if i % 7 else 20.0
+            svc.submit(t, arrival=arrival)
+        combined = svc.drain()
+        return (
+            svc.makespan,
+            svc.stats.batches,
+            svc.stats.online_placements,
+            sorted((it.task.id, it.node.key, it.begin) for it in combined.items),
+        )
+
+    assert run() == run()
+
+
+def test_tail_reuse_across_consecutive_flushes():
+    tasks = _tasks(12, seed=5)
+    svc = SchedulingService(A100, config=_cfg(max_wait_s=2.0))
+    for i, t in enumerate(tasks):
+        # two dense bursts separated by a long gap -> two batch flushes
+        svc.submit(t, arrival=(0.0 if i < 6 else 100.0) + 0.1 * i)
+    combined = svc.drain()
+    assert svc.stats.batches == 2
+    assert len(svc.mb.segments) == 2
+    # the second flush was planned against the first one's tail: its tasks
+    # never overlap the committed work (the combined schedule is feasible)
+    validate_schedule(combined, tasks, check_reconfig=False)
+    seg1, seg2 = svc.mb.segments
+    assert min(it.begin for it in seg2.items) >= 0.0
+    assert svc.tail.release != {k: 0.0 for k in svc.tail.release}
+    # offline FAR on everything at once is the floor for the split stream
+    offline = get_policy("far").plan(tasks, A100).makespan
+    assert svc.makespan >= offline - 1e-6
+
+
+def test_placements_never_precede_arrival_or_decision():
+    """The combined timeline is causal: no task starts before the flush
+    decision that placed it (and hence before its own arrival) — on both
+    the batch path and the online-fallback path."""
+    tasks = _tasks(7, seed=11)
+    svc = SchedulingService(A100, config=_cfg(max_wait_s=5.0))
+    arrivals = [0.0, 1.0, 2.0, 200.0, 400.0, 600.0, 800.0]
+    for t, a in zip(tasks, arrivals):
+        svc.submit(t, arrival=a)
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    assert svc.stats.batches >= 1 and svc.stats.online_placements >= 1
+    decided = {d.task_id: d.decided_at for d in svc.stats.decisions}
+    arrived = {t.id: a for t, a in zip(tasks, arrivals)}
+    for it in combined.items:
+        assert it.begin >= arrived[it.task.id] - 1e-9
+        assert it.begin >= decided[it.task.id] - 1e-9
+
+
+def test_arrivals_must_be_non_decreasing():
+    svc = SchedulingService(A100, config=_cfg())
+    t1, t2 = _tasks(2, seed=6)
+    svc.submit(t1, arrival=10.0)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        svc.submit(t2, arrival=5.0)
+
+
+def test_multi_gpu_pool():
+    svc = SchedulingService(
+        A100, config=_cfg(max_batch=6), pool_size=2
+    )
+    assert svc.spec.n_slices == 2 * A100.n_slices
+    tasks = generate_tasks(
+        6, svc.spec, workload("mixed", "wide", svc.spec), seed=0
+    )
+    for t in tasks:
+        svc.submit(t, arrival=0.0)
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    # both trees host work: the pool is actually used
+    assert {it.node.tree for it in combined.items} == {0, 1}
+
+
+def test_mixed_batch_and_online_share_one_timeline():
+    """A batch flush, then a trickle fallback, then another batch — all
+    three segments must coexist feasibly (the online fallback is seeded
+    with the committed tail)."""
+    tasks = _tasks(11, seed=8)
+    svc = SchedulingService(A100, config=_cfg(max_wait_s=6.0))
+    arrivals = [0, 1, 2, 3, 4,          # burst -> batch
+                50,                     # lone straggler -> online fallback
+                100, 101, 102, 103, 104]  # second burst -> batch
+    for t, arr in zip(tasks, arrivals):
+        svc.submit(t, arrival=float(arr))
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    assert svc.stats.batches == 2
+    assert svc.stats.online_placements == 1
+    routes = {d.task_id: d.route for d in svc.stats.decisions}
+    assert routes[tasks[5].id] == "online"

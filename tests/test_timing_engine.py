@@ -16,6 +16,7 @@ import pytest
 
 from repro.core.device_spec import A30, A100, TPU_POD_256
 from repro.core.far import schedule_batch
+from repro.core.policy import SchedulerConfig
 from repro.core.multibatch import MultiBatchScheduler, Tail, seam_refine
 from repro.core.problem import validate_schedule
 from repro.core.refine import refine_assignment
@@ -27,6 +28,8 @@ from repro.core.repartition import (
 from repro.core.allocations import allocation_family
 from repro.core.synth import generate_tasks, workload
 from repro.core.timing import ReplayEngine, TimingEngine
+
+NO_REFINE = SchedulerConfig(refine=False)
 
 SPECS = (A30, A100, TPU_POD_256)
 
@@ -106,7 +109,7 @@ def test_engine_matches_replay_under_random_edits(spec, direction, with_tail):
 def test_engine_undo_interleaved_with_evaluation():
     spec = A100
     tasks = generate_tasks(10, spec, workload("good", "wide", spec), seed=5)
-    assignment = schedule_batch(tasks, spec, refine=False).assignment
+    assignment = schedule_batch(tasks, spec, NO_REFINE).assignment
     eng = TimingEngine(assignment)
     rng = random.Random(99)
     before = {
@@ -131,7 +134,7 @@ def test_engine_undo_interleaved_with_evaluation():
 def test_task_begin_end_matches_schedule():
     spec = A100
     tasks = generate_tasks(9, spec, workload("poor", "narrow", spec), seed=2)
-    assignment = schedule_batch(tasks, spec, refine=False).assignment
+    assignment = schedule_batch(tasks, spec, NO_REFINE).assignment
     for direction in ("forward", "reverse"):
         eng = TimingEngine(assignment, direction=direction)
         sched = replay(assignment, direction=direction)
@@ -162,7 +165,7 @@ def test_refine_engine_path_equals_replay_path(spec):
             tasks = generate_tasks(
                 n, spec, workload(scaling, times, spec), seed=n
             )
-            base = schedule_batch(tasks, spec, refine=False).assignment
+            base = schedule_batch(tasks, spec, NO_REFINE).assignment
             a_asgn, a_sched, a_stats = refine_assignment(base, use_engine=True)
             b_asgn, b_sched, b_stats = refine_assignment(base, use_engine=False)
             assert a_sched.makespan == b_sched.makespan
@@ -198,8 +201,8 @@ def test_schedule_batch_paths_identical_on_t4_t9_workloads():
         cfg = workload(scaling, times, spec)
         for n in (10, 30):
             tasks = generate_tasks(n, spec, cfg, seed=n)
-            a = schedule_batch(tasks, spec, use_engine=True)
-            b = schedule_batch(tasks, spec, use_engine=False)
+            a = schedule_batch(tasks, spec, SchedulerConfig(use_engine=True))
+            b = schedule_batch(tasks, spec, SchedulerConfig(use_engine=False))
             assert a.makespan == b.makespan
             assert a.assignment.node_tasks == b.assignment.node_tasks
             validate_schedule(a.schedule, tasks)
