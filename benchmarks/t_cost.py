@@ -2,19 +2,26 @@
 
 Paper (C++, Ryzen 5 4600H): 12.3 ms / 532 ms / 1621 ms at n=100/500/1000.
 Ours is Python with an admissible allocation-family pruning (far.py), a
-warm-started family evaluation and the incremental timing engine
-(core/timing.py) on every refinement hot path.
+warm-started family evaluation with an incremental prune area, the
+incremental timing engine (core/timing.py) on every refinement hot path,
+and a jax array-program family evaluator (core/family_eval.py) selectable
+via ``SchedulerConfig(evaluator=...)``.
 
 Besides the printed table, the run emits ``BENCH_sched_cost.json`` in the
-repo root: batch size -> p50/p95 scheduler latency with per-phase
-breakdown (family / evaluate / refine), plus the end-to-end speedup of
-the incremental-engine pipeline over the in-tree replay-per-query
-reference pipeline (``schedule_batch(use_engine=False)``) at n=200.
-Note the reference pipeline itself already contains this PR's replay
-micro-optimisations, so the recorded speedup *understates* the gain over
-the true pre-change code.
+repo root: per batch size and per evaluator (sequential / vectorized),
+p50/p95 scheduler latency with per-phase breakdown (family / evaluate /
+refine), the *paired* evaluate-phase speedup of the vectorized evaluator
+(both sides of every ratio measured back-to-back — the container wall
+clock drifts far too much for independent medians), and the same paired
+comparison for the unpruned full-family regime where the array program
+does its real work.
+
+CLI: ``PYTHONPATH=src python -m benchmarks.t_cost [--quick] [--reps N]``
+— ``--quick`` restricts to n <= 200 with few reps (the CI bench-smoke
+step).
 """
 
+import argparse
 import json
 import os
 import time
@@ -32,15 +39,16 @@ from benchmarks.common import Rows
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_sched_cost.json")
 
+EVALUATORS = ("sequential", "vectorized")
 
-def _timed_runs(tasks, reps: int, use_engine: bool = True):
-    """Per-run wall times + per-phase medians for schedule_batch(refine=True)."""
+
+def _timed_runs(tasks, reps: int, config: SchedulerConfig):
+    """Per-run wall times + per-phase medians for schedule_batch."""
     times, phases = [], []
-    cfg = SchedulerConfig(use_engine=use_engine)
-    schedule_batch(tasks, A100, cfg)  # warm caches
+    schedule_batch(tasks, A100, config)  # warm caches / jit compiles
     for _ in range(reps):
         t0 = time.perf_counter()
-        res = schedule_batch(tasks, A100, cfg)
+        res = schedule_batch(tasks, A100, config)
         times.append(time.perf_counter() - t0)
         phases.append(res.phase_s)
     med_phase = {
@@ -50,14 +58,41 @@ def _timed_runs(tasks, reps: int, use_engine: bool = True):
     return np.asarray(times) * 1e3, med_phase, res
 
 
-def run(reps: int = 5) -> Rows:
-    reps = max(reps, 5)
+def _paired_evaluate_speedup(tasks, reps: int, **config_kwargs):
+    """Median of per-pair evaluate-phase ratios, sequential/vectorized.
+
+    The two configs run in strict alternation so both sides of every
+    ratio see the same machine state (the container clock drifts ±30%+).
+    """
+    cfgs = {
+        ev: SchedulerConfig(evaluator=ev, **config_kwargs)
+        for ev in EVALUATORS
+    }
+    for cfg in cfgs.values():
+        schedule_batch(tasks, A100, cfg)
+    ratios, med = [], {ev: [] for ev in EVALUATORS}
+    for _ in range(reps):
+        step = {}
+        for ev, cfg in cfgs.items():
+            res = schedule_batch(tasks, A100, cfg)
+            step[ev] = res.phase_s["evaluate"] * 1e3
+            med[ev].append(step[ev])
+        ratios.append(step["sequential"] / step["vectorized"])
+    return (
+        float(np.median(ratios)),
+        {ev: float(np.median(v)) for ev, v in med.items()},
+    )
+
+
+def run(reps: int = 5, quick: bool = False) -> Rows:
+    reps = max(reps, 3 if quick else 5)
+    sizes = (100, 200) if quick else (100, 200, 500, 1000, 2000)
     rows = Rows(
         "Scheduler cost (MixedScaling, WideTimes, A100)",
-        ["n", "far_p50_ms", "far_p95_ms", "evaluated/family",
-         "miso_ms", "fixpart_ms", "paper_far_ms"],
+        ["n", "evaluator", "p50_ms", "p95_ms", "eval_phase_ms",
+         "evaluated/family", "paper_far_ms"],
     )
-    paper = {100: 12.32, 200: "-", 500: 532.21, 1000: 1620.82}
+    paper = {100: 12.32, 200: "-", 500: 532.21, 1000: 1620.82, 2000: "-"}
     cfg = workload("mixed", "wide", A100)
     report = {
         "device": "A100",
@@ -65,40 +100,52 @@ def run(reps: int = 5) -> Rows:
         "metric": "schedule_batch(refine=True) end-to-end wall ms",
         "entries": [],
     }
-    for n in (100, 200, 500, 1000):
+    for n in sizes:
         ts = generate_tasks(n, A100, cfg, seed=0)
-        times, med_phase, res = _timed_runs(ts, reps)
-        p50 = float(np.percentile(times, 50))
-        p95 = float(np.percentile(times, 95))
+        per_eval = {}
+        for ev in EVALUATORS:
+            times, med_phase, res = _timed_runs(
+                ts, reps, SchedulerConfig(evaluator=ev))
+            p50 = float(np.percentile(times, 50))
+            p95 = float(np.percentile(times, 95))
+            per_eval[ev] = {
+                "p50_ms": p50,
+                "p95_ms": p95,
+                "phase_median_ms": med_phase,
+                "evaluated": res.evaluated,
+                "family_size": res.family_size,
+            }
+            rows.add(n, ev, p50, p95, med_phase["evaluate"],
+                     f"{res.evaluated}/{res.family_size}", paper[n])
+        speedup, eval_med = _paired_evaluate_speedup(ts, reps)
+        entry = {"n": n, "evaluators": per_eval,
+                 "evaluate_paired_speedup_vec_vs_seq": speedup,
+                 "evaluate_paired_median_ms": eval_med}
+        if not quick:
+            # the unpruned full-family regime (policy sweeps / research
+            # runs score every candidate) is where the array program wins
+            fspeed, fmed = _paired_evaluate_speedup(
+                ts, max(3, reps // 2), prune=False, refine=False)
+            entry["full_family_evaluate_paired_speedup"] = fspeed
+            entry["full_family_evaluate_paired_median_ms"] = fmed
+        report["entries"].append(entry)
+
         t0 = time.perf_counter()
         miso_opt(ts, A100)
-        miso_ms = (time.perf_counter() - t0) * 1e3
+        entry["miso_ms"] = (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
         fix_part(ts, A100, partition_of_ones(A100))
-        fp_ms = (time.perf_counter() - t0) * 1e3
-        rows.add(n, p50, p95, f"{res.evaluated}/{res.family_size}",
-                 miso_ms, fp_ms, paper[n])
-        report["entries"].append({
-            "n": n,
-            "p50_ms": p50,
-            "p95_ms": p95,
-            "phase_median_ms": med_phase,
-            "evaluated": res.evaluated,
-            "family_size": res.family_size,
-        })
+        entry["fixpart_ms"] = (time.perf_counter() - t0) * 1e3
 
-    # engine-vs-replay pipeline speedup at n=200 (acceptance tracking).
-    # The container's wall clock drifts ±30%, so the two pipelines are
-    # measured in strict alternation and the speedup is the median of the
-    # per-pair ratios — both sides of every ratio see the same machine
-    # state, unlike two sequential best-of-N blocks.
+    # engine-vs-replay pipeline speedup at n=200 (acceptance tracking,
+    # measured in strict alternation like the evaluator pairing above)
     ts = generate_tasks(200, A100, cfg, seed=0)
     eng_cfg = SchedulerConfig(use_engine=True)
     rep_cfg = SchedulerConfig(use_engine=False)
     schedule_batch(ts, A100, eng_cfg)
     schedule_batch(ts, A100, rep_cfg)
     eng_times, rep_times = [], []
-    for _ in range(max(reps, 15)):
+    for _ in range(max(reps, 5 if quick else 15)):
         t0 = time.perf_counter()
         schedule_batch(ts, A100, eng_cfg)
         eng_times.append(time.perf_counter() - t0)
@@ -114,14 +161,27 @@ def run(reps: int = 5) -> Rows:
     report["n200_replay_path_best_ms"] = float(np.min(rep_times))
     report["n200_speedup_engine_vs_replay_path"] = speedup
     report["note"] = (
-        "replay path (use_engine=False) includes PR 1's replay "
-        "micro-optimisations, so this ratio understates the speedup over "
-        "the true pre-change code (the seed commit measured ~28.6 ms "
-        "median for this workload on the PR 1 container — a one-off "
-        "provenance data point, not reproduced by this script)"
+        "evaluator entries are bit-identical in output (enforced by "
+        "tests/test_family_eval.py); the vectorized evaluator amortizes a "
+        "fixed per-step array-program cost across the scored candidates, "
+        "so it pays off where many candidates are scored (unpruned "
+        "full-family runs, very large pruned batches) while the default "
+        "admissible prune keeps small/medium batches on the sequential "
+        "path via evaluator='auto'.  The replay path (use_engine=False) "
+        "includes PR 1's replay micro-optimisations, so that ratio "
+        "understates the speedup over the true pre-change code."
     )
     with open(JSON_PATH, "w") as fh:
         json.dump(report, fh, indent=2)
     rows.add("n=200 speedup", f"{speedup:.1f}x", "(engine vs replay path)",
              "", "", "", "")
     return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="n <= 200, few reps (CI bench-smoke)")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    print(run(reps=args.reps, quick=args.quick).render())

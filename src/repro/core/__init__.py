@@ -13,6 +13,11 @@ from repro.core.device_spec import (
     InstanceNode,
     multi_gpu,
 )
+from repro.core.family_eval import (
+    FamilyEvaluator,
+    get_evaluator,
+    register_evaluator,
+)
 from repro.core.far import FARResult, far_schedule, rho, schedule_batch
 from repro.core.multibatch import (
     ConcatResult,
@@ -65,6 +70,7 @@ __all__ = [
     "TimingEngine", "ReplayEngine", "make_engine",
     "RefineStats", "refine_assignment",
     "FARResult", "far_schedule", "schedule_batch", "rho",
+    "FamilyEvaluator", "get_evaluator", "register_evaluator",
     "MultiBatchScheduler", "Tail", "ConcatResult", "concatenate",
     "multibatch_baseline", "tail_after",
     "OnlineScheduler", "OnlinePlacement",

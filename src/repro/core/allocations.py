@@ -26,14 +26,6 @@ def first_allocation(tasks: Sequence[Task], spec: DeviceSpec) -> Allocation:
     return tuple(min_work_size(t.times, sizes) for t in tasks)
 
 
-def _next_size(task: Task, current: int, sizes: Sequence[int]) -> int | None:
-    """argmin_{s>current} s*t(s), or None when current is already max."""
-    bigger = [s for s in sizes if s > current]
-    if not bigger:
-        return None
-    return min(bigger, key=lambda s: (s * task.times[s], s))
-
-
 def allocation_family_deltas(
     tasks: Sequence[Task], spec: DeviceSpec
 ) -> tuple[Allocation, list[tuple[int, int]]]:
@@ -57,6 +49,10 @@ def allocation_family_deltas(
     deltas: list[tuple[int, int]] = []
     heap = [(-tasks[i].times[alloc[i]], i) for i in range(len(tasks))]
     heapq.heapify(heap)
+    # the strictly-larger size options per current size, precomputed once
+    # and sorted ascending so the first-wins tie-break below picks the
+    # fewest slices even if a custom spec lists sizes out of order
+    bigger = {s: tuple(sorted(b for b in sizes if b > s)) for s in sizes}
     while True:
         # the longest task under the current allocation
         while True:
@@ -64,11 +60,18 @@ def allocation_family_deltas(
             if -d == tasks[j].times[alloc[j]]:
                 break
             heapq.heappop(heap)  # stale: task j has since been widened
-        nxt = _next_size(tasks[j], alloc[j], sizes)
-        if nxt is None:
+        options = bigger[alloc[j]]
+        if not options:
             return first, deltas
+        times = tasks[j].times
+        nxt = options[0]
+        best_w = nxt * times[nxt]
+        for s in options[1:]:
+            w = s * times[s]
+            if w < best_w:  # ties toward fewer slices: options ascend
+                best_w, nxt = w, s
         alloc[j] = nxt
-        heapq.heappush(heap, (-tasks[j].times[nxt], j))
+        heapq.heappush(heap, (-times[nxt], j))
         deltas.append((j, nxt))
 
 

@@ -30,6 +30,7 @@ from typing import Sequence
 
 from repro.core.allocations import Allocation, allocation_family_deltas
 from repro.core.device_spec import DeviceSpec
+from repro.core.family_eval import get_evaluator, resolve_evaluator
 from repro.core.policy import (
     LEGACY_KWARGS,
     BasePolicy,
@@ -39,13 +40,7 @@ from repro.core.policy import (
 )
 from repro.core.problem import Schedule, Task, area_lower_bound
 from repro.core.refine import RefineStats, refine_assignment
-from repro.core.repartition import (
-    Assignment,
-    LPTGroups,
-    list_schedule_allocation,
-    replay,
-)
-from repro.core.timing import chains_makespan
+from repro.core.repartition import Assignment, replay
 
 
 @dataclasses.dataclass
@@ -123,7 +118,12 @@ def far_schedule(
     ``config.use_engine`` selects the incremental timing path (warm-started
     family evaluation + engine-scored refinement, default) or the cold
     replay-per-candidate reference path.  Both produce identical schedules;
-    the flag exists for the equivalence tests and perf baselines."""
+    the flag exists for the equivalence tests and perf baselines.
+
+    ``config.evaluator`` selects the phase-2 family evaluator —
+    ``"sequential"``, ``"vectorized"`` (chunked array-program scoring) or
+    ``"auto"`` — all bit-identical in output; see
+    :mod:`repro.core.family_eval`."""
     eps = config.eps
     t0 = time.perf_counter()
     if not tasks:
@@ -144,42 +144,21 @@ def far_schedule(
     family_size = len(deltas) + 1
     t1 = time.perf_counter()
 
-    # Phase 2: consecutive family allocations differ in exactly one task's
-    # size, so the per-size LPT groups are warm-started (bisect remove +
-    # insert) instead of re-grouped and re-sorted per allocation, and each
-    # candidate's makespan is read from the timing engine without building
-    # a full Schedule.  Only the winner is replayed into a Schedule.
-    groups = LPTGroups(tasks, first, spec) if config.use_engine else None
-    alloc = list(first)
-    best: tuple[float, int, Assignment, Allocation] | None = None
-    evaluated = 0
-    idx = 0
-    while True:
-        if config.prune and best is not None:
-            area = sum(
-                s * t.times[s] for t, s in zip(tasks, alloc)
-            )
-            if area / spec.n_slices >= best[0] - eps:
-                break  # all later allocations have >= area -> dominated
-        if groups is not None:
-            assignment, node_durs = groups.schedule_with_durs()
-            makespan = chains_makespan(spec, assignment.node_tasks, node_durs)
-        else:
-            assignment = list_schedule_allocation(tasks, tuple(alloc), spec)
-            makespan = replay(assignment).makespan
-        evaluated += 1
-        if best is None or makespan < best[0] - eps:
-            best = (makespan, idx, assignment, tuple(alloc))
-        if idx == len(deltas):
-            break
-        j, new_size = deltas[idx]
-        if groups is not None:
-            groups.move(tasks[j], alloc[j], new_size)
-        alloc[j] = new_size
-        idx += 1
-
-    assert best is not None
-    makespan_p2, win_idx, assignment, winner_alloc = best
+    # Phase 2: score the family through the configured evaluator
+    # (family_eval.py).  "sequential" warm-starts per-size LPT groups
+    # across the one-task deltas and scores each candidate with the lean
+    # chains_makespan; "vectorized" lowers the same simulation into a
+    # chunked array program; both select the identical EPS-ordered winner
+    # and only the winner is ever replayed into a Schedule.
+    evaluator = get_evaluator(
+        resolve_evaluator(config, len(tasks), family_size)
+    )
+    winner = evaluator.evaluate(tasks, spec, first, deltas, config)
+    makespan_p2 = winner.makespan
+    win_idx = winner.index
+    assignment = winner.assignment
+    winner_alloc = winner.allocation
+    evaluated = winner.evaluated
     t2 = time.perf_counter()
 
     stats: RefineStats | None = None

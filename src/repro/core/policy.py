@@ -32,6 +32,12 @@ from repro.core.problem import EPS, Schedule, Task, validate_schedule
 from repro.core.repartition import Assignment
 
 
+#: valid SchedulerConfig.evaluator values (the family-evaluator registry
+#: in repro.core.family_eval may grow beyond these for custom plugins;
+#: config validation names only the built-ins plus "auto")
+_EVALUATOR_CHOICES = frozenset({"sequential", "vectorized", "auto"})
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """All scheduling knobs in one immutable value.
@@ -49,6 +55,11 @@ class SchedulerConfig:
     deep_refine: bool = False         # beyond-paper exact greedy pass
     use_engine: bool = True           # incremental TimingEngine vs replays
     eps: float = EPS                  # float tolerance for comparisons
+    # phase-2 family evaluator: "sequential" (one Algorithm-1 simulation
+    # per candidate), "vectorized" (chunked array-program scoring,
+    # bit-identical winners — see repro.core.family_eval), or "auto"
+    # (vectorized when jax is available and the batch is large enough).
+    evaluator: str = "auto"
 
     # -- seam concatenation (tail-aware planning) ---------------------------
     concat_mode: str = "move_swap"    # "trivial" | "reverse" | "move_swap" | "auto"
@@ -62,6 +73,20 @@ class SchedulerConfig:
     max_wait_s: float = 0.25          # accumulate arrivals this long
     max_batch: int = 32               # flush earlier once this many queue up
     min_batch: int = 2                # smaller deadline flushes go online
+
+    def __post_init__(self):
+        if self.evaluator in _EVALUATOR_CHOICES:
+            return
+        # custom evaluators registered via family_eval.register_evaluator
+        # are also accepted (imported lazily to keep `import policy` light)
+        from repro.core.family_eval import EVALUATORS
+
+        if self.evaluator not in EVALUATORS:
+            raise ValueError(
+                f"SchedulerConfig.evaluator must be one of "
+                f"{sorted(_EVALUATOR_CHOICES | set(EVALUATORS))}, "
+                f"got {self.evaluator!r}"
+            )
 
     def replace(self, **changes) -> "SchedulerConfig":
         return dataclasses.replace(self, **changes)

@@ -245,6 +245,54 @@ class LPTGroups:
         )
 
 
+@dataclasses.dataclass
+class SizeSortedOrders:
+    """Per-size LPT total orders of one whole batch, as arrays.
+
+    For each instance size ``s`` the batch is sorted by ``(-times[s], id)``
+    — the exact key :class:`LPTGroups` maintains — so any allocation's
+    size-``s`` group is a *subset of positions* in that fixed order, and a
+    family of allocations becomes a boolean membership tensor over it.
+    This is the array layout the vectorized phase-2 evaluator
+    (:mod:`repro.core.family_eval`) scores candidate chunks from.
+
+    Attributes (``S`` = number of sizes, ``n`` = batch size):
+      sizes: the spec's sizes, fixing the ``S`` axis order.
+      order: ``(S, n)`` int — batch positions sorted per size.
+      inv: ``(S, n)`` int — inverse permutations (batch position -> rank).
+      durs: ``(S, n)`` float64 — ``times[s]`` in sorted order.
+      ids: ``(S, n)`` int64 — task ids in sorted order.
+    """
+
+    sizes: tuple[int, ...]
+    order: "object"
+    inv: "object"
+    durs: "object"
+    ids: "object"
+
+
+def size_sorted_orders(tasks: Sequence[Task], spec: DeviceSpec) -> SizeSortedOrders:
+    """Build the per-size LPT total orders of ``tasks`` (see
+    :class:`SizeSortedOrders`)."""
+    import numpy as np
+
+    n = len(tasks)
+    sizes = spec.sizes
+    ids_arr = np.array([t.id for t in tasks], dtype=np.int64)
+    times = np.array([[t.times[s] for t in tasks] for s in sizes])
+    order = np.empty((len(sizes), n), dtype=np.int64)
+    inv = np.empty_like(order)
+    durs = np.empty((len(sizes), n))
+    ids = np.empty((len(sizes), n), dtype=np.int64)
+    for k in range(len(sizes)):
+        o = np.lexsort((ids_arr, -times[k]))
+        order[k] = o
+        inv[k, o] = np.arange(n)
+        durs[k] = times[k, o]
+        ids[k] = ids_arr[o]
+    return SizeSortedOrders(tuple(sizes), order, inv, durs, ids)
+
+
 def replay(
     assignment: Assignment,
     release: dict | None = None,

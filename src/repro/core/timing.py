@@ -696,6 +696,153 @@ def chains_makespan(
     return makespan
 
 
+class IdentityCache:
+    """Small FIFO cache keyed by an anchor object's identity (plus an
+    optional hashable extra), for per-DeviceSpec derived structures.
+
+    ``DeviceSpec`` holds dict fields, so it is not hashable; each entry
+    keeps a strong reference to the anchor so its ``id`` stays valid for
+    the entry's lifetime.  Shared by the batched-walk matrices below and
+    the array-program caches in :mod:`repro.core.family_eval`.
+    """
+
+    def __init__(self, max_size: int):
+        self._max = max_size
+        self._entries: dict[tuple, tuple] = {}
+
+    def get(self, anchor, extra=()):
+        entry = self._entries.get((id(anchor), extra))
+        if entry is not None and entry[0] is anchor:
+            return entry[1]
+        return None
+
+    def put(self, anchor, value, extra=()) -> None:
+        if len(self._entries) >= self._max:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[(id(anchor), extra)] = (anchor, value)
+
+
+#: per-spec static matrices for the batched walk
+_BATCH_SPEC_CACHE = IdentityCache(16)
+
+
+def _batch_spec_arrays(spec: DeviceSpec) -> tuple:
+    """(tc, td, childmask, descmask, root_idx) per spec.nodes order."""
+    cached = _BATCH_SPEC_CACHE.get(spec)
+    if cached is not None:
+        return cached
+    import numpy as np
+
+    nodes = spec.nodes
+    n = len(nodes)
+    index = {node.key: i for i, node in enumerate(nodes)}
+    tc = np.array([spec.t_create[node.size] for node in nodes])
+    td = np.array([spec.t_destroy[node.size] for node in nodes])
+    childmask = np.zeros((n, n), dtype=bool)   # childmask[p, c]: c child of p
+    descmask = np.zeros((n, n), dtype=bool)    # descmask[a, b]: b in subtree(a)
+    for i, node in enumerate(nodes):
+        for child in node.children:
+            childmask[i, index[child.key]] = True
+
+    def mark(i: int, anc: list[int]) -> None:
+        for a in anc:
+            descmask[a, i] = True
+        descmask[i, i] = True
+        for child in nodes[i].children:
+            mark(index[child.key], anc + [i])
+
+    root_idx = [index[r.key] for r in spec.roots]
+    for i in root_idx:
+        mark(i, [])
+    out = (tc, td, childmask, descmask, root_idx)
+    _BATCH_SPEC_CACHE.put(spec, out)
+    return out
+
+
+def chains_makespan_batch(spec, chain_durs, chain_len):
+    """Batched :func:`chains_makespan` over C candidates at once.
+
+    ``chain_durs`` is a ``(C, N, L)`` float64 array of per-node duration
+    chains (N = ``len(spec.nodes)`` in BFS order, rows zero-padded past
+    ``chain_len``) and ``chain_len`` the matching ``(C, N)`` counts.
+    Returns the ``(C,)`` makespans, **bit-identical** per candidate to
+    ``chains_makespan`` on the same chains: the event walk is run in
+    lockstep across candidates with the same ``(time, seq)`` heap ordering
+    and the chain fold is an ``np.add.accumulate`` — the exact left fold
+    the sequential scorer performs.
+    """
+    import numpy as np
+
+    C, N, L = chain_durs.shape
+    tc_n, td_n, childmask, descmask, root_idx = _batch_spec_arrays(spec)
+    BIG = np.int64(2**62)
+    INF = np.inf
+
+    active = chain_len > 0                               # (C, N)
+    if not active.any():
+        return np.zeros(C)
+    # sub_act[c, a]: any active node in subtree(a); goflag: any sub_act child
+    sub_act = (active.astype(np.int8) @ descmask.T.astype(np.int8)) > 0
+    goflag = (sub_act.astype(np.int8) @ childmask.T.astype(np.int8)) > 0
+
+    tevt = np.full((C, N), INF)       # pending event time (one per node)
+    sevt = np.full((C, N), BIG)       # pending event seq
+    wevt = np.zeros((C, N), dtype=np.int8)  # 0 = visit, 1 = done
+    seqctr = np.zeros(C, dtype=np.int64)
+    for i in root_idx:                # roots pushed in order, seq 0, 1, ...
+        pushed = sub_act[:, i]
+        tevt[pushed, i] = 0.0
+        sevt[pushed, i] = seqctr[pushed]
+        seqctr += pushed
+    re = np.zeros(C)
+    mk = np.zeros(C)
+    r = np.arange(C)
+
+    while True:
+        rows = np.isfinite(tevt).any(1)
+        if not rows.any():
+            break
+        when = tevt.min(1)
+        cand = tevt == when[:, None]
+        seqm = np.where(cand, sevt, BIG)
+        sel = cand & (seqm == seqm.min(1)[:, None]) & rows[:, None]
+        n_star = sel.argmax(1)
+        what = wevt[r, n_star]
+        act = active[r, n_star]
+        m_visit = rows & (what == 0)
+        m_va = m_visit & act
+        m_done = rows & (what == 1)
+
+        # visit of an active node: creation charge + exact chain fold
+        t0 = np.maximum(re, when) + tc_n[n_star]
+        fold = np.add.accumulate(
+            np.concatenate([t0[:, None], chain_durs[r, n_star]], 1), 1
+        )
+        end = fold[r, chain_len[r, n_star]]
+        re = np.where(m_va, t0, re)
+        mk = np.where(m_va & (end > mk), end, mk)
+        # visit -> done event in place (active at chain end, else pass-through)
+        tevt[r[m_visit], n_star[m_visit]] = np.where(m_va, end, when)[m_visit]
+        wevt[r[m_visit], n_star[m_visit]] = 1
+        sevt[r[m_visit], n_star[m_visit]] = seqctr[m_visit]
+        seqctr += m_visit
+
+        # done: destroy (if active and an active subtree remains) + children
+        go = goflag[r, n_star]
+        m_dgo = m_done & go
+        m_destroy = m_dgo & act
+        re = np.where(m_destroy, np.maximum(re, when) + td_n[n_star], re)
+        tevt[r[m_done], n_star[m_done]] = INF
+        if m_dgo.any():
+            push = childmask[n_star] & sub_act & m_dgo[:, None]
+            rank = np.cumsum(push, 1) - 1
+            tevt = np.where(push, when[:, None], tevt)
+            wevt = np.where(push, np.int8(0), wevt)
+            sevt = np.where(push, seqctr[:, None] + rank, sevt)
+            seqctr += push.sum(1)
+    return mk
+
+
 class ReplayEngine(ChainState):
     """Reference evaluator: same mutable API, every query a full replay.
 
@@ -789,5 +936,7 @@ __all__ = [
     "ChainState",
     "TimingEngine",
     "ReplayEngine",
+    "chains_makespan",
+    "chains_makespan_batch",
     "make_engine",
 ]

@@ -114,19 +114,30 @@ def _elems(dims: str) -> int:
     return n
 
 
+#: dot lhs operand, tolerating the inline-shape form newer XLA emits
+#: (``dot(f32[256,256]{1,0} %lhs, ...)``) as well as the bare ``dot(%lhs``
+_DOT_LHS_RE = re.compile(
+    r"dot\(\s*(?:[a-z0-9]+\[([0-9,]*)\][^\s]*\s+)?%?([\w\.\-]+)"
+)
+
+
 def _dot_flops(line: str, symtab: dict[str, tuple[str, str]]) -> int:
     res = _result_of(line)
     if res is None:
         return 0
     out_elems = _elems(res[1])
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-    mo = re.search(r"dot\(\s*%?([\w\.\-]+)", line)
+    mo = _DOT_LHS_RE.search(line)
     if mc is None or mo is None:
         return 2 * out_elems
-    lhs = symtab.get(mo.group(1))
-    if lhs is None:
-        return 2 * out_elems
-    lhs_dims = lhs[1].split(",") if lhs[1] else []
+    if mo.group(1) is not None:
+        lhs_shape = mo.group(1)          # inline shape on the operand
+    else:
+        lhs = symtab.get(mo.group(2))
+        if lhs is None:
+            return 2 * out_elems
+        lhs_shape = lhs[1]
+    lhs_dims = lhs_shape.split(",") if lhs_shape else []
     contract = 1
     for idx in mc.group(1).split(","):
         if idx and int(idx) < len(lhs_dims):

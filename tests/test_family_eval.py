@@ -1,0 +1,201 @@
+"""Equivalence and unit tests for the phase-2 family evaluators.
+
+The hard contract: ``evaluator="vectorized"`` and ``evaluator="sequential"``
+pick the **bit-identical** winner — index, allocation, assignment,
+pre-refine makespan, evaluated count and final schedule — on any workload,
+spec, and prune setting.  These tests exercise it deterministically
+(seeded random floats plus integer-duration workloads, which are dense in
+exact time ties and therefore stress the ``(time, seq)`` tie-breaking);
+the hypothesis suite in ``test_scheduler_property.py`` adds randomized
+coverage.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.device_spec import A30, A100, H100, TPU_POD_256
+from repro.core.family_eval import (
+    AUTO_MIN_FAMILY,
+    AUTO_MIN_TASKS,
+    EVALUATORS,
+    HAVE_JAX,
+    get_evaluator,
+    family_areas,
+    resolve_evaluator,
+)
+from repro.core.far import schedule_batch
+from repro.core.allocations import allocation_family_deltas
+from repro.core.policy import SchedulerConfig
+from repro.core.problem import Task
+from repro.core.repartition import LPTGroups, size_sorted_orders
+from repro.core.timing import chains_makespan, chains_makespan_batch
+
+SPECS = {"A30": A30, "A100": A100, "H100": H100, "TPU": TPU_POD_256}
+
+
+def make_tasks(n, spec, seed=0, integer=False):
+    """Random monotone profiles; integer mode is dense in exact ties."""
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i in range(n):
+        t1 = float(rng.integers(1, 20)) if integer \
+            else float(rng.uniform(0.5, 100.0))
+        times, cur = {}, t1
+        for s in spec.sizes:
+            if s == min(spec.sizes):
+                times[s] = cur
+            else:
+                shrink = float(rng.integers(1, 4)) / 4.0 if integer \
+                    else float(rng.uniform(0.3, 1.0))
+                cur = cur * shrink
+                times[s] = cur
+        tasks.append(Task(id=i, times=times))
+    return tasks
+
+
+def assert_identical(rs, rv):
+    assert rs.winner_index == rv.winner_index
+    assert rs.allocation == rv.allocation
+    assert rs.makespan_before_refine == rv.makespan_before_refine
+    assert rs.evaluated == rv.evaluated
+    assert rs.assignment.node_tasks == rv.assignment.node_tasks
+    assert rs.schedule.items == rv.schedule.items
+    assert rs.schedule.reconfigs == rv.schedule.reconfigs
+
+
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+@pytest.mark.parametrize("n", [1, 2, 7, 24, 60])
+@pytest.mark.parametrize("integer", [False, True])
+def test_vectorized_matches_sequential(spec_name, n, integer):
+    spec = SPECS[spec_name]
+    tasks = make_tasks(n, spec, seed=n * 7 + integer, integer=integer)
+    for prune in (True, False):
+        rs = schedule_batch(tasks, spec, SchedulerConfig(
+            evaluator="sequential", prune=prune, refine=False))
+        rv = schedule_batch(tasks, spec, SchedulerConfig(
+            evaluator="vectorized", prune=prune, refine=False))
+        assert_identical(rs, rv)
+
+
+@pytest.mark.parametrize("spec_name", ["A100", "TPU"])
+def test_vectorized_matches_sequential_with_refine(spec_name):
+    """End-to-end (phases 2+3): identical winner implies identical final
+    schedule; run once to guard the full pipeline wiring."""
+    spec = SPECS[spec_name]
+    tasks = make_tasks(40, spec, seed=3)
+    rs = schedule_batch(tasks, spec, SchedulerConfig(evaluator="sequential"))
+    rv = schedule_batch(tasks, spec, SchedulerConfig(evaluator="vectorized"))
+    assert rs.makespan == rv.makespan
+    assert rs.schedule.items == rv.schedule.items
+    assert rs.schedule.reconfigs == rv.schedule.reconfigs
+
+
+def test_synth_workload_equivalence():
+    """The benchmark workloads (paper §6.3 generators) stay bit-identical
+    across evaluators — the t_cost acceptance surface in miniature."""
+    from repro.core.synth import generate_tasks, workload
+
+    cfg = workload("mixed", "wide", A100)
+    tasks = generate_tasks(120, A100, cfg, seed=0)
+    rs = schedule_batch(tasks, A100, SchedulerConfig(evaluator="sequential"))
+    rv = schedule_batch(tasks, A100, SchedulerConfig(evaluator="vectorized"))
+    assert_identical(rs, rv)
+    assert rs.makespan == rv.makespan
+
+
+def test_chains_makespan_batch_matches_scalar():
+    """The batched phase-2 scorer is bit-identical per candidate to
+    chains_makespan on the same duration chains."""
+    spec = A100
+    rng = np.random.default_rng(5)
+    cands = []
+    for seed in range(6):
+        tasks = make_tasks(int(rng.integers(1, 30)), spec, seed=seed)
+        first, _ = allocation_family_deltas(tasks, spec)
+        groups = LPTGroups(tasks, first, spec)
+        a, nd = groups.schedule_with_durs()
+        cands.append((a.node_tasks, nd))
+    N = len(spec.nodes)
+    index = {node.key: i for i, node in enumerate(spec.nodes)}
+    L = max(
+        (len(v) for nt, _ in cands for v in nt.values()), default=1
+    )
+    cd = np.zeros((len(cands), N, L))
+    cl = np.zeros((len(cands), N), dtype=np.int64)
+    for c, (nt, nd) in enumerate(cands):
+        for key, durs in nd.items():
+            cd[c, index[key], :len(durs)] = durs
+            cl[c, index[key]] = len(durs)
+    batch = chains_makespan_batch(spec, cd, cl)
+    for c, (nt, nd) in enumerate(cands):
+        assert batch[c] == chains_makespan(spec, nt, nd)
+
+
+def test_chains_makespan_batch_empty():
+    assert chains_makespan_batch(
+        A100, np.zeros((3, len(A100.nodes), 1)),
+        np.zeros((3, len(A100.nodes)), dtype=np.int64),
+    ).tolist() == [0.0, 0.0, 0.0]
+
+
+def test_family_areas_match_stepwise_fold():
+    """The accumulated area sequence equals the one-delta-at-a-time fold
+    the sequential loop would produce (same IEEE operations)."""
+    spec = A100
+    tasks = make_tasks(30, spec, seed=11)
+    first, deltas = allocation_family_deltas(tasks, spec)
+    areas = family_areas(tasks, first, deltas)
+    area = sum(s * t.times[s] for t, s in zip(tasks, first))
+    alloc = list(first)
+    assert areas[0] == area
+    for k, (j, s_new) in enumerate(deltas):
+        s_old = alloc[j]
+        t = tasks[j]
+        area = area + (s_new * t.times[s_new] - s_old * t.times[s_old])
+        alloc[j] = s_new
+        assert areas[k + 1] == area
+
+
+def test_size_sorted_orders_layout():
+    spec = A30
+    tasks = make_tasks(12, spec, seed=2)
+    orders = size_sorted_orders(tasks, spec)
+    for k, s in enumerate(spec.sizes):
+        ref = sorted(tasks, key=lambda t: (-t.times[s], t.id))
+        assert orders.ids[k].tolist() == [t.id for t in ref]
+        assert orders.durs[k].tolist() == [t.times[s] for t in ref]
+        # inv is the inverse permutation of order
+        assert (orders.order[k][orders.inv[k]] == np.arange(len(tasks))).all()
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="evaluator"):
+        SchedulerConfig(evaluator="nope")
+    for name in ("sequential", "vectorized", "auto"):
+        assert SchedulerConfig(evaluator=name).evaluator == name
+
+
+def test_get_evaluator_unknown():
+    with pytest.raises(KeyError, match="unknown family evaluator"):
+        get_evaluator("nope")
+    assert set(EVALUATORS) >= {"sequential", "vectorized"}
+
+
+def test_resolve_evaluator_dispatch():
+    big_n = AUTO_MIN_TASKS
+    big_f = AUTO_MIN_FAMILY
+    auto = SchedulerConfig(evaluator="auto")
+    expected = "vectorized" if HAVE_JAX else "sequential"
+    assert resolve_evaluator(auto, big_n, big_f) == expected
+    # small problems stay sequential under auto
+    assert resolve_evaluator(auto, 8, 4) == "sequential"
+    # the replay reference path always scores sequentially
+    ref = SchedulerConfig(evaluator="vectorized", use_engine=False)
+    assert resolve_evaluator(ref, big_n, big_f) == "sequential"
+    forced = SchedulerConfig(evaluator="vectorized")
+    assert resolve_evaluator(forced, 1, 1) == "vectorized"
+
+
+def test_empty_batch():
+    res = schedule_batch([], A100, SchedulerConfig(evaluator="vectorized"))
+    assert res.makespan == 0.0 and res.family_size == 1

@@ -8,14 +8,14 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (
-    A30, A100, TPU_POD_256,
+    A30, A100, H100, TPU_POD_256,
     SchedulerConfig, Task, schedule_batch, validate_schedule,
 )
 from repro.core.bounds import theorem1_rigid_bound
 from repro.core.multibatch import MultiBatchScheduler, Tail, concatenate
 from repro.core.repartition import replay
 
-SPECS = {"A30": A30, "A100": A100, "TPU": TPU_POD_256}
+SPECS = {"A30": A30, "A100": A100, "H100": H100, "TPU": TPU_POD_256}
 
 
 @st.composite
@@ -115,6 +115,26 @@ def test_auto_concat_no_worse_than_trivial_per_seam(batches):
     auto = concatenate(far2.assignment, tail, mode="auto")
     triv = concatenate(far2.assignment, tail, mode="trivial")
     assert auto.schedule.makespan <= triv.schedule.makespan + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(task_batches(), st.booleans())
+def test_vectorized_evaluator_matches_sequential(batch, prune):
+    """Family-evaluator equivalence contract (repro.core.family_eval):
+    the vectorized array-program scorer picks the bit-identical winner —
+    index, allocation, assignment, pre-refine makespan and evaluated
+    count — as the sequential reference, pruned or not, on every spec."""
+    spec, tasks = batch
+    rs = schedule_batch(tasks, spec, SchedulerConfig(
+        evaluator="sequential", prune=prune, refine=False))
+    rv = schedule_batch(tasks, spec, SchedulerConfig(
+        evaluator="vectorized", prune=prune, refine=False))
+    assert rs.winner_index == rv.winner_index
+    assert rs.allocation == rv.allocation
+    assert rs.makespan_before_refine == rv.makespan_before_refine
+    assert rs.evaluated == rv.evaluated
+    assert rs.assignment.node_tasks == rv.assignment.node_tasks
+    assert rs.schedule.items == rv.schedule.items
 
 
 @settings(max_examples=30, deadline=None)
