@@ -6,12 +6,15 @@ Two experiments:
 1. the per-task greedy (``"online-greedy"`` policy) against offline FAR on
    whole batches — the paper-motivated gap table;
 2. the :class:`~repro.core.service.SchedulingService` on a Poisson arrival
-   stream: tasks accumulate within a latency budget and flush through
-   multi-batch FAR, a trickle falls back to greedy placement.  The run
-   emits ``BENCH_online.json`` (service p50/p95 wall-clock decision
-   latency, virtual queueing delay and makespan ratio vs offline FAR on
-   the same task set) so the serving trajectory is tracked like
-   ``BENCH_sched_cost.json``.
+   stream with per-task deadlines: tasks accumulate within a latency
+   budget and flush through multi-batch FAR, a trickle falls back to
+   greedy placement.  Each stream runs twice — ``replan=False`` and
+   ``replan=True`` — and the run asserts the re-planning contract
+   (replan makespan <= plain makespan on every stream).  The run emits
+   ``BENCH_online.json`` (service p50/p95 wall-clock decision latency,
+   virtual queueing delay, makespan ratio vs offline FAR, deadline
+   miss-rates under both settings and the replan win counters) so the
+   serving trajectory is tracked like ``BENCH_sched_cost.json``.
 """
 
 import json
@@ -33,25 +36,45 @@ JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
 CFG = SchedulerConfig()
 
 
+def _run_stream(tasks, arrivals, deadlines, max_wait_s, replan):
+    svc = SchedulingService(
+        A100,
+        policy="far",
+        config=SchedulerConfig(
+            max_wait_s=max_wait_s, max_batch=16, replan=replan,
+        ),
+    )
+    for task, arr in zip(tasks, arrivals):
+        svc.submit(task, arrival=float(arr), deadline=deadlines[task.id])
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    return svc
+
+
 def _service_entry(scaling: str, n_tasks: int, mean_gap: float,
                    max_wait_s: float, seed: int) -> dict:
-    """One service run on a Poisson stream; returns its JSON entry."""
+    """One service run on a Poisson stream (with and without tail
+    re-planning); returns its JSON entry."""
     cfg = workload(scaling, "wide", A100)
     tasks = generate_tasks(n_tasks, A100, cfg, seed=seed)
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(mean_gap, size=n_tasks))
-    svc = SchedulingService(
-        A100,
-        policy="far",
-        config=SchedulerConfig(max_wait_s=max_wait_s, max_batch=16),
-    )
-    for task, arr in zip(tasks, arrivals):
-        svc.submit(task, arrival=float(arr))
-    combined = svc.drain()
-    validate_schedule(combined, tasks, check_reconfig=False)
+    # deadline = arrival + queueing allowance + a slack multiple of the
+    # task's best-case time — tight enough that misses actually occur
+    deadlines = {
+        t.id: float(a) + max_wait_s + float(s) * min(t.times.values())
+        for t, a, s in zip(tasks, arrivals,
+                           rng.uniform(2.0, 12.0, size=n_tasks))
+    }
+    plain = _run_stream(tasks, arrivals, deadlines, max_wait_s, replan=False)
+    re = _run_stream(tasks, arrivals, deadlines, max_wait_s, replan=True)
+    # the re-planning contract, enforced on every benchmark stream: the
+    # shadowed no-replan chain guarantees replan can only ever help
+    assert re.makespan <= plain.makespan + 1e-9, \
+        f"replan worsened the stream: {re.makespan} > {plain.makespan}"
     offline = get_policy("far").plan(tasks, A100, CFG).makespan
-    wall_ms = np.asarray(svc.stats.plan_wall_s()) * 1e3
-    delays = np.asarray(svc.stats.queue_delays())
+    wall_ms = np.asarray(plain.stats.plan_wall_s()) * 1e3
+    delays = np.asarray(plain.stats.queue_delays())
     return {
         "workload": cfg.name,
         "n_tasks": n_tasks,
@@ -61,13 +84,22 @@ def _service_entry(scaling: str, n_tasks: int, mean_gap: float,
         # before the flush decision), not by scheduling quality
         "last_arrival_s": float(arrivals[-1]),
         "max_wait_s": max_wait_s,
-        "batches": svc.stats.batches,
-        "online_placements": svc.stats.online_placements,
+        "batches": plain.stats.batches,
+        "online_placements": plain.stats.online_placements,
         "decision_wall_ms_p50": float(np.percentile(wall_ms, 50)),
         "decision_wall_ms_p95": float(np.percentile(wall_ms, 95)),
         "queue_delay_s_p50": float(np.percentile(delays, 50)),
         "queue_delay_s_p95": float(np.percentile(delays, 95)),
-        "makespan_ratio_vs_offline_far": float(svc.makespan / offline),
+        "makespan_ratio_vs_offline_far": float(plain.makespan / offline),
+        # -- deadline-aware serving + tail re-planning ----------------------
+        "deadline_miss_rate_noreplan": plain.deadline_report()["miss_rate"],
+        "deadline_miss_rate_replan": re.deadline_report()["miss_rate"],
+        "makespan_ratio_replan_vs_noreplan": float(
+            re.makespan / plain.makespan
+        ),
+        "replan_attempts": re.stats.replan_attempts,
+        "replan_wins": re.stats.replan_wins,
+        "withdrawn_tasks": re.stats.withdrawn,
     }
 
 
@@ -97,7 +129,8 @@ def run(reps: int = 40) -> Rows:
         "device": "A100",
         "policy": "far",
         "metric": "SchedulingService decision latency + makespan vs "
-                  "offline FAR",
+                  "offline FAR; deadline miss-rate and replan wins per "
+                  "stream (replan makespan <= plain asserted)",
         "entries": [
             # dense stream: budget accumulates real batches
             _service_entry("mixed", 60, mean_gap=1.0, max_wait_s=8.0, seed=0),
@@ -109,13 +142,18 @@ def run(reps: int = 40) -> Rows:
     with open(JSON_PATH, "w") as fh:
         json.dump(report, fh, indent=2)
     svc_rows = Rows(
-        "SchedulingService (Poisson arrivals, latency budget)",
+        "SchedulingService (Poisson arrivals, latency budget, deadlines)",
         ["workload", "n", "batches", "online", "wall_p95_ms",
-         "makespan/offline_FAR"],
+         "makespan/offline_FAR", "replan/plain", "miss%_plain",
+         "miss%_replan", "replan_wins"],
     )
     for e in report["entries"]:
         svc_rows.add(e["workload"], e["n_tasks"], e["batches"],
                      e["online_placements"], e["decision_wall_ms_p95"],
-                     e["makespan_ratio_vs_offline_far"])
+                     e["makespan_ratio_vs_offline_far"],
+                     e["makespan_ratio_replan_vs_noreplan"],
+                     100 * e["deadline_miss_rate_noreplan"],
+                     100 * e["deadline_miss_rate_replan"],
+                     e["replan_wins"])
     print(svc_rows.render())
     return rows

@@ -1,0 +1,75 @@
+"""Deadline-aware serving on an A100: admission control + tail re-planning.
+
+A bursty Poisson stream of moldable tasks is fed to the
+:class:`~repro.core.service.SchedulingService` three times —
+
+  1. plain latency-budget batching (the PR-2 baseline),
+  2. with tail re-planning (queued-but-unstarted placements are pulled
+     back and re-planned together with each flush's arrivals),
+  3. re-planning plus ``admission="reject"`` (provably-unmeetable
+     deadlines are refused at submit time instead of missing silently)
+
+— and the makespans, deadline miss-rates and replan wins are compared.
+
+  PYTHONPATH=src python examples/serve_deadlines.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import A100, SchedulerConfig, SchedulingService
+from repro.core.synth import generate_tasks, workload
+
+
+def run(tasks, arrivals, deadlines, replan=False, admission="none"):
+    svc = SchedulingService(
+        A100,
+        policy="far",
+        config=SchedulerConfig(
+            max_wait_s=6.0, max_batch=12,
+            replan=replan, admission=admission,
+        ),
+    )
+    for t, a in zip(tasks, arrivals):
+        svc.submit(t, arrival=float(a), deadline=deadlines[t.id])
+    svc.drain()
+    return svc
+
+
+def main() -> None:
+    n = 48
+    tasks = generate_tasks(n, A100, workload("mixed", "wide", A100), seed=7)
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(1.2, size=n))
+    deadlines = {
+        t.id: float(a) + 6.0 + float(s) * min(t.times.values())
+        for t, a, s in zip(tasks, arrivals, rng.uniform(2.0, 10.0, size=n))
+    }
+
+    plain = run(tasks, arrivals, deadlines)
+    re = run(tasks, arrivals, deadlines, replan=True)
+    strict = run(tasks, arrivals, deadlines, replan=True,
+                 admission="reject")
+
+    print(f"stream: {n} tasks over {arrivals[-1]:.0f}s, "
+          f"{plain.stats.batches} batch flushes\n")
+    for name, svc in [("plain", plain), ("replan", re),
+                      ("replan+admission", strict)]:
+        rep = svc.deadline_report()
+        print(f"{name:>17}: makespan {svc.makespan:7.1f}s   "
+              f"miss {100 * rep['miss_rate']:5.1f}%  "
+              f"rejected {len(rep['rejected']):2d}  "
+              f"replan wins {svc.stats.replan_wins}"
+              f" (pulled back {svc.stats.withdrawn} placements)")
+    assert re.makespan <= plain.makespan + 1e-9  # the shadow guarantee
+    saved = plain.makespan - re.makespan
+    print(f"\nre-planning saved {saved:.1f}s "
+          f"({100 * saved / plain.makespan:.1f}% of the plain makespan) "
+          f"without ever moving a running task.")
+
+
+if __name__ == "__main__":
+    main()

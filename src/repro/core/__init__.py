@@ -36,7 +36,12 @@ from repro.core.policy import (
     get_policy,
     register_policy,
 )
-from repro.core.service import Decision, SchedulingService, ServiceStats
+from repro.core.service import (
+    Decision,
+    ReplanEvent,
+    SchedulingService,
+    ServiceStats,
+)
 from repro.core.problem import (
     InfeasibleScheduleError,
     ReconfigEvent,
@@ -76,5 +81,5 @@ __all__ = [
     "OnlineScheduler", "OnlinePlacement",
     "SchedulerConfig", "SchedulerPolicy", "PlanResult",
     "register_policy", "get_policy", "available_policies",
-    "SchedulingService", "ServiceStats", "Decision",
+    "SchedulingService", "ServiceStats", "Decision", "ReplanEvent",
 ]

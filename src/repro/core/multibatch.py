@@ -310,6 +310,62 @@ class MultiBatchScheduler:
         self.tail = tail_after(schedule, self.tail)
         self.segments.append(schedule)
 
+    def clone(self) -> "MultiBatchScheduler":
+        """Independent copy of the committed state (segments are lists of
+        immutable items, so a shallow per-segment copy suffices).  The
+        serving facade trial-evaluates a re-planned flush against the
+        plain one on two clones before committing either."""
+        new = MultiBatchScheduler(
+            self.spec, policy=self.policy, config=self.config
+        )
+        new.mode = self.mode
+        new.tail = Tail(dict(self.tail.release), dict(self.tail.alive))
+        new.segments = [
+            Schedule(spec=s.spec, items=list(s.items),
+                     reconfigs=list(s.reconfigs))
+            for s in self.segments
+        ]
+        new.results = list(self.results)
+        new._flip = self._flip
+        return new
+
+    def withdraw_uncommitted(self, t: float, eps: float = 1e-9) -> list[Task]:
+        """Pull every placement that has not started by time ``t`` back out
+        of the committed segments and rebuild the tail from what remains.
+
+        This is the §4-seam analogue of the reconfigurable-machine serving
+        model (Tan et al., arXiv:2109.11067): a placement is *committed*
+        only once it starts.  Items with ``begin <= t`` keep their exact
+        absolute times (running tasks are never moved — the no-preemption
+        model); items with ``begin > t`` are withdrawn for re-planning.
+        Reconfigurations that have begun by ``t`` are irreversible and
+        stay; later ones only served withdrawn work (a creation precedes
+        every task of its chain, so a future creation's tasks are all
+        withdrawn) and are dropped — their instances simply stay alive in
+        the rebuilt tail until the re-plan decides otherwise.
+
+        Returns the withdrawn tasks ordered by their old begin times
+        (deterministic: ties break on task id).
+        """
+        withdrawn: list = []
+        kept_segments: list[Schedule] = []
+        for seg in self.segments:
+            keep = [it for it in seg.items if it.begin <= t + eps]
+            gone = [it for it in seg.items if it.begin > t + eps]
+            withdrawn.extend(gone)
+            rcs = [rc for rc in seg.reconfigs if rc.begin <= t + eps]
+            if keep or rcs:
+                kept_segments.append(
+                    Schedule(spec=seg.spec, items=keep, reconfigs=rcs)
+                )
+        self.segments = kept_segments
+        tail = Tail.empty(self.spec)
+        for seg in kept_segments:
+            tail = tail_after(seg, tail)
+        self.tail = tail
+        withdrawn.sort(key=lambda it: (it.begin, it.task.id))
+        return [it.task for it in withdrawn]
+
     @property
     def makespan(self) -> float:
         return max((seg.makespan for seg in self.segments), default=0.0)

@@ -131,6 +131,46 @@ class OnlineScheduler:
         self.placements.append(placement)
         return placement
 
+    def withdraw_not_started(self, t: float, eps: float = 1e-9) -> list[Task]:
+        """Pull back every placement that has not started by time ``t``.
+
+        "Started" is judged once, against the timings at the decision
+        instant (the pre-withdrawal state) — anything that re-times
+        *after* work is freed has, by definition, not begun at ``t``, so
+        deciding from post-retraction begins would keep acausal
+        placements.  Within a chain begins increase along the chain (its
+        tasks run back-to-back), so the not-started set is a per-chain
+        suffix and retracts newest-first through the engine's
+        suffix-retraction API.  Survivors may recompact earlier (freed
+        reconfiguration slots), never later.  Returns the withdrawn tasks
+        in their original submission order.
+        """
+        eng = self._eng
+        withdrawn_ids = {
+            tid
+            for lst in eng.chains.values()
+            for tid in lst
+            if eng.task_begin_end(tid)[0] > t + eps
+        }
+        for key, lst in eng.chains.items():
+            while lst and lst[-1] in withdrawn_ids:
+                eng.apply_retract(lst[-1], key)
+        # begins are monotone along a chain, so nothing withdrawn remains
+        assert not any(
+            tid in withdrawn_ids for lst in eng.chains.values() for tid in lst
+        )
+        out = [
+            self.assignment.tasks.pop(p.task_id)
+            for p in self.placements
+            if p.task_id in withdrawn_ids
+        ]
+        self.placements = [
+            p for p in self.placements if p.task_id not in withdrawn_ids
+        ]
+        for p in self.placements:  # re-read: survivors may have compacted
+            p.begin, p.end = eng.task_begin_end(p.task_id)
+        return out
+
     def schedule(self) -> Schedule:
         """Full Schedule, bit-identical to a cold ``replay()`` of the
         committed assignment under this scheduler's seam context."""

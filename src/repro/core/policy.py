@@ -74,7 +74,25 @@ class SchedulerConfig:
     max_batch: int = 32               # flush earlier once this many queue up
     min_batch: int = 2                # smaller deadline flushes go online
 
+    # -- deadline-aware serving (SchedulingService SLOs) --------------------
+    # admission control for tasks submitted with a deadline whose
+    # completion is provably unmeetable against the service's lower bound:
+    # "none" accepts everything (deadlines only tracked for miss-rate),
+    # "reject" refuses the task, "demote" accepts it best-effort (the
+    # deadline is dropped, so it never counts as a miss).
+    admission: str = "none"
+    # tail re-planning: when a flush lands, placements that have not yet
+    # started are pulled back and re-scheduled together with the arrivals
+    # (running tasks are never moved; the no-replan plan is kept whenever
+    # re-planning does not strictly improve the combined makespan).
+    replan: bool = False
+
     def __post_init__(self):
+        if self.admission not in ("none", "reject", "demote"):
+            raise ValueError(
+                f"SchedulerConfig.admission must be 'none', 'reject' or "
+                f"'demote', got {self.admission!r}"
+            )
         if self.evaluator in _EVALUATOR_CHOICES:
             return
         # custom evaluators registered via family_eval.register_evaluator
@@ -113,7 +131,11 @@ class PlanResult:
     ``extras`` carries the policy-specific result the legacy entry point
     used to return (``FARResult`` under ``"far"``, the chosen partition
     under ``"partition"``, online placements under ``"placements"``, the
-    seam ``ConcatResult`` under ``"concat"``).
+    seam ``ConcatResult`` under ``"concat"``).  The serving facade adds
+    deadline extras onto each flush's plan: ``"deadlines"`` (task id ->
+    deadline for the deadline-carrying tasks of the batch) and
+    ``"deadline_slack"`` (task id -> deadline minus planned completion at
+    flush time; negative = the plan already misses it).
     """
 
     policy: str

@@ -1,5 +1,6 @@
-"""Arrival-driven scheduling service with a latency budget (ROADMAP
-"online serving at scale"; cf. Tan et al., serving DNN models on MIG).
+"""Arrival-driven scheduling service with a latency budget, per-task
+deadlines and tail re-planning (ROADMAP "online serving at scale"; cf.
+Tan et al., serving DNN models on MIG, arXiv:2109.11067).
 
 The paper's offline formulation needs batches; a serving frontend has
 arrivals.  :class:`SchedulingService` bridges the two with a classic
@@ -19,6 +20,32 @@ latency-budget accumulator:
 * multi-GPU pools come for free: ``pool_size=k`` schedules onto
   ``device_spec.multi_gpu(spec, k)``.
 
+Two serving extensions ride on top of that accumulator:
+
+**Deadlines and admission control.**  ``submit(task, deadline=d)`` tracks
+the task's SLO; :meth:`deadline_report` scores misses against the final
+combined schedule.  With ``config.admission`` set to ``"reject"`` or
+``"demote"``, a submit whose deadline is *provably* unmeetable —
+:meth:`completion_lower_bound`, an admissible floor built from the
+running (never-preemptible) work on the committed timeline — is refused
+outright or accepted best-effort with the deadline dropped.
+
+**Tail re-planning.**  The batch-concatenation scheme normally commits
+placements forever, but a placement that has not *started* is not
+physically committed.  With ``config.replan=True`` every batch flush
+first pulls the not-yet-started tail back
+(:meth:`~repro.core.multibatch.MultiBatchScheduler.withdraw_uncommitted`)
+and re-plans it together with the arrivals; the re-planned candidate is
+kept only when it strictly beats the plain arrivals-only flush on the
+combined makespan.  Running tasks keep their exact begin times — the
+no-preemption model holds.  The service also carries the never-replanned
+chain as a shadow, and every report (``makespan`` / ``drain`` /
+``combined_schedule``) answers from whichever chain is ahead, so
+``replan=True`` can never end a stream worse than ``replan=False`` —
+the fragmentation-aware-scheduler observation (arXiv:2512.16099) that
+online decisions degrade without revisiting queued placements, made safe
+by construction.
+
 Everything is deterministic given the submission sequence — there is no
 RNG and no wall-clock dependence in any placement decision (wall time is
 only *measured*, for the decision-latency statistics).
@@ -27,6 +54,7 @@ only *measured*, for the decision-latency statistics).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Sequence
 
@@ -34,7 +62,7 @@ from repro.core.device_spec import DeviceSpec, multi_gpu
 from repro.core.multibatch import MultiBatchScheduler
 from repro.core.online import OnlineScheduler
 from repro.core.policy import SchedulerConfig
-from repro.core.problem import Schedule, Task
+from repro.core.problem import EPS, Schedule, Task
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,14 +72,32 @@ class Decision:
     task_id: int
     arrival: float        # virtual time the task was submitted
     decided_at: float     # virtual time the placement decision fired
-    route: str            # "batch" | "online"
+    route: str            # "batch" | "online" | "replan"
     flush_id: int         # which flush carried it
     plan_wall_s: float    # wall-clock seconds the scheduler spent deciding
+    deadline: float | None = None  # the task's SLO, if it kept one
 
     @property
     def queue_delay(self) -> float:
         """Virtual seconds the task waited for its decision."""
         return self.decided_at - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One accepted tail re-plan: which flush, what it pulled back, and
+    the combined makespans of the two candidates it chose between."""
+
+    flush_id: int
+    decided_at: float
+    withdrawn: tuple[int, ...]      # task ids pulled back for re-planning
+    makespan_replanned: float
+    makespan_plain: float
+
+    @property
+    def win(self) -> float:
+        """Makespan saved by re-planning at this flush."""
+        return self.makespan_plain - self.makespan_replanned
 
 
 @dataclasses.dataclass
@@ -60,6 +106,12 @@ class ServiceStats:
     batches: int = 0
     online_placements: int = 0
     decisions: list[Decision] = dataclasses.field(default_factory=list)
+    rejected: list[int] = dataclasses.field(default_factory=list)
+    demoted: list[int] = dataclasses.field(default_factory=list)
+    replan_attempts: int = 0     # flushes that had a tail to pull back
+    replan_wins: int = 0         # flushes where the re-plan was kept
+    withdrawn: int = 0           # placements pulled back by kept re-plans
+    replan_events: list[ReplanEvent] = dataclasses.field(default_factory=list)
 
     def queue_delays(self) -> list[float]:
         return [d.queue_delay for d in self.decisions]
@@ -74,7 +126,8 @@ class ServiceStats:
 
 
 class SchedulingService:
-    """Facade: arrival batching within a latency budget + online fallback.
+    """Facade: arrival batching within a latency budget + online fallback,
+    with optional deadlines/admission and tail re-planning.
 
     The service owns a :class:`MultiBatchScheduler` (the tail carrier);
     batch flushes go through its registered policy, online fallbacks are
@@ -95,19 +148,38 @@ class SchedulingService:
         self.config = config or SchedulerConfig()
         self.policy = policy
         self.mb = MultiBatchScheduler(spec, policy=policy, config=self.config)
-        self.pending: list[tuple[Task, float]] = []
+        # the never-replanned shadow chain: with replan on, every flush is
+        # mirrored here exactly as replan=False would commit it, and the
+        # reporting surface answers from whichever chain is ahead — the
+        # makespan guarantee replan(stream) <= no-replan(stream) holds by
+        # construction, not by hoping the per-flush heuristic composes.
+        # Materialised lazily at the first accepted re-plan (until the
+        # chains diverge the primary IS the shadow, so mirroring it would
+        # just re-run the identical plan on every flush).
+        self._baseline: MultiBatchScheduler | None = None
+        self.pending: list[tuple[Task, float, float | None]] = []
         self.now = 0.0
         self.stats = ServiceStats()
         self._flush_id = 0
+        self._deadlines: dict[int, float] = {}   # retained SLOs by task id
+        self._arrivals: dict[int, float] = {}    # arrival stamps by task id
 
     # -- intake ------------------------------------------------------------
     def submit(
-        self, task: Task, arrival: float | None = None, urgent: bool = False
-    ) -> None:
+        self,
+        task: Task,
+        arrival: float | None = None,
+        urgent: bool = False,
+        deadline: float | None = None,
+    ) -> str:
         """Queue ``task`` at virtual time ``arrival`` (default: now).
 
         Arrivals must be non-decreasing; ``urgent=True`` bypasses the
-        batching budget and places the task immediately.
+        batching budget and places the task immediately.  ``deadline``
+        declares the task's SLO (absolute virtual time its completion is
+        due); what an unmeetable one does depends on
+        ``config.admission``.  Returns the intake verdict: ``"queued"``,
+        ``"placed"`` (urgent), ``"demoted"`` or ``"rejected"``.
         """
         arrival = self.now if arrival is None else float(arrival)
         if arrival < self.now - 1e-9:
@@ -117,12 +189,25 @@ class SchedulingService:
         self.now = max(self.now, arrival)
         self._advance(self.now)
         self.stats.submitted += 1
+        verdict = "queued"
+        if deadline is not None:
+            deadline = float(deadline)
+            verdict = self._admit(task, arrival, deadline)
+            if verdict == "rejected":
+                return verdict
+            if verdict == "demoted":
+                deadline = None
+        self._arrivals[task.id] = arrival
+        if deadline is not None:
+            self._deadlines[task.id] = deadline
         if urgent:
-            self._route_online([(task, arrival)], decided_at=arrival)
-            return
-        self.pending.append((task, arrival))
+            self._route_online([(task, arrival, deadline)],
+                               decided_at=arrival)
+            return "placed" if verdict == "queued" else verdict
+        self.pending.append((task, arrival, deadline))
         if len(self.pending) >= self.config.max_batch:
             self._flush_pending(decided_at=arrival)
+        return verdict
 
     def poll(self, now: float) -> None:
         """Advance virtual time with no submission (fires due flushes)."""
@@ -139,7 +224,67 @@ class SchedulingService:
     def drain(self) -> Schedule:
         """Flush pending tasks and return the combined schedule so far."""
         self.flush()
-        return self.mb.combined_schedule()
+        return self.combined_schedule()
+
+    # -- admission ---------------------------------------------------------
+    def completion_lower_bound(self, task: Task, at: float) -> float:
+        """Provable floor on ``task``'s completion if submitted at ``at``.
+
+        Placements are causal (nothing begins before the decision that
+        placed it, and the decision is no earlier than the arrival) and
+        running work is never preempted, so a feasible instance cannot
+        host the task before every slice it blocks clears of the work
+        already *running* at ``at``.  Queued-but-unstarted placements are
+        ignored (re-planning may pull them back), as are creation costs
+        and queueing — the bound stays admissible.  With re-planning the
+        service may report either the re-planning chain or the
+        never-replanned shadow, so the bound is the minimum over both:
+        no schedule the service can still produce finishes the task
+        earlier, whichever chain wins.
+        """
+        best = self._chain_lower_bound(self.mb, task, at)
+        if self._baseline is not None:
+            best = min(
+                best, self._chain_lower_bound(self._baseline, task, at)
+            )
+        return best
+
+    def _chain_lower_bound(
+        self, mb: MultiBatchScheduler, task: Task, at: float
+    ) -> float:
+        busy: dict[tuple[int, int], float] = {}
+        for seg in mb.segments:
+            if seg.makespan <= at:
+                continue  # fully finished by `at`: nothing still running
+            for it in seg.items:
+                if it.begin <= at + EPS and it.end > at:
+                    for cell in it.node.blocked_cells:
+                        if it.end > busy.get(cell, 0.0):
+                            busy[cell] = it.end
+        best = math.inf
+        for node in self.spec.nodes:
+            if node.size not in task.times:
+                continue
+            floor = at
+            for cell in node.blocked_cells:
+                b = busy.get(cell, 0.0)
+                if b > floor:
+                    floor = b
+            done = floor + task.times[node.size]
+            if done < best:
+                best = done
+        return best
+
+    def _admit(self, task: Task, arrival: float, deadline: float) -> str:
+        if self.config.admission == "none":
+            return "queued"
+        if self.completion_lower_bound(task, arrival) <= deadline + EPS:
+            return "queued"
+        if self.config.admission == "reject":
+            self.stats.rejected.append(task.id)
+            return "rejected"
+        self.stats.demoted.append(task.id)
+        return "demoted"
 
     # -- internals ---------------------------------------------------------
     def _advance(self, now: float) -> None:
@@ -158,40 +303,122 @@ class SchedulingService:
             self._route_online(batch, decided_at)
             return
         t0 = time.perf_counter()
+        arrivals = [task for task, _, _ in batch]
+        if self._baseline is not None:  # chains diverged: mirror the flush
+            self._baseline.add_batch(arrivals, not_before=decided_at)
         # nothing may start before the flush decision that placed it
-        self.mb.add_batch([task for task, _ in batch], not_before=decided_at)
+        withdrawn, plain_makespan = self._flush_batch(arrivals, decided_at)
         wall = time.perf_counter() - t0
         fid = self._next_flush_id()
         self.stats.batches += 1
-        for task, arrival in batch:
+        for task, arrival, deadline in batch:
             self.stats.decisions.append(Decision(
                 task.id, arrival, decided_at, "batch", fid, wall,
+                deadline=deadline,
+            ))
+        for task in withdrawn:
+            self.stats.decisions.append(Decision(
+                task.id, self._arrivals.get(task.id, decided_at), decided_at,
+                "replan", fid, wall,
+                deadline=self._deadlines.get(task.id),
+            ))
+        self._attach_deadline_extras(arrivals + withdrawn)
+        if withdrawn:
+            self.stats.replan_events.append(ReplanEvent(
+                fid, decided_at, tuple(t.id for t in withdrawn),
+                self.mb.makespan, plain_makespan,
             ))
 
+    def _flush_batch(self, arrivals: list[Task], decided_at: float
+                     ) -> tuple[list[Task], float]:
+        """Commit one batch flush on the primary chain; returns the tasks
+        a kept re-plan pulled back (empty without ``config.replan``) and
+        the plain candidate's combined makespan for the event log."""
+        if not self.config.replan:
+            self.mb.add_batch(arrivals, not_before=decided_at)
+            return [], 0.0
+        # candidate A — the plain flush: arrivals against the committed tail
+        plain = self.mb.clone()
+        plain.add_batch(arrivals, not_before=decided_at)
+        # candidate B — the re-plan: pull the not-yet-started tail back and
+        # schedule it together with the arrivals under the same policy
+        trial = self.mb.clone()
+        withdrawn = trial.withdraw_uncommitted(decided_at)
+        if not withdrawn:
+            # nothing to revisit: the flush is bit-identical to replan=False
+            self.mb = plain
+            return [], 0.0
+        self.stats.replan_attempts += 1
+        trial.add_batch(withdrawn + arrivals, not_before=decided_at)
+        if trial.makespan < plain.makespan - self.config.eps:
+            if self._baseline is None:
+                # first divergence: the plain candidate IS the
+                # never-replanned continuation — it becomes the shadow
+                self._baseline = plain
+            self.mb = trial
+            self.stats.replan_wins += 1
+            self.stats.withdrawn += len(withdrawn)
+            return withdrawn, plain.makespan
+        self.mb = plain
+        return [], 0.0
+
+    def _attach_deadline_extras(self, tasks: Sequence[Task]) -> None:
+        """Record the flushed batch's SLO picture on its PlanResult: the
+        retained deadlines and each one's slack against the planned
+        completion (negative slack = the plan already misses it)."""
+        deadlines = {
+            t.id: self._deadlines[t.id] for t in tasks
+            if t.id in self._deadlines
+        }
+        if not deadlines or not self.mb.results:
+            return
+        ends: dict[int, float] = {}
+        for it in self.mb.segments[-1].items:
+            ends[it.task.id] = it.end
+        plan = self.mb.results[-1]
+        plan.extras["deadlines"] = deadlines
+        plan.extras["deadline_slack"] = {
+            tid: dl - ends[tid] for tid, dl in deadlines.items()
+            if tid in ends
+        }
+
     def _route_online(
-        self, batch: Sequence[tuple[Task, float]], decided_at: float
+        self,
+        batch: Sequence[tuple[Task, float, float | None]],
+        decided_at: float,
     ) -> None:
         if not batch:
             return
         t0 = time.perf_counter()
+        self._online_into(self.mb, batch, decided_at)
+        if self._baseline is not None:
+            self._online_into(self._baseline, batch, decided_at)
+        wall = time.perf_counter() - t0
+        fid = self._next_flush_id()
+        self.stats.online_placements += len(batch)
+        for task, arrival, deadline in batch:
+            self.stats.decisions.append(Decision(
+                task.id, arrival, decided_at, "online", fid, wall,
+                deadline=deadline,
+            ))
+
+    @staticmethod
+    def _online_into(
+        mb: MultiBatchScheduler,
+        batch: Sequence[tuple[Task, float, float | None]],
+        decided_at: float,
+    ) -> None:
         # floor the release context at the decision time: every placement
         # begins >= decided_at >= its task's arrival, keeping the combined
         # timeline causal (an unfloored release would let the greedy place
         # work on idle slices before the task even arrived)
-        floored = self.mb.tail.floored(decided_at)
+        floored = mb.tail.floored(decided_at)
         online = OnlineScheduler(
-            self.spec, release=floored.release, alive=floored.alive,
+            mb.spec, release=floored.release, alive=floored.alive,
         )
-        for task, arrival in batch:
+        for task, arrival, _ in batch:
             online.submit(task, arrival=arrival)
-        self.mb.adopt_segment(online.schedule())
-        wall = time.perf_counter() - t0
-        fid = self._next_flush_id()
-        self.stats.online_placements += len(batch)
-        for task, arrival in batch:
-            self.stats.decisions.append(Decision(
-                task.id, arrival, decided_at, "online", fid, wall,
-            ))
+        mb.adopt_segment(online.schedule())
 
     def _next_flush_id(self) -> int:
         self._flush_id += 1
@@ -199,15 +426,50 @@ class SchedulingService:
 
     # -- reporting ---------------------------------------------------------
     @property
+    def _winner(self) -> MultiBatchScheduler:
+        """The chain every report answers from: the re-planning chain,
+        unless the never-replanned shadow is strictly ahead."""
+        if self._baseline is not None \
+                and self._baseline.makespan < self.mb.makespan:
+            return self._baseline
+        return self.mb
+
+    @property
     def makespan(self) -> float:
-        return self.mb.makespan
+        return self._winner.makespan
 
     @property
     def tail(self):
-        return self.mb.tail
+        return self._winner.tail
 
     def combined_schedule(self) -> Schedule:
-        return self.mb.combined_schedule()
+        return self._winner.combined_schedule()
+
+    def deadline_report(self) -> dict:
+        """Score the retained deadlines against the combined schedule —
+        meaningful after :meth:`drain` (a task still pending counts as a
+        miss: it has no completion).  Demoted and rejected tasks are
+        reported separately and never count as misses."""
+        ends: dict[int, float] = {}
+        for it in self.combined_schedule().items:
+            ends[it.task.id] = it.end
+        missed = sorted(
+            tid for tid, dl in self._deadlines.items()
+            if ends.get(tid, math.inf) > dl + EPS
+        )
+        tracked = len(self._deadlines)
+        return {
+            "tracked": tracked,
+            "missed": missed,
+            "miss_rate": len(missed) / tracked if tracked else 0.0,
+            "rejected": sorted(self.stats.rejected),
+            "demoted": sorted(self.stats.demoted),
+        }
 
 
-__all__ = ["SchedulingService", "ServiceStats", "Decision"]
+__all__ = [
+    "SchedulingService",
+    "ServiceStats",
+    "Decision",
+    "ReplanEvent",
+]

@@ -15,6 +15,9 @@ consumes (per-node task chains + the device tree + the seam carry-over
 * ``apply_move(tid, dst[, src])`` / ``apply_swap(tk, tj)`` /
   ``apply_append(tid, key)`` — the exact chain edits phases 3 and §4.3
   perform (LPT-position inserts identical to theirs);
+* ``apply_retract(tid)`` / ``retract_suffix(key, n)`` — the inverse of
+  append: pull a not-yet-started suffix back off a chain (serving
+  re-planning withdraws queued placements when a flush lands);
 * ``undo()`` — speculative evaluation: apply an edit, read the timing,
   undo, bit-for-bit back to the previous state;
 * ``makespan()`` / ``slice_end_times()`` / ``node_end_times()`` /
@@ -158,6 +161,47 @@ class ChainState:
         self._log.append(("append", tid, key))
         self._invalidate()
 
+    def apply_retract(self, tid: int, key: NodeKey | None = None) -> None:
+        """Retract ``tid`` from the END of its chain — the exact inverse of
+        :meth:`apply_append`, for pulling back an appended placement that
+        has not started yet (serving re-planning).  Only the last task of a
+        chain may be retracted: anything earlier would shift the begin
+        times of the tasks behind it, which the no-preemption model
+        forbids once they are running."""
+        if key is None:
+            key = self.task_node[tid]
+        lst = self.chains.get(key)
+        if not lst or lst[-1] != tid:
+            raise ValueError(
+                f"task {tid} is not the last task of chain {key}; only a "
+                f"chain suffix can be retracted"
+            )
+        lst.pop()
+        self.durs[key].pop()
+        self._bump(key)
+        if self._task_node is not None:
+            del self._task_node[tid]
+        self._log.append(("retract", tid, key))
+        self._invalidate()
+
+    def retract_suffix(self, key: NodeKey, count: int) -> list[int]:
+        """Retract the last ``count`` tasks of ``key``'s chain (newest
+        first); returns the retracted task ids in retraction order.  Each
+        retraction is logged individually, so ``undo()`` restores them one
+        at a time."""
+        lst = self.chains.get(key, [])
+        if count < 0 or count > len(lst):
+            raise ValueError(
+                f"cannot retract {count} tasks from chain {key} of "
+                f"length {len(lst)}"
+            )
+        out: list[int] = []
+        for _ in range(count):
+            tid = lst[-1]
+            self.apply_retract(tid, key)
+            out.append(tid)
+        return out
+
     def undo(self) -> None:
         """Revert the most recent edit exactly."""
         entry = self._log.pop()
@@ -189,6 +233,9 @@ class ChainState:
             self._bump(key)
             if self._task_node is not None:
                 del self._task_node[tid]
+        elif kind == "retract":
+            _, tid, key = entry
+            self._insert(key, len(self.chains[key]), tid)
         else:  # pragma: no cover
             raise AssertionError(f"unknown log entry {kind}")
         self._invalidate()

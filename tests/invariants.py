@@ -1,0 +1,136 @@
+"""Reusable schedule-invariant harness.
+
+``assert_valid_schedule(schedule, spec)`` is an *independent* checker of
+the paper's feasibility model — it re-derives every constraint from the
+raw ``(task, node, begin)`` triples instead of delegating to
+``repro.core.problem.validate_schedule``, so the two act as cross-checks
+of each other.  It is the recommended harness for new policies: any
+registered policy's output, and any :class:`SchedulingService` flush
+sequence, must pass it (see ``tests/test_invariants.py``).
+
+Checked invariants:
+
+1. **tree membership & molding** — every placement sits on a node of the
+   spec's repartitioning tree and is molded to exactly that node's size
+   (with the task's profile defined at it);
+2. **no slice overlap** — placements whose instances block a common
+   ``(tree, slice)`` cell never overlap in time;
+3. **partition legality per DeviceSpec** — at every placement start the
+   set of co-running instances is a feasible instance set
+   (pairwise-disjoint tree nodes = a sub-partition, MIG property P2),
+   verified through ``spec.is_feasible_instance_set`` rather than
+   implied from 2;
+4. **causal release floors** — with ``floors={task_id: t}`` (e.g. the
+   serving facade's flush decision times) no task begins before its
+   floor;
+5. **no preemption** — each task appears exactly once (one contiguous
+   interval of exactly its profile duration; a preempted task would need
+   two items), and with ``tasks`` given, the scheduled ids match the
+   batch exactly.
+"""
+
+from repro.core.problem import EPS
+
+
+class InvariantViolation(AssertionError):
+    """A schedule broke one of the serving/feasibility invariants."""
+
+
+def _fail(msg: str) -> None:
+    raise InvariantViolation(msg)
+
+
+def assert_valid_schedule(schedule, spec, *, tasks=None, floors=None) -> None:
+    """Assert the invariants above; raises :class:`InvariantViolation`.
+
+    Args:
+      schedule: a :class:`repro.core.problem.Schedule`.
+      spec: the :class:`repro.core.device_spec.DeviceSpec` it must obey
+        (checked against ``spec``, not ``schedule.spec`` — a schedule
+        smuggling foreign nodes must fail).
+      tasks: optional batch; when given, scheduled ids must match it.
+      floors: optional ``{task_id: time}`` causal floors (flush decision
+        times in the serving model).
+    """
+    node_index = spec.node_index
+
+    # 1 + 5a: membership, molding, duration honesty, single placement
+    seen: dict[int, object] = {}
+    for it in schedule.items:
+        tid = it.task.id
+        if tid in seen:
+            _fail(f"task {tid} scheduled more than once (preemption or "
+                  f"duplication)")
+        seen[tid] = it
+        node = node_index.get(it.node.key)
+        if node is None:
+            _fail(f"task {tid} placed on {it.node}, not a node of "
+                  f"{spec.name}'s repartitioning tree")
+        if it.size != it.node.size:
+            _fail(f"task {tid} molded to size {it.size} but placed on "
+                  f"size-{it.node.size} instance {it.node}")
+        if it.size not in it.task.times:
+            _fail(f"task {tid} has no profile entry for size {it.size}")
+        if abs((it.end - it.begin) - it.task.times[it.size]) > 1e-6:
+            _fail(f"task {tid} runs {it.end - it.begin}s, profile says "
+                  f"{it.task.times[it.size]}s (preempted or stretched)")
+        if it.begin < -EPS:
+            _fail(f"task {tid} begins before time zero: {it.begin}")
+
+    # 5b: the batch is covered exactly
+    if tasks is not None:
+        want = sorted(t.id for t in tasks)
+        got = sorted(seen)
+        if want != got:
+            _fail(f"scheduled ids {got} != batch ids {want}")
+
+    # 4: causal floors
+    if floors:
+        for tid, floor in floors.items():
+            it = seen.get(tid)
+            if it is not None and it.begin < floor - EPS:
+                _fail(f"task {tid} begins at {it.begin} before its causal "
+                      f"floor {floor} (placed before its flush decision)")
+
+    # 2: no overlap on any blocked (tree, slice) cell
+    per_cell: dict[tuple, list] = {}
+    for it in schedule.items:
+        for cell in it.node.blocked_cells:
+            per_cell.setdefault(cell, []).append(it)
+    for cell, lst in per_cell.items():
+        lst.sort(key=lambda it: (it.begin, it.end))
+        for a, b in zip(lst, lst[1:]):
+            if a.end > b.begin + EPS:
+                _fail(f"tasks {a.task.id} and {b.task.id} overlap on slice "
+                      f"{cell}: [{a.begin:.3f},{a.end:.3f}) vs "
+                      f"[{b.begin:.3f},{b.end:.3f})")
+
+    # 3: partition legality at every placement start — the co-running
+    # instance set must be a feasible sub-partition of the device
+    items = sorted(schedule.items, key=lambda it: (it.begin, it.end))
+    for it in items:
+        t = it.begin
+        running = {
+            o.node.key: o.node for o in items
+            if o.begin <= t + EPS and o.end > t + EPS
+        }
+        if not spec.is_feasible_instance_set(list(running.values())):
+            _fail(f"at t={t:.3f} the running instances "
+                  f"{sorted(running)} are not a valid sub-partition of "
+                  f"{spec.name}")
+
+
+def service_floors(svc) -> dict[int, float]:
+    """Causal floors for a :class:`SchedulingService`'s combined schedule:
+    each task's *first* flush decision time (a re-planned task is pulled
+    back only by later decisions, so its placement — on either the
+    re-planning chain or the never-replanned shadow — begins no earlier
+    than the first decision that carried it)."""
+    floors: dict[int, float] = {}
+    for d in svc.stats.decisions:
+        if d.task_id not in floors:
+            floors[d.task_id] = d.decided_at
+    return floors
+
+
+__all__ = ["InvariantViolation", "assert_valid_schedule", "service_floors"]

@@ -1,0 +1,155 @@
+"""The schedule-invariant harness: every registered policy on the t5/t9
+workloads, every service flush, and self-tests proving the checker
+actually catches each violation class."""
+
+import dataclasses
+
+import pytest
+
+from invariants import InvariantViolation, assert_valid_schedule, service_floors
+from repro.core import (
+    A100,
+    MultiBatchScheduler,
+    SchedulerConfig,
+    SchedulingService,
+    available_policies,
+    get_policy,
+)
+from repro.core.device_spec import InstanceNode
+from repro.core.problem import Schedule, ScheduledTask
+from repro.core.synth import generate_tasks, workload
+
+CFG = SchedulerConfig()
+
+
+def _t5_tasks(seed=0, n=15):
+    return generate_tasks(n, A100, workload("mixed", "wide", A100), seed=seed)
+
+
+def _t9_batches(n_batches=3, n=8):
+    return [
+        generate_tasks(n, A100, workload("mixed", "wide", A100),
+                       seed=s, id_offset=10_000 * s)
+        for s in range(n_batches)
+    ]
+
+
+# -- every registered policy passes the harness -----------------------------
+
+@pytest.mark.parametrize("name", available_policies())
+def test_policy_output_passes_invariants_t5(name):
+    tasks = _t5_tasks(seed=1)
+    plan = get_policy(name).plan(tasks, A100, CFG)
+    if name == "lower-bound":  # schedule-less denominator policy
+        assert_valid_schedule(plan.schedule, A100)
+        return
+    assert_valid_schedule(plan.schedule, A100, tasks=tasks)
+
+
+@pytest.mark.parametrize(
+    "name", [n for n in available_policies() if n != "lower-bound"]
+)
+def test_policy_through_multibatch_passes_invariants_t9(name):
+    batches = _t9_batches()
+    mb = MultiBatchScheduler(A100, policy=name, config=CFG)
+    for b in batches:
+        mb.add_batch(b)
+    assert_valid_schedule(
+        mb.combined_schedule(), A100, tasks=[t for b in batches for t in b]
+    )
+
+
+# -- the serving facade passes it on every flush ----------------------------
+
+@pytest.mark.parametrize("replan", [False, True])
+def test_service_flushes_pass_invariants(replan):
+    tasks = _t5_tasks(seed=7, n=14)
+    svc = SchedulingService(
+        A100,
+        config=SchedulerConfig(max_wait_s=3.0, max_batch=5, replan=replan),
+    )
+    arrival = 0.0
+    for i, t in enumerate(tasks):
+        arrival += 0.5 if i % 5 else 25.0
+        svc.submit(t, arrival=arrival, deadline=arrival + 500.0)
+        # the partially-committed timeline is valid after every flush, on
+        # the primary chain and on the reporting surface alike
+        assert_valid_schedule(svc.mb.combined_schedule(), A100)
+        assert_valid_schedule(svc.combined_schedule(), A100)
+    combined = svc.drain()
+    assert_valid_schedule(
+        combined, A100, tasks=tasks, floors=service_floors(svc)
+    )
+
+
+# -- self-tests: the checker catches what it claims to ----------------------
+
+def _valid_schedule():
+    tasks = _t5_tasks(seed=3, n=8)
+    plan = get_policy("far").plan(tasks, A100, CFG)
+    return plan.schedule, tasks
+
+
+def test_checker_accepts_far_and_rejects_duplicate():
+    sched, tasks = _valid_schedule()
+    assert_valid_schedule(sched, A100, tasks=tasks)
+    tampered = Schedule(
+        spec=sched.spec,
+        items=sched.items + [sched.items[0]],
+        reconfigs=sched.reconfigs,
+    )
+    with pytest.raises(InvariantViolation, match="more than once"):
+        assert_valid_schedule(tampered, A100)
+
+
+def test_checker_rejects_slice_overlap():
+    sched, _ = _valid_schedule()
+    it = max(sched.items, key=lambda it: it.begin)
+    shifted = dataclasses.replace(it, begin=0.0)
+    others = [o for o in sched.items if o is not it]
+    with pytest.raises(InvariantViolation, match="overlap"):
+        assert_valid_schedule(
+            Schedule(spec=sched.spec, items=others + [shifted],
+                     reconfigs=sched.reconfigs),
+            A100,
+        )
+
+
+def test_checker_rejects_foreign_node_and_bad_molding():
+    sched, _ = _valid_schedule()
+    alien = InstanceNode(tree=9, start=0, size=1, footprint=1)
+    it = sched.items[0]
+    with pytest.raises(InvariantViolation, match="repartitioning tree"):
+        assert_valid_schedule(
+            Schedule(spec=sched.spec,
+                     items=[dataclasses.replace(it, node=alien)],
+                     reconfigs=[]),
+            A100,
+        )
+    node7 = next(n for n in A100.nodes if n.size == 7)
+    bad = ScheduledTask(task=it.task, node=node7, begin=0.0, size=1)
+    with pytest.raises(InvariantViolation, match="molded"):
+        assert_valid_schedule(
+            Schedule(spec=sched.spec, items=[bad], reconfigs=[]), A100
+        )
+
+
+def test_checker_rejects_floor_violation_and_batch_mismatch():
+    sched, tasks = _valid_schedule()
+    first = min(sched.items, key=lambda it: it.begin)
+    with pytest.raises(InvariantViolation, match="causal floor"):
+        assert_valid_schedule(
+            sched, A100, floors={first.task.id: first.begin + 1.0}
+        )
+    with pytest.raises(InvariantViolation, match="batch ids"):
+        assert_valid_schedule(sched, A100, tasks=tasks[:-1])
+
+
+def test_checker_cross_checks_validate_schedule():
+    """The harness and problem.validate_schedule agree on the good case —
+    two independent implementations of the same model."""
+    from repro.core import validate_schedule
+
+    sched, tasks = _valid_schedule()
+    validate_schedule(sched, tasks)
+    assert_valid_schedule(sched, A100, tasks=tasks)

@@ -133,15 +133,49 @@ def test_lower_bound_policy_folds_multibatch_baseline():
 
 
 @pytest.mark.parametrize("kwarg", sorted(LEGACY_KWARGS))
-def test_legacy_kwargs_warn_and_name_the_config_field(kwarg):
+def test_legacy_kwargs_warn_once_and_match_config_path_exactly(kwarg):
+    """Differential pin of the deprecation shim: each legacy boolean kwarg
+    emits exactly ONE DeprecationWarning naming the SchedulerConfig field,
+    and the resulting plan is bit-identical to the config path — items,
+    assignment chains, winner index and makespan."""
     tasks = _t5_tasks(seed=0, n=6)
-    value = 8 if kwarg == "max_refine_iterations" else True
-    with pytest.warns(DeprecationWarning,
-                      match=rf"SchedulerConfig\({LEGACY_KWARGS[kwarg]}="):
+    # exercise the non-default value so the kwarg actually changes the plan
+    value = 8 if kwarg == "max_refine_iterations" else \
+        {"refine": False, "prune": False, "deep_refine": True,
+         "use_engine": False}[kwarg]
+    with pytest.warns(DeprecationWarning) as record:
         legacy = schedule_batch(tasks, A100, **{kwarg: value})
+    shim_warnings = [
+        w for w in record if issubclass(w.category, DeprecationWarning)
+    ]
+    assert len(shim_warnings) == 1
+    msg = str(shim_warnings[0].message)
+    assert f"schedule_batch({kwarg}=...)" in msg
+    assert f"SchedulerConfig({LEGACY_KWARGS[kwarg]}=" in msg
     direct = schedule_batch(
         tasks, A100, SchedulerConfig(**{LEGACY_KWARGS[kwarg]: value})
     )
+    assert legacy.makespan == direct.makespan
+    assert legacy.winner_index == direct.winner_index
+    assert legacy.evaluated == direct.evaluated
+    assert legacy.assignment.node_tasks == direct.assignment.node_tasks
+    assert _items(legacy.schedule) == _items(direct.schedule)
+    assert legacy.schedule.reconfigs == direct.schedule.reconfigs
+
+
+def test_legacy_kwargs_combine_and_warn_per_kwarg():
+    """Several legacy kwargs in one call: one warning each, and the plan
+    matches a single config carrying all of them."""
+    tasks = _t5_tasks(seed=2, n=6)
+    with pytest.warns(DeprecationWarning) as record:
+        legacy = schedule_batch(tasks, A100, refine=False, prune=False)
+    assert sum(
+        issubclass(w.category, DeprecationWarning) for w in record
+    ) == 2
+    direct = schedule_batch(
+        tasks, A100, SchedulerConfig(refine=False, prune=False)
+    )
+    assert _items(legacy.schedule) == _items(direct.schedule)
     assert legacy.makespan == direct.makespan
 
 

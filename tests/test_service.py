@@ -1,12 +1,15 @@
 """SchedulingService semantics: latency-budget flushing, online fallback
-for slow trickles, determinism, and tail reuse across flushes."""
+for slow trickles, determinism, tail reuse across flushes, per-task
+deadlines + admission control, and tail re-planning."""
 
 import pytest
 
+from invariants import assert_valid_schedule, service_floors
 from repro.core import (
     A100,
     SchedulerConfig,
     SchedulingService,
+    Task,
     get_policy,
     validate_schedule,
 )
@@ -155,6 +158,188 @@ def test_multi_gpu_pool():
     validate_schedule(combined, tasks, check_reconfig=False)
     # both trees host work: the pool is actually used
     assert {it.node.tree for it in combined.items} == {0, 1}
+
+
+def _items(schedule):
+    return sorted(
+        (it.task.id, it.node.key, it.begin, it.size) for it in schedule.items
+    )
+
+
+def _run_stream(tasks, arrivals, deadlines=None, **cfg_kw):
+    svc = SchedulingService(A100, config=_cfg(**cfg_kw))
+    deadlines = deadlines or {}
+    for t, a in zip(tasks, arrivals):
+        svc.submit(t, arrival=float(a), deadline=deadlines.get(t.id))
+    combined = svc.drain()
+    return svc, combined
+
+
+# -- deadlines + admission ---------------------------------------------------
+
+def test_deadline_tracking_and_report():
+    tasks = _tasks(6, seed=3)
+    arrivals = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+    # generous deadline for every task except one that is sure to miss
+    deadlines = {t.id: 1e6 for t in tasks}
+    victim = tasks[3]
+    deadlines[victim.id] = arrivals[3] + 1e-6
+    svc, combined = _run_stream(tasks, arrivals, deadlines, max_wait_s=1.0)
+    validate_schedule(combined, tasks, check_reconfig=False)
+    rep = svc.deadline_report()
+    assert rep["tracked"] == 6
+    assert rep["missed"] == [victim.id]
+    assert rep["miss_rate"] == pytest.approx(1 / 6)
+    assert rep["rejected"] == [] and rep["demoted"] == []
+    # every decision carries the task's retained deadline
+    by_task = {d.task_id: d.deadline for d in svc.stats.decisions}
+    assert by_task[victim.id] == deadlines[victim.id]
+
+
+def test_admission_reject_provably_unmeetable():
+    tasks = _tasks(3, seed=4)
+    svc = SchedulingService(A100, config=_cfg(admission="reject"))
+    # deadline before the task's best-case completion: provably unmeetable
+    best = min(tasks[0].times.values())
+    assert svc.submit(tasks[0], arrival=5.0, deadline=5.0 + best / 2) \
+        == "rejected"
+    assert svc.stats.rejected == [tasks[0].id]
+    # a meetable deadline is admitted
+    assert svc.submit(tasks[1], arrival=5.0, deadline=5.0 + 10 * best) \
+        == "queued"
+    svc.submit(tasks[2], arrival=6.0)
+    combined = svc.drain()
+    # the rejected task is nowhere in the committed timeline
+    validate_schedule(combined, tasks[1:], check_reconfig=False)
+    assert svc.deadline_report()["rejected"] == [tasks[0].id]
+
+
+def test_admission_demote_keeps_task_best_effort():
+    tasks = _tasks(2, seed=5)
+    svc = SchedulingService(A100, config=_cfg(admission="demote"))
+    best = min(tasks[0].times.values())
+    assert svc.submit(tasks[0], arrival=0.0, deadline=best / 2) == "demoted"
+    svc.submit(tasks[1], arrival=0.1)
+    combined = svc.drain()
+    # demoted = still scheduled, but its deadline no longer tracked
+    validate_schedule(combined, tasks, check_reconfig=False)
+    rep = svc.deadline_report()
+    assert rep["tracked"] == 0 and rep["demoted"] == [tasks[0].id]
+
+
+def test_admission_lower_bound_sees_running_work():
+    """The admission floor tightens with the running (never-preemptible)
+    occupancy of the committed timeline: a whole-GPU task running now
+    pushes every later completion past its end."""
+    hog = Task(id=900, times={7: 1000.0})   # only moldable to the full GPU
+    probe = Task(id=901, times={s: 10.0 - s for s in A100.sizes})
+    svc = SchedulingService(A100, config=_cfg(admission="reject"))
+    svc.submit(hog, arrival=0.0, urgent=True)   # occupies slices for ~1000s
+    hog_end = max(it.end for it in svc.mb.combined_schedule().items)
+    lb = svc.completion_lower_bound(probe, at=1.0)
+    assert lb >= hog_end  # no slice clears before the hog finishes
+    assert svc.submit(probe, arrival=1.0, deadline=hog_end / 2) == "rejected"
+    # without the deadline the same task is admitted fine
+    assert svc.submit(probe, arrival=2.0) == "queued"
+
+
+def test_flush_plan_carries_deadline_extras():
+    tasks = _tasks(4, seed=6)
+    deadlines = {t.id: 100.0 + i for i, t in enumerate(tasks)}
+    svc = SchedulingService(A100, config=_cfg(max_batch=4))
+    for t in tasks:
+        svc.submit(t, arrival=0.0, deadline=deadlines[t.id])
+    assert svc.stats.batches == 1
+    plan = svc.mb.results[-1]
+    assert plan.extras["deadlines"] == deadlines
+    ends = {it.task.id: it.end for it in svc.mb.segments[-1].items}
+    assert plan.extras["deadline_slack"] == {
+        tid: deadlines[tid] - ends[tid] for tid in deadlines
+    }
+
+
+# -- tail re-planning --------------------------------------------------------
+
+def _bursty(n=18, seed=12):
+    """Two dense bursts: the second one lands while the first's tail is
+    still queued, so re-planning has something to pull back."""
+    tasks = _tasks(n, seed=seed)
+    arrivals = [0.1 * i if i < n // 2 else 1.0 + 0.1 * i for i in range(n)]
+    return tasks, arrivals
+
+
+def test_replan_never_worse_than_plain_on_bursty_stream():
+    tasks, arrivals = _bursty()
+    svc_plain, c_plain = _run_stream(tasks, arrivals,
+                                     max_wait_s=1.0, max_batch=6)
+    svc_re, c_re = _run_stream(tasks, arrivals,
+                               max_wait_s=1.0, max_batch=6, replan=True)
+    validate_schedule(c_re, tasks, check_reconfig=False)
+    assert svc_re.makespan <= svc_plain.makespan + 1e-9
+    assert svc_re.stats.replan_attempts >= 1
+
+
+def test_replan_win_pulls_back_only_unstarted_work():
+    tasks, arrivals = _bursty()
+    svc, combined = _run_stream(tasks, arrivals,
+                                max_wait_s=1.0, max_batch=6, replan=True)
+    assert_valid_schedule(combined, A100, tasks=tasks,
+                          floors=service_floors(svc))
+    assert svc.stats.replan_wins >= 1
+    for ev in svc.stats.replan_events:
+        assert ev.makespan_replanned < ev.makespan_plain
+        assert ev.win > 0
+        # every pulled-back task was re-decided at the flush time
+        redecided = {
+            d.task_id for d in svc.stats.decisions
+            if d.flush_id == ev.flush_id and d.route == "replan"
+        }
+        assert redecided == set(ev.withdrawn)
+    # a withdrawn task's final placement never starts before the flush
+    # decision that re-planned it (the re-plan's causal floor)
+    last_decision = {}
+    for d in svc.stats.decisions:
+        last_decision[d.task_id] = d.decided_at
+    for it in svc.mb.combined_schedule().items:
+        assert it.begin >= last_decision[it.task.id] - 1e-9
+
+
+def test_replan_identical_to_plain_when_nothing_queued():
+    """A single flush has no committed tail to revisit: replan=True must
+    be bit-identical to replan=False."""
+    tasks = _tasks(6, seed=8)
+    svc_plain, c_plain = _run_stream(tasks, [0.0] * 6, max_batch=6)
+    svc_re, c_re = _run_stream(tasks, [0.0] * 6, max_batch=6, replan=True)
+    assert _items(c_plain) == _items(c_re)
+    assert svc_re.stats.replan_attempts == 0
+    assert svc_re.stats.replan_wins == 0
+
+
+def test_replan_running_tasks_keep_their_times():
+    """Across every flush, items already started on the primary chain are
+    never moved: the no-preemption model survives re-planning."""
+    tasks, arrivals = _bursty(n=14, seed=13)
+    svc = SchedulingService(
+        A100, config=_cfg(max_wait_s=1.0, max_batch=5, replan=True)
+    )
+    prev_items, prev_flushes = [], 0
+    for t, a in zip(tasks, arrivals):
+        svc.submit(t, arrival=float(a))
+        flushes = svc._flush_id
+        if flushes > prev_flushes:
+            decided = [
+                d.decided_at for d in svc.stats.decisions
+                if d.flush_id > prev_flushes
+            ]
+            cutoff = min(decided)
+            now_items = set(_items(svc.mb.combined_schedule()))
+            for item in prev_items:
+                if item[2] <= cutoff + 1e-9:  # had started by the decision
+                    assert item in now_items
+        prev_flushes = flushes
+        prev_items = _items(svc.mb.combined_schedule())
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
 
 
 def test_mixed_batch_and_online_share_one_timeline():

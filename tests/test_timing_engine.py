@@ -10,11 +10,12 @@ end-to-end agreement of the engine-backed refinement paths with the
 replay-backed ones.
 """
 
+import dataclasses
 import random
 
 import pytest
 
-from repro.core.device_spec import A30, A100, TPU_POD_256
+from repro.core.device_spec import A30, A100, TPU_POD_256, InstanceNode
 from repro.core.far import schedule_batch
 from repro.core.policy import SchedulerConfig
 from repro.core.multibatch import MultiBatchScheduler, Tail, seam_refine
@@ -228,6 +229,207 @@ def test_empty_and_single_task_engine():
     t = generate_tasks(1, spec, workload("mixed", "wide", spec), seed=0)
     asgn = schedule_batch(t, spec).assignment
     _assert_engines_agree(TimingEngine(asgn), ReplayEngine(asgn))
+
+
+# --- suffix retraction (serving re-planning pulls appends back) ------------
+
+def _snapshot(eng):
+    # empty chains are inactive (and undo of an append leaves one behind,
+    # matching the engine's existing behavior) — compare modulo them
+    return (
+        {k: list(v) for k, v in eng.chains.items() if v},
+        {k: list(v) for k, v in eng.durs.items() if v},
+    )
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("with_tail", [False, True])
+def test_retract_inverts_append_bit_for_bit(spec, with_tail):
+    tasks = generate_tasks(
+        6, spec, workload("mixed", "wide", spec), seed=11, id_offset=300
+    )
+    ctx = {}
+    if with_tail:
+        tail = _seam_tail(spec, seed=4)
+        ctx = dict(release=tail.release, alive=tail.alive)
+    base = schedule_batch(tasks[:3], spec, NO_REFINE).assignment
+    eng = TimingEngine(base, **ctx)
+    ref = ReplayEngine(base, **ctx)
+    before = _snapshot(eng)
+    m0 = eng.makespan()
+    node = spec.nodes[0]
+    for t in tasks[3:]:
+        eng.tasks[t.id] = t   # the tasks dict is shared with `ref`
+        eng.apply_append(t.id, node.key)
+        ref.apply_append(t.id, node.key)
+    _assert_engines_agree(eng, ref)
+    for t in reversed(tasks[3:]):
+        eng.apply_retract(t.id)
+        ref.apply_retract(t.id, node.key)
+    _assert_engines_agree(eng, ref)
+    assert _snapshot(eng) == before
+    assert eng.makespan() == m0
+    # undo() of a retraction restores the retracted task exactly
+    eng.apply_append(tasks[3].id, node.key)
+    mid = _snapshot(eng)
+    eng.apply_retract(tasks[3].id)
+    eng.undo()
+    assert _snapshot(eng) == mid
+    assert eng.task_node[tasks[3].id] == node.key
+
+
+def test_retract_suffix_and_error_cases():
+    spec = A100
+    tasks = generate_tasks(
+        4, spec, workload("mixed", "wide", spec), seed=2, id_offset=500
+    )
+    from repro.core.repartition import Assignment
+
+    eng = TimingEngine(Assignment(spec, {t.id: t for t in tasks}, {}))
+    key = spec.nodes[0].key
+    for t in tasks:
+        eng.apply_append(t.id, key)
+    # only the chain tail may be retracted (no-preemption: retracting an
+    # interior task would shift the started work behind it)
+    with pytest.raises(ValueError, match="suffix"):
+        eng.apply_retract(tasks[0].id)
+    # suffix retraction pops newest-first and reports the order
+    assert eng.retract_suffix(key, 2) == [tasks[3].id, tasks[2].id]
+    assert eng.chains[key] == [tasks[0].id, tasks[1].id]
+    with pytest.raises(ValueError, match="retract 5"):
+        eng.retract_suffix(key, 5)
+    eng.retract_suffix(key, 2)
+    assert eng.chains[key] == []
+    # empty chain: nothing to retract
+    with pytest.raises(ValueError, match="suffix"):
+        eng.apply_retract(tasks[0].id, key)
+    # the whole episode unwinds to the empty assignment
+    eng.undo_all()
+    assert eng.chains[key] == []
+    assert eng.makespan() == 0.0
+
+
+def test_online_withdraw_not_started_uses_retraction():
+    """OnlineScheduler.withdraw_not_started pulls exactly the placements
+    beginning after t, and the surviving schedule re-times consistently
+    (survivors may only move earlier, never before the cut)."""
+    from repro.core.online import OnlineScheduler
+
+    spec = A100
+    tasks = generate_tasks(
+        10, spec, workload("mixed", "wide", spec), seed=6, id_offset=700
+    )
+    sched = OnlineScheduler(spec)
+    for t in tasks:
+        sched.submit(t)
+    cut = sched.makespan / 2
+    # read current timings (submit-time placement stamps go stale: later
+    # appends can reshuffle the reconfiguration sequence)
+    old_begin = {it.task.id: it.begin for it in sched.schedule().items}
+    started = {tid for tid, b in old_begin.items() if b <= cut + 1e-9}
+    withdrawn = sched.withdraw_not_started(cut)
+    kept = {p.task_id for p in sched.placements}
+    assert kept | {t.id for t in withdrawn} == {t.id for t in tasks}
+    # "started" is judged against the pre-withdrawal timings: exactly the
+    # started set survives, everything else is pulled back
+    assert kept == started
+    validate_schedule(sched.schedule(), check_reconfig=True)
+    for p in sched.placements:      # survivors only ever move earlier
+        assert p.begin <= old_begin[p.task_id] + 1e-9
+
+
+# --- batched phase-2 scorer edge cases -------------------------------------
+
+#: a degenerate one-instance device: the repartitioning tree is a single
+#: leaf, so the event walk reduces to create + fold — the smallest spec
+#: the batched scorer must still get bit-exact
+SINGLE = dataclasses.replace(
+    A30,
+    name="single",
+    roots=(InstanceNode(0, 0, 1, 1),),
+    sizes=(1,),
+    t_create={1: 0.11},
+    t_destroy={1: 0.10},
+)
+
+
+def _batch_arrays(spec, cands):
+    """(C, N, L) duration tensor + (C, N) lengths from per-node dicts."""
+    import numpy as np
+
+    index = {node.key: i for i, node in enumerate(spec.nodes)}
+    N = len(spec.nodes)
+    L = max((len(v) for nd in cands for v in nd.values()), default=1)
+    cd = np.zeros((len(cands), N, max(L, 1)))
+    cl = np.zeros((len(cands), N), dtype=np.int64)
+    for c, nd in enumerate(cands):
+        for key, durs in nd.items():
+            cd[c, index[key], :len(durs)] = durs
+            cl[c, index[key]] = len(durs)
+    return cd, cl
+
+
+def test_chains_makespan_batch_single_node_device():
+    from repro.core.timing import chains_makespan, chains_makespan_batch
+
+    root = SINGLE.roots[0]
+    cands = [
+        {},                                   # empty candidate
+        {root.key: [2.0]},                    # one task
+        {root.key: [3.0, 2.0, 1.0]},          # a chain
+        {root.key: [1.0] * 7},                # ties
+    ]
+    cd, cl = _batch_arrays(SINGLE, cands)
+    batch = chains_makespan_batch(SINGLE, cd, cl)
+    for c, nd in enumerate(cands):
+        ids = {k: list(range(len(v))) for k, v in nd.items()}
+        assert batch[c] == chains_makespan(SINGLE, ids, nd)
+    assert batch[0] == 0.0
+    assert batch[1] == SINGLE.t_create[1] + 2.0
+
+
+def test_chains_makespan_batch_all_ties_integer_durations():
+    """The EPS-ordered-winner regression class from PR 3: integer
+    durations tied across every chain still score bit-identically to the
+    sequential walk (same heap tie-breaking, same fold order)."""
+    from repro.core.timing import chains_makespan, chains_makespan_batch
+
+    spec = A100
+    ones = [n.key for n in spec.nodes if n.size == 1]
+    twos = [n.key for n in spec.nodes if n.size == 2]
+    cands = [
+        {k: [1.0, 1.0, 1.0] for k in ones},
+        {k: [2.0, 2.0] for k in ones[:3]} | {k: [2.0] for k in twos},
+        {k: [1.0] for k in ones} | {twos[0]: [1.0, 1.0]},
+        {ones[0]: []},                        # all-empty row
+    ]
+    cd, cl = _batch_arrays(spec, cands)
+    batch = chains_makespan_batch(spec, cd, cl)
+    for c, nd in enumerate(cands):
+        ids = {k: list(range(len(v))) for k, v in nd.items()}
+        assert batch[c] == chains_makespan(spec, ids, nd)
+    assert batch[3] == 0.0
+
+
+def test_chains_makespan_batch_mixed_empty_and_padded_rows():
+    """Zero-length rows beside fully-padded ones: the walk must ignore
+    padding past chain_len and inactive nodes entirely."""
+    import numpy as np
+
+    from repro.core.timing import chains_makespan, chains_makespan_batch
+
+    spec = A30
+    key0 = spec.nodes[1].key  # a non-root node
+    nd = {key0: [4.0, 3.0]}
+    cd, cl = _batch_arrays(spec, [nd, {}])
+    # poison every slot past chain_len: padding must never be read
+    L = cd.shape[2]
+    cd[np.arange(L)[None, None, :] >= cl[:, :, None]] = 77.0
+    batch = chains_makespan_batch(spec, cd, cl)
+    assert batch[0] == chains_makespan(
+        spec, {key0: [0, 1]}, nd
+    )
+    assert batch[1] == 0.0
 
 
 # --- property-based fuzz (runs only when hypothesis is installed) ----------
