@@ -21,6 +21,7 @@ from benchmarks import (
     t6_refinement,
     t7_concat,
     t9_multibatch,
+    t_cluster,
     t_cost,
     t_online,
 )
@@ -37,6 +38,7 @@ MODULES = {
     "t9": (t9_multibatch, "Table 9 multi-batch"),
     "cost": (t_cost, "Scheduler cost"),
     "online": (t_online, "Online vs batched FAR"),
+    "cluster": (t_cluster, "Heterogeneous cluster vs single queue"),
     "roofline": (roofline, "Roofline from dry-run"),
 }
 

@@ -1,0 +1,168 @@
+"""Heterogeneous cluster scheduling vs the naive single-queue baseline.
+
+Three questions, answered per workload and recorded in
+``BENCH_cluster.json`` (uploaded by the CI bench-smoke job):
+
+1. **Does the pool beat the best single device?**  ``far-cluster``
+   (phase-0 moldable device partitioning + per-device FAR + cross-device
+   move/swap) against the *single-queue* baseline: the whole batch FAR-
+   scheduled on whichever one device finishes it fastest.  The margin is
+   the heterogeneous-fleet win the cluster layer exists for.
+2. **How evenly does the pool run?**  Per-device utilisation (busy
+   compute share against the cluster makespan) of the partitioned plan.
+3. **What does per-driver reconfiguration sequencing buy?**  The same
+   batch on a homogeneous ``multi_gpu`` forest with per-tree
+   reconfiguration sequences (the paper-§2.1-faithful model: one driver
+   per GPU) vs the old globally-coupled sequence
+   (``reconfig_scope="global"``) — the reconfig parallelism win.
+
+CLI: ``PYTHONPATH=src python -m benchmarks.t_cluster [--quick]``
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.cluster import cluster, validate_cluster_schedule
+from repro.core.device_spec import A30, A100, H100, multi_gpu
+from repro.core.far import schedule_batch
+from repro.core.policy import SchedulerConfig, get_policy
+from repro.core.problem import validate_schedule
+from repro.core.synth import generate_cluster_tasks, generate_tasks, workload
+
+from benchmarks.common import Rows
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_cluster.json")
+
+CFG = SchedulerConfig()
+
+POOLS = {
+    "A30+A100": (A30, A100),
+    "A30+A100+H100": (A30, A100, H100),
+}
+
+
+def _cluster_entry(pool_name, specs, scaling, n, seed) -> dict:
+    from repro.core.bounds import cluster_approximation_factor
+
+    cs = cluster(*specs)
+    tasks = generate_cluster_tasks(n, cs, scaling, "wide", seed=seed)
+    plan = get_policy("far-cluster").plan(tasks, cs, CFG)
+    validate_cluster_schedule(plan.schedule, tasks)
+    cp = plan.extras["cluster"]
+    far = get_policy("far")
+    singles = {
+        dev.name: far.plan(tasks, dev, CFG).makespan for dev in cs.devices
+    }
+    best_dev = min(singles, key=singles.get)
+    best_single = singles[best_dev]
+    assert plan.makespan <= best_single + 1e-9, \
+        "far-cluster lost to a single device"
+    return {
+        "pool": pool_name,
+        "workload": f"{scaling.capitalize()}Scaling,WideTimes",
+        "n_tasks": n,
+        "seed": seed,
+        "cluster_makespan_s": plan.makespan,
+        "best_single_device": best_dev,
+        "best_single_makespan_s": best_single,
+        "single_queue_over_cluster": best_single / plan.makespan,
+        "mode": cp.mode,
+        "cross_device_moves": cp.moves,
+        "cross_device_swaps": cp.swaps,
+        "partition_sizes": [len(p) for p in cp.partition],
+        "device_utilisation": dict(zip(
+            [d.name for d in cs.devices], plan.schedule.utilization()
+        )),
+        "plan_wall_s": plan.elapsed_s,
+        "per_device_certified_factor": cluster_approximation_factor(cs),
+    }
+
+
+def _reconfig_entry(count, n, seed) -> dict:
+    """Per-tree vs globally-coupled reconfiguration sequences on a
+    homogeneous multi-GPU forest (the satellite fidelity fix)."""
+    spec_tree = multi_gpu(A100, count)
+    spec_global = dataclasses.replace(spec_tree, reconfig_scope="global")
+    cfg = workload("mixed", "wide", spec_tree)
+    tasks = generate_tasks(n, spec_tree, cfg, seed=seed)
+    a = schedule_batch(tasks, spec_tree)
+    b = schedule_batch(tasks, spec_global)
+    validate_schedule(a.schedule, tasks)
+    validate_schedule(b.schedule, tasks)
+    return {
+        "device": spec_tree.name,
+        "n_tasks": n,
+        "makespan_per_tree_s": a.makespan,
+        "makespan_global_s": b.makespan,
+        "reconfig_parallelism_win_s": b.makespan - a.makespan,
+        "reconfig_parallelism_win_ratio": b.makespan / a.makespan,
+    }
+
+
+def run(quick: bool = False, reps: int | None = None) -> Rows:
+    del reps  # benchmarks.run passes it; the sweep is deterministic
+    sizes = (16,) if quick else (16, 32, 64)
+    seeds = (0,) if quick else (0, 1)
+    entries = []
+    for pool_name, specs in POOLS.items():
+        for scaling in ("mixed", "poor", "good"):
+            for n in sizes:
+                cell = [
+                    _cluster_entry(pool_name, specs, scaling, n, seed)
+                    for seed in seeds
+                ]
+                mean = float(np.mean(
+                    [e["single_queue_over_cluster"] for e in cell]
+                ))
+                for e in cell:
+                    e["single_queue_over_cluster_mean"] = mean
+                entries.extend(cell)
+
+    reconfig = [
+        _reconfig_entry(2, 24 if quick else 48, seed=0),
+        _reconfig_entry(4, 24 if quick else 96, seed=0),
+    ]
+
+    report = {
+        "metric": "far-cluster vs best single device (single-queue "
+                  "baseline); per-device utilisation; per-tree vs global "
+                  "reconfiguration sequencing on multi-GPU forests",
+        "entries": entries,
+        "reconfig_scope": reconfig,
+    }
+    with open(JSON_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+
+    rows = Rows(
+        "far-cluster vs single-queue baseline",
+        ["pool", "workload", "n", "cluster_mk", "best_single",
+         "single/cluster", "mode", "mv/sw", "util"],
+    )
+    for e in entries:
+        util = "/".join(
+            f"{u:.2f}" for u in e["device_utilisation"].values()
+        )
+        rows.add(e["pool"], e["workload"], e["n_tasks"],
+                 e["cluster_makespan_s"], e["best_single_makespan_s"],
+                 e["single_queue_over_cluster"], e["mode"],
+                 f"{e['cross_device_moves']}/{e['cross_device_swaps']}",
+                 util)
+    for e in reconfig:
+        rows.add(e["device"], "reconfig win", e["n_tasks"],
+                 e["makespan_per_tree_s"], e["makespan_global_s"],
+                 e["reconfig_parallelism_win_ratio"], "per-tree vs global",
+                 "-", "-")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (CI bench-smoke)")
+    args = ap.parse_args()
+    print(run(quick=args.quick).render())

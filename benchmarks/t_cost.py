@@ -160,6 +160,19 @@ def run(reps: int = 5, quick: bool = False) -> Rows:
     report["n200_replay_path_p50_ms"] = float(np.median(rep_times))
     report["n200_replay_path_best_ms"] = float(np.min(rep_times))
     report["n200_speedup_engine_vs_replay_path"] = speedup
+    # per-driver reconfiguration sequencing on multi-GPU forests: the
+    # paper-§2.1-faithful per-tree model vs the old globally-coupled
+    # sequence (reconfig_scope="global"); recorded here so the fidelity
+    # fix's makespan delta stays tracked alongside the scheduler-cost
+    # numbers.  One implementation: benchmarks/t_cluster owns the
+    # measurement (and records the same comparison in BENCH_cluster.json)
+    from benchmarks.t_cluster import _reconfig_entry
+
+    report["multi_gpu_reconfig"] = [
+        _reconfig_entry(count, n, seed=0)
+        for count, n in (((2, 24), (4, 48)) if quick else ((2, 48), (4, 96)))
+    ]
+
     report["note"] = (
         "evaluator entries are bit-identical in output (enforced by "
         "tests/test_family_eval.py); the vectorized evaluator amortizes a "

@@ -23,7 +23,7 @@ import os
 import numpy as np
 
 from repro.core.device_spec import A100
-from repro.core.policy import SchedulerConfig, get_policy
+from repro.core.policy import SchedulerConfig, available_policies, get_policy
 from repro.core.problem import validate_schedule
 from repro.core.service import SchedulingService
 from repro.core.synth import generate_tasks, workload
@@ -103,6 +103,74 @@ def _service_entry(scaling: str, n_tasks: int, mean_gap: float,
     }
 
 
+def _sweep_stream(policy, tasks, arrivals, deadlines, max_wait_s):
+    """One plain (no-replan) service stream flushed under ``policy``."""
+    svc = SchedulingService(
+        A100,
+        policy=policy,
+        config=SchedulerConfig(max_wait_s=max_wait_s, max_batch=16),
+    )
+    for task, arr in zip(tasks, arrivals):
+        svc.submit(task, arrival=float(arr), deadline=deadlines[task.id])
+    combined = svc.drain()
+    validate_schedule(combined, tasks, check_reconfig=False)
+    return svc
+
+
+def _policy_sweep(n_tasks=40, seed=0, max_wait_s=8.0) -> list[dict]:
+    """The multi-policy serving experiment (ROADMAP open item): every
+    registered schedule-producing policy drives the service's batch
+    flushes, across arrival rates.  `lower-bound` is schedule-less and
+    `far-cluster` delegates to `far` on a single device, so both are
+    skipped; the interesting axis is offline FAR flushing vs the greedy
+    and the §6.5 baselines as arrival density changes."""
+    policies = [
+        p for p in available_policies()
+        if p not in ("lower-bound", "far-cluster")
+    ]
+    cfg = workload("mixed", "wide", A100)
+    tasks = generate_tasks(n_tasks, A100, cfg, seed=seed)
+    offline = get_policy("far").plan(tasks, A100, CFG).makespan
+    out = []
+    for mean_gap in (0.5, 2.0, 8.0):
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(mean_gap, size=n_tasks))
+        deadlines = {
+            t.id: float(a) + max_wait_s + float(s) * min(t.times.values())
+            for t, a, s in zip(tasks, arrivals,
+                               rng.uniform(2.0, 12.0, size=n_tasks))
+        }
+        per_rate = {}
+        for policy in policies:
+            svc = _sweep_stream(policy, tasks, arrivals, deadlines,
+                                max_wait_s)
+            wall_ms = np.asarray(svc.stats.plan_wall_s()) * 1e3
+            per_rate[policy] = {
+                "policy": policy,
+                "workload": cfg.name,
+                "n_tasks": n_tasks,
+                "mean_interarrival_s": mean_gap,
+                "batches": svc.stats.batches,
+                "online_placements": svc.stats.online_placements,
+                "decision_wall_ms_p95": float(np.percentile(wall_ms, 95))
+                if len(wall_ms) else 0.0,
+                "makespan_s": svc.makespan,
+                "makespan_ratio_vs_offline_far": float(
+                    svc.makespan / offline
+                ),
+                "deadline_miss_rate": svc.deadline_report()["miss_rate"],
+            }
+        far_mk = per_rate["far"]["makespan_s"]
+        for e in per_rate.values():
+            # the comparison column: this policy's served makespan
+            # against FAR flushing on the identical stream
+            e["makespan_ratio_vs_far_flushing"] = float(
+                e["makespan_s"] / far_mk
+            )
+            out.append(e)
+    return out
+
+
 def run(reps: int = 40) -> Rows:
     rows = Rows(
         "Online greedy vs offline FAR (A100)",
@@ -138,6 +206,9 @@ def run(reps: int = 40) -> Rows:
             _service_entry("mixed", 30, mean_gap=30.0, max_wait_s=8.0, seed=0),
             _service_entry("poor", 60, mean_gap=1.0, max_wait_s=8.0, seed=1),
         ],
+        # the multi-policy serving sweep: every schedule-producing policy
+        # flushing the same streams, across arrival rates
+        "policy_sweep": _policy_sweep(),
     }
     with open(JSON_PATH, "w") as fh:
         json.dump(report, fh, indent=2)
@@ -156,4 +227,17 @@ def run(reps: int = 40) -> Rows:
                      100 * e["deadline_miss_rate_replan"],
                      e["replan_wins"])
     print(svc_rows.render())
+    sweep_rows = Rows(
+        "Multi-policy serving sweep (A100, MixedScaling/Wide, n=40)",
+        ["policy", "gap_s", "batches", "online", "mk/offline_far",
+         "mk/far_flushing", "miss%", "wall_p95_ms"],
+    )
+    for e in report["policy_sweep"]:
+        sweep_rows.add(e["policy"], e["mean_interarrival_s"], e["batches"],
+                       e["online_placements"],
+                       e["makespan_ratio_vs_offline_far"],
+                       e["makespan_ratio_vs_far_flushing"],
+                       100 * e["deadline_miss_rate"],
+                       e["decision_wall_ms_p95"])
+    print(sweep_rows.render())
     return rows

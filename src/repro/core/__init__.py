@@ -19,6 +19,15 @@ from repro.core.family_eval import (
     register_evaluator,
 )
 from repro.core.far import FARResult, far_schedule, rho, schedule_batch
+from repro.core.cluster import (
+    ClusterMultiBatchScheduler,
+    ClusterPlan,
+    ClusterSchedule,
+    ClusterSpec,
+    cluster,
+    partition_batch,
+    validate_cluster_schedule,
+)
 from repro.core.multibatch import (
     ConcatResult,
     MultiBatchScheduler,
@@ -44,11 +53,13 @@ from repro.core.service import (
 )
 from repro.core.problem import (
     InfeasibleScheduleError,
+    Profile,
     ReconfigEvent,
     Schedule,
     ScheduledTask,
     Task,
     area_lower_bound,
+    bind_tasks,
     lower_bound,
     validate_schedule,
 )
@@ -66,9 +77,12 @@ from repro.core.timing import ReplayEngine, TimingEngine, make_engine
 __all__ = [
     "A30", "A100", "H100", "SPECS", "TPU_POD_256", "TPU_SUPERPOD_512",
     "DeviceSpec", "InstanceNode", "multi_gpu",
-    "Task", "Schedule", "ScheduledTask", "ReconfigEvent",
-    "InfeasibleScheduleError", "validate_schedule",
+    "Task", "Profile", "bind_tasks", "Schedule", "ScheduledTask",
+    "ReconfigEvent", "InfeasibleScheduleError", "validate_schedule",
     "area_lower_bound", "lower_bound",
+    "ClusterSpec", "ClusterSchedule", "ClusterPlan", "cluster",
+    "ClusterMultiBatchScheduler", "partition_batch",
+    "validate_cluster_schedule",
     "allocation_family", "first_allocation",
     "Assignment", "list_schedule_allocation", "list_schedule_groups",
     "LPTGroups", "replay", "alive_at_end",

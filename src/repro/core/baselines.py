@@ -45,8 +45,10 @@ def speedup(task: Task, size: int, base: int) -> float:
 
 def miso_opt(tasks: Sequence[Task], spec: DeviceSpec) -> Schedule:
     """Round-based MISO-OPT (paper §6.5 description of [31])."""
+    from repro.core.problem import bind_tasks
+
     base = min(spec.sizes)
-    fifo = list(tasks)
+    fifo = list(bind_tasks(tasks, spec))
     items: list[ScheduledTask] = []
     reconfigs: list[ReconfigEvent] = []
     now = 0.0
@@ -114,6 +116,9 @@ def fix_part(
     """FIFO on a fixed partition; no reconfiguration cost (paper §6.5)."""
     import heapq
 
+    from repro.core.problem import bind_tasks
+
+    tasks = bind_tasks(tasks, spec)
     items: list[ScheduledTask] = []
     heap: list[tuple[float, int, InstanceNode]] = []
     for i, inst in enumerate(

@@ -84,6 +84,19 @@ def theorem1_rigid_bound(
     return area + h_max
 
 
+def cluster_approximation_factor(cspec) -> float:
+    """The §5 certificate that survives at heterogeneous-cluster level:
+    the worst per-device factor of the pool.  Whatever the phase-0
+    partitioner decides, each device's FAR schedule stays within its own
+    certified factor of that device's optimum *for its sub-batch*; the
+    partitioning step itself carries no Theorem-1-style certificate —
+    the cluster-level anchor is instead the constructive guarantee that
+    ``far-cluster`` never loses to the best single device
+    (:mod:`repro.core.cluster`).  ``cspec`` is duck-typed: anything with
+    ``.devices``."""
+    return max(approximation_factor(d) for d in cspec.devices)
+
+
 def certified_gap(result_makespan: float, tasks: Sequence[Task],
                   spec: DeviceSpec) -> float:
     """makespan / (factor · area-lower-bound): ≤ 1 certifies optimal-factor

@@ -1,0 +1,856 @@
+"""Heterogeneous cluster scheduling: instance-typed device pools and the
+``far-cluster`` policy (beyond-paper; cf. MIG-Serving, arXiv:2109.11067,
+and the fragmentation-aware cluster scheduler of arXiv:2512.16099).
+
+The paper's multi-GPU story (§3.2) stops at forests of *identical*
+devices — one ``DeviceSpec``, one reconfiguration-cost table, one profile
+per task.  A :class:`ClusterSpec` is an ordered pool of heterogeneous
+``DeviceSpec``s (mixed A30/A100/H100, TPU pods, degraded devices), each
+keeping its own repartitioning forest, reconfiguration tables and
+per-driver reconfiguration sequences; tasks carry instance-type-keyed
+:class:`~repro.core.problem.Profile`s and are lowered onto one device's
+kind at the scheduling boundary (``Task.bind``).
+
+``far-cluster`` plans a batch in three stages:
+
+1. **phase 0 — moldable device partitioning** (:func:`partition_batch`):
+   LPT / dual-approximation over per-device area lower bounds.  Tasks
+   descend by best-case work density; each goes to the device whose
+   projected bound ``load + max(area/#slices, tallest)`` grows least.
+2. **per-device FAR**: phases 1–3 run unchanged on each device's
+   sub-batch through the registered ``"far"`` policy — the cluster layer
+   composes existing policy objects rather than reimplementing them.
+3. **cross-device local search** (:func:`cluster_refine`): the phase-3
+   move/swap heuristics (``refine.best_move_from`` / ``best_swap_from``)
+   extended to inter-device candidates — durations are evaluated under
+   the *destination* device's profile kind, every candidate edit is
+   scored exactly on the per-device timing engines (speculative
+   extract/place + undo), and only strict cluster-makespan improvements
+   are kept.
+
+The final plan is compared against scheduling the whole batch on each
+single device (skipped when the partitioned makespan already beats that
+device's admissible lower bound), so **the cluster never does worse than
+the best single device** — by construction, which the hypothesis suite
+pins (``tests/test_cluster.py``).
+
+Serving: :class:`ClusterMultiBatchScheduler` gives
+:class:`~repro.core.service.SchedulingService` the same driver surface a
+single-device ``MultiBatchScheduler`` has (``add_batch`` / ``clone`` /
+``withdraw_uncommitted`` / ``makespan`` / ``combined_schedule``), backed
+by one per-device scheduler each carrying its own §4 seam
+:class:`~repro.core.multibatch.Tail` — so deadlines, admission control
+and tail re-planning work on heterogeneous pools for free
+(``SchedulingService(pool=ClusterSpec(...))``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from functools import cached_property
+from typing import Sequence
+
+from repro.core.device_spec import DeviceSpec, retree
+from repro.core.multibatch import MultiBatchScheduler
+from repro.core.policy import (
+    BasePolicy,
+    PlanResult,
+    SchedulerConfig,
+    get_policy,
+    register_policy,
+)
+from repro.core.problem import (
+    EPS,
+    InfeasibleScheduleError,
+    Schedule,
+    Task,
+    lower_bound,
+    validate_schedule,
+)
+from repro.core.refine import best_move_from, best_swap_from
+from repro.core.repartition import Assignment, NodeKey
+from repro.core.timing import TimingEngine
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """An ordered pool of heterogeneous devices.
+
+    Built with :func:`cluster`, which re-indexes each device's forest so
+    tree ids are *globally unique across the pool* — ``(tree, slice)``
+    cells, and therefore merged cluster-wide schedule views, never
+    collide between devices.
+    """
+
+    name: str
+    devices: tuple[DeviceSpec, ...]
+
+    @cached_property
+    def n_slices(self) -> int:
+        return sum(d.n_slices for d in self.devices)
+
+    @cached_property
+    def device_kinds(self) -> tuple[str, ...]:
+        return tuple(d.device_kind for d in self.devices)
+
+    @cached_property
+    def nodes(self) -> tuple:
+        """All instance nodes of the pool (device order, BFS per device)."""
+        return tuple(n for d in self.devices for n in d.nodes)
+
+    @cached_property
+    def tree_device(self) -> dict[int, int]:
+        """tree id -> index of the owning device."""
+        out: dict[int, int] = {}
+        for i, d in enumerate(self.devices):
+            for r in d.roots:
+                out[r.tree] = i
+        return out
+
+    def device_of_tree(self, tree: int) -> DeviceSpec:
+        return self.devices[self.tree_device[tree]]
+
+    def supports(self, task: Task) -> bool:
+        """Whether at least one device of the pool can host the task
+        under the same predicate :func:`partition_batch` uses (the
+        profile covers EVERY size of that device — FAR molds over the
+        whole C_G), so a True here guarantees partitioning will not
+        reject the task mid-flush."""
+        return any(
+            task.supports(d.device_kind)
+            and all(s in task.times_for(d.device_kind) for s in d.sizes)
+            for d in self.devices
+        )
+
+    def split_schedule(self, schedule) -> list[Schedule]:
+        """Split a merged cluster-wide schedule view back into one
+        absolute-timed :class:`Schedule` per device (by tree id), e.g.
+        to validate a serving facade's combined schedule per device."""
+        items: list[list] = [[] for _ in self.devices]
+        rcs: list[list] = [[] for _ in self.devices]
+        for it in schedule.items:
+            items[self.tree_device[it.node.tree]].append(it)
+        for rc in schedule.reconfigs:
+            rcs[self.tree_device[rc.node.tree]].append(rc)
+        return [
+            Schedule(spec=d, items=its, reconfigs=rc)
+            for d, its, rc in zip(self.devices, items, rcs)
+        ]
+
+    # -- fault tolerance ----------------------------------------------------
+    def degrade(self, dead_slices: Sequence[tuple[int, int]]) -> "ClusterSpec":
+        """Cluster with dead ``(tree, slice)`` cells pruned per owning
+        device (``DeviceSpec.degrade``); devices left with no healthy
+        instances drop out of the pool."""
+        dead = list(dead_slices)
+        new_devices = []
+        for i, d in enumerate(self.devices):
+            mine = [c for c in dead if self.tree_device.get(c[0]) == i]
+            nd = d.degrade(mine) if mine else d
+            if nd.roots:
+                new_devices.append(nd)
+        return ClusterSpec(
+            name=f"{self.name}-degraded", devices=tuple(new_devices)
+        )
+
+
+def cluster(*specs: DeviceSpec, name: str | None = None) -> ClusterSpec:
+    """Build a :class:`ClusterSpec` from device specs, re-treeing each so
+    tree ids are globally unique across the pool.  Each device keeps its
+    own kind, sizes, reconfiguration tables and ``reconfig_scope``."""
+    if not specs:
+        raise ValueError("a cluster needs at least one device")
+    devices = []
+    tree = 0
+    for spec in specs:
+        roots = tuple(retree(r, tree + i) for i, r in enumerate(spec.roots))
+        tree += len(spec.roots)
+        devices.append(dataclasses.replace(
+            spec, kind=spec.device_kind, roots=roots
+        ))
+    return ClusterSpec(
+        name=name or "+".join(s.name for s in specs),
+        devices=tuple(devices),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ClusterSchedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterSchedule:
+    """One absolute-timed schedule per device, devices independent in
+    time (each starts at 0 — there is no cross-device resource, so the
+    cluster makespan is the max over devices)."""
+
+    cluster: ClusterSpec
+    schedules: tuple[Schedule, ...]  # aligned with cluster.devices
+
+    @property
+    def spec(self) -> ClusterSpec:
+        return self.cluster
+
+    @property
+    def items(self) -> list:
+        return [it for s in self.schedules for it in s.items]
+
+    @property
+    def reconfigs(self) -> list:
+        return [rc for s in self.schedules for rc in s.reconfigs]
+
+    @property
+    def makespan(self) -> float:
+        return max((s.makespan for s in self.schedules), default=0.0)
+
+    def device_makespans(self) -> list[float]:
+        return [s.makespan for s in self.schedules]
+
+    def utilization(self) -> list[float]:
+        """Busy compute share per device against the cluster makespan."""
+        omega = self.makespan
+        if omega <= 0.0:
+            return [0.0 for _ in self.schedules]
+        return [
+            s.work_area() / (d.n_slices * omega)
+            for d, s in zip(self.cluster.devices, self.schedules)
+        ]
+
+
+def validate_cluster_schedule(
+    cs: ClusterSchedule, tasks: Sequence[Task] | None = None
+) -> None:
+    """Validate each device's schedule under its own spec (full paper
+    constraints incl. per-driver reconfiguration sequencing), and — when
+    ``tasks`` is given — that the pool covers the batch exactly once."""
+    for sched in cs.schedules:
+        validate_schedule(sched, None, check_reconfig=True)
+    if tasks is not None:
+        want = sorted(t.id for t in tasks)
+        got = sorted(it.task.id for it in cs.items)
+        if want != got:
+            raise InfeasibleScheduleError(
+                f"cluster scheduled ids {got} != batch ids {want}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Phase 0: moldable device partitioning
+# ---------------------------------------------------------------------------
+
+
+def partition_batch(
+    tasks: Sequence[Task],
+    cspec: ClusterSpec,
+    loads: Sequence[float] | None = None,
+) -> list[list[Task]]:
+    """Split one batch across the cluster's devices.
+
+    LPT / dual-approximation over per-device area lower bounds: tasks
+    descend by best-case work density; each is assigned to the supported
+    device whose projected admissible bound
+    ``load + max(area / #slices, tallest)`` grows least (ties to the
+    earlier device).  ``loads`` are per-device start pressures in seconds
+    (e.g. serving tail releases); default 0.
+
+    Returns one list per device, each in the original batch order, with
+    the *original* task objects (binding to device kinds happens inside
+    the per-device planners).
+    """
+    devices = cspec.devices
+    start = list(loads) if loads is not None else [0.0] * len(devices)
+    if len(start) != len(devices):
+        raise ValueError("loads must have one entry per device")
+
+    entries = []  # (orig_index, task, {device: (min_work, best_time)})
+    for idx, t in enumerate(tasks):
+        per_dev: dict[int, tuple[float, float]] = {}
+        for i, d in enumerate(devices):
+            if not t.supports(d.device_kind):
+                continue
+            times = t.times_for(d.device_kind)
+            # FAR molds over the device's whole C_G, so a device counts
+            # only when the profile covers every one of its sizes
+            if any(s not in times for s in d.sizes):
+                continue
+            w = min(s * times[s] for s in d.sizes)
+            h = min(times[s] for s in d.sizes)
+            per_dev[i] = (w, h)
+        if not per_dev:
+            raise ValueError(
+                f"task {t.id} fits no device of cluster {cspec.name!r} "
+                f"(kinds: {list(cspec.device_kinds)})"
+            )
+        entries.append((idx, t, per_dev))
+
+    # LPT: heaviest best-case work density first (ties by batch position)
+    entries.sort(key=lambda e: (
+        -min(w / devices[i].n_slices for i, (w, _) in e[2].items()),
+        e[0],
+    ))
+
+    area = [0.0] * len(devices)
+    tall = [0.0] * len(devices)
+    parts: list[list[tuple[int, Task]]] = [[] for _ in devices]
+    for idx, t, per_dev in entries:
+        best_i, best_bound = None, math.inf
+        for i in sorted(per_dev):
+            w, h = per_dev[i]
+            bound = start[i] + max(
+                (area[i] + w) / devices[i].n_slices, max(tall[i], h)
+            )
+            if bound < best_bound - EPS:
+                best_i, best_bound = i, bound
+        assert best_i is not None
+        w, h = per_dev[best_i]
+        area[best_i] += w
+        tall[best_i] = max(tall[best_i], h)
+        parts[best_i].append((idx, t))
+
+    for lst in parts:
+        lst.sort()  # restore original batch order per device
+    return [[t for _, t in lst] for lst in parts]
+
+
+# ---------------------------------------------------------------------------
+# Cross-device local search (phase 3 across the pool)
+# ---------------------------------------------------------------------------
+
+
+def _cluster_score(engines: Sequence[TimingEngine]) -> tuple[float, float]:
+    """(cluster makespan, exact total of device makespans) — the total is
+    the compaction tie-break, fsum'd so it is order-independent."""
+    mks = [eng.makespan() for eng in engines]
+    return (max(mks, default=0.0), math.fsum(mks))
+
+
+def cluster_refine(
+    cspec: ClusterSpec,
+    engines: Sequence[TimingEngine],
+    originals: dict[int, Task],
+    max_edits: int = 24,
+    eps: float = EPS,
+) -> tuple[int, int]:
+    """Inter-device move/swap local search over per-device timing engines.
+
+    Each round takes the critical device (its makespan is the cluster
+    makespan) and proposes, per destination node on every other device,
+    the phase-3 candidates — the transferred duration closest to half the
+    margin ``omega - end(target chain)``, with durations evaluated under
+    the *destination* kind (``refine.best_move_from`` /
+    ``best_swap_from`` on cross-device views).  Every proposal is scored
+    exactly by applying extract/place on both engines, reading the
+    cluster makespan, and undoing; the best strictly-improving edit is
+    kept.  Mutates the engines in place; returns (moves, swaps).
+    """
+    devices = cspec.devices
+    moves = swaps = 0
+    if len(engines) < 2:
+        return 0, 0
+
+    def dst_dur(task: Task, dev: DeviceSpec, size: int) -> float | None:
+        if not task.supports(dev.device_kind):
+            return None
+        return task.times_for(dev.device_kind).get(size)
+
+    for _ in range(max_edits):
+        score0 = _cluster_score(engines)
+        omega = score0[0]
+        if omega <= eps:
+            break
+        mks = [eng.makespan() for eng in engines]
+        crit = mks.index(omega)
+        src_eng = engines[crit]
+        src_dev = devices[crit]
+        src_ends = src_eng.node_end_times()
+        crit_chains = [
+            k for k, end in sorted(src_ends.items())
+            if end >= omega - eps and src_eng.chains.get(k)
+        ]
+        if not crit_chains:
+            break
+        src_tasks = [
+            (k, tid) for k in crit_chains for tid in src_eng.chains[k]
+        ]
+
+        # per (destination device, size): ascending (duration, tid) views
+        # of the critical device's tasks under the destination kind
+        view_cache: dict[tuple[int, int], list[tuple[float, int]]] = {}
+
+        def src_view(a: int, size: int) -> list[tuple[float, int]]:
+            hit = view_cache.get((a, size))
+            if hit is None:
+                hit = sorted(
+                    (d, tid)
+                    for _, tid in src_tasks
+                    for d in (dst_dur(originals[tid], devices[a], size),)
+                    if d is not None
+                )
+                view_cache[(a, size)] = hit
+            return hit
+
+        best_edit = None  # (score, kind, payload)
+        for a, dst_eng in enumerate(engines):
+            if a == crit:
+                continue
+            dst_dev = devices[a]
+            dst_ends = dst_eng.node_end_times()
+            proposals = []
+            for node in dst_dev.nodes:
+                margin = omega - dst_ends.get(node.key, 0.0)
+                if margin <= eps:
+                    continue
+                view = src_view(a, node.size)
+                if not view:
+                    continue
+                durs = [d for d, _ in view]
+                ids = [tid for _, tid in view]
+                tid = best_move_from(ids, durs, margin)
+                if tid is not None:
+                    proposals.append(("move", tid, node.key))
+                # swap: a critical-device task against one of the target
+                # chain's tasks (net growth of the target closest to
+                # margin/2), provided the displaced task fits back onto
+                # the critical chain it frees
+                chain = dst_eng.chains.get(node.key)
+                if chain:
+                    da = sorted(
+                        (dst_eng.durs[node.key][i], tj)
+                        for i, tj in enumerate(chain)
+                    )
+                    pair = best_swap_from(view, da, margin)
+                    if pair is not None:
+                        tk, tj = pair
+                        ki = src_eng.task_node[tk]
+                        if dst_dur(originals[tj], src_dev, ki[2]) is not None:
+                            proposals.append(("swap", tk, tj, node.key))
+            for prop in proposals:
+                n_src, n_dst = _apply_edit(
+                    prop, src_eng, src_dev, dst_eng, dst_dev, originals
+                )
+                score = _cluster_score(engines)
+                for _ in range(n_dst):
+                    dst_eng.undo()
+                for _ in range(n_src):
+                    src_eng.undo()
+                improves = score[0] < score0[0] - eps or (
+                    score[0] < score0[0] + eps and score[1] < score0[1] - eps
+                )
+                if improves and (best_edit is None or score < best_edit[0]):
+                    best_edit = (score, a, prop)
+        if best_edit is None:
+            break
+        _, a, prop = best_edit
+        _apply_edit(prop, src_eng, src_dev, engines[a], devices[a], originals)
+        if prop[0] == "move":
+            moves += 1
+        else:
+            swaps += 1
+    return moves, swaps
+
+
+def _apply_edit(prop, src_eng, src_dev, dst_eng, dst_dev, originals
+                ) -> tuple[int, int]:
+    """Apply one proposed cross-device edit to the engines — the ONE
+    sequence both speculative scoring and the commit use, so what gets
+    committed is exactly what was scored.  Returns the per-engine edit
+    counts (src, dst) for the caller's undo loop."""
+    if prop[0] == "move":
+        _, tid, dst_key = prop
+        src_eng.apply_extract(tid, src_eng.task_node[tid])
+        dst_eng.tasks[tid] = originals[tid].bind(dst_dev)
+        dst_eng.apply_place(tid, dst_key)
+        return 1, 1
+    _, tk, tj, dst_key = prop
+    ki = src_eng.task_node[tk]
+    src_eng.apply_extract(tk, ki)
+    dst_eng.apply_extract(tj, dst_key)
+    dst_eng.tasks[tk] = originals[tk].bind(dst_dev)
+    dst_eng.apply_place(tk, dst_key)
+    src_eng.tasks[tj] = originals[tj].bind(src_dev)
+    src_eng.apply_place(tj, ki)
+    return 2, 2
+
+
+# ---------------------------------------------------------------------------
+# The far-cluster policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterPlan:
+    """Policy-specific payload of a ``far-cluster`` plan."""
+
+    cluster: ClusterSpec
+    partition: tuple[tuple[int, ...], ...]  # task ids per device
+    device_makespans: tuple[float, ...]
+    mode: str                   # "partitioned" | "single:<device index>"
+    moves: int
+    swaps: int
+    assignments: tuple[Assignment | None, ...]
+    single_makespans: dict[int, float]  # evaluated single-device fallbacks
+
+
+@register_policy("far-cluster")
+class FARClusterPolicy(BasePolicy):
+    """FAR lifted to a heterogeneous pool.
+
+    On a plain :class:`DeviceSpec` this is exactly the registered
+    ``"far"`` policy (a one-device cluster), so existing single-device
+    surfaces — seam concatenation, the invariant harness, serving — get
+    the policy for free.  On a :class:`ClusterSpec` it runs phase-0
+    partitioning, per-device FAR and the cross-device local search, then
+    keeps whichever of {partitioned plan, whole batch on one device}
+    wins — so the cluster plan never loses to the best single device.
+    """
+
+    def plan(
+        self,
+        tasks: Sequence[Task],
+        spec,
+        config: SchedulerConfig | None = None,
+        tail: object | None = None,
+    ) -> PlanResult:
+        if not isinstance(spec, ClusterSpec):
+            res = get_policy("far").plan(tasks, spec, config, tail)
+            res.policy = self.name
+            return res
+        if tail is not None:
+            raise ValueError(
+                "far-cluster carries per-device tails through "
+                "ClusterMultiBatchScheduler; a single seam Tail does not "
+                "apply to a heterogeneous pool"
+            )
+        return self._plan_cluster(tasks, spec, config or SchedulerConfig())
+
+    def _plan_cluster(
+        self, tasks: Sequence[Task], cspec: ClusterSpec,
+        config: SchedulerConfig,
+    ) -> PlanResult:
+        t0 = time.perf_counter()
+        devices = cspec.devices
+        if not tasks:
+            empty = ClusterSchedule(
+                cspec,
+                tuple(Schedule(spec=d, items=[], reconfigs=[])
+                      for d in devices),
+            )
+            return PlanResult(
+                policy=self.name, schedule=empty, makespan=0.0,
+                elapsed_s=time.perf_counter() - t0,
+            )
+        originals = {t.id: t for t in tasks}
+        far = get_policy("far")
+
+        parts = partition_batch(tasks, cspec)
+        t1 = time.perf_counter()
+        engines: list[TimingEngine] = []
+        assignments: list[Assignment] = []
+        for dev, part in zip(devices, parts):
+            if part:
+                asgn = far.plan(part, dev, config).assignment
+            else:
+                asgn = Assignment(dev, {}, {})
+            assignments.append(asgn)
+            engines.append(TimingEngine(asgn))
+        t2 = time.perf_counter()
+        moves, swaps = cluster_refine(cspec, engines, originals, eps=config.eps)
+        schedules = [eng.schedule() for eng in engines]
+        mk_part = max(s.makespan for s in schedules)
+        # the exposed assignments/partition must reflect the POST-refine
+        # chains (the engines edit copies), with the tasks dict pruned to
+        # what each device actually hosts — speculative cross-device
+        # probes register foreign bindings that must not leak out
+        assignments = []
+        part_ids: list[tuple[int, ...]] = []
+        for eng in engines:
+            asgn = eng.export_assignment()
+            hosted = {tid for lst in asgn.node_tasks.values() for tid in lst}
+            asgn.tasks = {tid: asgn.tasks[tid] for tid in sorted(hosted)}
+            assignments.append(asgn)
+            part_ids.append(tuple(sorted(hosted)))
+        t3 = time.perf_counter()
+
+        # single-device fallbacks: evaluated only where the partitioned
+        # plan does not already beat the device's admissible lower bound
+        # (single_d >= lower_bound_d >= mk_part there, so skipping keeps
+        # the never-worse-than-best-single guarantee intact)
+        single_mks: dict[int, float] = {}
+        best_single = None  # (makespan, index, PlanResult)
+        for i, dev in enumerate(devices):
+            if not all(t.supports(dev.device_kind) for t in tasks):
+                continue
+            try:
+                lb = lower_bound(tasks, dev)
+            except (KeyError, ValueError):
+                continue
+            if mk_part <= lb + config.eps:
+                continue
+            try:
+                plan = far.plan(tasks, dev, config)
+            except (KeyError, ValueError):
+                continue
+            single_mks[i] = plan.makespan
+            if best_single is None or plan.makespan < best_single[0] - config.eps:
+                best_single = (plan.makespan, i, plan)
+
+        if best_single is not None and best_single[0] < mk_part - config.eps:
+            mk, idx, plan = best_single
+            schedules = [
+                plan.schedule if i == idx
+                else Schedule(spec=d, items=[], reconfigs=[])
+                for i, d in enumerate(devices)
+            ]
+            out_assignments: list[Assignment | None] = [
+                plan.assignment if i == idx else None
+                for i in range(len(devices))
+            ]
+            partition = tuple(
+                tuple(t.id for t in tasks) if i == idx else ()
+                for i in range(len(devices))
+            )
+            mode, makespan, moves, swaps = f"single:{idx}", mk, 0, 0
+        else:
+            out_assignments = list(assignments)
+            partition = tuple(part_ids)
+            mode, makespan = "partitioned", mk_part
+
+        cs = ClusterSchedule(cspec, tuple(schedules))
+        return PlanResult(
+            policy=self.name,
+            schedule=cs,
+            makespan=makespan,
+            assignment=None,
+            elapsed_s=time.perf_counter() - t0,
+            phase_s={
+                "partition": t1 - t0,
+                "per_device_far": t2 - t1,
+                "cluster_refine": t3 - t2,
+            },
+            extras={"cluster": ClusterPlan(
+                cluster=cspec,
+                partition=partition,
+                device_makespans=tuple(s.makespan for s in schedules),
+                mode=mode,
+                moves=moves,
+                swaps=swaps,
+                assignments=tuple(out_assignments),
+                single_makespans=single_mks,
+            )},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Serving driver: per-device tails behind the MultiBatchScheduler surface
+# ---------------------------------------------------------------------------
+
+
+class ClusterMultiBatchScheduler:
+    """The serving-side cluster driver.
+
+    Presents the :class:`~repro.core.multibatch.MultiBatchScheduler`
+    surface the :class:`~repro.core.service.SchedulingService` consumes —
+    ``add_batch`` / ``adopt`` / ``clone`` / ``withdraw_uncommitted`` /
+    ``makespan`` / ``segments`` / ``results`` / ``combined_schedule`` —
+    while internally running one per-device ``MultiBatchScheduler``, each
+    with its own §4 seam tail and per-driver reconfiguration sequences.
+    Every flush is phase-0-partitioned across the pool using the current
+    per-device tail pressures as start loads.
+    """
+
+    def __init__(
+        self,
+        cspec: ClusterSpec,
+        policy: str = "far",
+        config: SchedulerConfig | None = None,
+    ):
+        self.cluster = cspec
+        self.config = config or SchedulerConfig()
+        self.policy = policy
+        self.mbs = [
+            MultiBatchScheduler(d, policy=policy, config=self.config)
+            for d in cspec.devices
+        ]
+        self.results: list[PlanResult] = []
+        self.originals: dict[int, Task] = {}
+
+    # -- MultiBatchScheduler surface ----------------------------------------
+    @property
+    def spec(self) -> ClusterSpec:
+        return self.cluster
+
+    @property
+    def segments(self) -> list[Schedule]:
+        return [s for mb in self.mbs for s in mb.segments]
+
+    @property
+    def makespan(self) -> float:
+        return max((mb.makespan for mb in self.mbs), default=0.0)
+
+    @property
+    def tail(self) -> tuple:
+        """Per-device seam tails (device order)."""
+        return tuple(mb.tail for mb in self.mbs)
+
+    def device_pressures(self) -> list[float]:
+        """Per-device start load for the partitioner: the latest slice
+        release of each device's committed tail."""
+        from repro.core.repartition import is_reconfig_key
+
+        out = []
+        for mb in self.mbs:
+            slice_rel = [
+                float(v) for k, v in mb.tail.release.items()
+                if not is_reconfig_key(k)
+            ]
+            out.append(max(slice_rel) if slice_rel else 0.0)
+        return out
+
+    def add_batch(self, tasks: Sequence[Task], not_before: float = 0.0
+                  ) -> Schedule:
+        """Partition one flush across the pool and splice each part after
+        its device's tail; returns the merged absolute-timed segment."""
+        for t in tasks:
+            self.originals[t.id] = t
+        parts = partition_batch(tasks, self.cluster, self.device_pressures())
+        items: list = []
+        reconfigs: list = []
+        for mb, part in zip(self.mbs, parts):
+            if not part:
+                continue
+            out = mb.add_batch(part, not_before=not_before)
+            items.extend(out.schedule.items)
+            reconfigs.extend(out.schedule.reconfigs)
+        merged = Schedule(spec=self.cluster, items=items, reconfigs=reconfigs)
+        self.results.append(PlanResult(
+            policy=f"{self.policy}-cluster",
+            schedule=merged,
+            makespan=merged.makespan,
+            extras={"partition": tuple(
+                tuple(t.id for t in p) for p in parts
+            )},
+        ))
+        return merged
+
+    def online_place(
+        self,
+        batch: Sequence[tuple[Task, float, object]],
+        decided_at: float,
+    ) -> Schedule:
+        """Greedy per-arrival placement across the pool (the service's
+        trickle/urgent fallback): each task goes to the device whose own
+        online greedy yields the best score, evaluated speculatively with
+        :meth:`OnlineScheduler.best_placement` against the device's
+        floored tail; chosen placements commit into that device's
+        timeline via ``adopt_segment``."""
+        from repro.core.online import OnlineScheduler
+
+        onlines: list[OnlineScheduler] = []
+        for mb in self.mbs:
+            fl = mb.tail.floored(decided_at)
+            onlines.append(
+                OnlineScheduler(mb.spec, release=fl.release, alive=fl.alive)
+            )
+        for task, arrival, _ in batch:
+            self.originals[task.id] = task
+            best = None  # ((rank, score..., device), index, bound task)
+            for i, (dev, ol) in enumerate(zip(self.cluster.devices, onlines)):
+                if not task.supports(dev.device_kind):
+                    continue
+                bt = task.bind(dev)
+                cand = ol.best_placement(bt, arrival=arrival)
+                if cand is None:
+                    continue
+                key = cand + (i,)
+                if best is None or key < best[0]:
+                    best = (key, i, bt)
+            if best is None:
+                raise ValueError(
+                    f"task {task.id} fits no device of {self.cluster.name!r}"
+                )
+            key, i, bt = best
+            # commit the previewed choice directly (key[3] is the node):
+            # re-probing the winning device would double its node scan
+            onlines[i].submit(bt, arrival=arrival, node_key=key[3])
+        items: list = []
+        reconfigs: list = []
+        for mb, ol in zip(self.mbs, onlines):
+            if not ol.placements:
+                continue
+            sched = ol.schedule()
+            mb.adopt_segment(sched)
+            items.extend(sched.items)
+            reconfigs.extend(sched.reconfigs)
+        merged = Schedule(spec=self.cluster, items=items, reconfigs=reconfigs)
+        self.results.append(PlanResult(
+            policy="online-cluster", schedule=merged,
+            makespan=merged.makespan,
+        ))
+        return merged
+
+    def clone(self) -> "ClusterMultiBatchScheduler":
+        # bypass __init__: it would build per-device schedulers only for
+        # them to be replaced — replan flushes clone twice per flush
+        new = ClusterMultiBatchScheduler.__new__(ClusterMultiBatchScheduler)
+        new.cluster = self.cluster
+        new.config = self.config
+        new.policy = self.policy
+        new.mbs = [mb.clone() for mb in self.mbs]
+        new.results = list(self.results)
+        new.originals = dict(self.originals)
+        return new
+
+    def last_flush_items(self) -> list:
+        """Absolute-timed placements of the most recent flush — the
+        merged schedule the flush's synthetic PlanResult carries (a
+        cluster flush spans several per-device segments)."""
+        return list(self.results[-1].schedule.items) if self.results else []
+
+    def withdraw_uncommitted(self, t: float, eps: float = 1e-9) -> list[Task]:
+        """Pull every not-yet-started placement back across all devices;
+        returns the *original* (profile-keyed) tasks so the re-plan can
+        re-partition them onto different devices, ordered by their old
+        begin times (ties by id) like the single-device driver."""
+        begins: dict[int, float] = {}
+        for mb in self.mbs:
+            for seg in mb.segments:
+                for it in seg.items:
+                    if it.begin > t + eps:
+                        begins[it.task.id] = it.begin
+        withdrawn: list[Task] = []
+        for mb in self.mbs:
+            withdrawn.extend(mb.withdraw_uncommitted(t, eps=eps))
+        out = [self.originals.get(w.id, w) for w in withdrawn]
+        out.sort(key=lambda task: (begins.get(task.id, t), task.id))
+        return out
+
+    def combined_schedule(self) -> Schedule:
+        """All devices' segments merged into one absolute-timed view
+        (tree ids are globally unique, so items never collide); split it
+        back per device with ``ClusterSpec.split_schedule`` to validate."""
+        items = [it for mb in self.mbs for s in mb.segments for it in s.items]
+        reconfigs = [
+            rc for mb in self.mbs for s in mb.segments for rc in s.reconfigs
+        ]
+        return Schedule(spec=self.cluster, items=items, reconfigs=reconfigs)
+
+
+__all__ = [
+    "ClusterSpec",
+    "ClusterSchedule",
+    "ClusterPlan",
+    "ClusterMultiBatchScheduler",
+    "FARClusterPolicy",
+    "cluster",
+    "cluster_refine",
+    "partition_batch",
+    "validate_cluster_schedule",
+]

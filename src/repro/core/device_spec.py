@@ -133,6 +133,17 @@ class DeviceSpec:
         (paper Table 1).
       chips_per_slice: TPU adaptation — how many chips one slice stands for
         (1 for the GPU models).
+      kind: the instance *type* this device's profiles are keyed by
+        (``Profile[(kind, size)]``).  Defaults to ``name``; derived specs
+        (``multi_gpu``, ``degrade``, cluster membership) keep the base
+        kind so one profile serves every A100 in a fleet, however the
+        forest is arranged.
+      reconfig_scope: how reconfiguration windows serialise — ``"tree"``
+        (per GPU/driver, paper §2.1: each device has its own driver, so
+        trees of a forest reconfigure concurrently) or ``"global"`` (the
+        pre-fix behaviour that coupled all trees through one sequence;
+        kept selectable so the fidelity delta stays measurable).  The
+        two are identical on single-tree specs.
     """
 
     name: str
@@ -141,6 +152,13 @@ class DeviceSpec:
     t_create: Mapping[int, float]
     t_destroy: Mapping[int, float]
     chips_per_slice: int = 1
+    kind: str = ""
+    reconfig_scope: str = "tree"
+
+    @property
+    def device_kind(self) -> str:
+        """The profile key for this device (``kind``, or ``name``)."""
+        return self.kind or self.name
 
     # -- structure ---------------------------------------------------------
     @cached_property
@@ -244,11 +262,17 @@ class DeviceSpec:
         new_roots = [n for root in self.roots for n in prune(root)]
         sizes = tuple(sorted({n.size for r in new_roots
                               for n in _iter_nodes(r)}))
+        # the reconfiguration tables must shrink with the sizes: a stale
+        # entry for a size no longer in the tree would let timing code
+        # charge windows for instances that cannot exist
         return dataclasses.replace(
             self,
             name=f"{self.name}-degraded",
+            kind=self.device_kind,
             roots=tuple(new_roots),
             sizes=sizes,
+            t_create={s: self.t_create[s] for s in sizes},
+            t_destroy={s: self.t_destroy[s] for s in sizes},
         )
 
 
@@ -287,21 +311,24 @@ H100 = DeviceSpec(
 )
 
 
+def retree(node: InstanceNode, tree: int) -> InstanceNode:
+    """Copy of ``node``'s subtree re-indexed onto forest tree ``tree`` —
+    shared by :func:`multi_gpu` and the heterogeneous cluster builder
+    (:mod:`repro.core.cluster`), which needs globally-unique tree ids."""
+    return InstanceNode(
+        tree, node.start, node.size, node.footprint,
+        tuple(retree(c, tree) for c in node.children),
+    )
+
+
 def multi_gpu(spec: DeviceSpec, count: int) -> DeviceSpec:
     """Forest of ``count`` identical devices (paper §3.2)."""
     roots = []
     for g in range(count):
-        base = spec.roots[0]
-
-        def retree(node: InstanceNode, tree: int) -> InstanceNode:
-            return InstanceNode(
-                tree, node.start, node.size, node.footprint,
-                tuple(retree(c, tree) for c in node.children),
-            )
-
-        roots.append(retree(base, g))
+        roots.append(retree(spec.roots[0], g))
     return dataclasses.replace(
-        spec, name=f"{spec.name}x{count}", roots=tuple(roots)
+        spec, name=f"{spec.name}x{count}", kind=spec.device_kind,
+        roots=tuple(roots),
     )
 
 

@@ -38,7 +38,7 @@ from repro.core.policy import (
     SchedulerConfig,
     register_policy,
 )
-from repro.core.problem import Schedule, Task, area_lower_bound
+from repro.core.problem import Schedule, Task, area_lower_bound, bind_tasks
 from repro.core.refine import RefineStats, refine_assignment
 from repro.core.repartition import Assignment, replay
 
@@ -132,6 +132,9 @@ def far_schedule(
             replay(empty), empty, (), 1, 0, 0, None, 0.0,
             time.perf_counter() - t0,
         )
+    # heterogeneous profiles are lowered onto this device's kind here;
+    # size-keyed tasks pass through untouched (the back-compat shim)
+    tasks = bind_tasks(tasks, spec)
     sizes_needed = set(spec.sizes)
     for task in tasks:
         if not sizes_needed <= task.times.keys():

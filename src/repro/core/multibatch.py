@@ -30,9 +30,15 @@ from repro.core.policy import (
     get_policy,
     register_policy,
 )
-from repro.core.problem import Schedule, Task, area_lower_bound
+from repro.core.problem import Schedule, ScheduledTask, Task, area_lower_bound
 from repro.core.refine import ChainViews, _best_move, _best_swap
-from repro.core.repartition import Assignment, NodeKey, alive_at_end, replay
+from repro.core.repartition import (
+    Assignment,
+    NodeKey,
+    alive_at_end,
+    is_reconfig_key,
+    replay,
+)
 from repro.core.timing import make_engine
 
 
@@ -40,7 +46,9 @@ from repro.core.timing import make_engine
 class Tail:
     """Live state at the end of the already-committed schedule."""
 
-    release: dict            # (tree, slice) -> time, plus "reconfig" -> time
+    # (tree, slice) -> time, plus the reconfiguration-sequence releases:
+    # "reconfig" (floor on every driver) and per-driver ("reconfig", tree)
+    release: dict
     alive: dict[NodeKey, float]
 
     @classmethod
@@ -69,8 +77,22 @@ def tail_after(schedule: Schedule, prev: Tail) -> Tail:
         for s in rc.node.blocked:
             cell = (rc.node.tree, s)
             release[cell] = max(release.get(cell, 0.0), rc.end)
+    # reconfiguration-sequence releases: the driver serialises per tree,
+    # so EVERY tree gets its own ("reconfig", tree) release — trees idle
+    # this segment carry their previous value forward (seeded from the
+    # legacy global key for pre-existing tails), otherwise a keyless tree
+    # would fall back to the global maximum and re-couple the drivers at
+    # the seam.  The plain "reconfig" key stays the global max for
+    # back-compat readers and for reconfig_scope="global" specs.
+    base = float(prev.release.get("reconfig", 0.0))
+    for r in schedule.spec.roots:
+        k = ("reconfig", r.tree)
+        release.setdefault(k, base)
+    for rc in schedule.reconfigs:
+        k = ("reconfig", rc.node.tree)
+        release[k] = max(release[k], rc.end)
     release["reconfig"] = max(
-        float(prev.release.get("reconfig", 0.0)),
+        base,
         max((rc.end for rc in schedule.reconfigs), default=0.0),
     )
     alive = dict(prev.alive)
@@ -118,9 +140,10 @@ def concatenate(
         (default) or with full replays — identical results.
     """
     if mode == "trivial":
-        barrier = max(
-            v for k, v in tail.release.items() if k != "reconfig"
-        ) if len(tail.release) > 1 else 0.0
+        slice_rel = [
+            v for k, v in tail.release.items() if not is_reconfig_key(k)
+        ]
+        barrier = max(slice_rel) if slice_rel else 0.0
         release = tail.floored(barrier).release
         sched = replay(assignment, release=release, alive=tail.alive)
         return ConcatResult(sched, tail_after(sched, tail), False)
@@ -138,7 +161,8 @@ def concatenate(
         ]
         return min(candidates, key=lambda c: (
             c.schedule.makespan,
-            sum(v for k, v in c.tail.release.items() if k != "reconfig"),
+            sum(v for k, v in c.tail.release.items()
+                if not is_reconfig_key(k)),
         ))
 
     direction = "reverse" if reverse else "forward"
@@ -310,6 +334,29 @@ class MultiBatchScheduler:
         self.tail = tail_after(schedule, self.tail)
         self.segments.append(schedule)
 
+    def online_place(
+        self,
+        batch: Sequence[tuple[Task, float, object]],
+        decided_at: float,
+    ) -> Schedule:
+        """Greedy per-arrival placement after the committed tail (the
+        serving facade's trickle/urgent fallback).  The release context is
+        floored at the decision time so every placement begins no earlier
+        than the decision that made it — the combined timeline stays
+        causal.  The cluster driver implements the same method with a
+        per-device device-choice step, so the facade calls one surface."""
+        from repro.core.online import OnlineScheduler
+
+        floored = self.tail.floored(decided_at)
+        online = OnlineScheduler(
+            self.spec, release=floored.release, alive=floored.alive,
+        )
+        for task, arrival, _ in batch:
+            online.submit(task, arrival=arrival)
+        sched = online.schedule()
+        self.adopt_segment(sched)
+        return sched
+
     def clone(self) -> "MultiBatchScheduler":
         """Independent copy of the committed state (segments are lists of
         immutable items, so a shallow per-segment copy suffices).  The
@@ -369,6 +416,12 @@ class MultiBatchScheduler:
     @property
     def makespan(self) -> float:
         return max((seg.makespan for seg in self.segments), default=0.0)
+
+    def last_flush_items(self) -> list[ScheduledTask]:
+        """Absolute-timed placements of the most recent flush only (the
+        serving facade reads the just-flushed batch's completions from
+        here instead of rebuilding the whole combined schedule)."""
+        return list(self.segments[-1].items) if self.segments else []
 
     def combined_schedule(self) -> Schedule:
         """All segments merged into one absolute-timed Schedule."""

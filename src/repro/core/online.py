@@ -83,23 +83,14 @@ class OnlineScheduler:
             self.assignment, release=release, alive=alive, copy_chains=False,
         )
 
-    def submit(self, task: Task, arrival: float = 0.0) -> OnlinePlacement:
-        """Place ``task`` immediately; returns the chosen placement.
-
-        ``arrival`` is a soft preference: placements starting before it
-        are filtered out while any candidate satisfies it, but the chain
-        model cannot hold a slice idle (tasks are appended back-to-back,
-        never delayed — no preemption, per the MIG model), so when every
-        chain would start early the task is placed for best completion
-        anyway.  For a *hard* floor, seed ``release`` with the decision
-        time — that is what
-        :class:`~repro.core.service.SchedulingService` does, making its
-        combined timeline causal.
-        """
+    def _probe(self, task: Task, arrival: float):
+        """One speculative append + timing read + undo per candidate node
+        on the persistent engine; returns the greedy's arrival-satisfying
+        choice and the unconstrained best-completion fallback, each as
+        ``(score, size, node_key)`` or ``None``.  ``task`` must already be
+        registered in ``self.assignment.tasks``."""
         best: tuple[float, int, tuple] | None = None
-        self.assignment.tasks[task.id] = task
-        # each candidate placement is a speculative append + timing read +
-        # undo on the persistent engine instead of a full replay
+        fallback: tuple[float, int, tuple] | None = None
         eng = self._eng
         for node in self.spec.nodes:
             if node.size not in task.times:
@@ -109,25 +100,73 @@ class OnlineScheduler:
             eng.undo()
             area = node.size * task.times[node.size] / self.spec.n_slices
             key = (end + area, node.size, node.key)
-            if (best is None or key < (best[0], best[1], best[2])) \
-               and begin >= arrival - 1e-9:
-                best = (end + area, node.size, node.key)
-        if best is None:
-            # arrival constraint unsatisfiable anywhere -> place for best
-            # completion anyway (work-conserving)
-            for node in self.spec.nodes:
-                if node.size not in task.times:
-                    continue
-                eng.apply_append(task.id, node.key)
-                _, end = eng.task_begin_end(task.id)
-                eng.undo()
-                if best is None or end < best[0]:
-                    best = (end, node.size, node.key)
-        assert best is not None, "no feasible size for task"
-        _, size, node_key = best
+            if (best is None or key < best) and begin >= arrival - 1e-9:
+                best = key
+            if fallback is None or end < fallback[0]:
+                fallback = (end, node.size, node.key)
+        return best, fallback
+
+    def best_placement(
+        self, task: Task, arrival: float = 0.0
+    ) -> tuple | None:
+        """Preview the greedy's choice for ``task`` WITHOUT committing.
+
+        Returns ``(rank, score, size, node_key)`` — rank 0 when the
+        placement satisfies the arrival preference, 1 for the
+        work-conserving fallback — or ``None`` when no node fits.  The
+        cluster serving driver compares these keys across devices to pick
+        where an urgent/trickle task goes, then commits with
+        :meth:`submit` (which re-derives the identical choice)."""
+        task = task.bind(self.spec)
+        had = task.id in self.assignment.tasks
+        prev = self.assignment.tasks.get(task.id)
+        self.assignment.tasks[task.id] = task
+        try:
+            best, fallback = self._probe(task, arrival)
+        finally:
+            if had:
+                self.assignment.tasks[task.id] = prev
+            else:
+                del self.assignment.tasks[task.id]
+        if best is not None:
+            return (0,) + best
+        if fallback is not None:
+            return (1,) + fallback
+        return None
+
+    def submit(
+        self, task: Task, arrival: float = 0.0,
+        node_key: tuple | None = None,
+    ) -> OnlinePlacement:
+        """Place ``task`` immediately; returns the chosen placement.
+
+        ``arrival`` is a soft preference: placements starting before it
+        are filtered out while any candidate satisfies it, but the chain
+        model cannot hold a slice idle (tasks are appended back-to-back,
+        never delayed — no preemption, per the MIG model), so when every
+        chain would start early the task is placed for best completion
+        anyway (the fallback).  For a *hard* floor, seed ``release`` with
+        the decision time — that is what
+        :class:`~repro.core.service.SchedulingService` does, making its
+        combined timeline causal.
+
+        ``node_key`` commits a choice previewed by
+        :meth:`best_placement` directly, skipping the probe pass (the
+        cluster serving driver previews every device and must not pay
+        the winning device's node scan twice).
+        """
+        task = task.bind(self.spec)  # lower a heterogeneous profile
+        self.assignment.tasks[task.id] = task
+        if node_key is None:
+            best, fallback = self._probe(task, arrival)
+            if best is None:
+                best = fallback
+            assert best is not None, "no feasible size for task"
+            node_key = best[2]
+        eng = self._eng
         eng.apply_append(task.id, node_key)  # commit (chains are shared)
         begin, end = eng.task_begin_end(task.id)
-        placement = OnlinePlacement(task.id, node_key, size, begin, end)
+        placement = OnlinePlacement(task.id, node_key, node_key[2], begin, end)
         self.placements.append(placement)
         return placement
 

@@ -28,7 +28,7 @@ import time
 from typing import Callable, Protocol, Sequence, runtime_checkable
 
 from repro.core.device_spec import DeviceSpec
-from repro.core.problem import EPS, Schedule, Task, validate_schedule
+from repro.core.problem import EPS, Schedule, Task, bind_tasks, validate_schedule
 from repro.core.repartition import Assignment
 
 
@@ -193,6 +193,9 @@ class BasePolicy:
     ) -> PlanResult:
         cfg = config or SchedulerConfig()
         t0 = time.perf_counter()
+        # instance-type-keyed profiles are lowered onto this device's kind
+        # at the policy boundary (identity for size-keyed tasks)
+        tasks = bind_tasks(tasks, spec)
         res = self._plan_fresh(tasks, spec, cfg)
         res.policy = self.name
         if tail is not None:
@@ -243,6 +246,7 @@ _BUILTIN_MODULES = (
     "repro.core.baselines",
     "repro.core.online",
     "repro.core.multibatch",
+    "repro.core.cluster",
 )
 
 

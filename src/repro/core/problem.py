@@ -1,6 +1,16 @@
-"""Problem model: tasks, schedules and feasibility validation (paper §2.2).
+"""Problem model: tasks, profiles, schedules and feasibility validation
+(paper §2.2).
 
-A :class:`Task` carries its execution-time profile ``t_i : C_G -> R+``.
+A :class:`Task` carries its execution-time profile ``t_i : C_G -> R+`` —
+either a plain size-keyed mapping (one device model, the paper's setting)
+or a :class:`Profile` keyed by *instance type* ``(device_kind, size)`` so
+one task can be scheduled anywhere in a heterogeneous fleet (cf.
+MIG-Serving, arXiv:2109.11067).  The scheduler core always works on
+size-keyed mappings: :meth:`Task.bind` lowers a Profile task onto one
+device kind at the scheduling boundary, and is the *identity* for plain
+size-keyed tasks — which is exactly the back-compat shim: existing
+single-device callers run bit-identical code on the very same objects.
+
 A :class:`Schedule` assigns each task an instance (a repartitioning-tree
 node) and a begin time, plus the reconfiguration windows implied by the
 tree.  :func:`validate_schedule` checks the paper's three constraints:
@@ -9,9 +19,12 @@ tree.  :func:`validate_schedule` checks the paper's three constraints:
   2. at any instant the running instances are a subset of a valid partition
      (equivalent, by MIG property P2, to: all instances are tree nodes and
      pairwise-disjoint instances whenever they co-run — implied by 1);
-  3. reconfigurations are sequential: creation/destruction windows never
-     overlap each other, and an instance's first task starts only after its
-     creation window, which itself follows the destruction of its parent.
+  3. reconfigurations are sequential *per driver*: creation/destruction
+     windows never overlap within one tree's sequence (the NVIDIA driver
+     serialises per GPU, paper §2.1 — trees of a forest reconfigure
+     concurrently unless the spec pins ``reconfig_scope="global"``), and
+     an instance's first task starts only after its creation window, which
+     itself follows the destruction of its parent.
 """
 
 from __future__ import annotations
@@ -22,6 +35,89 @@ from typing import Iterable, Mapping, Sequence
 from repro.core.device_spec import DeviceSpec, InstanceNode
 
 EPS = 1e-9  # float tolerance for feasibility checks
+
+
+class Profile(Mapping):
+    """Instance-type-keyed execution times: ``(device_kind, size) -> s``.
+
+    Accepts either a nested ``{kind: {size: t}}`` table or a flat
+    ``{(kind, size): t}`` one.  Iteration/lookup follow the flat form, so
+    a Profile is a ``Mapping[tuple[str, int], float]`` — indexing it with
+    a bare size raises, which is deliberate: code that still assumes
+    size-keyed times must go through :meth:`Task.bind` /
+    :meth:`Task.times_for` and name the device kind it schedules for.
+    """
+
+    __slots__ = ("_by_kind",)
+
+    def __init__(self, table: Mapping):
+        by_kind: dict[str, dict[int, float]] = {}
+        for key, value in table.items():
+            if isinstance(key, tuple):
+                kind, size = key
+                by_kind.setdefault(kind, {})[int(size)] = float(value)
+            else:
+                if not isinstance(value, Mapping):
+                    raise TypeError(
+                        f"Profile entry {key!r} must map sizes to times; "
+                        f"got {type(value).__name__}"
+                    )
+                by_kind.setdefault(key, {}).update(
+                    {int(s): float(t) for s, t in value.items()}
+                )
+        self._by_kind = by_kind
+
+    # -- Mapping over flat (kind, size) keys --------------------------------
+    def __getitem__(self, key):
+        if not isinstance(key, tuple):
+            raise KeyError(
+                f"Profile is keyed by (device_kind, size); bare key "
+                f"{key!r} — bind the task to a device first "
+                f"(Task.bind(spec) / Task.times_for(kind))"
+            )
+        kind, size = key
+        return self._by_kind[kind][size]
+
+    def __iter__(self):
+        for kind, sizes in self._by_kind.items():
+            for s in sizes:
+                yield (kind, s)
+
+    def __len__(self):
+        return sum(len(v) for v in self._by_kind.values())
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(self._by_kind)
+
+    def for_kind(self, kind: str) -> dict[int, float]:
+        """The size-keyed sub-profile of one device kind."""
+        try:
+            return self._by_kind[kind]
+        except KeyError:
+            raise KeyError(
+                f"profile has no times for device kind {kind!r} "
+                f"(kinds: {sorted(self._by_kind)})"
+            ) from None
+
+    def supports(self, kind: str) -> bool:
+        return kind in self._by_kind
+
+    def __repr__(self) -> str:
+        return f"Profile({self._by_kind!r})"
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, Profile):
+            return self._by_kind == other._by_kind
+        return NotImplemented
+
+    def __hash__(self):  # consistent with frozen Task usage
+        return hash(
+            tuple(sorted(
+                (k, tuple(sorted(v.items())))
+                for k, v in self._by_kind.items()
+            ))
+        )
 
 
 def min_work_size(times: Mapping[int, float], sizes: Sequence[int]) -> int:
@@ -39,14 +135,46 @@ def min_work_size(times: Mapping[int, float], sizes: Sequence[int]) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class Task:
-    """An independent task with a per-instance-size time profile."""
+    """An independent task with a per-instance-size time profile.
+
+    ``times`` is either a size-keyed mapping (single device model) or a
+    :class:`Profile` keyed by ``(device_kind, size)``.  The scheduler
+    internals only ever see size-keyed mappings: heterogeneous callers
+    lower a Profile task with :meth:`bind` at the device boundary.
+    """
 
     id: int
-    times: Mapping[int, float]  # size in C_G -> seconds
+    times: Mapping  # size -> seconds, or a Profile ((kind, size) -> s)
     name: str = ""
 
     def time(self, size: int) -> float:
         return self.times[size]
+
+    # -- heterogeneous profiles ---------------------------------------------
+    def times_for(self, kind: str) -> Mapping[int, float]:
+        """Size-keyed times on device kind ``kind``.  For a plain
+        size-keyed task this is ``self.times`` itself (the back-compat
+        shim: one profile serves any device, bit-identically)."""
+        if isinstance(self.times, Profile):
+            return self.times.for_kind(kind)
+        return self.times
+
+    def supports(self, kind: str) -> bool:
+        """Whether the task can run on devices of ``kind`` at all."""
+        if isinstance(self.times, Profile):
+            return self.times.supports(kind)
+        return True
+
+    def bind(self, spec: DeviceSpec) -> "Task":
+        """The task lowered onto ``spec``'s device kind: ``times`` becomes
+        the plain size-keyed sub-profile.  Identity for already-plain
+        tasks — existing single-device pipelines schedule the exact same
+        objects they always did."""
+        if isinstance(self.times, Profile):
+            return dataclasses.replace(
+                self, times=self.times.for_kind(spec.device_kind)
+            )
+        return self
 
     def min_work_size(self, sizes: Sequence[int]) -> int:
         """argmin_s s*t(s) — breaking ties toward fewer slices (paper picks
@@ -54,12 +182,29 @@ class Task:
         return min_work_size(self.times, sizes)
 
     def check_time_monotone(self) -> bool:
-        """Paper monotony point 1: t(s) non-increasing in s."""
-        sizes = sorted(self.times)
-        return all(
-            self.times[a] >= self.times[b] - EPS
-            for a, b in zip(sizes, sizes[1:])
-        )
+        """Paper monotony point 1: t(s) non-increasing in s (per device
+        kind when the task carries a heterogeneous Profile)."""
+        if isinstance(self.times, Profile):
+            tables = [self.times.for_kind(k) for k in self.times.kinds]
+        else:
+            tables = [self.times]
+        for table in tables:
+            sizes = sorted(table)
+            if not all(
+                table[a] >= table[b] - EPS
+                for a, b in zip(sizes, sizes[1:])
+            ):
+                return False
+        return True
+
+
+def bind_tasks(tasks: Sequence[Task], spec: DeviceSpec) -> Sequence[Task]:
+    """Lower a batch onto one device's kind.  When every task already has
+    plain size-keyed times the input sequence is returned unchanged —
+    the differential back-compat guarantee for existing callers."""
+    if all(not isinstance(t.times, Profile) for t in tasks):
+        return tasks
+    return [t.bind(spec) for t in tasks]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +281,7 @@ def area_lower_bound(tasks: Iterable[Task], spec: DeviceSpec) -> float:
 
     baseline = sum_i min_s (s * t_i(s)) / #slices_G  <=  omega*
     """
+    tasks = bind_tasks(list(tasks), spec)
     total = sum(
         min(s * t.times[s] for s in spec.sizes if s in t.times)
         for t in tasks
@@ -147,6 +293,7 @@ def lower_bound(tasks: Sequence[Task], spec: DeviceSpec) -> float:
     """Tighter-than-paper bound: also no task can beat its best time."""
     if not tasks:
         return 0.0
+    tasks = bind_tasks(tasks, spec)
     tallest = max(min(t.times[s] for s in spec.sizes) for t in tasks)
     return max(area_lower_bound(tasks, spec), tallest)
 
@@ -203,13 +350,22 @@ def validate_schedule(
     if not check_reconfig:
         return
 
-    # constraint 3: reconfiguration windows are globally sequential ...
+    # constraint 3: reconfiguration windows are sequential per driver —
+    # one sequence per tree (paper §2.1: each GPU has its own driver),
+    # or one global sequence when the spec pins reconfig_scope="global".
+    # Identical on single-tree specs.
     rcs = sorted(schedule.reconfigs, key=lambda rc: (rc.begin, rc.end))
-    for a, b in zip(rcs, rcs[1:]):
-        if a.end > b.begin + EPS:
-            raise InfeasibleScheduleError(
-                f"reconfig windows overlap: {a} vs {b}"
-            )
+    per_scope: dict[object, list[ReconfigEvent]] = {}
+    per_tree = getattr(spec, "reconfig_scope", "tree") != "global"
+    for rc in rcs:
+        per_scope.setdefault(rc.node.tree if per_tree else None, []).append(rc)
+    for seq in per_scope.values():
+        for a, b in zip(seq, seq[1:]):
+            if a.end > b.begin + EPS:
+                raise InfeasibleScheduleError(
+                    f"reconfig windows overlap in one driver sequence: "
+                    f"{a} vs {b}"
+                )
     for rc in rcs:
         dur = (
             spec.t_create[rc.node.size]

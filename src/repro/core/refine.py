@@ -27,6 +27,7 @@ from __future__ import annotations
 import bisect
 import collections
 import dataclasses
+from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec, InstanceNode
 from repro.core.problem import EPS, Schedule
@@ -97,15 +98,15 @@ class ChainViews:
         return pairs
 
 
-def _best_move(
-    views: ChainViews, key: NodeKey, margin: float
+def best_move_from(
+    asc: Sequence[int], durs: Sequence[float], margin: float
 ) -> int | None:
-    """Task of node ``key`` with duration < margin, closest to margin/2."""
-    if margin <= EPS:
-        return None
-    # chain is LPT (desc); the view is ascending for binary search
-    asc, durs = views.move_view(key)
-    if not asc:
+    """Candidate-selection core of the move heuristic: the task (of the
+    ascending-by-duration view ``asc``/``durs``) with duration < margin,
+    closest to margin/2.  Exposed separately so the inter-device local
+    search (:mod:`repro.core.cluster`) can feed views whose durations are
+    evaluated under the *destination* device's profile kind."""
+    if margin <= EPS or not asc:
         return None
     hi = bisect.bisect_left(durs, margin - EPS)  # durations strictly < margin
     if hi == 0:
@@ -117,17 +118,28 @@ def _best_move(
     return asc[best]
 
 
-def _best_swap(
-    views: ChainViews, key_i: NodeKey, key_a: NodeKey, margin: float
-) -> tuple[int, int] | None:
-    """Pair (T_k of I, T_j of Iᵃ) with 0 < dur_k - dur_j < margin, the
-    difference closest to margin/2 (two-pointer over the sorted lists).
-    ``key_i`` and ``key_a`` always have the same instance size."""
+def _best_move(
+    views: ChainViews, key: NodeKey, margin: float
+) -> int | None:
+    """Task of node ``key`` with duration < margin, closest to margin/2."""
     if margin <= EPS:
         return None
-    di = views.swap_view(key_i)
-    da = views.swap_view(key_a)
-    if not di or not da:
+    # chain is LPT (desc); the view is ascending for binary search
+    asc, durs = views.move_view(key)
+    return best_move_from(asc, durs, margin)
+
+
+def best_swap_from(
+    di: Sequence[tuple[float, int]],
+    da: Sequence[tuple[float, int]],
+    margin: float,
+) -> tuple[int, int] | None:
+    """Candidate-selection core of the swap heuristic over two ascending
+    ``(duration, task id)`` views: the pair with 0 < dur_k - dur_j <
+    margin, difference closest to margin/2 (two-pointer).  Like
+    :func:`best_move_from`, this is the piece the inter-device search
+    reuses with destination-kind durations."""
+    if margin <= EPS or not di or not da:
         return None
     target = margin / 2.0
     best: tuple[float, int, int] | None = None  # (|diff-target|, tk, tj)
@@ -146,6 +158,19 @@ def _best_swap(
     if best is None:
         return None
     return best[1], best[2]
+
+
+def _best_swap(
+    views: ChainViews, key_i: NodeKey, key_a: NodeKey, margin: float
+) -> tuple[int, int] | None:
+    """Pair (T_k of I, T_j of Iᵃ) with 0 < dur_k - dur_j < margin, the
+    difference closest to margin/2 (two-pointer over the sorted lists).
+    ``key_i`` and ``key_a`` always have the same instance size."""
+    if margin <= EPS:
+        return None
+    return best_swap_from(
+        views.swap_view(key_i), views.swap_view(key_a), margin
+    )
 
 
 def refine_assignment(

@@ -34,6 +34,40 @@ from repro.core.problem import ReconfigEvent, Schedule, ScheduledTask, Task
 NodeKey = tuple[int, int, int, int]
 
 
+def is_reconfig_key(key) -> bool:
+    """Whether a ``release`` mapping key names a reconfiguration-sequence
+    release ( ``"reconfig"`` or per-driver ``("reconfig", tree)`` ) rather
+    than a ``(tree, slice)`` cell."""
+    return key == "reconfig" or (
+        isinstance(key, tuple) and len(key) == 2 and key[0] == "reconfig"
+    )
+
+
+def reconfig_sequence_starts(spec: DeviceSpec, release: dict) -> dict:
+    """Initial per-driver reconfiguration-sequence end times.
+
+    One sequence per tree when ``spec.reconfig_scope == "tree"`` (keys are
+    the forest's tree indices), a single ``None``-keyed sequence for
+    ``"global"`` scope.  A driver's sequence starts at its own
+    ``("reconfig", tree)`` release when present; the plain ``"reconfig"``
+    key is the *fallback* for drivers without one (legacy tails carry
+    only the plain key) — it must not floor drivers that do carry their
+    own release, or the per-driver decoupling would be re-coupled at
+    every multi-batch seam through the global maximum.
+    """
+    base = float(release.get("reconfig", 0.0))
+    if getattr(spec, "reconfig_scope", "tree") != "global":
+        return {
+            r.tree: float(release.get(("reconfig", r.tree), base))
+            for r in spec.roots
+        }
+    start = base
+    for k, v in release.items():
+        if isinstance(k, tuple) and len(k) == 2 and k[0] == "reconfig":
+            start = max(start, float(v))
+    return {None: start}
+
+
 @dataclasses.dataclass
 class Assignment:
     """Tasks assigned, in execution order, to repartitioning-tree nodes."""
@@ -82,7 +116,16 @@ def _list_schedule_arrays(
     The arrays must be LPT-ordered per size (sorted by ``(-dur, id)``);
     they are read through cursors and NOT consumed.  Returns the per-node
     task-id chains plus the matching duration chains (the latter feed the
-    timing evaluators without re-resolving task profiles)."""
+    timing evaluators without re-resolving task profiles).
+
+    The heap deliberately keeps the paper's single global ``reconfig_end``
+    even on multi-tree forests: it only shapes which node receives the
+    next task (the *construction heuristic*), while candidate scoring and
+    the committed timing both use the per-driver sequences of
+    :func:`replay` / ``chains_makespan``.  The vectorized phase-2
+    evaluator's lockstep program mirrors this heap pop-for-pop
+    (``family_eval._phase_a_program``), so the two must change together
+    if the heuristic is ever made per-tree-aware."""
     remaining = n_tasks
     t_create = spec.t_create
     t_destroy = spec.t_destroy
@@ -307,12 +350,19 @@ def replay(
     window) when it first hosts a task, runs its tasks back-to-back, and is
     destroyed when the schedule moves past it.
 
+    Reconfiguration windows serialise **per driver**: one sequence per
+    tree of the forest (each GPU has its own driver, paper §2.1), so
+    sibling trees reconfigure concurrently.  A spec pinning
+    ``reconfig_scope="global"`` keeps the old single-sequence coupling
+    (identical on single-tree specs either way).
+
     Args:
       assignment: tree + ordered per-node task lists.
       release: optional per-(tree, slice) release times — slices are not
         available before these (used by multi-batch concatenation to splice
-        a batch after the previous one; paper §4).  May also contain the
-        key ``"reconfig"`` for the reconfiguration-sequence release time.
+        a batch after the previous one; paper §4).  May also contain
+        ``"reconfig"`` (a floor on every driver's sequence) and/or
+        ``("reconfig", tree)`` per-driver release times.
       include_reconfig: when False, creations/destructions take zero time
         (used by phase-3 bookkeeping between full recomputations).
       direction: ``"forward"`` runs root -> leaves (Algorithm 1's order:
@@ -337,7 +387,7 @@ def replay(
 
     items: list[ScheduledTask] = []
     reconfigs: list[ReconfigEvent] = []
-    reconfig_end = float(release.get("reconfig", 0.0))
+    rc_end = reconfig_sequence_starts(spec, release)
     destroyed_alive: set[NodeKey] = set()
 
     alive_sorted = sorted(alive)
@@ -350,7 +400,6 @@ def replay(
 
     def clear_alive_conflicts(node: InstanceNode) -> None:
         """Destroy carried-over instances overlapping ``node``'s footprint."""
-        nonlocal reconfig_end
         cells = node.blocked_cells
         for akey in alive_sorted:
             if akey == node.key or akey in destroyed_alive:
@@ -358,15 +407,14 @@ def replay(
             anode = spec.node_by_key(akey)
             if not (cells & anode.blocked_cells):
                 continue
-            reconfig_end = max(reconfig_end, alive[akey])
-            begin_d = reconfig_end
-            reconfig_end += t_destroy[anode.size]
-            reconfigs.append(ReconfigEvent("destroy", anode, begin_d, reconfig_end))
+            g = anode.tree if anode.tree in rc_end else None
+            begin_d = max(rc_end[g], alive[akey])
+            rc_end[g] = begin_d + t_destroy[anode.size]
+            reconfigs.append(ReconfigEvent("destroy", anode, begin_d, rc_end[g]))
             destroyed_alive.add(akey)
 
     def run_node(node: InstanceNode, ready: float) -> float:
         """Create (if needed), run tasks, return the node's task-end time."""
-        nonlocal reconfig_end
         key = node.key
         ready = max(ready, node_release(node))
         if key in alive and key not in destroyed_alive:
@@ -374,11 +422,11 @@ def replay(
             t = max(ready, alive[key])
         else:
             clear_alive_conflicts(node)
-            reconfig_end = max(reconfig_end, ready)
-            begin_c = reconfig_end
-            reconfig_end += t_create[node.size]
-            reconfigs.append(ReconfigEvent("create", node, begin_c, reconfig_end))
-            t = reconfig_end
+            g = node.tree if node.tree in rc_end else None
+            begin_c = max(rc_end[g], ready)
+            rc_end[g] = begin_c + t_create[node.size]
+            reconfigs.append(ReconfigEvent("create", node, begin_c, rc_end[g]))
+            t = rc_end[g]
         tids = assignment.node_tasks[key]
         if direction == "reverse":
             tids = list(reversed(tids))
@@ -389,11 +437,10 @@ def replay(
         return t
 
     def destroy_node(node: InstanceNode, after: float) -> None:
-        nonlocal reconfig_end
-        reconfig_end = max(reconfig_end, after)
-        begin_d = reconfig_end
-        reconfig_end += t_destroy[node.size]
-        reconfigs.append(ReconfigEvent("destroy", node, begin_d, reconfig_end))
+        g = node.tree if node.tree in rc_end else None
+        begin_d = max(rc_end[g], after)
+        rc_end[g] = begin_d + t_destroy[node.size]
+        reconfigs.append(ReconfigEvent("destroy", node, begin_d, rc_end[g]))
 
     # Event-driven simulation.  Reconfiguration windows are appended to the
     # sequentialised reconfiguration timeline strictly in event-time order

@@ -58,9 +58,9 @@ import math
 import time
 from typing import Sequence
 
+from repro.core.cluster import ClusterMultiBatchScheduler, ClusterSpec
 from repro.core.device_spec import DeviceSpec, multi_gpu
 from repro.core.multibatch import MultiBatchScheduler
-from repro.core.online import OnlineScheduler
 from repro.core.policy import SchedulerConfig
 from repro.core.problem import EPS, Schedule, Task
 
@@ -137,17 +137,38 @@ class SchedulingService:
 
     def __init__(
         self,
-        spec: DeviceSpec,
+        spec: DeviceSpec | ClusterSpec | None = None,
         policy: str = "far",
         config: SchedulerConfig | None = None,
         pool_size: int = 1,
+        pool: DeviceSpec | ClusterSpec | None = None,
     ):
-        if pool_size > 1:
-            spec = multi_gpu(spec, pool_size)
-        self.spec = spec
+        """``spec`` is the classic single-device (or homogeneous
+        ``pool_size``-GPU) entry point.  ``pool=`` supersedes it: pass a
+        :class:`~repro.core.cluster.ClusterSpec` to serve a heterogeneous
+        fleet (per-device seam tails, phase-0 flush partitioning), or a
+        plain ``DeviceSpec`` as an alias for ``spec``."""
+        if pool is not None:
+            spec = pool
+        if spec is None:
+            raise ValueError("SchedulingService needs spec= or pool=")
         self.config = config or SchedulerConfig()
         self.policy = policy
-        self.mb = MultiBatchScheduler(spec, policy=policy, config=self.config)
+        if isinstance(spec, ClusterSpec):
+            self.cluster: ClusterSpec | None = spec
+            self.spec = spec
+            self.mb: MultiBatchScheduler | ClusterMultiBatchScheduler = \
+                ClusterMultiBatchScheduler(
+                    spec, policy=policy, config=self.config
+                )
+        else:
+            self.cluster = None
+            if pool_size > 1:
+                spec = multi_gpu(spec, pool_size)
+            self.spec = spec
+            self.mb = MultiBatchScheduler(
+                spec, policy=policy, config=self.config
+            )
         # the never-replanned shadow chain: with replan on, every flush is
         # mirrored here exactly as replan=False would commit it, and the
         # reporting surface answers from whichever chain is ahead — the
@@ -189,6 +210,12 @@ class SchedulingService:
         self.now = max(self.now, arrival)
         self._advance(self.now)
         self.stats.submitted += 1
+        if self.cluster is not None and not self.cluster.supports(task):
+            # no device of the pool fully covers the task's profile, so a
+            # batch flush would fail mid-partitioning (and drop the whole
+            # pending queue with it) — refuse at intake instead
+            self.stats.rejected.append(task.id)
+            return "rejected"
         verdict = "queued"
         if deadline is not None:
             deadline = float(deadline)
@@ -249,9 +276,23 @@ class SchedulingService:
             )
         return best
 
-    def _chain_lower_bound(
-        self, mb: MultiBatchScheduler, task: Task, at: float
-    ) -> float:
+    def _node_candidates(self, task: Task):
+        """(instance node, size-keyed times) pairs the task could run on —
+        every node of the single device, or every supported device of the
+        pool with the task's times lowered onto that device's kind."""
+        if self.cluster is not None:
+            devices = self.cluster.devices
+        else:
+            devices = (self.spec,)
+        for dev in devices:
+            if not task.supports(dev.device_kind):
+                continue
+            times = task.times_for(dev.device_kind)
+            for node in dev.nodes:
+                if node.size in times:
+                    yield node, times
+
+    def _chain_lower_bound(self, mb, task: Task, at: float) -> float:
         busy: dict[tuple[int, int], float] = {}
         for seg in mb.segments:
             if seg.makespan <= at:
@@ -262,15 +303,13 @@ class SchedulingService:
                         if it.end > busy.get(cell, 0.0):
                             busy[cell] = it.end
         best = math.inf
-        for node in self.spec.nodes:
-            if node.size not in task.times:
-                continue
+        for node, times in self._node_candidates(task):
             floor = at
             for cell in node.blocked_cells:
                 b = busy.get(cell, 0.0)
                 if b > floor:
                     floor = b
-            done = floor + task.times[node.size]
+            done = floor + times[node.size]
             if done < best:
                 best = done
         return best
@@ -372,8 +411,11 @@ class SchedulingService:
         }
         if not deadlines or not self.mb.results:
             return
+        # only the just-flushed placements are needed (the deadlines dict
+        # is restricted to this batch) — rebuilding the whole combined
+        # schedule here would make a long-running service O(F^2)
         ends: dict[int, float] = {}
-        for it in self.mb.segments[-1].items:
+        for it in self.mb.last_flush_items():
             ends[it.task.id] = it.end
         plan = self.mb.results[-1]
         plan.extras["deadlines"] = deadlines
@@ -390,9 +432,12 @@ class SchedulingService:
         if not batch:
             return
         t0 = time.perf_counter()
-        self._online_into(self.mb, batch, decided_at)
+        # polymorphic: MultiBatchScheduler floors its single tail and
+        # greedy-places; ClusterMultiBatchScheduler additionally picks a
+        # device per task via speculative greedy previews
+        self.mb.online_place(batch, decided_at)
         if self._baseline is not None:
-            self._online_into(self._baseline, batch, decided_at)
+            self._baseline.online_place(batch, decided_at)
         wall = time.perf_counter() - t0
         fid = self._next_flush_id()
         self.stats.online_placements += len(batch)
@@ -401,24 +446,6 @@ class SchedulingService:
                 task.id, arrival, decided_at, "online", fid, wall,
                 deadline=deadline,
             ))
-
-    @staticmethod
-    def _online_into(
-        mb: MultiBatchScheduler,
-        batch: Sequence[tuple[Task, float, float | None]],
-        decided_at: float,
-    ) -> None:
-        # floor the release context at the decision time: every placement
-        # begins >= decided_at >= its task's arrival, keeping the combined
-        # timeline causal (an unfloored release would let the greedy place
-        # work on idle slices before the task even arrived)
-        floored = mb.tail.floored(decided_at)
-        online = OnlineScheduler(
-            mb.spec, release=floored.release, alive=floored.alive,
-        )
-        for task, arrival, _ in batch:
-            online.submit(task, arrival=arrival)
-        mb.adopt_segment(online.schedule())
 
     def _next_flush_id(self) -> int:
         self._flush_id += 1

@@ -160,3 +160,59 @@ ALL_WORKLOADS: Sequence[tuple[str, str]] = (
     ("mixed", "narrow"), ("mixed", "wide"),
     ("good", "narrow"), ("good", "wide"),
 )
+
+
+# --- heterogeneous-cluster workloads (instance-type-keyed Profiles) ---------
+
+#: default per-slice speed of each device kind relative to A30 == 1.0
+#: (rough public-spec compute ratios; benchmark knob, not a measurement)
+KIND_SPEED: Mapping[str, float] = {
+    "A30": 1.0,
+    "A100": 1.6,
+    "H100": 2.6,
+    "TPU_POD_256": 4.0,
+}
+
+
+def generate_cluster_tasks(
+    n: int,
+    cspec,
+    scaling: str,
+    times: str,
+    seed: int = 0,
+    id_offset: int = 0,
+    speed: Mapping[str, float] | None = None,
+):
+    """Profile-keyed tasks for a heterogeneous cluster.
+
+    One paper-recurrence base profile is drawn per task over the union of
+    all devices' instance sizes, then each device kind sees it restricted
+    to that kind's ``C_G`` and divided by the kind's per-slice ``speed``
+    factor (default :data:`KIND_SPEED`) — so an A100 slice runs the same
+    task faster than an A30 slice, which is what makes device choice a
+    real scheduling decision.  ``cspec`` is a
+    :class:`~repro.core.cluster.ClusterSpec` (duck-typed: only
+    ``.devices`` is read).
+    """
+    from repro.core.problem import Profile
+
+    devices = list(cspec.devices)
+    union = tuple(sorted({s for d in devices for s in d.sizes}))
+    pseudo = dataclasses.replace(devices[0], sizes=union)
+    base = generate_tasks(
+        n, pseudo, workload(scaling, times, pseudo), seed=seed,
+        id_offset=id_offset,
+    )
+    speed = dict(KIND_SPEED) | dict(speed or {})
+    kinds: dict[str, object] = {}
+    for d in devices:
+        kinds.setdefault(d.device_kind, d)
+    out = []
+    for t in base:
+        table = {
+            kind: {s: t.times[s] / float(speed.get(kind, 1.0))
+                   for s in d.sizes}
+            for kind, d in kinds.items()
+        }
+        out.append(dataclasses.replace(t, times=Profile(table)))
+    return out

@@ -49,7 +49,12 @@ from bisect import bisect_left
 
 from repro.core.device_spec import DeviceSpec, InstanceNode
 from repro.core.problem import ReconfigEvent, Schedule, ScheduledTask
-from repro.core.repartition import Assignment, NodeKey, replay
+from repro.core.repartition import (
+    Assignment,
+    NodeKey,
+    reconfig_sequence_starts,
+    replay,
+)
 
 
 def _lpt_insert_pos(lst: list[int], tid: int, tasks, size: int) -> int:
@@ -161,6 +166,28 @@ class ChainState:
         self._log.append(("append", tid, key))
         self._invalidate()
 
+    def apply_extract(self, tid: int, src: NodeKey | None = None) -> None:
+        """Remove ``tid`` from its chain at its current position — the
+        outbound half of a *cross-engine* move: the inter-device local
+        search extracts a task here and places it on another device's
+        engine (each engine only ever sees its own tree)."""
+        if src is None:
+            src = self.task_node[tid]
+        idx = self._remove(src, tid)
+        if self._task_node is not None:
+            del self._task_node[tid]
+        self._log.append(("extract", tid, src, idx))
+        self._invalidate()
+
+    def apply_place(self, tid: int, key: NodeKey) -> None:
+        """LPT-position insert of a task not currently on any chain — the
+        inbound half of a cross-engine move (``self.tasks`` must already
+        know ``tid``, bound to this engine's device kind)."""
+        p = _lpt_insert_pos(self.chains.get(key, []), tid, self.tasks, key[2])
+        self._insert(key, p, tid)
+        self._log.append(("place", tid, key, p))
+        self._invalidate()
+
     def apply_retract(self, tid: int, key: NodeKey | None = None) -> None:
         """Retract ``tid`` from the END of its chain — the exact inverse of
         :meth:`apply_append`, for pulling back an appended placement that
@@ -236,6 +263,17 @@ class ChainState:
         elif kind == "retract":
             _, tid, key = entry
             self._insert(key, len(self.chains[key]), tid)
+        elif kind == "extract":
+            _, tid, src, idx = entry
+            self._insert(src, idx, tid)
+        elif kind == "place":
+            _, tid, key, p = entry
+            popped = self.chains[key].pop(p)
+            assert popped == tid
+            self.durs[key].pop(p)
+            self._bump(key)
+            if self._task_node is not None:
+                del self._task_node[tid]
         else:  # pragma: no cover
             raise AssertionError(f"unknown log entry {kind}")
         self._invalidate()
@@ -317,7 +355,9 @@ class TimingEngine(ChainState):
             self._node_release = dict.fromkeys(
                 (n.key for n in spec.nodes), 0.0
             )
-        self._reconfig_release = float(self.release.get("reconfig", 0.0))
+        # initial per-driver reconfiguration-sequence ends (one per tree,
+        # or one global sequence when the spec pins reconfig_scope)
+        self._rc_starts = reconfig_sequence_starts(spec, self.release)
         self._alive_sorted = sorted(self.alive)
         self._zero = {s: 0.0 for s in spec.sizes}
         self._ends_template = {
@@ -517,13 +557,12 @@ class TimingEngine(ChainState):
         node_t0: dict[NodeKey, float] = {}
         node_end: dict[NodeKey, float] = {}
         masses: list[float] = []
-        reconfig_end = self._reconfig_release
+        rc_end = dict(self._rc_starts)  # per-driver sequence ends
         destroyed_alive: set[NodeKey] = set()
         order: list[NodeKey] = []
         reconfigs: list[tuple] = []
 
         def clear_alive_conflicts(node: InstanceNode) -> None:
-            nonlocal reconfig_end
             cells = node.blocked_cells
             for akey in self._alive_sorted:
                 if akey == node.key or akey in destroyed_alive:
@@ -531,17 +570,16 @@ class TimingEngine(ChainState):
                 anode = index[akey]
                 if not (cells & anode.blocked_cells):
                     continue
-                reconfig_end = max(reconfig_end, alive[akey])
-                begin_d = reconfig_end
-                reconfig_end += t_destroy[anode.size]
-                reconfigs.append(("destroy", anode, begin_d, reconfig_end))
+                g = anode.tree if anode.tree in rc_end else None
+                begin_d = max(rc_end[g], alive[akey])
+                rc_end[g] = begin_d + t_destroy[anode.size]
+                reconfigs.append(("destroy", anode, begin_d, rc_end[g]))
                 destroyed_alive.add(akey)
 
         chain_fold = self._chain_folds[include_reconfig]
         chain_ver = self._chain_ver
 
         def run_node(node: InstanceNode, ready: float) -> float:
-            nonlocal reconfig_end
             key = node.key
             if have_release:
                 nr = node_release[key]
@@ -552,12 +590,15 @@ class TimingEngine(ChainState):
             else:
                 if have_alive:
                     clear_alive_conflicts(node)
-                if ready > reconfig_end:
-                    reconfig_end = ready
-                begin_c = reconfig_end
-                reconfig_end += t_create[node.size]
-                reconfigs.append(("create", node, begin_c, reconfig_end))
-                t = reconfig_end
+                g = node.tree if node.tree in rc_end else None
+                r = rc_end[g]
+                if ready > r:
+                    r = ready
+                begin_c = r
+                r += t_create[node.size]
+                rc_end[g] = r
+                reconfigs.append(("create", node, begin_c, r))
+                t = r
             node_t0[key] = t
             order.append(key)
             ver = chain_ver.get(key, 0)
@@ -586,12 +627,14 @@ class TimingEngine(ChainState):
             return end
 
         def destroy_node(node: InstanceNode, after: float) -> None:
-            nonlocal reconfig_end
-            if after > reconfig_end:
-                reconfig_end = after
-            begin_d = reconfig_end
-            reconfig_end += t_destroy[node.size]
-            reconfigs.append(("destroy", node, begin_d, reconfig_end))
+            g = node.tree if node.tree in rc_end else None
+            r = rc_end[g]
+            if after > r:
+                r = after
+            begin_d = r
+            r += t_destroy[node.size]
+            rc_end[g] = r
+            reconfigs.append(("destroy", node, begin_d, r))
 
         heap: list[tuple[float, int, str, InstanceNode]] = []
         seq = 0
@@ -675,7 +718,7 @@ class TimingEngine(ChainState):
         makespan = max(node_end.values(), default=0.0)
         return _Eval(node_t0, node_end, makespan,
                      math.fsum(masses) if need_mass else None,
-                     reconfig_end, order, reconfigs)
+                     max(rc_end.values(), default=0.0), order, reconfigs)
 
 
 def chains_makespan(
@@ -687,12 +730,15 @@ def chains_makespan(
     reconfig included, no carry-over state), computed from prebuilt
     duration chains without engine or Schedule construction.  This is the
     phase-2 family-evaluation scorer: one call per candidate allocation.
+    Reconfigurations serialise per tree (per driver) like replay's;
+    ``reconfig_scope="global"`` specs keep one shared sequence.
     """
     active = {k for k, v in node_tasks.items() if v}
     if not active:
         return 0.0
     t_create = spec.t_create
     t_destroy = spec.t_destroy
+    per_tree = spec.reconfig_scope != "global"
     sub_act: dict[NodeKey, bool] = {}
     for node in reversed(spec.nodes):
         sub_act[node.key] = node.key in active or any(
@@ -702,7 +748,7 @@ def chains_makespan(
     heappop = heapq.heappop
     heap: list[tuple[float, int, int, InstanceNode]] = []  # 0=visit 1=done
     seq = 0
-    reconfig_end = 0.0
+    rc_end: dict = {}  # per-driver reconfiguration-sequence ends
     makespan = 0.0
     for root in spec.roots:
         if sub_act[root.key]:
@@ -711,13 +757,16 @@ def chains_makespan(
     while heap:
         when, _, what, node = heappop(heap)
         key = node.key
+        g = node.tree if per_tree else None
         if what == 0:
             if key in active:
-                if when > reconfig_end:
-                    reconfig_end = when
-                reconfig_end += t_create[node.size]
+                r = rc_end.get(g, 0.0)
+                if when > r:
+                    r = when
+                r += t_create[node.size]
+                rc_end[g] = r
                 # sum() is the same left fold replay performs, in C
-                t = sum(node_durs[key], reconfig_end)
+                t = sum(node_durs[key], r)
                 if t > makespan:
                     makespan = t
                 heappush(heap, (t, seq, 1, node))
@@ -733,9 +782,10 @@ def chains_makespan(
             if not go:
                 continue
             if key in active:
-                if when > reconfig_end:
-                    reconfig_end = when
-                reconfig_end += t_destroy[node.size]
+                r = rc_end.get(g, 0.0)
+                if when > r:
+                    r = when
+                rc_end[g] = r + t_destroy[node.size]
             for child in node.children:
                 if sub_act[child.key]:
                     heappush(heap, (when, seq, 0, child))
@@ -774,7 +824,10 @@ _BATCH_SPEC_CACHE = IdentityCache(16)
 
 
 def _batch_spec_arrays(spec: DeviceSpec) -> tuple:
-    """(tc, td, childmask, descmask, root_idx) per spec.nodes order."""
+    """(tc, td, childmask, descmask, root_idx, grp_idx, n_groups) per
+    spec.nodes order; ``grp_idx`` maps each node to its driver's
+    reconfiguration-sequence index (one per tree, or a single shared
+    sequence for ``reconfig_scope="global"``)."""
     cached = _BATCH_SPEC_CACHE.get(spec)
     if cached is not None:
         return cached
@@ -801,7 +854,15 @@ def _batch_spec_arrays(spec: DeviceSpec) -> tuple:
     root_idx = [index[r.key] for r in spec.roots]
     for i in root_idx:
         mark(i, [])
-    out = (tc, td, childmask, descmask, root_idx)
+    if spec.reconfig_scope != "global":
+        trees = sorted({node.tree for node in nodes})
+        tmap = {t: k for k, t in enumerate(trees)}
+        grp_idx = np.array([tmap[node.tree] for node in nodes])
+        n_groups = len(trees)
+    else:
+        grp_idx = np.zeros(n, dtype=np.int64)
+        n_groups = 1
+    out = (tc, td, childmask, descmask, root_idx, grp_idx, n_groups)
     _BATCH_SPEC_CACHE.put(spec, out)
     return out
 
@@ -821,7 +882,8 @@ def chains_makespan_batch(spec, chain_durs, chain_len):
     import numpy as np
 
     C, N, L = chain_durs.shape
-    tc_n, td_n, childmask, descmask, root_idx = _batch_spec_arrays(spec)
+    (tc_n, td_n, childmask, descmask, root_idx, grp_idx,
+     n_groups) = _batch_spec_arrays(spec)
     BIG = np.int64(2**62)
     INF = np.inf
 
@@ -841,7 +903,10 @@ def chains_makespan_batch(spec, chain_durs, chain_len):
         tevt[pushed, i] = 0.0
         sevt[pushed, i] = seqctr[pushed]
         seqctr += pushed
-    re = np.zeros(C)
+    # one reconfiguration sequence per driver group (per tree, or one
+    # shared column for reconfig_scope="global" — G=1 reproduces the old
+    # globally-coupled walk bit-for-bit)
+    re = np.zeros((C, n_groups))
     mk = np.zeros(C)
     r = np.arange(C)
 
@@ -854,6 +919,8 @@ def chains_makespan_batch(spec, chain_durs, chain_len):
         seqm = np.where(cand, sevt, BIG)
         sel = cand & (seqm == seqm.min(1)[:, None]) & rows[:, None]
         n_star = sel.argmax(1)
+        g_star = grp_idx[n_star]
+        re_cur = re[r, g_star]
         what = wevt[r, n_star]
         act = active[r, n_star]
         m_visit = rows & (what == 0)
@@ -861,12 +928,12 @@ def chains_makespan_batch(spec, chain_durs, chain_len):
         m_done = rows & (what == 1)
 
         # visit of an active node: creation charge + exact chain fold
-        t0 = np.maximum(re, when) + tc_n[n_star]
+        t0 = np.maximum(re_cur, when) + tc_n[n_star]
         fold = np.add.accumulate(
             np.concatenate([t0[:, None], chain_durs[r, n_star]], 1), 1
         )
         end = fold[r, chain_len[r, n_star]]
-        re = np.where(m_va, t0, re)
+        re[r[m_va], g_star[m_va]] = t0[m_va]
         mk = np.where(m_va & (end > mk), end, mk)
         # visit -> done event in place (active at chain end, else pass-through)
         tevt[r[m_visit], n_star[m_visit]] = np.where(m_va, end, when)[m_visit]
@@ -878,7 +945,8 @@ def chains_makespan_batch(spec, chain_durs, chain_len):
         go = goflag[r, n_star]
         m_dgo = m_done & go
         m_destroy = m_dgo & act
-        re = np.where(m_destroy, np.maximum(re, when) + td_n[n_star], re)
+        re_d = np.maximum(re[r, g_star], when) + td_n[n_star]
+        re[r[m_destroy], g_star[m_destroy]] = re_d[m_destroy]
         tevt[r[m_done], n_star[m_done]] = INF
         if m_dgo.any():
             push = childmask[n_star] & sub_act & m_dgo[:, None]

@@ -161,11 +161,16 @@ class ClusterManager:
 
 def _prune_tail(tail: Tail, spec: DeviceSpec) -> Tail:
     """Drop tail state referring to instances that no longer exist."""
+    from repro.core.repartition import is_reconfig_key
+
     keys = {n.key for n in spec.nodes}
     cells = {(r.tree, s) for r in spec.roots for s in r.blocked}
+    trees = {r.tree for r in spec.roots}
     release = {
         k: v for k, v in tail.release.items()
-        if k == "reconfig" or k in cells
+        if k in cells or (
+            is_reconfig_key(k) and (k == "reconfig" or k[1] in trees)
+        )
     }
     alive = {k: v for k, v in tail.alive.items() if k in keys}
     return Tail(release=release, alive=alive)

@@ -1,0 +1,447 @@
+"""Heterogeneous cluster layer: instance-typed Profiles (+ the size-keyed
+back-compat shim, pinned differentially), phase-0 device partitioning,
+the far-cluster policy (never worse than the best single device), the
+per-driver reconfiguration fidelity fix, and cluster serving."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    A30,
+    A100,
+    ClusterSpec,
+    Profile,
+    SchedulerConfig,
+    SchedulingService,
+    Task,
+    cluster,
+    get_policy,
+    multi_gpu,
+    partition_batch,
+    schedule_batch,
+    validate_cluster_schedule,
+    validate_schedule,
+)
+from repro.core.cluster import ClusterMultiBatchScheduler, cluster_refine
+from repro.core.repartition import Assignment
+from repro.core.synth import generate_cluster_tasks, generate_tasks, workload
+from repro.core.timing import TimingEngine
+
+CFG = SchedulerConfig()
+MIXED = cluster(A30, A100)
+
+
+def _items(schedule):
+    return sorted(
+        (it.task.id, it.node.key, it.begin, it.size) for it in schedule.items
+    )
+
+
+# -- ClusterSpec structure ---------------------------------------------------
+
+def test_cluster_trees_are_globally_unique():
+    cs = cluster(A30, A100, multi_gpu(A30, 2))
+    trees = [r.tree for d in cs.devices for r in d.roots]
+    assert len(trees) == len(set(trees)) == 4
+    assert cs.n_slices == 4 + 7 + 8
+    assert cs.device_kinds == ("A30", "A100", "A30")
+    for tree in trees:
+        assert cs.device_of_tree(tree) in cs.devices
+
+
+def test_cluster_split_schedule_roundtrip():
+    tasks = generate_cluster_tasks(10, MIXED, "mixed", "wide", seed=1)
+    plan = get_policy("far-cluster").plan(tasks, MIXED, CFG)
+    merged_items = plan.schedule.items
+    split = MIXED.split_schedule(plan.schedule)
+    assert sum(len(s.items) for s in split) == len(merged_items)
+    for dev, sched in zip(MIXED.devices, split):
+        assert sched.spec is dev
+        for it in sched.items:
+            assert it.node.tree in {r.tree for r in dev.roots}
+
+
+# -- Profile + the size-keyed shim -------------------------------------------
+
+def test_profile_rejects_bare_size_keys():
+    p = Profile({"A30": {1: 4.0, 2: 2.5, 4: 1.5}})
+    with pytest.raises(KeyError, match="bind"):
+        p[1]
+    assert p[("A30", 2)] == 2.5
+    assert p.for_kind("A30")[4] == 1.5
+    assert p.supports("A30") and not p.supports("H100")
+    with pytest.raises(KeyError, match="A100"):
+        p.for_kind("A100")
+    # flat (kind, size) construction is equivalent
+    q = Profile({("A30", 1): 4.0, ("A30", 2): 2.5, ("A30", 4): 1.5})
+    assert q == p
+
+
+def test_size_keyed_shim_is_bit_identical_to_profile_binding():
+    """The back-compat contract, pinned differentially: a batch of plain
+    size-keyed tasks and the same batch wrapped in single-kind Profiles
+    produce bit-identical FAR schedules on the matching device."""
+    plain = generate_tasks(12, A30, workload("mixed", "wide", A30), seed=5)
+    profiled = [
+        dataclasses.replace(t, times=Profile({"A30": dict(t.times)}))
+        for t in plain
+    ]
+    a = schedule_batch(plain, A30)
+    b = schedule_batch(profiled, A30)
+    assert a.makespan == b.makespan
+    assert a.winner_index == b.winner_index
+    assert a.assignment.node_tasks == b.assignment.node_tasks
+    assert _items(a.schedule) == _items(b.schedule)
+    assert a.schedule.reconfigs == b.schedule.reconfigs
+
+
+def test_bind_is_identity_for_plain_tasks():
+    t = Task(0, {1: 3.0, 2: 2.0, 4: 1.2})
+    assert t.bind(A30) is t
+    assert t.times_for("anything") is t.times
+    assert t.supports("A100")
+    p = Task(1, Profile({"A30": {1: 3.0}, "A100": {1: 2.0}}))
+    bound = p.bind(A30)
+    assert bound is not p and bound.times == {1: 3.0}
+    assert p.supports("A100") and not p.supports("H100")
+
+
+# -- phase 0: device partitioning --------------------------------------------
+
+def test_partition_covers_batch_and_respects_support():
+    tasks = generate_cluster_tasks(17, MIXED, "mixed", "wide", seed=2)
+    # one task that only runs on the A100
+    only_a100 = Task(
+        9999, Profile({"A100": {1: 5.0, 2: 3.0, 3: 2.2, 4: 1.8, 7: 1.2}})
+    )
+    parts = partition_batch(tasks + [only_a100], MIXED)
+    got = sorted(t.id for p in parts for t in p)
+    assert got == sorted([t.id for t in tasks] + [9999])
+    assert only_a100.id in {t.id for t in parts[1]}
+    # unsupported everywhere -> loud error
+    with pytest.raises(ValueError, match="fits no device"):
+        partition_batch([Task(1, Profile({"H100": {1: 1.0}}))], MIXED)
+
+
+def test_cluster_supports_matches_partitioner_predicate():
+    """ClusterSpec.supports answers True exactly when partition_batch
+    will accept the task (full size coverage on some device)."""
+    full = generate_cluster_tasks(1, MIXED, "mixed", "wide", seed=0)[0]
+    assert MIXED.supports(full)
+    partial = Task(5, Profile({"A100": {7: 1.0}}))  # sizes 1..4 missing
+    assert not MIXED.supports(partial)
+    with pytest.raises(ValueError, match="fits no device"):
+        partition_batch([partial], MIXED)
+
+
+def test_partition_load_aware():
+    """A busy device receives less new work than an idle twin."""
+    cs = cluster(A30, A30)
+    tasks = generate_tasks(10, A30, workload("mixed", "wide", A30), seed=0)
+    even = partition_batch(tasks, cs)
+    skewed = partition_batch(tasks, cs, loads=[1e6, 0.0])
+    assert len(skewed[0]) < len(even[0])
+    assert len(skewed[1]) == 10 - len(skewed[0])
+
+
+# -- far-cluster -------------------------------------------------------------
+
+@pytest.mark.parametrize("scaling,times", [("mixed", "wide"),
+                                           ("poor", "narrow"),
+                                           ("good", "wide")])
+def test_far_cluster_valid_and_never_worse_than_best_single(scaling, times):
+    far = get_policy("far")
+    for seed in range(3):
+        tasks = generate_cluster_tasks(
+            14, MIXED, scaling, times, seed=seed
+        )
+        plan = get_policy("far-cluster").plan(tasks, MIXED, CFG)
+        validate_cluster_schedule(plan.schedule, tasks)
+        best_single = min(
+            far.plan(tasks, dev, CFG).makespan for dev in MIXED.devices
+        )
+        assert plan.makespan <= best_single + 1e-9
+
+
+def test_far_cluster_beats_best_single_on_benchmark_workloads():
+    """The acceptance margin: on the t5-style mixed workload the pool
+    strictly beats the best single device (there is real work to split)."""
+    far = get_policy("far")
+    tasks = generate_cluster_tasks(20, MIXED, "mixed", "wide", seed=0)
+    plan = get_policy("far-cluster").plan(tasks, MIXED, CFG)
+    best_single = min(
+        far.plan(tasks, dev, CFG).makespan for dev in MIXED.devices
+    )
+    assert plan.makespan < best_single - 1e-6
+    assert plan.extras["cluster"].mode == "partitioned"
+
+
+def test_far_cluster_on_device_spec_delegates_to_far():
+    tasks = generate_tasks(12, A100, workload("mixed", "wide", A100), seed=4)
+    a = get_policy("far-cluster").plan(tasks, A100, CFG)
+    b = get_policy("far").plan(tasks, A100, CFG)
+    assert a.policy == "far-cluster"
+    assert a.makespan == b.makespan
+    assert _items(a.schedule) == _items(b.schedule)
+
+
+def test_far_cluster_homogeneous_plain_tasks():
+    """A homogeneous pool with plain size-keyed tasks needs no Profile."""
+    cs = cluster(A30, A30)
+    tasks = generate_tasks(12, A30, workload("mixed", "wide", A30), seed=7)
+    plan = get_policy("far-cluster").plan(tasks, cs, CFG)
+    validate_cluster_schedule(plan.schedule, tasks)
+    single = get_policy("far").plan(tasks, A30, CFG).makespan
+    assert plan.makespan < single  # two devices beat one
+
+
+def test_far_cluster_empty_batch():
+    plan = get_policy("far-cluster").plan([], MIXED, CFG)
+    assert plan.makespan == 0.0
+    assert plan.schedule.items == []
+
+
+def test_far_cluster_single_device_fallback_wins_tiny_batch():
+    """One short task: splitting buys nothing — the plan must match the
+    best single device exactly (fallback or an equal partitioned plan)."""
+    t = generate_cluster_tasks(1, MIXED, "good", "narrow", seed=0)
+    plan = get_policy("far-cluster").plan(t, MIXED, CFG)
+    far = get_policy("far")
+    best_single = min(
+        far.plan(t, dev, CFG).makespan for dev in MIXED.devices
+    )
+    assert plan.makespan == pytest.approx(best_single, abs=1e-9)
+
+
+# -- cross-device engine primitives ------------------------------------------
+
+def test_extract_place_undo_roundtrip():
+    tasks = generate_tasks(8, A100, workload("mixed", "wide", A100), seed=3)
+    asgn = schedule_batch(tasks, A100, SchedulerConfig(refine=False)).assignment
+    eng = TimingEngine(asgn)
+    before = ({k: list(v) for k, v in eng.chains.items() if v},
+              eng.makespan())
+    # a chain whose size has an alternative instance (size 7 has none)
+    key = next(
+        k for k, v in eng.chains.items()
+        if v and sum(n.size == k[2] for n in A100.nodes) > 1
+    )
+    tid = eng.chains[key][0]
+    other = next(
+        n.key for n in A100.nodes if n.key != key and n.size == key[2]
+    )
+    eng.apply_extract(tid, key)
+    assert tid not in eng.chains[key]
+    eng.apply_place(tid, other)
+    assert tid in eng.chains[other]
+    assert eng.task_node[tid] == other
+    eng.undo()   # un-place
+    eng.undo()   # un-extract
+    after = ({k: list(v) for k, v in eng.chains.items() if v},
+             eng.makespan())
+    assert after == before
+    assert eng.task_node[tid] == key
+
+
+def test_cluster_refine_improves_imbalanced_split():
+    """Stuff every task onto one device of a twin pool: the inter-device
+    search must move work across and cut the cluster makespan."""
+    cs = cluster(A30, A30)
+    tasks = generate_tasks(10, A30, workload("mixed", "wide", A30), seed=1)
+    loaded = schedule_batch(tasks, cs.devices[0]).assignment
+    engines = [TimingEngine(loaded),
+               TimingEngine(Assignment(cs.devices[1], {}, {}))]
+    before = max(e.makespan() for e in engines)
+    moves, swaps = cluster_refine(
+        cs, engines, {t.id: t for t in tasks}, max_edits=32
+    )
+    after = max(e.makespan() for e in engines)
+    assert moves + swaps > 0
+    assert after < before - 1e-9
+    for dev, eng in zip(cs.devices, engines):
+        validate_schedule(eng.schedule(), None)
+
+
+# -- serving a heterogeneous pool --------------------------------------------
+
+def _stream(cs, n, seed, **cfg_kw):
+    import numpy as np
+
+    tasks = generate_cluster_tasks(n, cs, "mixed", "wide", seed=seed)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(2.0, size=n))
+    svc = SchedulingService(
+        pool=cs,
+        config=SchedulerConfig(max_wait_s=5.0, max_batch=8, **cfg_kw),
+    )
+    for t, a in zip(tasks, arrivals):
+        svc.submit(t, arrival=float(a), deadline=float(a) + 400.0)
+    combined = svc.drain()
+    return svc, combined, tasks
+
+
+def test_cluster_service_flushes_and_validates_per_device():
+    svc, combined, tasks = _stream(MIXED, 24, seed=0)
+    assert svc.stats.batches >= 1
+    assert sorted(it.task.id for it in combined.items) == \
+        sorted(t.id for t in tasks)
+    for dev_sched in MIXED.split_schedule(combined):
+        validate_schedule(dev_sched, None, check_reconfig=False)
+    # both devices actually host work
+    hosting = {MIXED.tree_device[it.node.tree] for it in combined.items}
+    assert hosting == {0, 1}
+    # decisions are causal
+    decided = {d.task_id: d.decided_at for d in svc.stats.decisions}
+    for it in combined.items:
+        assert it.begin >= decided[it.task.id] - 1e-9
+
+
+def test_cluster_service_replan_never_worse():
+    plain, _, _ = _stream(MIXED, 20, seed=3, replan=False)
+    re, _, _ = _stream(MIXED, 20, seed=3, replan=True)
+    assert re.makespan <= plain.makespan + 1e-9
+
+
+def test_cluster_service_trickle_goes_online():
+    import numpy as np
+
+    tasks = generate_cluster_tasks(4, MIXED, "mixed", "wide", seed=9)
+    svc = SchedulingService(
+        pool=MIXED, config=SchedulerConfig(max_wait_s=1.0, max_batch=16),
+    )
+    arrivals = np.arange(4) * 100.0  # far apart -> every flush a trickle
+    for t, a in zip(tasks, arrivals):
+        svc.submit(t, arrival=float(a))
+    combined = svc.drain()
+    assert svc.stats.online_placements == 4
+    for dev_sched in MIXED.split_schedule(combined):
+        validate_schedule(dev_sched, None, check_reconfig=False)
+
+
+def test_cluster_service_rejects_unsupported_profile_at_intake():
+    """A task no device fully covers must be refused at submit — letting
+    it queue would crash the next batch flush mid-partitioning and drop
+    every co-queued task with it."""
+    svc = SchedulingService(pool=MIXED, config=SchedulerConfig(max_batch=8))
+    bad = Task(77, Profile({"A100": {1: 5.0, 2: 3.0, 4: 2.0}}))  # no 3, 7
+    assert svc.submit(bad, arrival=0.0) == "rejected"
+    assert 77 in svc.stats.rejected
+    good = generate_cluster_tasks(3, MIXED, "mixed", "wide", seed=1)
+    for i, t in enumerate(good):
+        svc.submit(t, arrival=0.1 * i)
+    combined = svc.drain()  # flush must survive — the bad task never queued
+    assert sorted(it.task.id for it in combined.items) == \
+        sorted(t.id for t in good)
+
+
+def test_cluster_service_admission_uses_pool_floor():
+    """A deadline only the fast device can meet must not be rejected."""
+    svc = SchedulingService(
+        pool=MIXED, config=SchedulerConfig(admission="reject"),
+    )
+    t = Task(0, Profile({
+        "A30": {1: 100.0, 2: 60.0, 4: 40.0},
+        "A100": {1: 10.0, 2: 6.0, 3: 4.5, 4: 4.0, 7: 3.0},
+    }))
+    # floor over the pool is 3.0s (A100 size-7); 35 < 40 (best A30) but
+    # comfortably above the pool floor -> must be admitted
+    assert svc.submit(t, arrival=0.0, deadline=35.0) == "queued"
+    t2 = dataclasses.replace(t, id=1)
+    assert svc.submit(t2, arrival=0.0, deadline=1.0) == "rejected"
+
+
+def test_cluster_approximation_factor_and_per_device_theorem1():
+    """The pool's certificate is the worst device's §5 factor, and every
+    device's rigid sub-schedule respects its own Theorem-1 bound."""
+    from repro.core.bounds import (
+        cluster_approximation_factor,
+        theorem1_rigid_bound,
+    )
+    from repro.core.repartition import replay
+
+    assert cluster_approximation_factor(MIXED) == 2.0  # A100 dominates 7/4
+    tasks = generate_cluster_tasks(16, MIXED, "mixed", "wide", seed=4)
+    plan = get_policy("far-cluster").plan(tasks, MIXED, CFG)
+    for asgn in plan.extras["cluster"].assignments:
+        if asgn is None or not asgn.node_tasks:
+            continue
+        rigid = replay(asgn, include_reconfig=False)
+        assert rigid.makespan <= theorem1_rigid_bound(rigid) + 1e-6
+
+
+# -- per-driver reconfiguration sequences (satellite fidelity fix) ----------
+
+def test_multi_gpu_reconfig_decouples_trees():
+    spec_tree = multi_gpu(A100, 2)
+    spec_global = dataclasses.replace(spec_tree, reconfig_scope="global")
+    no_refine = SchedulerConfig(refine=False)
+    strict_wins = 0
+    for seed in range(4):
+        tasks = generate_tasks(
+            24, spec_tree, workload("mixed", "wide", spec_tree), seed=seed
+        )
+        a = schedule_batch(tasks, spec_tree, no_refine)
+        b = schedule_batch(tasks, spec_global, no_refine)
+        validate_schedule(a.schedule, tasks)
+        validate_schedule(b.schedule, tasks)
+        # per-assignment the decoupled timing dominates (creations only
+        # move earlier), so the phase-2 winner can never be worse …
+        assert a.makespan <= b.makespan + 1e-9
+        if a.makespan < b.makespan - 1e-9:
+            strict_wins += 1
+        # … and the refined pipelines stay feasible under both scopes
+        validate_schedule(schedule_batch(tasks, spec_tree).schedule, tasks)
+        validate_schedule(schedule_batch(tasks, spec_global).schedule, tasks)
+    # the fidelity fix actually binds on some of the workloads
+    assert strict_wins >= 1
+
+
+def test_single_tree_scope_is_bit_identical():
+    spec_global = dataclasses.replace(A100, reconfig_scope="global")
+    tasks = generate_tasks(14, A100, workload("mixed", "wide", A100), seed=6)
+    a = schedule_batch(tasks, A100)
+    b = schedule_batch(tasks, spec_global)
+    assert a.makespan == b.makespan
+    assert _items(a.schedule) == _items(b.schedule)
+    assert a.schedule.reconfigs == b.schedule.reconfigs
+
+
+# -- hypothesis property -----------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def profile_batches(draw):
+        n = draw(st.integers(1, 8))
+        tasks = []
+        for i in range(n):
+            table = {}
+            for dev in MIXED.devices:
+                t1 = draw(st.floats(0.5, 60.0, allow_nan=False))
+                times, cur = {}, t1
+                for s in dev.sizes:
+                    if s != min(dev.sizes):
+                        cur *= draw(st.floats(0.3, 1.0))
+                    times[s] = cur
+                table[dev.device_kind] = times
+            tasks.append(Task(id=i, times=Profile(table)))
+        return tasks
+
+    @settings(max_examples=25, deadline=None)
+    @given(profile_batches())
+    def test_cluster_never_exceeds_best_single_device(tasks):
+        plan = get_policy("far-cluster").plan(tasks, MIXED, CFG)
+        validate_cluster_schedule(plan.schedule, tasks)
+        far = get_policy("far")
+        best = min(
+            far.plan(tasks, dev, CFG).makespan for dev in MIXED.devices
+        )
+        assert plan.makespan <= best + 1e-9

@@ -81,3 +81,53 @@ def test_degrade_keeps_t_tables():
     d = A100.degrade([(0, 6)])
     for s in d.sizes:
         assert s in d.t_create and s in d.t_destroy
+
+
+def test_degrade_drops_stale_reconfig_table_entries():
+    """The tables shrink with the sizes: no create/destroy cost may
+    survive for an instance size the degraded tree can no longer form."""
+    d = A30.degrade([(0, 0)])  # kills the 4 and the left 2
+    assert set(d.sizes) == {1, 2}
+    assert set(d.t_create) == set(d.sizes)
+    assert set(d.t_destroy) == set(d.sizes)
+    assert d.device_kind == "A30"  # kind survives renaming
+
+
+def test_degrade_to_empty_forest():
+    dead = [(0, s) for s in range(4)]
+    d = A30.degrade(dead)
+    assert d.roots == ()
+    assert d.sizes == ()
+    assert d.t_create == {} and d.t_destroy == {}
+    assert d.n_slices == 0
+
+
+def test_degrade_a100_footprint4_three_instance():
+    """Killing S3 removes the special 3-with-S3-idle instance (footprint
+    4) along with the 4 and the root, leaving 2(S0,S1), 1(S2) and the
+    right-hand 3 — and the tables shrink to the surviving sizes."""
+    d = A100.degrade([(0, 3)])
+    assert not any(n.footprint != n.size for n in d.nodes)  # the 3' is gone
+    roots = sorted((r.start, r.size) for r in d.roots)
+    assert roots == [(0, 2), (2, 1), (4, 3)]
+    assert set(d.sizes) == {1, 2, 3}
+    assert set(d.t_create) == {1, 2, 3}
+
+
+def test_degrade_inside_cluster():
+    from repro.core.cluster import cluster
+
+    cs = cluster(A30, A100)
+    a100_tree = cs.devices[1].roots[0].tree
+    d1 = cs.degrade([(a100_tree, 3)])
+    assert len(d1.devices) == 2
+    assert d1.devices[0].sizes == A30.sizes          # untouched device
+    assert set(d1.devices[1].sizes) == {1, 2, 3}     # degraded A100
+    assert d1.devices[1].device_kind == "A100"
+    # tree ids keep their global identity through degradation
+    assert {r.tree for r in d1.devices[1].roots} == {a100_tree}
+    # killing every A30 slice drops the device from the pool
+    a30_tree = cs.devices[0].roots[0].tree
+    d2 = cs.degrade([(a30_tree, s) for s in range(4)])
+    assert len(d2.devices) == 1
+    assert d2.devices[0].device_kind == "A100"
