@@ -23,6 +23,7 @@ from benchmarks import (
     t9_multibatch,
     t_cluster,
     t_cost,
+    t_faults,
     t_online,
 )
 from benchmarks.common import DEFAULT_REPS
@@ -39,6 +40,7 @@ MODULES = {
     "cost": (t_cost, "Scheduler cost"),
     "online": (t_online, "Online vs batched FAR"),
     "cluster": (t_cluster, "Heterogeneous cluster vs single queue"),
+    "faults": (t_faults, "Fault injection: closed vs open loop"),
     "roofline": (roofline, "Roofline from dry-run"),
 }
 

@@ -45,15 +45,29 @@ from repro.core.policy import (
     get_policy,
     register_policy,
 )
+from repro.core.faults import (
+    ExecutionDraw,
+    FaultInjector,
+    FaultRunReport,
+    FaultSpec,
+    RetryPolicy,
+    demote_shrink,
+    execute_open_loop,
+    run_with_faults,
+)
 from repro.core.service import (
+    CorrectionEvent,
     Decision,
+    OutageEvent,
     ReplanEvent,
+    RetryEvent,
     SchedulingService,
     ServiceStats,
 )
 from repro.core.problem import (
     InfeasibleScheduleError,
     Profile,
+    ProfileCoverageError,
     ReconfigEvent,
     Schedule,
     ScheduledTask,
@@ -78,7 +92,8 @@ __all__ = [
     "A30", "A100", "H100", "SPECS", "TPU_POD_256", "TPU_SUPERPOD_512",
     "DeviceSpec", "InstanceNode", "multi_gpu",
     "Task", "Profile", "bind_tasks", "Schedule", "ScheduledTask",
-    "ReconfigEvent", "InfeasibleScheduleError", "validate_schedule",
+    "ReconfigEvent", "InfeasibleScheduleError", "ProfileCoverageError",
+    "validate_schedule",
     "area_lower_bound", "lower_bound",
     "ClusterSpec", "ClusterSchedule", "ClusterPlan", "cluster",
     "ClusterMultiBatchScheduler", "partition_batch",
@@ -96,4 +111,8 @@ __all__ = [
     "SchedulerConfig", "SchedulerPolicy", "PlanResult",
     "register_policy", "get_policy", "available_policies",
     "SchedulingService", "ServiceStats", "Decision", "ReplanEvent",
+    "CorrectionEvent", "RetryEvent", "OutageEvent",
+    "RetryPolicy", "FaultSpec", "FaultInjector", "FaultRunReport",
+    "ExecutionDraw", "demote_shrink", "run_with_faults",
+    "execute_open_loop",
 ]

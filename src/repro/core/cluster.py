@@ -64,7 +64,9 @@ from repro.core.policy import (
 from repro.core.problem import (
     EPS,
     InfeasibleScheduleError,
+    ProfileCoverageError,
     Schedule,
+    ScheduledTask,
     Task,
     lower_bound,
     validate_schedule,
@@ -145,6 +147,30 @@ class ClusterSpec:
         ]
 
     # -- fault tolerance ----------------------------------------------------
+    def quarantine(self, device: int) -> "ClusterSpec":
+        """The pool without device ``device`` — the *capacity view* of a
+        device loss, e.g. for recomputing admission floors against the
+        degraded pool.  The serving-side lifecycle (withdrawing committed
+        placements at the loss time, re-partitioning, re-admission on
+        recovery) lives on :meth:`SchedulingService.quarantine` /
+        :meth:`ClusterMultiBatchScheduler.quarantine_device`, which keep
+        the full spec and mask the device instead — tree ids stay stable
+        across the outage."""
+        if not 0 <= device < len(self.devices):
+            raise ValueError(
+                f"cluster {self.name!r} has no device {device} "
+                f"(devices 0..{len(self.devices) - 1})"
+            )
+        keep = tuple(
+            d for i, d in enumerate(self.devices) if i != device
+        )
+        if not keep:
+            raise ValueError(
+                f"cannot quarantine device {device}: it is the last "
+                f"device of cluster {self.name!r}"
+            )
+        return ClusterSpec(name=f"{self.name}-q{device}", devices=keep)
+
     def degrade(self, dead_slices: Sequence[tuple[int, int]]) -> "ClusterSpec":
         """Cluster with dead ``(tree, slice)`` cells pruned per owning
         device (``DeviceSpec.degrade``); devices left with no healthy
@@ -251,6 +277,7 @@ def partition_batch(
     tasks: Sequence[Task],
     cspec: ClusterSpec,
     loads: Sequence[float] | None = None,
+    active: Sequence[bool] | None = None,
 ) -> list[list[Task]]:
     """Split one batch across the cluster's devices.
 
@@ -259,35 +286,55 @@ def partition_batch(
     device whose projected admissible bound
     ``load + max(area / #slices, tallest)`` grows least (ties to the
     earlier device).  ``loads`` are per-device start pressures in seconds
-    (e.g. serving tail releases); default 0.
+    (e.g. serving tail releases); default 0.  ``active`` masks devices
+    out of the candidate set (a quarantined device still owns its slot in
+    the returned list — it just receives no tasks).
 
     Returns one list per device, each in the original batch order, with
     the *original* task objects (binding to device kinds happens inside
-    the per-device planners).
+    the per-device planners).  Raises :class:`ProfileCoverageError`
+    (naming the task and the missing ``(device_kind, size)``) when a
+    task's profile covers no device of the pool.
     """
     devices = cspec.devices
     start = list(loads) if loads is not None else [0.0] * len(devices)
     if len(start) != len(devices):
         raise ValueError("loads must have one entry per device")
+    up = list(active) if active is not None else [True] * len(devices)
+    if len(up) != len(devices):
+        raise ValueError("active must have one entry per device")
 
     entries = []  # (orig_index, task, {device: (min_work, best_time)})
     for idx, t in enumerate(tasks):
         per_dev: dict[int, tuple[float, float]] = {}
+        # the first (kind, size) hole found, for the typed error below
+        missing: tuple[str, int | None] | None = None
         for i, d in enumerate(devices):
+            if not up[i]:
+                continue
             if not t.supports(d.device_kind):
+                if missing is None:
+                    missing = (d.device_kind, None)
                 continue
             times = t.times_for(d.device_kind)
             # FAR molds over the device's whole C_G, so a device counts
             # only when the profile covers every one of its sizes
-            if any(s not in times for s in d.sizes):
+            hole = next((s for s in d.sizes if s not in times), None)
+            if hole is not None:
+                if missing is None:
+                    missing = (d.device_kind, hole)
                 continue
             w = min(s * times[s] for s in d.sizes)
             h = min(times[s] for s in d.sizes)
             per_dev[i] = (w, h)
         if not per_dev:
-            raise ValueError(
-                f"task {t.id} fits no device of cluster {cspec.name!r} "
-                f"(kinds: {list(cspec.device_kinds)})"
+            kind, size = missing if missing is not None \
+                else (devices[0].device_kind, None)
+            quarantined = "" if all(up) else "; some devices quarantined"
+            raise ProfileCoverageError(
+                t.id, kind, size,
+                detail=f"fits no device of cluster {cspec.name!r}, "
+                       f"kinds: {list(cspec.device_kinds)}{quarantined}",
             )
         entries.append((idx, t, per_dev))
 
@@ -681,6 +728,9 @@ class ClusterMultiBatchScheduler:
         ]
         self.results: list[PlanResult] = []
         self.originals: dict[int, Task] = {}
+        # quarantine mask: inactive devices receive no placements until
+        # recovery (their committed history stays — tree ids are stable)
+        self.active: list[bool] = [True] * len(cspec.devices)
 
     # -- MultiBatchScheduler surface ----------------------------------------
     @property
@@ -720,7 +770,9 @@ class ClusterMultiBatchScheduler:
         its device's tail; returns the merged absolute-timed segment."""
         for t in tasks:
             self.originals[t.id] = t
-        parts = partition_batch(tasks, self.cluster, self.device_pressures())
+        parts = partition_batch(
+            tasks, self.cluster, self.device_pressures(), active=self.active
+        )
         items: list = []
         reconfigs: list = []
         for mb, part in zip(self.mbs, parts):
@@ -763,6 +815,8 @@ class ClusterMultiBatchScheduler:
             self.originals[task.id] = task
             best = None  # ((rank, score..., device), index, bound task)
             for i, (dev, ol) in enumerate(zip(self.cluster.devices, onlines)):
+                if not self.active[i]:
+                    continue
                 if not task.supports(dev.device_kind):
                     continue
                 bt = task.bind(dev)
@@ -806,6 +860,7 @@ class ClusterMultiBatchScheduler:
         new.mbs = [mb.clone() for mb in self.mbs]
         new.results = list(self.results)
         new.originals = dict(self.originals)
+        new.active = list(self.active)
         return new
 
     def last_flush_items(self) -> list:
@@ -830,6 +885,106 @@ class ClusterMultiBatchScheduler:
             withdrawn.extend(mb.withdraw_uncommitted(t, eps=eps))
         out = [self.originals.get(w.id, w) for w in withdrawn]
         out.sort(key=lambda task: (begins.get(task.id, t), task.id))
+        return out
+
+    # -- fault tolerance ----------------------------------------------------
+    def supports_active(self, task: Task) -> bool:
+        """Whether some *non-quarantined* device can host the task (the
+        ``ClusterSpec.supports`` predicate over the active mask)."""
+        return any(
+            up and task.supports(d.device_kind)
+            and all(s in task.times_for(d.device_kind) for s in d.sizes)
+            for up, d in zip(self.active, self.cluster.devices)
+        )
+
+    def quarantine_device(
+        self, device: int, t: float
+    ) -> tuple[list[Task], list[int]]:
+        """Take ``device`` out of service at time ``t``.
+
+        The device stops receiving placements (partitioning and online
+        previews skip it) and every committed placement on it that has
+        not started by ``t`` is withdrawn.  Returns ``(withdrawn,
+        running)``: the withdrawn *original* tasks (old-begin order) and
+        the ids of attempts that were RUNNING on the device at ``t`` —
+        those died with it; the caller routes them through its failure
+        path (the driver cannot: retries are a service-level policy).
+        """
+        if not 0 <= device < len(self.mbs):
+            raise ValueError(
+                f"cluster {self.cluster.name!r} has no device {device}"
+            )
+        if not self.active[device]:
+            raise ValueError(f"device {device} is already quarantined")
+        self.active[device] = False
+        mb = self.mbs[device]
+        running = sorted(
+            it.task.id
+            for seg in mb.segments for it in seg.items
+            if not it.failed and it.begin <= t + EPS and it.end > t + EPS
+        )
+        withdrawn = mb.withdraw_uncommitted(t)
+        return [self.originals.get(w.id, w) for w in withdrawn], running
+
+    def recover_device(self, device: int, t: float) -> None:
+        """Return a quarantined device to service at time ``t``: its
+        seam tail is floored at ``t`` and its alive-instance set cleared
+        (an outage resets the MIG partition — every instance must be
+        re-created; safe because quarantine ended all work on the device
+        no later than the loss time, so no existence window reaches
+        ``t``).  The reset is persistent (``mb.reset_at``): later
+        withdrawals or corrections that rebuild the device tail keep
+        honouring the floor — work decided before recovery can never be
+        re-planned into the outage window."""
+        if not 0 <= device < len(self.mbs):
+            raise ValueError(
+                f"cluster {self.cluster.name!r} has no device {device}"
+            )
+        if self.active[device]:
+            raise ValueError(f"device {device} is not quarantined")
+        self.active[device] = True
+        mb = self.mbs[device]
+        mb.reset_at = max(mb.reset_at, float(t))
+        mb.rebuild_tail()
+
+    # -- runtime corrections (closed-loop serving) --------------------------
+    def _mb_of_task(self, task_id: int) -> MultiBatchScheduler | None:
+        for mb in self.mbs:
+            if mb.find_item(task_id) is not None:
+                return mb
+        return None
+
+    def find_item(self, task_id: int) -> ScheduledTask | None:
+        """The live committed placement of ``task_id`` on any device."""
+        mb = self._mb_of_task(task_id)
+        return mb.find_item(task_id) if mb is not None else None
+
+    def replace_item(
+        self,
+        task_id: int,
+        end_override: float | None,
+        failed: bool = False,
+    ) -> ScheduledTask:
+        """Correct the live placement on its owning device's timeline."""
+        mb = self._mb_of_task(task_id)
+        if mb is None:
+            raise KeyError(f"task {task_id} has no live committed placement")
+        return mb.replace_item(task_id, end_override, failed=failed)
+
+    def remove_items(self, task_ids: set[int]) -> list[Task]:
+        """Drop live placements across all devices; returns the removed
+        *original* tasks ordered by old begin (ties by id)."""
+        begins: dict[int, float] = {}
+        for mb in self.mbs:
+            for seg in mb.segments:
+                for it in seg.items:
+                    if not it.failed and it.task.id in task_ids:
+                        begins[it.task.id] = it.begin
+        removed: list[Task] = []
+        for mb in self.mbs:
+            removed.extend(mb.remove_items(task_ids))
+        out = [self.originals.get(w.id, w) for w in removed]
+        out.sort(key=lambda task: (begins.get(task.id, 0.0), task.id))
         return out
 
     def combined_schedule(self) -> Schedule:

@@ -1,0 +1,542 @@
+"""Deterministic fault model for closed-loop serving (beyond-paper;
+cf. MIG-Serving, arXiv:2109.11067 — *reconfigurable machine scheduling*
+where the plan must survive runtime change — and scheduler-driven job
+atomization, arXiv:2509.19086, which makes recovery granularity a
+scheduler-level concern).
+
+The paper's schedules are open-loop: FAR plans from profiled durations
+and assumes every instance, reconfiguration and task completes exactly as
+modeled.  This module provides the pieces that let the serving facade
+close the loop and lets tests/benchmarks exercise it *deterministically*:
+
+* :class:`RetryPolicy` — capped exponential backoff on the re-release
+  time of a failed task, with optional demotion (any
+  ``demote(task, attempt) -> Task`` hook; :func:`demote_shrink` drops the
+  largest profile size per kind, using the PR 5 instance-typed
+  :class:`~repro.core.problem.Profile` machinery);
+* :class:`FaultSpec` / :class:`FaultInjector` — a seeded fault source:
+  per-task lognormal profile noise, straggler inflation, Poisson task
+  failures (rate per second of runtime) and per-device MTBF outage
+  windows.  Every draw is keyed on ``(seed, stream, task_id, attempt)``
+  (integers only, so the draws are stable across processes and across
+  re-planning — a withdrawn-and-replaced placement keeps its fate);
+* :func:`run_with_faults` — the closed-loop harness: an event loop that
+  feeds a :class:`~repro.core.service.SchedulingService` arrival +
+  runtime-truth events (completions, failures, device losses/recoveries)
+  in virtual-time order and keeps the service's committed bookkeeping in
+  sync with what the injector says actually happened;
+* :func:`execute_open_loop` — the no-feedback baseline executor: the
+  same faults applied to a *final frozen plan* (per-cell work-conserving
+  dispatch, no retries, no corrections), so benchmarks can score the
+  closed loop against exactly the counterfactual the paper assumes.
+
+With ``FaultSpec()`` (all rates zero) the injector draws every duration
+exactly at profile and never fails anything — the harness then reports
+every completion at its planned end and the service's plans stay
+bit-identical to the pre-feedback behaviour (pinned by the differential
+tests in ``tests/test_faults.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+from typing import Callable, Sequence
+
+from repro.core.problem import EPS, Profile, Task
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+
+def demote_shrink(task: Task, attempt: int) -> Task | None:
+    """Demotion hook: drop the largest profile size of every instance
+    kind (the failed attempt's biggest slice is the prime suspect for the
+    failure — OOM, thermals — so the retry molds onto smaller slices).
+    Returns ``None`` when every kind is already down to one size (no
+    demotion left; the retry keeps the previous profile)."""
+    times = task.times
+    if isinstance(times, Profile):
+        table = {}
+        shrunk = False
+        for kind in times.kinds:
+            per = dict(times.for_kind(kind))
+            if len(per) > 1:
+                per.pop(max(per))
+                shrunk = True
+            table[kind] = per
+        if not shrunk:
+            return None
+        return dataclasses.replace(task, times=Profile(table))
+    per = dict(times)
+    if len(per) <= 1:
+        return None
+    per.pop(max(per))
+    return dataclasses.replace(task, times=per)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """What happens to a task reported ``failed``.
+
+    The next attempt is re-released ``backoff(attempt)`` seconds after
+    the failure report: ``min(backoff_cap, backoff_base * 2**(attempt-1))``
+    for the failure of attempt number ``attempt`` (1-based) — capped
+    exponential backoff.  ``demote`` is an optional
+    ``(task, next_attempt) -> Task | None`` hook applied to the retried
+    task (e.g. :func:`demote_shrink`); returning ``None`` keeps the
+    task unchanged.  ``max_attempts`` bounds the total number of
+    attempts; the failure of attempt ``max_attempts`` is permanent.
+    """
+
+    max_attempts: int = 3
+    backoff_base: float = 0.5
+    backoff_cap: float = 8.0
+    demote: Callable[[Task, int], Task | None] | None = None
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"RetryPolicy.max_attempts must be >= 1, got "
+                f"{self.max_attempts}"
+            )
+        if self.backoff_base < 0.0 or self.backoff_cap < 0.0:
+            raise ValueError("RetryPolicy backoff times must be >= 0")
+
+    def backoff(self, attempt: int) -> float:
+        """Delay before re-releasing the attempt after ``attempt`` fails."""
+        if attempt < 1:
+            raise ValueError(f"attempt numbers are 1-based, got {attempt}")
+        return min(self.backoff_cap, self.backoff_base * 2.0 ** (attempt - 1))
+
+    def task_for_attempt(self, task: Task, attempt: int) -> Task:
+        """The task object attempt number ``attempt`` should submit
+        (demoted when the hook applies, otherwise unchanged)."""
+        if self.demote is None:
+            return task
+        out = self.demote(task, attempt)
+        return task if out is None else out
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultInjector
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Rates and distributions of the seeded fault model.  All-zero
+    defaults = a perfect machine (the injector becomes a no-op)."""
+
+    seed: int = 0
+    # lognormal sigma on actual durations (0 = exactly at profile)
+    noise_sigma: float = 0.0
+    # probability a given attempt runs `straggler_factor` x its profile
+    straggler_prob: float = 0.0
+    straggler_factor: float = 3.0
+    # Poisson failure rate per second of (actual) runtime
+    task_fail_rate: float = 0.0
+    # per-device mean time between losses (None = devices never fail)
+    device_mtbf_s: float | None = None
+    device_repair_s: float = 30.0
+    max_device_losses: int = 2
+
+    def __post_init__(self):
+        if self.straggler_factor <= 1.0:
+            raise ValueError("FaultSpec.straggler_factor must exceed 1.0")
+        for f in ("noise_sigma", "straggler_prob", "task_fail_rate",
+                  "device_repair_s"):
+            if getattr(self, f) < 0.0:
+                raise ValueError(f"FaultSpec.{f} must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionDraw:
+    """The injector's verdict on one attempt: how long it actually runs
+    and whether (and when, relative to its start) it fails."""
+
+    duration: float            # actual runtime if it completes
+    fail_after: float | None   # seconds after start the attempt dies
+
+    @property
+    def fails(self) -> bool:
+        return self.fail_after is not None
+
+
+# integer stream tags: draw keys must stay hash-stable across processes,
+# so they are tuples of ints only (str hashing is randomized per run)
+_STREAM_EXEC = 1
+_STREAM_DEVICE = 2
+
+
+class FaultInjector:
+    """Deterministic fault source: every draw is a pure function of
+    ``(spec.seed, stream, id, attempt)``, independent of draw order —
+    re-planning, withdrawal and re-admission never change a task's fate,
+    which is what makes closed-loop runs reproducible and comparable
+    against the open-loop baseline under the *same* faults."""
+
+    def __init__(self, spec: FaultSpec | None = None, **kw):
+        self.spec = spec if spec is not None else FaultSpec(**kw)
+
+    def _rng(self, stream: int, *key: int) -> random.Random:
+        # fold the key into one integer seed (fnv-style) — deterministic
+        # across processes, unlike tuple hashing, and draw-order-free
+        x = 0xCBF29CE484222325
+        for v in (self.spec.seed, stream) + key:
+            x = ((x ^ (int(v) & 0xFFFFFFFFFFFFFFFF)) * 0x100000001B3) \
+                & 0xFFFFFFFFFFFFFFFF
+        return random.Random(x)
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any fault channel is active (False = perfect machine)."""
+        s = self.spec
+        return bool(
+            s.noise_sigma > 0.0 or s.straggler_prob > 0.0
+            or s.task_fail_rate > 0.0 or s.device_mtbf_s is not None
+        )
+
+    def draw_execution(
+        self, task_id: int, attempt: int, planned: float
+    ) -> ExecutionDraw:
+        """Actual runtime (and failure point, if any) for one attempt of
+        a task whose profile promises ``planned`` seconds."""
+        s = self.spec
+        if not self.enabled:
+            return ExecutionDraw(duration=planned, fail_after=None)
+        rng = self._rng(_STREAM_EXEC, task_id, attempt)
+        dur = planned
+        if s.noise_sigma > 0.0:
+            dur *= rng.lognormvariate(0.0, s.noise_sigma)
+        if s.straggler_prob > 0.0 and rng.random() < s.straggler_prob:
+            dur *= s.straggler_factor
+        fail_after = None
+        if s.task_fail_rate > 0.0:
+            # Poisson process over the attempt's actual runtime: the
+            # first arrival lands inside [0, dur) with p = 1 - e^(-r*dur)
+            x = rng.expovariate(s.task_fail_rate)
+            if x < dur:
+                fail_after = x
+        return ExecutionDraw(duration=dur, fail_after=fail_after)
+
+    def device_outages(
+        self, device: int, horizon: float
+    ) -> list[tuple[float, float]]:
+        """Seeded ``(lost_at, recovered_at)`` windows for one device over
+        ``[0, horizon)`` — exponential inter-loss times with mean
+        ``device_mtbf_s``, fixed repair time, at most
+        ``max_device_losses`` windows, non-overlapping."""
+        s = self.spec
+        if s.device_mtbf_s is None:
+            return []
+        rng = self._rng(_STREAM_DEVICE, device)
+        out: list[tuple[float, float]] = []
+        t = 0.0
+        while len(out) < s.max_device_losses:
+            t += rng.expovariate(1.0 / s.device_mtbf_s)
+            if t >= horizon:
+                break
+            rec = t + s.device_repair_s
+            out.append((t, rec))
+            t = rec
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop harness
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultRunReport:
+    """What one closed-loop run produced: actual completion times (task
+    id -> virtual time), permanently-failed ids, and per-withdrawal
+    recovery latencies (seconds between a device loss pulling a placement
+    back and the re-plan committing it again)."""
+
+    completions: dict[int, float]
+    failed: list[int]
+    recovery_latency: list[float]
+    events: int = 0
+
+    def miss_rate(self, deadlines: dict[int, float]) -> float:
+        if not deadlines:
+            return 0.0
+        missed = sum(
+            1 for tid, dl in deadlines.items()
+            if self.completions.get(tid, math.inf) > dl + EPS
+        )
+        return missed / len(deadlines)
+
+
+def run_with_faults(
+    svc,
+    stream: Sequence[tuple[float, Task, float | None]],
+    injector: FaultInjector | None = None,
+    horizon: float | None = None,
+) -> FaultRunReport:
+    """Drive a :class:`~repro.core.service.SchedulingService` closed-loop.
+
+    ``stream`` is ``(arrival, task, deadline-or-None)`` in non-decreasing
+    arrival order.  The harness submits arrivals, watches the service's
+    committed placements, and — using the injector's deterministic draws
+    — reports each placement's actual fate (``completed`` at its drawn
+    end, ``failed`` at its drawn failure point) back through
+    ``svc.report``; device outage windows fire ``svc.quarantine`` /
+    ``svc.recover``.  Straggler *detection* is the service's own job
+    (``config.straggler_factor``): the harness merely polls at the
+    detection boundary of every straggling attempt so the service gets a
+    chance to notice before the (late) completion report arrives.
+
+    Returns a :class:`FaultRunReport`; the service is left drained.
+    """
+    injector = injector or FaultInjector()
+    heap: list[tuple[float, int, int, tuple]] = []  # (t, prio, seq, payload)
+    seq = 0
+
+    # event kinds, ordered by priority at equal times: recoveries before
+    # submissions (capacity returns first), runtime truth before losses
+    K_RECOVER, K_SUBMIT, K_POLL, K_DONE, K_FAIL, K_LOSS = range(6)
+
+    def push(t: float, kind: int, payload: tuple) -> None:
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, kind, seq, payload))
+
+    deadlines: dict[int, float] = {}
+    for arrival, task, dl in stream:
+        push(float(arrival), K_SUBMIT, (task, dl))
+        if dl is not None:
+            deadlines[task.id] = float(dl)
+
+    if injector.spec.device_mtbf_s is not None and svc.cluster is not None:
+        if horizon is None:
+            last = max((float(a) for a, _, _ in stream), default=0.0)
+            horizon = last + 10.0 * svc.config.max_wait_s + 100.0
+        for i in range(len(svc.cluster.devices)):
+            for lost, rec in injector.device_outages(i, horizon):
+                push(lost, K_LOSS, (i,))
+                push(rec, K_RECOVER, (i,))
+
+    factor = svc.config.straggler_factor
+    attempts: dict[int, int] = {}       # task id -> current attempt number
+    registered: dict[int, tuple[int, float]] = {}  # tid -> (attempt, begin)
+    reported: set[tuple[int, int]] = set()         # (tid, attempt) resolved
+    loss_pending: dict[int, float] = {}  # tid -> time its placement was lost
+    recovery_latency: list[float] = []
+    n_events = 0
+
+    def sync(now: float) -> None:
+        """Register runtime events for every committed placement whose
+        (attempt, begin) the harness has not seen yet."""
+        for it in svc.committed_items():
+            tid = it.task.id
+            if it.failed:
+                continue
+            att = attempts.setdefault(tid, 1)
+            if (tid, att) in reported:
+                continue
+            key = (att, it.begin)
+            if registered.get(tid) == key:
+                continue
+            registered[tid] = key
+            if tid in loss_pending:
+                # parked through the outage: recovered when re-committed
+                recovery_latency.append(it.begin - loss_pending.pop(tid))
+            draw = injector.draw_execution(tid, att, it.planned_duration)
+            if draw.fails:
+                push(it.begin + draw.fail_after, K_FAIL,
+                     (tid, att, it.begin))
+            else:
+                push(it.begin + draw.duration, K_DONE,
+                     (tid, att, it.begin))
+                if factor is not None \
+                        and draw.duration > factor * it.planned_duration:
+                    # poll just past the detection boundary so the
+                    # service can flag the straggler before its (late)
+                    # completion report lands
+                    push(it.begin + factor * it.planned_duration + 1e-6,
+                         K_POLL, ())
+
+    def current(tid: int, att: int, begin: float):
+        """The live placement a queued runtime event refers to, or None
+        when a re-plan moved/withdrew it (the event is stale — sync
+        pushed, or will push, a fresh one)."""
+        if attempts.get(tid) != att or (tid, att) in reported:
+            return None
+        it = svc.committed_item(tid)
+        if it is None or it.failed or abs(it.begin - begin) > 1e-9:
+            return None
+        return it
+
+    now = 0.0
+    while True:
+        if not heap:
+            wake = svc.next_wakeup()
+            if wake is not None:
+                now = max(now, wake)
+                svc.poll(now)
+            elif svc.pending:
+                svc.flush()
+            else:
+                break
+            sync(now)
+            continue
+        t, kind, _, payload = heapq.heappop(heap)
+        now = max(now, t)
+        n_events += 1
+        if kind == K_SUBMIT:
+            task, dl = payload
+            svc.submit(task, arrival=now, deadline=dl)
+        elif kind == K_POLL:
+            svc.poll(now)
+        elif kind == K_DONE:
+            tid, att, begin = payload
+            if current(tid, att, begin) is not None:
+                svc.report(tid, "completed", now)
+                reported.add((tid, att))
+        elif kind == K_FAIL:
+            tid, att, begin = payload
+            if current(tid, att, begin) is not None:
+                svc.report(tid, "failed", now)
+                reported.add((tid, att))
+                attempts[tid] = att + 1
+        elif kind == K_LOSS:
+            dev = payload[0]
+            tree_dev = svc.cluster.tree_device
+            for it in svc.committed_items():
+                tid = it.task.id
+                if tree_dev[it.node.tree] != dev or it.begin > now:
+                    continue
+                att = attempts.get(tid, 1)
+                if (tid, att) in reported or it.end > now + 1e-9:
+                    continue
+                draw = injector.draw_execution(
+                    tid, att, it.planned_duration)
+                actual = it.begin + (draw.fail_after if draw.fails
+                                     else draw.duration)
+                if actual > now:
+                    # the books project it done, but it is physically
+                    # still running on the dying device: it dies now
+                    # (quarantine below only sees books-running work)
+                    svc.report(tid, "failed", now)
+                    reported.add((tid, att))
+                    attempts[tid] = att + 1
+            lost = svc.quarantine(dev, now)
+            for tid in lost:
+                # running attempts died with the device: the service
+                # already routed them through the retry path
+                att = attempts.get(tid, 1)
+                reported.add((tid, att))
+                attempts[tid] = att + 1
+            # recovery latency: loss pulling a placement back -> the
+            # begin of its re-committed placement (re-planning itself is
+            # synchronous; the latency is how far the outage pushed it)
+            for tid in svc.stats.outages[-1].withdrawn:
+                it = svc.committed_item(tid)
+                if it is not None:
+                    recovery_latency.append(max(0.0, it.begin - now))
+                else:
+                    loss_pending.setdefault(tid, now)
+        elif kind == K_RECOVER:
+            svc.recover(payload[0], now)
+        sync(now)
+
+    svc.drain()
+    sync(now)
+    # any placement committed by the final drain still completes: replay
+    # remaining runtime events in order without advancing service time
+    while heap:
+        t, kind, _, payload = heapq.heappop(heap)
+        if kind == K_DONE:
+            tid, att, begin = payload
+            if current(tid, att, begin) is not None:
+                svc.report(tid, "completed", max(now, t))
+                now = max(now, t)
+                reported.add((tid, att))
+                sync(now)
+        elif kind == K_FAIL:
+            tid, att, begin = payload
+            if current(tid, att, begin) is not None:
+                svc.report(tid, "failed", max(now, t))
+                now = max(now, t)
+                reported.add((tid, att))
+                attempts[tid] = att + 1
+                sync(now)
+        if not heap:
+            wake = svc.next_wakeup()
+            if wake is not None:
+                now = max(now, wake)
+                svc.poll(now)
+                sync(now)
+            elif svc.pending:
+                svc.flush()
+                sync(now)
+
+    return FaultRunReport(
+        completions=dict(svc.completions),
+        failed=sorted(svc.stats.failed),
+        recovery_latency=recovery_latency,
+        events=n_events,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Open-loop baseline executor
+# ---------------------------------------------------------------------------
+
+
+def execute_open_loop(
+    schedule, injector: FaultInjector | None = None
+) -> FaultRunReport:
+    """Execute a frozen plan under the same faults, with no feedback.
+
+    The dispatcher follows the plan: each placement starts at
+    ``max(planned begin, all its blocked cells free)`` — work-conserving
+    within the planned order, but never replanning.  Failed attempts are
+    never retried (open loop has no failure signal), stragglers push
+    their cells' successors back.  Draws use ``attempt=1``: the same fate
+    the closed loop sees for each task's first attempt, so the two runs
+    are comparable under identical faults."""
+    injector = injector or FaultInjector()
+    items = sorted(
+        (it for it in schedule.items if not it.failed),
+        key=lambda it: (it.begin, it.task.id),
+    )
+    free: dict[tuple, float] = {}
+    completions: dict[int, float] = {}
+    failed: list[int] = []
+    for it in items:
+        start = it.begin
+        for cell in it.node.blocked_cells:
+            start = max(start, free.get(cell, 0.0))
+        draw = injector.draw_execution(it.task.id, 1, it.planned_duration)
+        if draw.fails:
+            end = start + draw.fail_after
+            failed.append(it.task.id)
+        else:
+            end = start + draw.duration
+            completions[it.task.id] = end
+        for cell in it.node.blocked_cells:
+            free[cell] = end
+    return FaultRunReport(
+        completions=completions, failed=sorted(failed),
+        recovery_latency=[], events=len(items),
+    )
+
+
+__all__ = [
+    "RetryPolicy",
+    "FaultSpec",
+    "FaultInjector",
+    "ExecutionDraw",
+    "FaultRunReport",
+    "demote_shrink",
+    "run_with_faults",
+    "execute_open_loop",
+]

@@ -303,6 +303,11 @@ class MultiBatchScheduler:
         self.segments: list[Schedule] = []
         self.results: list[PlanResult] = []
         self._flip = False
+        # persistent floor on the rebuilt tail: a device-loss recovery
+        # resets the physical partition at some time t, which the
+        # committed segments cannot encode — rebuild_tail() must keep
+        # honouring it after later withdrawals/corrections
+        self.reset_at = 0.0
 
     def add_batch(
         self, tasks: Sequence[Task], not_before: float = 0.0
@@ -374,6 +379,7 @@ class MultiBatchScheduler:
         ]
         new.results = list(self.results)
         new._flip = self._flip
+        new.reset_at = self.reset_at
         return new
 
     def withdraw_uncommitted(self, t: float, eps: float = 1e-9) -> list[Task]:
@@ -406,12 +412,90 @@ class MultiBatchScheduler:
                     Schedule(spec=seg.spec, items=keep, reconfigs=rcs)
                 )
         self.segments = kept_segments
-        tail = Tail.empty(self.spec)
-        for seg in kept_segments:
-            tail = tail_after(seg, tail)
-        self.tail = tail
+        self.rebuild_tail()
         withdrawn.sort(key=lambda it: (it.begin, it.task.id))
         return [it.task for it in withdrawn]
+
+    # -- runtime corrections (closed-loop serving) --------------------------
+    def find_item(self, task_id: int) -> ScheduledTask | None:
+        """The live committed placement of ``task_id`` — the one
+        non-``failed`` item carrying it (failed attempts stay behind as
+        occupancy records, so they are skipped).  None when the task has
+        no live placement (never committed, or withdrawn)."""
+        for seg in reversed(self.segments):
+            for it in seg.items:
+                if it.task.id == task_id and not it.failed:
+                    return it
+        return None
+
+    def replace_item(
+        self,
+        task_id: int,
+        end_override: float | None,
+        failed: bool = False,
+    ) -> ScheduledTask:
+        """Correct the live placement of ``task_id`` with runtime truth
+        (an actual completion, a straggler projection, or a failure
+        instant) and rebuild the tail from the corrected segments.
+        Returns the corrected item.  The §4 seam analogue of the timing
+        engine's logged ``apply_stretch``: segments are immutable-item
+        lists, so the correction is a replace, and every downstream
+        release/alive time is re-derived rather than patched."""
+        for seg in reversed(self.segments):
+            for i, it in enumerate(seg.items):
+                if it.task.id == task_id and not it.failed:
+                    new = dataclasses.replace(
+                        it, end_override=end_override, failed=failed
+                    )
+                    seg.items[i] = new
+                    self.rebuild_tail()
+                    return new
+        raise KeyError(f"task {task_id} has no live committed placement")
+
+    def remove_items(self, task_ids: set[int]) -> list[Task]:
+        """Drop the live placements of ``task_ids`` from the committed
+        segments (failed occupancy records stay) and rebuild the tail.
+        Returns the removed tasks ordered by old begin (ties by id) —
+        the surgical sibling of :meth:`withdraw_uncommitted` for
+        placements invalidated by a runtime correction rather than by a
+        flush-time withdrawal."""
+        removed: list[ScheduledTask] = []
+        kept_segments: list[Schedule] = []
+        for seg in self.segments:
+            keep = [
+                it for it in seg.items
+                if it.failed or it.task.id not in task_ids
+            ]
+            removed.extend(
+                it for it in seg.items
+                if not it.failed and it.task.id in task_ids
+            )
+            if keep or seg.reconfigs:
+                kept_segments.append(Schedule(
+                    spec=seg.spec, items=keep, reconfigs=seg.reconfigs
+                ))
+        self.segments = kept_segments
+        self.rebuild_tail()
+        removed.sort(key=lambda it: (it.begin, it.task.id))
+        return [it.task for it in removed]
+
+    def rebuild_tail(self) -> None:
+        """Re-derive the seam tail from the committed segments (after a
+        correction changed an item's end, or a removal dropped one).
+        ``reset_at`` (a device-loss recovery) stays applied: releases are
+        floored there, and instances whose busy-until predates the reset
+        stay dead — the outage destroyed the physical partition."""
+        tail = Tail.empty(self.spec)
+        for seg in self.segments:
+            tail = tail_after(seg, tail)
+        if self.reset_at > 0.0:
+            tail = Tail(
+                release={k: max(float(v), self.reset_at)
+                         for k, v in tail.release.items()},
+                alive={k: v for k, v in tail.alive.items()
+                       if v > self.reset_at + 1e-12},
+            )
+        self.tail = tail
 
     @property
     def makespan(self) -> float:

@@ -84,10 +84,29 @@ class SchedulerConfig:
     # tail re-planning: when a flush lands, placements that have not yet
     # started are pulled back and re-scheduled together with the arrivals
     # (running tasks are never moved; the no-replan plan is kept whenever
-    # re-planning does not strictly improve the combined makespan).
+    # re-planning does not strictly improve the combined makespan).  With
+    # replan on, online-fallback (trickle) flushes also try a withdrawn-
+    # tail re-plan under the same strict-win rule.
     replan: bool = False
 
+    # -- fault tolerance (closed-loop runtime feedback) ---------------------
+    # implicit straggler detection: a committed placement whose observed
+    # runtime (via SchedulingService.report / poll observations) exceeds
+    # straggler_factor * its profiled duration without a completion
+    # report has its projected end stretched and the tail force-re-planned.
+    # None disables detection — the pre-feedback open-loop behaviour.
+    straggler_factor: float | None = None
+    # retry policy (repro.core.faults.RetryPolicy) for tasks reported
+    # failed: capped exponential backoff on the re-release time, optional
+    # demotion.  None = no retries; a failed task is permanently failed.
+    retry: object | None = None
+
     def __post_init__(self):
+        if self.straggler_factor is not None and self.straggler_factor <= 1.0:
+            raise ValueError(
+                f"SchedulerConfig.straggler_factor must exceed 1.0 (a "
+                f"deviation factor), got {self.straggler_factor!r}"
+            )
         if self.admission not in ("none", "reject", "demote"):
             raise ValueError(
                 f"SchedulerConfig.admission must be 'none', 'reject' or "

@@ -37,6 +37,32 @@ from repro.core.device_spec import DeviceSpec, InstanceNode
 EPS = 1e-9  # float tolerance for feasibility checks
 
 
+class ProfileCoverageError(KeyError, ValueError):
+    """A task's profile has no entry for an instance type it is asked to
+    run on.  Subclasses both :class:`KeyError` and :class:`ValueError`
+    so pre-existing guards (``except KeyError`` around profile lookups,
+    ``except ValueError`` / ``pytest.raises(ValueError)`` around
+    ``partition_batch``) keep working, but carries the task and the
+    missing ``(device_kind, size)`` key so the failure is actionable at
+    the API boundary instead of a bare ``KeyError: 'h100'`` deep inside
+    ``partition_batch``/``Task.bind``."""
+
+    def __init__(self, task_id: int | None, kind: str, size: int | None = None,
+                 detail: str = ""):
+        self.task_id = task_id
+        self.kind = kind
+        self.size = size
+        key = f"({kind!r}, {size})" if size is not None else f"{kind!r}"
+        who = f"task {task_id}" if task_id is not None else "task"
+        msg = f"{who} has no profile entry for instance type {key}"
+        if detail:
+            msg += f" ({detail})"
+        super().__init__(msg)
+
+    def __str__(self) -> str:  # KeyError would repr() the message
+        return self.args[0]
+
+
 class Profile(Mapping):
     """Instance-type-keyed execution times: ``(device_kind, size) -> s``.
 
@@ -154,8 +180,15 @@ class Task:
     def times_for(self, kind: str) -> Mapping[int, float]:
         """Size-keyed times on device kind ``kind``.  For a plain
         size-keyed task this is ``self.times`` itself (the back-compat
-        shim: one profile serves any device, bit-identically)."""
+        shim: one profile serves any device, bit-identically).  Raises
+        :class:`ProfileCoverageError` (naming this task and the missing
+        kind) when a heterogeneous profile has no times for ``kind``."""
         if isinstance(self.times, Profile):
+            if not self.times.supports(kind):
+                raise ProfileCoverageError(
+                    self.id, kind,
+                    detail=f"profile kinds: {sorted(self.times.kinds)}",
+                )
             return self.times.for_kind(kind)
         return self.times
 
@@ -172,7 +205,7 @@ class Task:
         objects they always did."""
         if isinstance(self.times, Profile):
             return dataclasses.replace(
-                self, times=self.times.for_kind(spec.device_kind)
+                self, times=self.times_for(spec.device_kind)
             )
         return self
 
@@ -213,14 +246,36 @@ class ScheduledTask:
     node: InstanceNode
     begin: float
     size: int  # size the task was molded to == node.size
+    # -- runtime corrections (closed-loop serving) --------------------------
+    # ``end_override`` replaces the profiled end with runtime truth: the
+    # actual completion reported by the executor, a straggler projection,
+    # or the failure instant.  ``failed`` marks the item as an occupancy
+    # record of a failed attempt: the slice was busy [begin, end) but the
+    # task did NOT complete here (it may appear again as a retry).
+    end_override: float | None = None
+    failed: bool = False
+
+    @property
+    def planned_duration(self) -> float:
+        """The profiled duration, ignoring any runtime correction."""
+        return self.task.time(self.size)
 
     @property
     def duration(self) -> float:
+        if self.end_override is not None:
+            return self.end_override - self.begin
         return self.task.time(self.size)
 
     @property
     def end(self) -> float:
+        if self.end_override is not None:
+            return self.end_override
         return self.begin + self.duration
+
+    @property
+    def corrected(self) -> bool:
+        """Whether runtime feedback replaced the profiled end."""
+        return self.end_override is not None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -338,10 +393,11 @@ def validate_schedule(
                     f"[{b.begin:.3f},{b.end:.3f})"
                 )
 
-    # all tasks scheduled exactly once
+    # all tasks scheduled exactly once (failed attempts are occupancy
+    # records, not completions — a retried task may leave several)
     if tasks is not None:
         want = sorted(t.id for t in tasks)
-        got = sorted(it.task.id for it in schedule.items)
+        got = sorted(it.task.id for it in schedule.items if not it.failed)
         if want != got:
             raise InfeasibleScheduleError(
                 f"scheduled task ids {got} != batch ids {want}"

@@ -46,6 +46,27 @@ the fragmentation-aware-scheduler observation (arXiv:2512.16099) that
 online decisions degrade without revisiting queued placements, made safe
 by construction.
 
+**Runtime feedback (closed-loop fault tolerance).**  The committed
+timeline is a *belief* built from profiled durations; ``report(task_id,
+event, t)`` feeds it runtime truth.  A ``completed`` report replaces the
+profiled end with the actual one (an early finish frees capacity, a late
+one forces the conflicting tail out for re-planning); a ``failed``
+report truncates the attempt into an occupancy record and re-releases
+the task through ``config.retry`` (:class:`~repro.core.faults.RetryPolicy`
+— capped exponential backoff, optional demotion).  With
+``config.straggler_factor`` set, any time advance scans the running
+placements and *stretches* those whose observed runtime exceeds the
+factor without a completion report — the serving analogue of the timing
+engine's logged ``apply_stretch``.  ``quarantine(device, t)`` /
+``recover(device, t)`` handle device loss on a pool: every not-yet-
+started placement on the lost device is withdrawn and re-partitioned
+onto the survivors (tasks only the lost device supports are *parked*
+and re-admitted on recovery; still parked at ``drain`` they are
+reported rejected, never silently stranded), and admission floors
+(:meth:`completion_lower_bound`) see only the surviving capacity.  The
+first runtime deviation drops the never-replanned shadow — it is a
+counterfactual over profiled durations and cannot absorb truth.
+
 Everything is deterministic given the submission sequence — there is no
 RNG and no wall-clock dependence in any placement decision (wall time is
 only *measured*, for the decision-latency statistics).
@@ -54,6 +75,7 @@ only *measured*, for the decision-latency statistics).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 import time
 from typing import Sequence
@@ -62,7 +84,7 @@ from repro.core.cluster import ClusterMultiBatchScheduler, ClusterSpec
 from repro.core.device_spec import DeviceSpec, multi_gpu
 from repro.core.multibatch import MultiBatchScheduler
 from repro.core.policy import SchedulerConfig
-from repro.core.problem import EPS, Schedule, Task
+from repro.core.problem import EPS, Schedule, ScheduledTask, Task
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +94,7 @@ class Decision:
     task_id: int
     arrival: float        # virtual time the task was submitted
     decided_at: float     # virtual time the placement decision fired
-    route: str            # "batch" | "online" | "replan"
+    route: str            # "batch" | "online" | "replan" | "fault"
     flush_id: int         # which flush carried it
     plan_wall_s: float    # wall-clock seconds the scheduler spent deciding
     deadline: float | None = None  # the task's SLO, if it kept one
@@ -100,6 +122,41 @@ class ReplanEvent:
         return self.makespan_plain - self.makespan_replanned
 
 
+@dataclasses.dataclass(frozen=True)
+class CorrectionEvent:
+    """One runtime-truth correction of the committed timeline."""
+
+    task_id: int
+    at: float                    # virtual time the correction landed
+    kind: str                    # "stretch" | "shrink" | "straggler" | "failure"
+    old_end: float               # projected end before the correction
+    new_end: float               # corrected end (actual / projection / t_fail)
+    withdrawn: tuple[int, ...]   # placements the forced re-plan pulled back
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryEvent:
+    """One failed attempt re-entering the queue through the RetryPolicy."""
+
+    task_id: int
+    attempt: int                 # the attempt number being released (2-based)
+    failed_at: float             # when the previous attempt failed
+    release: float               # backoff floor: the retry arrives here
+    demoted: bool                # whether the retry carries a demoted profile
+
+
+@dataclasses.dataclass(frozen=True)
+class OutageEvent:
+    """One device-loss window on a pool."""
+
+    device: int
+    lost_at: float
+    recovered_at: float | None   # None while still quarantined
+    withdrawn: tuple[int, ...]   # not-yet-started placements pulled off it
+    died_running: tuple[int, ...]  # attempts that were running at the loss
+    parked: tuple[int, ...]      # withdrawn tasks no surviving device fits
+
+
 @dataclasses.dataclass
 class ServiceStats:
     submitted: int = 0
@@ -112,6 +169,13 @@ class ServiceStats:
     replan_wins: int = 0         # flushes where the re-plan was kept
     withdrawn: int = 0           # placements pulled back by kept re-plans
     replan_events: list[ReplanEvent] = dataclasses.field(default_factory=list)
+    # -- runtime feedback ---------------------------------------------------
+    completed: int = 0           # completion reports received
+    stragglers: int = 0          # implicit straggler detections
+    failed: list[int] = dataclasses.field(default_factory=list)  # permanent
+    corrections: list[CorrectionEvent] = dataclasses.field(default_factory=list)
+    retries: list[RetryEvent] = dataclasses.field(default_factory=list)
+    outages: list[OutageEvent] = dataclasses.field(default_factory=list)
 
     def queue_delays(self) -> list[float]:
         return [d.queue_delay for d in self.decisions]
@@ -184,6 +248,17 @@ class SchedulingService:
         self._flush_id = 0
         self._deadlines: dict[int, float] = {}   # retained SLOs by task id
         self._arrivals: dict[int, float] = {}    # arrival stamps by task id
+        # -- runtime feedback state -----------------------------------------
+        self._tasks: dict[int, Task] = {}        # submitted tasks (for retry)
+        self._completions: dict[int, float] = {}  # actual ends, as reported
+        self._attempts: dict[int, int] = {}      # current attempt number
+        self._requeue: list[tuple[float, int, Task, float | None]] = []
+        self._rseq = 0                           # requeue heap tie-break
+        self._parked: list[Task] = []            # awaiting device recovery
+        # set on the first runtime deviation: the never-replanned shadow
+        # is a counterfactual over profiled durations and cannot absorb
+        # runtime truth, so it is dropped and never re-materialised
+        self._fault_mode = False
 
     # -- intake ------------------------------------------------------------
     def submit(
@@ -207,6 +282,13 @@ class SchedulingService:
             raise ValueError(
                 f"arrivals must be non-decreasing: {arrival} < {self.now}"
             )
+        self._validate_task(task)
+        if deadline is not None and float(deadline) < arrival - 1e-9:
+            raise ValueError(
+                f"task {task.id}: deadline {deadline} precedes its "
+                f"arrival {arrival} — the SLO is unmeetable by "
+                f"construction (pass deadline >= arrival)"
+            )
         self.now = max(self.now, arrival)
         self._advance(self.now)
         self.stats.submitted += 1
@@ -225,6 +307,7 @@ class SchedulingService:
             if verdict == "demoted":
                 deadline = None
         self._arrivals[task.id] = arrival
+        self._tasks[task.id] = task
         if deadline is not None:
             self._deadlines[task.id] = deadline
         if urgent:
@@ -249,9 +332,437 @@ class SchedulingService:
             self._flush_pending(decided_at=self.now)
 
     def drain(self) -> Schedule:
-        """Flush pending tasks and return the combined schedule so far."""
+        """Flush pending tasks and return the combined schedule so far.
+
+        Queued retries are played out first (virtual time advances to
+        each backoff release), and tasks still parked on a quarantined
+        device are reported **rejected** — a withdrawn task is never
+        silently stranded."""
+        while self._requeue:
+            self.poll(max(self.now, self._requeue[0][0]))
+            self.flush()
         self.flush()
+        if self._parked:
+            for task in self._parked:
+                self.stats.rejected.append(task.id)
+                # a rejected task has no completion and must not count
+                # as a deadline miss (consistent with intake rejection)
+                self._deadlines.pop(task.id, None)
+            self._parked = []
         return self.combined_schedule()
+
+    def _validate_task(self, task: Task) -> None:
+        """API-boundary validation: an empty or non-positive profile
+        would otherwise surface as an opaque failure deep inside a
+        flush, taking the whole pending queue down with it."""
+        entries = list(task.times.items())
+        if not entries:
+            raise ValueError(
+                f"task {task.id} has an empty profile — no instance "
+                f"type can host it"
+            )
+        for key, dur in entries:
+            if not dur > 0.0:
+                raise ValueError(
+                    f"task {task.id} has non-positive duration {dur!r} "
+                    f"for profile entry {key!r}; execution times must "
+                    f"be strictly positive"
+                )
+
+    # -- runtime feedback ---------------------------------------------------
+    def report(
+        self,
+        task_id: int,
+        event: str,
+        t: float,
+        end: float | None = None,
+    ) -> None:
+        """Feed runtime truth about a committed placement back in.
+
+        ``event="completed"`` — the task actually finished at ``end``
+        (default: ``t``, the report time).  An end matching the
+        committed projection is a no-op; an early end frees capacity (a
+        *shrink*, with an optional strict-win re-plan under
+        ``config.replan``); a late end is a *stretch* — the conflicting
+        tail is forced out and re-planned.  ``event="failed"`` — the
+        attempt died at ``t``; its record is truncated into a failed
+        occupancy slab and the task re-enters the queue through
+        ``config.retry`` (or is reported permanently failed).  Either
+        way the time advance runs straggler detection and fires any due
+        flushes, exactly like :meth:`poll`.
+        """
+        t = float(t)
+        if t < self.now - 1e-9:
+            raise ValueError(f"time must be non-decreasing: {t} < {self.now}")
+        self.now = max(self.now, t)
+        if event == "completed":
+            self._report_completed(task_id, t, end)
+        elif event == "failed":
+            self._report_failed(task_id, t)
+        else:
+            raise ValueError(
+                f"unknown runtime event {event!r}; expected 'completed' "
+                f"or 'failed' (stragglers are detected implicitly via "
+                f"config.straggler_factor)"
+            )
+        self._advance(self.now)
+
+    def _device_index(self, device) -> int:
+        """Accept a pool index or the ``DeviceSpec`` itself."""
+        if isinstance(device, int):
+            return device
+        for i, dev in enumerate(self.cluster.devices):
+            if dev is device:
+                return i
+        raise ValueError(
+            f"device {getattr(device, 'name', device)!r} is not in this "
+            f"pool ({[d.name for d in self.cluster.devices]})"
+        )
+
+    def quarantine(self, device, t: float) -> list[int]:
+        """Device ``device`` of the pool (index or ``DeviceSpec``) is
+        lost at time ``t``.
+
+        Not-yet-started placements on it are withdrawn and re-partitioned
+        onto the surviving devices via the flush partitioner (tasks no
+        survivor supports are parked for :meth:`recover`); attempts
+        RUNNING on it at ``t`` died with it and go through the retry
+        path.  Admission floors stop counting the device until recovery.
+        Returns the ids of the attempts that died running.
+        """
+        t = float(t)
+        if t < self.now - 1e-9:
+            raise ValueError(f"time must be non-decreasing: {t} < {self.now}")
+        if self.cluster is None:
+            raise ValueError(
+                "quarantine() needs a heterogeneous pool "
+                "(SchedulingService(pool=cluster(...))): losing the only "
+                "device leaves no surviving capacity to re-partition onto"
+            )
+        device = self._device_index(device)
+        self.now = max(self.now, t)
+        self._enter_fault_mode()
+        withdrawn, running = self.mb.quarantine_device(device, t)
+        for tid in running:
+            it = self.mb.find_item(tid)
+            self.mb.replace_item(
+                tid, end_override=max(t, it.begin), failed=True
+            )
+            self._handle_failure(tid, t)
+        parked_before = len(self._parked)
+        self._replace_tasks(withdrawn, t)
+        self.stats.outages.append(OutageEvent(
+            device, t, None,
+            withdrawn=tuple(task.id for task in withdrawn),
+            died_running=tuple(running),
+            parked=tuple(
+                task.id for task in self._parked[parked_before:]
+            ),
+        ))
+        self._advance(self.now)
+        return list(running)
+
+    def recover(self, device, t: float) -> None:
+        """Quarantined device ``device`` (index or ``DeviceSpec``)
+        returns to service at ``t``: its seam tail is floored at ``t``
+        (alive instances cleared — the outage reset the partition) and
+        parked tasks that fit again are re-admitted and re-planned."""
+        t = float(t)
+        if t < self.now - 1e-9:
+            raise ValueError(f"time must be non-decreasing: {t} < {self.now}")
+        if self.cluster is None:
+            raise ValueError("recover() needs a heterogeneous pool")
+        device = self._device_index(device)
+        self.now = max(self.now, t)
+        self.mb.recover_device(device, t)
+        for i in range(len(self.stats.outages) - 1, -1, -1):
+            ev = self.stats.outages[i]
+            if ev.device == device and ev.recovered_at is None:
+                self.stats.outages[i] = dataclasses.replace(
+                    ev, recovered_at=t
+                )
+                break
+        if self._parked:
+            still: list[Task] = []
+            readmit: list[Task] = []
+            for task in self._parked:
+                (readmit if self._placeable_now(task)
+                 else still).append(task)
+            self._parked = still
+            self._replace_tasks(readmit, t)
+        self._advance(self.now)
+
+    def committed_items(self) -> list[ScheduledTask]:
+        """Live committed placements across all segments (failed
+        occupancy records excluded)."""
+        return [
+            it for seg in self.mb.segments for it in seg.items
+            if not it.failed
+        ]
+
+    def committed_item(self, task_id: int) -> ScheduledTask | None:
+        """The live committed placement of ``task_id``, or None."""
+        return self.mb.find_item(task_id)
+
+    @property
+    def completions(self) -> dict[int, float]:
+        """Actual completion times reported so far (task id -> time)."""
+        return dict(self._completions)
+
+    def next_wakeup(self) -> float | None:
+        """Earliest future virtual time at which internal state changes
+        on its own — a budget flush coming due or a retry release.  The
+        closed-loop harness idles to here when no runtime events are
+        queued; None = nothing scheduled."""
+        cands: list[float] = []
+        if self.pending:
+            cands.append(self.pending[0][1] + self.config.max_wait_s)
+        if self._requeue:
+            cands.append(self._requeue[0][0])
+        return min(cands) if cands else None
+
+    def _report_completed(
+        self, task_id: int, t: float, end: float | None
+    ) -> None:
+        it = self.mb.find_item(task_id)
+        if it is None:
+            raise ValueError(
+                f"task {task_id} has no live committed placement to "
+                f"report on (never committed, withdrawn, or failed)"
+            )
+        if task_id in self._completions:
+            raise ValueError(f"task {task_id} was already reported completed")
+        actual = t if end is None else float(end)
+        if actual > t + 1e-9:
+            raise ValueError(
+                f"completion end {actual} lies in the future of the "
+                f"report time {t}"
+            )
+        if it.begin > t + EPS:
+            raise ValueError(
+                f"task {task_id} is not running at {t}: its committed "
+                f"placement begins at {it.begin}"
+            )
+        if actual < it.begin - EPS:
+            raise ValueError(
+                f"completion end {actual} precedes task {task_id}'s "
+                f"begin {it.begin}"
+            )
+        self._completions[task_id] = actual
+        self.stats.completed += 1
+        old_end = it.end  # current projection (may already carry a stretch)
+        if abs(actual - old_end) <= 1e-9:
+            return  # runtime matched the books exactly: nothing to correct
+        self._enter_fault_mode()
+        self.mb.replace_item(task_id, end_override=actual)
+        if actual > old_end + EPS:
+            withdrawn = self._forced_replan(t, task_id)
+            kind = "stretch"
+        else:
+            withdrawn = ()
+            kind = "shrink"
+            if self.config.replan:
+                self._strict_win_replan(t)
+        self.stats.corrections.append(CorrectionEvent(
+            task_id, t, kind, old_end, actual, withdrawn
+        ))
+
+    def _report_failed(self, task_id: int, t: float) -> None:
+        it = self.mb.find_item(task_id)
+        if it is None:
+            raise ValueError(
+                f"task {task_id} has no live committed placement to "
+                f"report on (never committed, withdrawn, or failed)"
+            )
+        if task_id in self._completions:
+            raise ValueError(f"task {task_id} was already reported completed")
+        if it.begin > t + EPS:
+            raise ValueError(
+                f"task {task_id} is not running at {t}: its committed "
+                f"placement begins at {it.begin}"
+            )
+        self._enter_fault_mode()
+        old_end = it.end
+        new_end = max(t, it.begin)
+        self.mb.replace_item(task_id, end_override=new_end, failed=True)
+        self.stats.corrections.append(CorrectionEvent(
+            task_id, t, "failure", old_end, new_end, ()
+        ))
+        self._handle_failure(task_id, t)
+        if self.config.replan:
+            # the truncated attempt freed committed room — optional
+            # strict-win reclaim, same rule as flush re-planning
+            self._strict_win_replan(t)
+
+    def _handle_failure(self, task_id: int, t: float) -> None:
+        """Route one failed attempt through the retry policy (or record
+        it permanently failed)."""
+        attempt = self._attempts.get(task_id, 1)
+        retry = self.config.retry
+        task = self._tasks.get(task_id)
+        if retry is None or task is None or attempt >= retry.max_attempts:
+            self.stats.failed.append(task_id)
+            return
+        nxt = attempt + 1
+        self._attempts[task_id] = nxt
+        demoted = False
+        if retry.demote is not None:
+            cand = retry.task_for_attempt(task, nxt)
+            # demotion must keep the task placeable on the pool — a
+            # shrunken profile that no device fully covers would blow
+            # up the flush partitioner, so it is skipped
+            if cand is not task and self._coverable(cand):
+                task = cand
+                demoted = True
+                self._tasks[task_id] = task
+        release = t + retry.backoff(attempt)
+        self._rseq += 1
+        heapq.heappush(
+            self._requeue,
+            (release, self._rseq, task, self._deadlines.get(task_id)),
+        )
+        self.stats.retries.append(RetryEvent(
+            task_id, nxt, t, release, demoted
+        ))
+
+    def _check_stragglers(self, now: float) -> None:
+        """Implicit straggler detection: a running placement whose
+        observed runtime exceeds ``straggler_factor`` times its profiled
+        duration without a completion report has its projected end
+        stretched to ``now + (factor - 1) * profile`` and the
+        conflicting tail force-re-planned.  Re-fires geometrically while
+        the attempt keeps running past each new projection."""
+        factor = self.config.straggler_factor
+        candidates = [
+            it.task.id for it in self.committed_items()
+            if it.task.id not in self._completions
+            and it.begin <= now - EPS
+            and now > it.begin + factor * it.planned_duration + 1e-9
+            and it.end <= now + 1e-9
+        ]
+        for tid in candidates:
+            it = self.mb.find_item(tid)
+            if it is None or it.failed:
+                continue  # a previous iteration's re-plan resolved it
+            if now <= it.begin + factor * it.planned_duration + 1e-9 \
+                    or it.end > now + 1e-9:
+                continue
+            self._enter_fault_mode()
+            old_end = it.end
+            new_end = now + (factor - 1.0) * it.planned_duration
+            self.mb.replace_item(tid, end_override=new_end)
+            withdrawn = self._forced_replan(now, tid)
+            self.stats.stragglers += 1
+            self.stats.corrections.append(CorrectionEvent(
+                tid, now, "straggler", old_end, new_end, withdrawn
+            ))
+
+    def _forced_replan(self, t: float, corrected_tid: int) -> tuple[int, ...]:
+        """After a stretch the committed tail may be invalid (successors
+        of the stretched item were planned against its old end): pull
+        back everything not yet started plus any *unreported* placement
+        now overlapping the stretched record, and re-plan the lot at
+        ``t``.  Placements already reported completed keep their records
+        — runtime truth is never rewritten (the invariant harness
+        sanctions overlapping pairs of *corrected* records as feedback
+        races; planned records never overlap)."""
+        wd = self.mb.withdraw_uncommitted(t)
+        it = self.mb.find_item(corrected_tid)
+        if it is not None:
+            cells = set(it.node.blocked_cells)
+            phantoms = {
+                o.task.id for o in self.committed_items()
+                if o.task.id != corrected_tid
+                and o.task.id not in self._completions
+                and o.begin < it.end - EPS and o.end > it.begin + EPS
+                and cells & set(o.node.blocked_cells)
+            }
+            if phantoms:
+                wd = wd + self.mb.remove_items(phantoms)
+        self._replace_tasks(wd, t)
+        return tuple(task.id for task in wd)
+
+    def _replace_tasks(self, tasks: list[Task], t: float) -> None:
+        """Re-plan withdrawn tasks at time ``t`` (the fault path: forced
+        re-plans and device loss).  Tasks no active device supports are
+        parked for recovery."""
+        if not tasks:
+            return
+        placeable: list[Task] = []
+        for task in tasks:
+            if self._placeable_now(task):
+                placeable.append(task)
+            else:
+                self._parked.append(task)
+        if not placeable:
+            return
+        t0 = time.perf_counter()
+        self.mb.add_batch(placeable, not_before=t)
+        wall = time.perf_counter() - t0
+        fid = self._next_flush_id()
+        for task in placeable:
+            self.stats.decisions.append(Decision(
+                task.id, self._arrivals.get(task.id, t), t, "fault",
+                fid, wall, deadline=self._deadlines.get(task.id),
+            ))
+        self._attach_deadline_extras(placeable)
+
+    def _placeable_now(self, task: Task) -> bool:
+        if self.cluster is not None:
+            return self.mb.supports_active(task)
+        return True
+
+    def _coverable(self, task: Task) -> bool:
+        """Whether the (possibly demoted) task can still be planned —
+        full profile coverage of some pool device, or of the single
+        device's size set (FAR molds over the whole C_G)."""
+        if self.cluster is not None:
+            return self.cluster.supports(task)
+        try:
+            times = task.times_for(self.spec.device_kind)
+        except KeyError:
+            return False
+        return all(s in times for s in self.spec.sizes)
+
+    def _enter_fault_mode(self) -> None:
+        if self._fault_mode:
+            return
+        self._fault_mode = True
+        # the never-replanned shadow is a counterfactual over PROFILED
+        # durations; once runtime truth lands it can no longer answer
+        # for the stream — the primary chain carries the corrections
+        self._baseline = None
+
+    def _strict_win_replan(self, t: float) -> None:
+        """Optional capacity-reclaim re-plan after a shrink/failure
+        freed committed room, under the same strict-win rule as flush
+        re-planning (only in fault mode, so no shadow mirroring)."""
+        trial = self.mb.clone()
+        wd = trial.withdraw_uncommitted(t)
+        if not wd:
+            return
+        if any(not self._placeable_now(task) for task in wd):
+            return  # mid-outage: the optional reclaim is not worth a park
+        self.stats.replan_attempts += 1
+        t0 = time.perf_counter()
+        plain_makespan = self.mb.makespan
+        trial.add_batch(wd, not_before=t)
+        if trial.makespan >= plain_makespan - self.config.eps:
+            return
+        wall = time.perf_counter() - t0
+        fid = self._next_flush_id()
+        self.mb = trial
+        self.stats.replan_wins += 1
+        self.stats.withdrawn += len(wd)
+        for task in wd:
+            self.stats.decisions.append(Decision(
+                task.id, self._arrivals.get(task.id, t), t, "replan",
+                fid, wall, deadline=self._deadlines.get(task.id),
+            ))
+        self.stats.replan_events.append(ReplanEvent(
+            fid, t, tuple(task.id for task in wd),
+            trial.makespan, plain_makespan,
+        ))
 
     # -- admission ---------------------------------------------------------
     def completion_lower_bound(self, task: Task, at: float) -> float:
@@ -281,7 +792,10 @@ class SchedulingService:
         every node of the single device, or every supported device of the
         pool with the task's times lowered onto that device's kind."""
         if self.cluster is not None:
-            devices = self.cluster.devices
+            devices = [
+                dev for i, dev in enumerate(self.cluster.devices)
+                if self.mb.active[i]  # quarantined capacity doesn't count
+            ]
         else:
             devices = (self.spec,)
         for dev in devices:
@@ -327,6 +841,12 @@ class SchedulingService:
 
     # -- internals ---------------------------------------------------------
     def _advance(self, now: float) -> None:
+        if self.config.straggler_factor is not None:
+            self._check_stragglers(now)
+        self._release_due(now)
+        self._advance_budget(now)
+
+    def _advance_budget(self, now: float) -> None:
         # every pending task arrived within max_wait_s of the oldest (any
         # later arrival would have fired this flush first), so one deadline
         # empties the whole queue
@@ -334,8 +854,25 @@ class SchedulingService:
             deadline = self.pending[0][1] + self.config.max_wait_s
             self._flush_pending(decided_at=deadline)
 
+    def _release_due(self, now: float) -> None:
+        """Move retries whose backoff floor has passed into the pending
+        queue, in release order, firing any budget flush due *before*
+        each release — the same discipline ``submit`` follows, so the
+        flush-decision invariant (every pending task arrived within
+        max_wait_s of the oldest) keeps holding."""
+        while self._requeue and self._requeue[0][0] <= now + 1e-12:
+            release, _, task, deadline = heapq.heappop(self._requeue)
+            self._advance_budget(release)
+            self._arrivals[task.id] = release  # the retry's re-arrival
+            self.pending.append((task, release, deadline))
+            if len(self.pending) >= self.config.max_batch:
+                self._flush_pending(decided_at=release)
+
     def _flush_pending(self, decided_at: float) -> None:
         batch, self.pending = self.pending, []
+        batch = self._park_unplaceable(batch)
+        if not batch:
+            return
         if len(batch) < self.config.min_batch:
             # slow trickle: too few tasks accumulated within the budget for
             # an offline batch to pay off — place them greedily instead
@@ -390,9 +927,11 @@ class SchedulingService:
         self.stats.replan_attempts += 1
         trial.add_batch(withdrawn + arrivals, not_before=decided_at)
         if trial.makespan < plain.makespan - self.config.eps:
-            if self._baseline is None:
+            if self._baseline is None and not self._fault_mode:
                 # first divergence: the plain candidate IS the
                 # never-replanned continuation — it becomes the shadow
+                # (not in fault mode: the shadow is a profiled-duration
+                # counterfactual and runtime truth has already landed)
                 self._baseline = plain
             self.mb = trial
             self.stats.replan_wins += 1
@@ -429,23 +968,96 @@ class SchedulingService:
         batch: Sequence[tuple[Task, float, float | None]],
         decided_at: float,
     ) -> None:
+        batch = self._park_unplaceable(batch)
         if not batch:
             return
         t0 = time.perf_counter()
-        # polymorphic: MultiBatchScheduler floors its single tail and
-        # greedy-places; ClusterMultiBatchScheduler additionally picks a
-        # device per task via speculative greedy previews
-        self.mb.online_place(batch, decided_at)
-        if self._baseline is not None:
+        withdrawn: list[Task] = []
+        plain_makespan = 0.0
+        mirror_batch = True  # whether the shadow still needs this trickle
+        if self.config.replan:
+            # the same two-candidate strict-win rule as a batch flush: a
+            # trickle with a withdrawable tail behind it can still pull
+            # the tail back (the fault path depends on this — a
+            # straggler report during a trickle can rescue deadline
+            # work).  With no tail to pull back this reduces to the
+            # plain greedy placement, bit-identically.
+            plain = self.mb.clone()
+            plain.online_place(batch, decided_at)
+            trial = self.mb.clone()
+            wd = trial.withdraw_uncommitted(decided_at)
+            if wd:
+                self.stats.replan_attempts += 1
+                trial.add_batch(
+                    wd + [task for task, _, _ in batch],
+                    not_before=decided_at,
+                )
+                if trial.makespan < plain.makespan - self.config.eps:
+                    if self._baseline is None and not self._fault_mode:
+                        self._baseline = plain
+                        mirror_batch = False  # plain already carries it
+                    self.mb = trial
+                    withdrawn = wd
+                    plain_makespan = plain.makespan
+                    self.stats.replan_wins += 1
+                    self.stats.withdrawn += len(wd)
+                else:
+                    self.mb = plain
+            else:
+                self.mb = plain
+        else:
+            # polymorphic: MultiBatchScheduler floors its single tail and
+            # greedy-places; ClusterMultiBatchScheduler additionally picks
+            # a device per task via speculative greedy previews
+            self.mb.online_place(batch, decided_at)
+        if self._baseline is not None and mirror_batch:
             self._baseline.online_place(batch, decided_at)
         wall = time.perf_counter() - t0
         fid = self._next_flush_id()
+        if withdrawn:
+            # the trickle was absorbed into a batch re-plan
+            self.stats.batches += 1
+            for task, arrival, deadline in batch:
+                self.stats.decisions.append(Decision(
+                    task.id, arrival, decided_at, "batch", fid, wall,
+                    deadline=deadline,
+                ))
+            for task in withdrawn:
+                self.stats.decisions.append(Decision(
+                    task.id, self._arrivals.get(task.id, decided_at),
+                    decided_at, "replan", fid, wall,
+                    deadline=self._deadlines.get(task.id),
+                ))
+            self._attach_deadline_extras(
+                [task for task, _, _ in batch] + withdrawn
+            )
+            self.stats.replan_events.append(ReplanEvent(
+                fid, decided_at, tuple(t.id for t in withdrawn),
+                self.mb.makespan, plain_makespan,
+            ))
+            return
         self.stats.online_placements += len(batch)
         for task, arrival, deadline in batch:
             self.stats.decisions.append(Decision(
                 task.id, arrival, decided_at, "online", fid, wall,
                 deadline=deadline,
             ))
+
+    def _park_unplaceable(
+        self, batch: Sequence[tuple[Task, float, float | None]]
+    ) -> list[tuple[Task, float, float | None]]:
+        """During a pool outage, hold back tasks no *surviving* device
+        supports (they passed intake against the full pool): they park
+        until the device recovers instead of blowing up the flush."""
+        if self.cluster is None or all(self.mb.active):
+            return list(batch)
+        live: list[tuple[Task, float, float | None]] = []
+        for item in batch:
+            if self.mb.supports_active(item[0]):
+                live.append(item)
+            else:
+                self._parked.append(item[0])
+        return live
 
     def _next_flush_id(self) -> int:
         self._flush_id += 1
@@ -476,13 +1088,18 @@ class SchedulingService:
         """Score the retained deadlines against the combined schedule —
         meaningful after :meth:`drain` (a task still pending counts as a
         miss: it has no completion).  Demoted and rejected tasks are
-        reported separately and never count as misses."""
+        reported separately and never count as misses.  Runtime truth
+        wins: reported completions overlay the projections, and
+        permanently failed tasks always count as misses."""
         ends: dict[int, float] = {}
         for it in self.combined_schedule().items:
-            ends[it.task.id] = it.end
+            if not it.failed:
+                ends[it.task.id] = it.end
+        ends.update(self._completions)
+        failed = set(self.stats.failed)
         missed = sorted(
             tid for tid, dl in self._deadlines.items()
-            if ends.get(tid, math.inf) > dl + EPS
+            if tid in failed or ends.get(tid, math.inf) > dl + EPS
         )
         tracked = len(self._deadlines)
         return {
@@ -491,6 +1108,7 @@ class SchedulingService:
             "miss_rate": len(missed) / tracked if tracked else 0.0,
             "rejected": sorted(self.stats.rejected),
             "demoted": sorted(self.stats.demoted),
+            "failed": sorted(failed),
         }
 
 
@@ -499,4 +1117,7 @@ __all__ = [
     "ServiceStats",
     "Decision",
     "ReplanEvent",
+    "CorrectionEvent",
+    "RetryEvent",
+    "OutageEvent",
 ]

@@ -18,6 +18,11 @@ consumes (per-node task chains + the device tree + the seam carry-over
 * ``apply_retract(tid)`` / ``retract_suffix(key, n)`` — the inverse of
   append: pull a not-yet-started suffix back off a chain (serving
   re-planning withdraws queued placements when a flush lands);
+* ``apply_stretch(tid, duration)`` — override one task's duration with
+  runtime truth (actual completion, straggler projection): the
+  closed-loop feedback correction, logged and undo-exact like every
+  other edit; ``schedule()`` marks corrected items via
+  ``ScheduledTask.end_override``;
 * ``undo()`` — speculative evaluation: apply an edit, read the timing,
   undo, bit-for-bit back to the previous state;
 * ``makespan()`` / ``slice_end_times()`` / ``node_end_times()`` /
@@ -88,6 +93,10 @@ class ChainState:
             k: [self.tasks[t].times[k[2]] for t in v]
             for k, v in self.chains.items()
         }
+        # runtime duration corrections (tid -> actual/projected seconds);
+        # consulted whenever a chain slot is (re)built so undo of a
+        # retract/extract restores the corrected duration, not the profile
+        self.stretched: dict[int, float] = {}
         self._task_node: dict[int, NodeKey] | None = None  # built lazily
         self._chain_ver: dict[NodeKey, int] = {}  # bumped per chain edit
         self._log: list[tuple] = []
@@ -128,7 +137,10 @@ class ChainState:
         self.chains.setdefault(key, [])
         self.durs.setdefault(key, [])
         self.chains[key].insert(idx, tid)
-        self.durs[key].insert(idx, self.tasks[tid].times[key[2]])
+        dur = self.stretched.get(tid)
+        if dur is None:
+            dur = self.tasks[tid].times[key[2]]
+        self.durs[key].insert(idx, dur)
         self._bump(key)
         if self._task_node is not None:
             self._task_node[tid] = key
@@ -211,6 +223,30 @@ class ChainState:
         self._log.append(("retract", tid, key))
         self._invalidate()
 
+    def apply_stretch(self, tid: int, duration: float) -> None:
+        """Override ``tid``'s duration on its chain with runtime truth —
+        the closed-loop correction primitive (logged, undo-exact, like
+        :meth:`apply_retract`).  ``duration`` is the task's *actual* (or
+        projected) runtime; everything behind it on the chain re-times
+        through the normal invalidation path.  Stretching (late) and
+        shrinking (early completion) are both allowed; the correction
+        sticks to the task through later retracts/undos via
+        ``self.stretched``.  The no-preemption model is untouched — the
+        task still runs once, contiguously, just for a different span."""
+        if duration <= 0.0:
+            raise ValueError(
+                f"stretch duration must be positive, got {duration}"
+            )
+        key = self.task_node[tid]
+        idx = self.chains[key].index(tid)
+        old_dur = self.durs[key][idx]
+        old_mark = self.stretched.get(tid)
+        self.durs[key][idx] = duration
+        self.stretched[tid] = duration
+        self._bump(key)
+        self._log.append(("stretch", tid, key, idx, old_dur, old_mark))
+        self._invalidate()
+
     def retract_suffix(self, key: NodeKey, count: int) -> list[int]:
         """Retract the last ``count`` tasks of ``key``'s chain (newest
         first); returns the retracted task ids in retraction order.  Each
@@ -263,6 +299,14 @@ class ChainState:
         elif kind == "retract":
             _, tid, key = entry
             self._insert(key, len(self.chains[key]), tid)
+        elif kind == "stretch":
+            _, tid, key, idx, old_dur, old_mark = entry
+            self.durs[key][idx] = old_dur
+            if old_mark is None:
+                self.stretched.pop(tid, None)
+            else:
+                self.stretched[tid] = old_mark
+            self._bump(key)
         elif kind == "extract":
             _, tid, src, idx = entry
             self._insert(src, idx, tid)
@@ -424,6 +468,7 @@ class TimingEngine(ChainState):
         index = self.spec.node_index
         reverse = self.direction == "reverse"
         tasks = self.tasks
+        stretched = self.stretched
         items: list[ScheduledTask] = []
         for key in ev.order:
             node = index[key]
@@ -434,7 +479,15 @@ class TimingEngine(ChainState):
             rng = range(len(chain) - 1, -1, -1) if reverse \
                 else range(len(chain))
             for i in rng:
-                items.append(ScheduledTask(tasks[chain[i]], node, t, size))
+                tid = chain[i]
+                if tid in stretched:
+                    # runtime-corrected placement: carry the actual end
+                    items.append(ScheduledTask(
+                        tasks[tid], node, t, size,
+                        end_override=t + durs[i],
+                    ))
+                else:
+                    items.append(ScheduledTask(tasks[tid], node, t, size))
                 t += durs[i]
         reconfigs = [
             ReconfigEvent(kind, node, begin, end)
@@ -979,6 +1032,12 @@ class ReplayEngine(ChainState):
         self.alive = dict(alive or {})
         self.direction = direction
         self.include_reconfig = include_reconfig
+
+    def apply_stretch(self, tid: int, duration: float) -> None:
+        raise NotImplementedError(
+            "ReplayEngine scores every query with a profile-driven "
+            "replay(); runtime duration corrections need TimingEngine"
+        )
 
     def _replay(self, include_reconfig: bool | None = None):
         flag = self.include_reconfig if include_reconfig is None \

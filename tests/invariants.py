@@ -27,9 +27,33 @@ Checked invariants:
    interval of exactly its profile duration; a preempted task would need
    two items), and with ``tasks`` given, the scheduled ids match the
    batch exactly.
+
+Runtime feedback relaxes two of these in a controlled way: *failed*
+attempt records (``it.failed``) are occupancy slabs, not placements —
+they are excluded from exactly-once coverage (the retry is the live
+placement) — and *corrected* records (``it.corrected``, i.e. a runtime
+``end_override``) are exempt from profile-duration honesty.  Two
+corrected records may also overlap each other (a straggler stretch can
+race a completion that was already reported on a neighbouring cell —
+runtime truth is recorded, never rewritten); a *planned* record
+overlapping anything is still a violation.
+
+``assert_fault_invariants(svc)`` adds the fault-tolerance layer on a
+drained :class:`SchedulingService`: no live placement on a quarantined
+device inside its outage window, no live record spanning a loss instant
+(running attempts must have been failed), and every retried attempt
+begins at or after its backoff release.
 """
 
 from repro.core.problem import EPS
+
+
+def _is_failed(it) -> bool:
+    return bool(getattr(it, "failed", False))
+
+
+def _is_corrected(it) -> bool:
+    return bool(getattr(it, "corrected", False))
 
 
 class InvariantViolation(AssertionError):
@@ -58,10 +82,11 @@ def assert_valid_schedule(schedule, spec, *, tasks=None, floors=None) -> None:
     seen: dict[int, object] = {}
     for it in schedule.items:
         tid = it.task.id
-        if tid in seen:
-            _fail(f"task {tid} scheduled more than once (preemption or "
-                  f"duplication)")
-        seen[tid] = it
+        if not _is_failed(it):
+            if tid in seen:
+                _fail(f"task {tid} scheduled more than once (preemption or "
+                      f"duplication)")
+            seen[tid] = it
         node = node_index.get(it.node.key)
         if node is None:
             _fail(f"task {tid} placed on {it.node}, not a node of "
@@ -71,7 +96,11 @@ def assert_valid_schedule(schedule, spec, *, tasks=None, floors=None) -> None:
                   f"size-{it.node.size} instance {it.node}")
         if it.size not in it.task.times:
             _fail(f"task {tid} has no profile entry for size {it.size}")
-        if abs((it.end - it.begin) - it.task.times[it.size]) > 1e-6:
+        if _is_corrected(it) or _is_failed(it):
+            if it.end < it.begin - EPS:
+                _fail(f"task {tid}'s corrected record ends at {it.end} "
+                      f"before it begins at {it.begin}")
+        elif abs((it.end - it.begin) - it.task.times[it.size]) > 1e-6:
             _fail(f"task {tid} runs {it.end - it.begin}s, profile says "
                   f"{it.task.times[it.size]}s (preempted or stretched)")
         if it.begin < -EPS:
@@ -99,8 +128,12 @@ def assert_valid_schedule(schedule, spec, *, tasks=None, floors=None) -> None:
             per_cell.setdefault(cell, []).append(it)
     for cell, lst in per_cell.items():
         lst.sort(key=lambda it: (it.begin, it.end))
-        for a, b in zip(lst, lst[1:]):
-            if a.end > b.begin + EPS:
+        for i, a in enumerate(lst):
+            for b in lst[i + 1:]:
+                if a.end <= b.begin + EPS:
+                    break
+                if _is_corrected(a) and _is_corrected(b):
+                    continue  # two runtime-truth records may race
                 _fail(f"tasks {a.task.id} and {b.task.id} overlap on slice "
                       f"{cell}: [{a.begin:.3f},{a.end:.3f}) vs "
                       f"[{b.begin:.3f},{b.end:.3f})")
@@ -110,14 +143,25 @@ def assert_valid_schedule(schedule, spec, *, tasks=None, floors=None) -> None:
     items = sorted(schedule.items, key=lambda it: (it.begin, it.end))
     for it in items:
         t = it.begin
-        running = {
-            o.node.key: o.node for o in items
-            if o.begin <= t + EPS and o.end > t + EPS
-        }
-        if not spec.is_feasible_instance_set(list(running.values())):
-            _fail(f"at t={t:.3f} the running instances "
-                  f"{sorted(running)} are not a valid sub-partition of "
-                  f"{spec.name}")
+        running: dict = {}
+        for o in items:
+            if o.begin <= t + EPS and o.end > t + EPS:
+                running.setdefault(o.node.key, []).append(o)
+        nodes = [lst[0].node for lst in running.values()]
+        if not spec.is_feasible_instance_set(nodes):
+            # sanctioned only if every conflicting node pair is backed
+            # exclusively by corrected (runtime-truth) records
+            for ka, la in running.items():
+                ca = set(la[0].node.blocked_cells)
+                for kb, lb in running.items():
+                    if kb <= ka or not ca & set(lb[0].node.blocked_cells):
+                        continue
+                    if all(_is_corrected(o) for o in la) \
+                            and all(_is_corrected(o) for o in lb):
+                        continue  # a feedback race, not a real partition
+                    _fail(f"at t={t:.3f} the running instances "
+                          f"{sorted(running)} are not a valid "
+                          f"sub-partition of {spec.name}")
 
 
 def service_floors(svc) -> dict[int, float]:
@@ -133,4 +177,68 @@ def service_floors(svc) -> dict[int, float]:
     return floors
 
 
-__all__ = ["InvariantViolation", "assert_valid_schedule", "service_floors"]
+def assert_fault_invariants(svc) -> None:
+    """Fault-tolerance invariants of a (preferably drained)
+    :class:`SchedulingService`:
+
+    * **quarantine is honoured** — no live (non-failed) record on a lost
+      device begins inside its outage window, and none spans the loss
+      instant (an attempt running at the loss must have been failed);
+    * **backoff floors** — each retried attempt's live placement begins
+      no earlier than its latest retry release;
+    * **no stranding** — every task withdrawn by an outage is either
+      live again in the combined schedule, permanently failed, or
+      explicitly rejected at drain.
+    """
+    items = [it for seg in svc.mb.segments for it in seg.items]
+    live = {}
+    for it in items:
+        if not _is_failed(it):
+            live[it.task.id] = it
+
+    if svc.stats.outages:
+        if svc.cluster is None:
+            _fail("outages recorded on a single-device service")
+        tree_dev = svc.cluster.tree_device
+        for ev in svc.stats.outages:
+            hi = ev.recovered_at if ev.recovered_at is not None else float(
+                "inf")
+            for it in items:
+                if tree_dev[it.node.tree] != ev.device or _is_failed(it):
+                    continue
+                if ev.lost_at - EPS <= it.begin and it.begin < hi - EPS:
+                    _fail(f"task {it.task.id} begins at {it.begin} on "
+                          f"device {ev.device} inside its outage window "
+                          f"[{ev.lost_at}, {hi})")
+                if it.begin < ev.lost_at - EPS \
+                        and it.end > ev.lost_at + EPS:
+                    _fail(f"task {it.task.id} spans device {ev.device}'s "
+                          f"loss at {ev.lost_at} without having been "
+                          f"failed: [{it.begin}, {it.end})")
+
+    latest_release: dict[int, float] = {}
+    for ev in svc.stats.retries:
+        latest_release[ev.task_id] = max(
+            latest_release.get(ev.task_id, 0.0), ev.release)
+    for tid, release in latest_release.items():
+        it = live.get(tid)
+        if it is not None and it.begin < release - EPS:
+            _fail(f"retried task {tid} begins at {it.begin} before its "
+                  f"backoff release {release}")
+
+    resolved = (set(live) | set(svc.stats.failed)
+                | set(svc.stats.rejected) | svc.completions.keys())
+    for ev in svc.stats.outages:
+        stranded = set(ev.withdrawn) - resolved
+        if stranded:
+            _fail(f"tasks {sorted(stranded)} withdrawn by device "
+                  f"{ev.device}'s outage were never re-placed, failed, "
+                  f"or rejected")
+
+
+__all__ = [
+    "InvariantViolation",
+    "assert_valid_schedule",
+    "assert_fault_invariants",
+    "service_floors",
+]

@@ -1,0 +1,580 @@
+"""Fault-tolerant serving: runtime feedback (completions / failures /
+straggler detection), retry with backoff + demotion, device loss and
+recovery, and the deterministic fault-injection harness.
+
+The load-bearing contract is differential: with the injector disabled
+(``FaultSpec()`` — all rates zero) every plan the service produces is
+bit-identical to a run with no feedback at all; with faults enabled,
+``assert_valid_schedule`` + ``assert_fault_invariants`` must hold on the
+final books, and the closed loop must beat the open-loop (no-feedback)
+executor on straggler streams.
+"""
+
+import pytest
+
+from invariants import (
+    assert_fault_invariants,
+    assert_valid_schedule,
+    service_floors,
+)
+from repro.core import (
+    A30,
+    A100,
+    FaultInjector,
+    FaultSpec,
+    Profile,
+    ProfileCoverageError,
+    RetryPolicy,
+    SchedulerConfig,
+    SchedulingService,
+    Task,
+    cluster,
+    demote_shrink,
+    execute_open_loop,
+    partition_batch,
+    run_with_faults,
+)
+from repro.core.synth import generate_tasks, workload
+
+
+def _tasks(n, seed=0, spec=A100, id_offset=0):
+    return generate_tasks(
+        n, spec, workload("mixed", "wide", spec), seed=seed,
+        id_offset=id_offset,
+    )
+
+
+def _cfg(**kw):
+    base = dict(max_wait_s=5.0, max_batch=8, min_batch=2)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _stream(tasks, gap=1.5, slack=120.0):
+    return [(i * gap, t, i * gap + slack) for i, t in enumerate(tasks)]
+
+
+# --- RetryPolicy / demotion ------------------------------------------------
+
+def test_retry_backoff_is_capped_exponential():
+    rp = RetryPolicy(max_attempts=5, backoff_base=0.5, backoff_cap=3.0)
+    assert rp.backoff(1) == 0.5
+    assert rp.backoff(2) == 1.0
+    assert rp.backoff(3) == 2.0
+    assert rp.backoff(4) == 3.0       # capped
+    assert rp.backoff(5) == 3.0
+    with pytest.raises(ValueError, match="1-based"):
+        rp.backoff(0)
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match=">= 0"):
+        RetryPolicy(backoff_base=-1.0)
+
+
+def test_demote_shrink_drops_largest_size_per_kind():
+    t = Task(id=1, times={1: 10.0, 2: 6.0, 4: 4.0})
+    d = demote_shrink(t, 2)
+    assert set(d.times) == {1, 2}
+    assert d.id == t.id
+    # Profile variant: each kind loses its largest size independently
+    p = Task(id=2, times=Profile({"a100": {1: 9.0, 2: 5.0},
+                                  "a30": {1: 7.0}}))
+    dp = demote_shrink(p, 2)
+    assert set(dp.times.for_kind("a100")) == {1}
+    assert set(dp.times.for_kind("a30")) == {1}
+    # nothing left to shrink -> None (policy keeps the previous task)
+    assert demote_shrink(Task(id=3, times={1: 5.0}), 2) is None
+    rp = RetryPolicy(demote=demote_shrink)
+    t1 = Task(id=4, times={1: 5.0})
+    assert rp.task_for_attempt(t1, 2) is t1
+    assert RetryPolicy().task_for_attempt(t, 2) is t
+
+
+# --- FaultInjector determinism --------------------------------------------
+
+def test_injector_draws_are_pure_functions_of_the_key():
+    spec = FaultSpec(seed=7, noise_sigma=0.2, straggler_prob=0.3,
+                     task_fail_rate=0.05)
+    a, b = FaultInjector(spec), FaultInjector(spec)
+    # same key -> same draw, across instances and across call order
+    d1 = a.draw_execution(3, 1, 10.0)
+    _ = a.draw_execution(99, 1, 10.0)
+    d2 = a.draw_execution(3, 1, 10.0)
+    d3 = b.draw_execution(3, 1, 10.0)
+    assert d1 == d2 == d3
+    # different attempt -> an independent fate
+    d4 = a.draw_execution(3, 2, 10.0)
+    assert d4 != d1
+    # different seed -> different draws
+    c = FaultInjector(FaultSpec(seed=8, noise_sigma=0.2,
+                                straggler_prob=0.3, task_fail_rate=0.05))
+    assert c.draw_execution(3, 1, 10.0) != d1
+
+
+def test_disabled_injector_is_a_perfect_machine():
+    inj = FaultInjector()
+    assert not inj.enabled
+    d = inj.draw_execution(5, 1, 12.5)
+    assert d.duration == 12.5 and not d.fails
+    assert inj.device_outages(0, 1e6) == []
+
+
+def test_device_outages_windows_are_bounded_and_disjoint():
+    inj = FaultInjector(FaultSpec(seed=3, device_mtbf_s=50.0,
+                                  device_repair_s=10.0,
+                                  max_device_losses=2))
+    wins = inj.device_outages(0, 1e4)
+    assert 1 <= len(wins) <= 2
+    for lost, rec in wins:
+        assert rec == pytest.approx(lost + 10.0)
+    for (_, r1), (l2, _) in zip(wins, wins[1:]):
+        assert l2 >= r1
+    assert inj.device_outages(0, 1e4) == wins          # reproducible
+    assert inj.device_outages(1, 1e4) != wins          # per-device stream
+    assert FaultInjector(FaultSpec(seed=3)).device_outages(0, 1e4) == []
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="straggler_factor"):
+        FaultSpec(straggler_factor=1.0)
+    with pytest.raises(ValueError, match="noise_sigma"):
+        FaultSpec(noise_sigma=-0.1)
+
+
+# --- submit validation & typed coverage errors -----------------------------
+
+def test_submit_rejects_empty_profile():
+    svc = SchedulingService(A100, config=_cfg())
+    with pytest.raises(ValueError, match="empty profile"):
+        svc.submit(Task(id=1, times={}), arrival=0.0)
+
+
+def test_submit_rejects_non_positive_durations():
+    svc = SchedulingService(A100, config=_cfg())
+    with pytest.raises(ValueError, match="strictly positive"):
+        svc.submit(Task(id=1, times={1: 5.0, 2: 0.0}), arrival=0.0)
+    with pytest.raises(ValueError, match="strictly positive"):
+        svc.submit(Task(id=2, times=Profile({"a100": {1: -3.0}})),
+                   arrival=0.0)
+
+
+def test_submit_rejects_deadline_before_arrival():
+    svc = SchedulingService(A100, config=_cfg())
+    t = _tasks(1)[0]
+    with pytest.raises(ValueError, match="precedes its arrival"):
+        svc.submit(t, arrival=10.0, deadline=9.0)
+
+
+def test_partition_batch_coverage_error_names_task_and_instance_type():
+    cs = cluster(A30, A100)
+    bad = Task(id=77, times=Profile({"h100": {1: 5.0}}))
+    with pytest.raises(ProfileCoverageError) as ei:
+        partition_batch([bad], cs)
+    err = ei.value
+    assert err.task_id == 77
+    assert "77" in str(err) and "fits no device" in str(err)
+    # dual inheritance: legacy guards on either base keep working
+    assert isinstance(err, KeyError) and isinstance(err, ValueError)
+
+
+def test_times_for_raises_typed_coverage_error():
+    t = Task(id=5, times=Profile({"a100": {1: 5.0}}))
+    with pytest.raises(ProfileCoverageError, match="task 5"):
+        t.times_for("h100")
+
+
+# --- report(): completions, corrections, failures --------------------------
+
+def _committed_service(n=6, seed=0, **cfg_kw):
+    tasks = _tasks(n, seed=seed)
+    svc = SchedulingService(A100, config=_cfg(**cfg_kw))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=float(i) * 0.1)
+    svc.flush()
+    return svc, tasks
+
+
+def test_report_validates_event_id_and_time():
+    svc, tasks = _committed_service()
+    with pytest.raises(ValueError, match="unknown runtime event"):
+        svc.report(tasks[0].id, "exploded", t=svc.now)
+    with pytest.raises(ValueError, match="no live committed placement"):
+        svc.report(10 ** 9, "completed", t=svc.now)
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    svc.report(it.task.id, "completed", t=it.end, end=it.end)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        svc.report(tasks[1].id, "completed", t=it.end - 10.0)
+    with pytest.raises(ValueError, match="already reported"):
+        svc.report(it.task.id, "completed", t=svc.now)
+
+
+def test_on_time_completion_is_a_noop_correction():
+    svc, _ = _committed_service()
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    svc.report(it.task.id, "completed", t=it.end, end=it.end)
+    assert svc.stats.completed == 1
+    assert svc.stats.corrections == []
+    assert svc.completions[it.task.id] == it.end
+
+
+def test_early_completion_records_a_shrink():
+    svc, tasks = _committed_service()
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    actual = it.begin + 0.5 * it.planned_duration
+    svc.report(it.task.id, "completed", t=actual)
+    [ev] = svc.stats.corrections
+    assert ev.kind == "shrink" and ev.task_id == it.task.id
+    assert ev.new_end == actual and ev.old_end == pytest.approx(
+        it.begin + it.planned_duration)
+    cur = svc.mb.find_item(it.task.id)
+    assert cur.corrected and cur.end == actual
+    combined = svc.drain()
+    assert_valid_schedule(combined, A100, tasks=tasks,
+                          floors=service_floors(svc))
+
+
+def test_late_completion_stretch_forces_replan_and_stays_valid():
+    svc, tasks = _committed_service(replan=True)
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    successors = [o for o in svc.committed_items()
+                  if o.begin > it.begin + 1e-9]
+    actual = it.begin + 4.0 * it.planned_duration
+    svc.report(it.task.id, "completed", t=actual)
+    [ev] = svc.stats.corrections
+    assert ev.kind == "stretch"
+    # everything not yet started was pulled back and re-planned after
+    # the corrected end; no successor was left planned against stale books
+    fault_decisions = [d for d in svc.stats.decisions if d.route == "fault"]
+    assert {d.task_id for d in fault_decisions} == set(ev.withdrawn)
+    assert successors, "test stream must have successors to re-plan"
+    combined = svc.drain()
+    assert_valid_schedule(combined, A100, tasks=tasks,
+                          floors=service_floors(svc))
+    for tid in ev.withdrawn:
+        cur = next(i for i in combined.items
+                   if i.task.id == tid and not i.failed)
+        assert cur.begin >= actual - 1e-9
+
+
+def test_failure_retries_with_backoff_then_fails_permanently():
+    rp = RetryPolicy(max_attempts=2, backoff_base=1.0)
+    svc, tasks = _committed_service(retry=rp)
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    t_fail = it.begin + 0.25 * it.planned_duration
+    svc.report(it.task.id, "failed", t=max(svc.now, t_fail))
+    [rev] = svc.stats.retries
+    assert rev.task_id == it.task.id and rev.attempt == 2
+    assert rev.release == pytest.approx(rev.failed_at + 1.0)
+    # drain releases the retry; its placement respects the backoff floor
+    svc.drain()
+    again = svc.mb.find_item(it.task.id)
+    assert again is not None and not again.failed
+    assert again.begin >= rev.release - 1e-9
+    assert_fault_invariants(svc)
+    # the truncated first attempt stays in the books as occupancy
+    failed_records = [i for seg in svc.mb.segments for i in seg.items
+                      if i.task.id == it.task.id and i.failed]
+    assert len(failed_records) == 1
+    # second failure is permanent (max_attempts=2)
+    svc.report(it.task.id, "failed", t=max(svc.now, again.begin + 0.1))
+    assert svc.stats.failed == [it.task.id]
+    rep = svc.deadline_report()
+    assert rep["failed"] == [it.task.id]
+
+
+def test_failure_without_retry_policy_is_permanent():
+    svc, _ = _committed_service()
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    svc.report(it.task.id, "failed", t=max(svc.now, it.begin + 0.1))
+    assert svc.stats.failed == [it.task.id]
+    assert svc.stats.retries == []
+
+
+def test_straggler_is_detected_implicitly_on_poll():
+    svc, tasks = _committed_service(straggler_factor=2.0)
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    svc.poll(it.begin + 2.5 * it.planned_duration)
+    assert svc.stats.stragglers >= 1
+    ev = next(e for e in svc.stats.corrections if e.kind == "straggler")
+    assert ev.task_id == it.task.id
+    cur = svc.mb.find_item(it.task.id)
+    assert cur.corrected and cur.end > it.end
+    combined = svc.drain()
+    assert_valid_schedule(combined, A100, tasks=tasks,
+                          floors=service_floors(svc))
+
+
+# --- device loss / recovery ------------------------------------------------
+
+def _cluster_service(n=10, seed=3, **cfg_kw):
+    cs = cluster(A100, A30)
+    tasks = _tasks(n, seed=seed)
+    svc = SchedulingService(pool=cs, config=_cfg(**cfg_kw))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=float(i) * 0.2)
+    svc.flush()
+    return svc, tasks
+
+
+def test_quarantine_requires_a_pool():
+    svc, _ = _committed_service()
+    with pytest.raises(ValueError, match="pool"):
+        svc.quarantine(0, svc.now)
+
+
+def test_quarantine_fails_running_withdraws_rest_and_recovers():
+    rp = RetryPolicy(max_attempts=3, backoff_base=0.5)
+    svc, tasks = _cluster_service(retry=rp)
+    t_loss = svc.now + 1.0
+    running = svc.quarantine(1, t_loss)
+    [ev] = svc.stats.outages
+    assert ev.device == 1 and ev.lost_at == t_loss
+    assert set(ev.died_running) == set(running)
+    # running attempts died with the device -> retry path
+    assert {r.task_id for r in svc.stats.retries} == set(running)
+    # withdrawn placements were re-planned immediately (nothing parked
+    # here: both kinds in this workload run on the surviving A100)
+    for tid in ev.withdrawn:
+        assert svc.mb.find_item(tid) is not None
+    # admission floors see only surviving capacity until recovery: a
+    # probe only the lost A30 can run has no completion bound at all
+    probe = Task(id=9999, times=Profile({"A30": {1: 3.0, 2: 2.0, 4: 1.5}}))
+    lb_degraded = svc.completion_lower_bound(probe, svc.now)
+    assert lb_degraded == float("inf")
+    svc.recover(1, t_loss + 30.0)
+    assert svc.stats.outages[0].recovered_at == t_loss + 30.0
+    lb_recovered = svc.completion_lower_bound(probe, svc.now)
+    assert lb_recovered < float("inf")
+    svc.drain()
+    assert_fault_invariants(svc)
+
+
+def test_quarantine_accepts_device_spec_or_index():
+    svc, _ = _cluster_service()
+    t_loss = svc.now + 1.0
+    # the DeviceSpec itself resolves to its pool index
+    svc.quarantine(svc.cluster.devices[1], t_loss)
+    assert svc.stats.outages[-1].device == 1
+    svc.recover(svc.cluster.devices[1], t_loss + 5.0)
+    assert svc.stats.outages[-1].recovered_at == t_loss + 5.0
+    # a spec that is not in the pool names itself and the pool members
+    with pytest.raises(ValueError, match="not in this pool"):
+        svc.quarantine(A100.degrade([]), svc.now)
+    svc.drain()
+    assert_fault_invariants(svc)
+
+
+def test_quarantine_never_strands_withdrawn_tasks():
+    svc, tasks = _cluster_service(n=12, seed=11,
+                                  retry=RetryPolicy(max_attempts=2))
+    svc.quarantine(0, svc.now + 0.5)
+    svc.drain()
+    assert_fault_invariants(svc)   # includes the no-stranding check
+    live = {it.task.id for it in svc.committed_items()}
+    for tid in svc.stats.outages[0].withdrawn:
+        assert (tid in live or tid in svc.stats.failed
+                or tid in svc.stats.rejected)
+
+
+def test_unsupported_tasks_park_through_outage_and_return_on_recovery():
+    # two-kind pool; tasks that only run on the A30 must park while it
+    # is quarantined and be re-admitted (not dropped) on recovery
+    cs = cluster(A100, A30)
+    a30_only = [
+        Task(id=900 + i, times=Profile({"A30": {1: 3.0, 2: 2.0, 4: 1.5}}))
+        for i in range(2)
+    ]
+    svc = SchedulingService(pool=cs, config=_cfg(max_batch=2))
+    for i, t in enumerate(a30_only):
+        svc.submit(t, arrival=float(i))
+    svc.flush()
+    assert len(svc.committed_items()) == 2
+    svc.quarantine(1, svc.now + 0.1)
+    [ev] = svc.stats.outages
+    assert set(ev.parked) == set(ev.withdrawn) != set()
+    assert all(svc.mb.find_item(tid) is None for tid in ev.parked)
+    svc.recover(1, svc.now + 20.0)
+    for tid in ev.parked:
+        it = svc.mb.find_item(tid)
+        assert it is not None and it.begin >= ev.lost_at - 1e-9
+    svc.drain()
+    assert_fault_invariants(svc)
+    assert svc.stats.rejected == []
+
+
+def test_parked_tasks_rejected_at_drain_if_never_recovered():
+    cs = cluster(A100, A30)
+    only_a30 = Task(id=950, times=Profile({"A30": {1: 3.0, 2: 2.0, 4: 1.5}}))
+    svc = SchedulingService(pool=cs, config=_cfg(max_batch=1))
+    svc.submit(only_a30, arrival=0.0, deadline=100.0)
+    svc.flush()
+    svc.quarantine(1, svc.now + 0.1)
+    svc.drain()
+    assert svc.stats.rejected == [950]
+    assert svc.deadline_report()["missed"] == []   # rejected, not missed
+    assert_fault_invariants(svc)
+
+
+# --- withdraw_uncommitted boundary semantics (re-plan correctness) ---------
+
+def test_withdraw_keeps_placement_beginning_exactly_at_t():
+    svc, _ = _committed_service()
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    mb = svc.mb.clone()
+    wd = mb.withdraw_uncommitted(it.begin)
+    assert it.task.id not in {t.id for t in wd}   # begin == t: started
+    assert mb.find_item(it.task.id) is not None
+
+
+def test_withdraw_inside_reconfig_window_keeps_the_reconfig():
+    svc, tasks = _committed_service(n=8, seed=4)
+    reconfigs = [rc for seg in svc.mb.segments for rc in seg.reconfigs]
+    if not reconfigs:
+        pytest.skip("plan has no reconfiguration to probe")
+    rc = min(reconfigs, key=lambda r: r.begin)
+    t_mid = 0.5 * (rc.begin + rc.end)
+    mb = svc.mb.clone()
+    mb.withdraw_uncommitted(t_mid)
+    kept = [r for seg in mb.segments for r in seg.reconfigs]
+    assert any(abs(r.begin - rc.begin) < 1e-9 for r in kept), \
+        "an in-progress reconfiguration must survive withdrawal"
+
+
+def test_withdraw_on_single_device_cluster_tail():
+    cs = cluster(A100)
+    tasks = _tasks(5, seed=6)
+    svc = SchedulingService(pool=cs, config=_cfg(max_batch=5))
+    for t in tasks:
+        svc.submit(t, arrival=0.0)
+    m0 = svc.mb.makespan
+    # beyond the makespan nothing is uncommitted; tail must be untouched
+    mb = svc.mb.clone()
+    assert mb.withdraw_uncommitted(m0 + 1.0) == []
+    assert mb.makespan == m0
+    # at time zero everything comes back and the tail resets
+    mb2 = svc.mb.clone()
+    wd = mb2.withdraw_uncommitted(0.0)
+    assert {t.id for t in wd} == {t.id for t in tasks}
+    assert mb2.makespan == 0.0
+
+
+# --- differential: disabled injector == pre-feedback behaviour -------------
+
+def _plan_signature(svc):
+    return sorted(
+        (it.task.id, it.node.key, it.begin, it.end, it.size)
+        for it in svc.combined_schedule().items
+    )
+
+
+@pytest.mark.parametrize("replan", [False, True])
+def test_disabled_injector_plans_bit_identical_single_device(replan):
+    tasks = _tasks(12, seed=9)
+    stream = _stream(tasks)
+    cfg = _cfg(replan=replan, straggler_factor=3.0,
+               retry=RetryPolicy())
+    ref = SchedulingService(A100, config=_cfg(replan=replan))
+    for a, t, dl in stream:
+        ref.submit(t, arrival=a, deadline=dl)
+    ref.drain()
+    svc = SchedulingService(A100, config=cfg)
+    rep = run_with_faults(svc, stream, injector=FaultInjector())
+    assert _plan_signature(svc) == _plan_signature(ref)
+    assert rep.failed == [] and len(rep.completions) == len(tasks)
+    # every completion reported exactly at its planned end
+    ends = {it.task.id: it.end for it in ref.combined_schedule().items}
+    assert rep.completions == ends
+    assert svc.stats.corrections == [] and svc.stats.stragglers == 0
+
+
+def test_disabled_injector_plans_bit_identical_cluster():
+    cs = cluster(A100, A30)
+    tasks = _tasks(10, seed=13)
+    stream = _stream(tasks)
+    ref = SchedulingService(pool=cluster(A100, A30), config=_cfg())
+    for a, t, dl in stream:
+        ref.submit(t, arrival=a, deadline=dl)
+    ref.drain()
+    svc = SchedulingService(pool=cs, config=_cfg(straggler_factor=3.0))
+    run_with_faults(svc, stream, injector=FaultInjector())
+    assert _plan_signature(svc) == _plan_signature(ref)
+
+
+# --- closed loop under faults: invariants + it beats open loop -------------
+
+FAULTY = FaultSpec(seed=2, noise_sigma=0.08, straggler_prob=0.2,
+                   task_fail_rate=0.008, straggler_factor=3.0)
+
+
+def test_closed_loop_under_faults_keeps_all_invariants():
+    tasks = _tasks(14, seed=21)
+    stream = _stream(tasks)
+    svc = SchedulingService(A100, config=_cfg(
+        straggler_factor=2.5, retry=RetryPolicy(max_attempts=3)))
+    rep = run_with_faults(svc, stream, injector=FaultInjector(FAULTY))
+    assert_fault_invariants(svc)
+    combined = svc.combined_schedule()
+    done = set(rep.completions) | set(rep.failed)
+    assert done == {t.id for t in tasks}, "every task must be resolved"
+    assert_valid_schedule(combined, A100, floors=service_floors(svc))
+
+
+def test_closed_loop_with_outages_keeps_all_invariants():
+    cs = cluster(A100, A30)
+    tasks = _tasks(16, seed=22)
+    stream = _stream(tasks)
+    spec = FaultSpec(seed=5, noise_sigma=0.05, straggler_prob=0.1,
+                     task_fail_rate=0.005, device_mtbf_s=60.0,
+                     device_repair_s=20.0)
+    svc = SchedulingService(pool=cs, config=_cfg(
+        straggler_factor=2.5, retry=RetryPolicy(max_attempts=3)))
+    rep = run_with_faults(svc, stream, injector=FaultInjector(spec))
+    assert svc.stats.outages, "seeded MTBF must produce an outage"
+    assert_fault_invariants(svc)
+    resolved = (set(rep.completions) | set(rep.failed)
+                | set(svc.stats.rejected))
+    assert resolved == {t.id for t in tasks}
+
+
+def test_closed_loop_beats_open_loop_on_straggler_streams():
+    tasks = _tasks(16, seed=31)
+    deadlines = {}
+    stream = []
+    for i, t in enumerate(tasks):
+        arrival = i * 1.0
+        dl = arrival + 150.0
+        deadlines[t.id] = dl
+        stream.append((arrival, t, dl))
+    spec = FaultSpec(seed=4, straggler_prob=0.25, straggler_factor=4.0)
+    # open loop: the frozen no-feedback plan under the same draws
+    ref = SchedulingService(A100, config=_cfg())
+    for a, t, dl in stream:
+        ref.submit(t, arrival=a, deadline=dl)
+    open_rep = execute_open_loop(ref.drain(), FaultInjector(spec))
+    # closed loop: straggler detection + forced re-planning
+    svc = SchedulingService(A100, config=_cfg(
+        replan=True, straggler_factor=2.0))
+    closed_rep = run_with_faults(svc, stream, injector=FaultInjector(spec))
+    assert svc.stats.stragglers > 0, "stream must actually straggle"
+    assert closed_rep.miss_rate(deadlines) < open_rep.miss_rate(deadlines)
+
+
+def test_harness_run_is_reproducible():
+    cs = cluster(A100, A30)
+    tasks = _tasks(12, seed=40)
+    stream = _stream(tasks)
+    spec = FaultSpec(seed=9, noise_sigma=0.1, straggler_prob=0.15,
+                     task_fail_rate=0.01, device_mtbf_s=80.0,
+                     device_repair_s=25.0)
+    cfg = _cfg(straggler_factor=2.5, retry=RetryPolicy(max_attempts=3))
+    reps = []
+    for _ in range(2):
+        svc = SchedulingService(pool=cluster(A100, A30), config=cfg)
+        reps.append(run_with_faults(svc, stream,
+                                    injector=FaultInjector(spec)))
+    assert reps[0].completions == reps[1].completions
+    assert reps[0].failed == reps[1].failed
+    assert reps[0].recovery_latency == reps[1].recovery_latency

@@ -480,3 +480,86 @@ if HAVE_HYPOTHESIS:
         eng.undo_all()
         ref.undo_all()
         _assert_engines_agree(eng, ref)
+
+
+# --- runtime-truth stretches (closed-loop corrections) ---------------------
+
+def test_apply_stretch_retimes_successors_and_undoes_exactly():
+    spec = A100
+    tasks = generate_tasks(
+        4, spec, workload("mixed", "wide", spec), seed=9, id_offset=700
+    )
+    from repro.core.repartition import Assignment
+
+    eng = TimingEngine(Assignment(spec, {t.id: t for t in tasks}, {}))
+    key = spec.nodes[0].key
+    for t in tasks:
+        eng.apply_append(t.id, key)
+    before = _snapshot(eng)
+    m0 = eng.makespan()
+    first = tasks[0]
+    planned = first.times[spec.nodes[0].size]
+    eng.apply_stretch(first.id, planned * 3.0)
+    # the whole chain behind the stretched task shifts by the delta
+    assert eng.makespan() == pytest.approx(m0 + 2.0 * planned)
+    sched = eng.schedule()
+    stretched_item = next(it for it in sched.items if it.task.id == first.id)
+    assert stretched_item.end_override is not None
+    assert stretched_item.corrected
+    assert stretched_item.duration == pytest.approx(3.0 * planned)
+    # shrink on top of the stretch: latest truth wins
+    eng.apply_stretch(first.id, planned * 0.5)
+    assert eng.makespan() == pytest.approx(m0 - 0.5 * planned)
+    # undo unwinds both corrections exactly
+    eng.undo()
+    assert eng.makespan() == pytest.approx(m0 + 2.0 * planned)
+    eng.undo()
+    assert _snapshot(eng) == before
+    assert eng.makespan() == m0
+    assert first.id not in eng.stretched
+    sched2 = eng.schedule()
+    assert all(it.end_override is None for it in sched2.items)
+
+
+def test_apply_stretch_sticks_through_retract_undo():
+    """A stretched task that is retracted and then restored by undo()
+    keeps its corrected duration (the correction is state, not an edit
+    on the restored placement)."""
+    spec = A30
+    tasks = generate_tasks(
+        3, spec, workload("mixed", "wide", spec), seed=5, id_offset=720
+    )
+    from repro.core.repartition import Assignment
+
+    eng = TimingEngine(Assignment(spec, {t.id: t for t in tasks}, {}))
+    key = spec.nodes[0].key
+    for t in tasks:
+        eng.apply_append(t.id, key)
+    last = tasks[-1]
+    eng.apply_stretch(last.id, 42.0)
+    m_stretched = eng.makespan()
+    eng.apply_retract(last.id)
+    eng.undo()  # restore the retracted placement
+    assert eng.makespan() == m_stretched
+    assert eng.stretched[last.id] == 42.0
+
+
+def test_apply_stretch_validation_and_replay_refusal():
+    spec = A100
+    tasks = generate_tasks(
+        2, spec, workload("mixed", "wide", spec), seed=1, id_offset=740
+    )
+    from repro.core.repartition import Assignment
+
+    asgn = Assignment(spec, {t.id: t for t in tasks}, {})
+    eng = TimingEngine(asgn)
+    key = spec.nodes[0].key
+    eng.apply_append(tasks[0].id, key)
+    with pytest.raises(ValueError, match="positive"):
+        eng.apply_stretch(tasks[0].id, 0.0)
+    # the replay reference models profiled durations only; runtime
+    # corrections are a TimingEngine capability
+    ref = ReplayEngine(asgn)
+    ref.apply_append(tasks[0].id, key)
+    with pytest.raises(NotImplementedError):
+        ref.apply_stretch(tasks[0].id, 5.0)
