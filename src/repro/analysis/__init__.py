@@ -1,0 +1,30 @@
+"""Static contract analyzer for the scheduler core.
+
+``python -m repro.analysis src/repro/core`` runs every checker over the
+given paths and exits nonzero on unsuppressed findings.  See
+``docs/api.md`` ("Static contract analysis") for the contract list, the
+pragma/baseline suppression workflow, and how to write a checker.
+"""
+
+from repro.analysis.baseline import (
+    BaselineEntry, BaselineError, apply_baseline, load_baseline,
+    write_baseline,
+)
+from repro.analysis.checkers import all_checkers
+from repro.analysis.framework import (
+    AnalysisContext, Checker, Finding, SourceModule, run_analysis,
+)
+
+__all__ = [
+    "AnalysisContext",
+    "BaselineEntry",
+    "BaselineError",
+    "Checker",
+    "Finding",
+    "SourceModule",
+    "all_checkers",
+    "apply_baseline",
+    "load_baseline",
+    "run_analysis",
+    "write_baseline",
+]

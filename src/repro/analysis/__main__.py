@@ -1,0 +1,148 @@
+"""CLI for the scheduler contract analyzer.
+
+Usage (from the repo root)::
+
+    python -m repro.analysis src/repro/core
+    python -m repro.analysis --select determinism,engine-routing src/...
+    python -m repro.analysis --no-baseline --format json src/repro/core
+    python -m repro.analysis --write-baseline src/repro/core
+
+Exit codes: 0 clean, 1 findings / stale baseline entries, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.baseline import (
+    BaselineError, apply_baseline, load_baseline, write_baseline,
+)
+from repro.analysis.checkers import all_checkers
+from repro.analysis.framework import run_analysis
+
+DEFAULT_BASELINE = "tools/contracts_baseline.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract analyzer for the scheduler core",
+    )
+    parser.add_argument("paths", nargs="*", help=".py files or directories")
+    parser.add_argument(
+        "--baseline", default=DEFAULT_BASELINE,
+        help=f"baseline JSON (default: {DEFAULT_BASELINE}; silently "
+             f"skipped if absent unless given explicitly)",
+    )
+    parser.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the baseline file entirely",
+    )
+    parser.add_argument(
+        "--write-baseline", action="store_true",
+        help="write all current findings to the baseline file with "
+             "FIXME justifications (hand-edit before committing; the "
+             "loader rejects empty ones)",
+    )
+    parser.add_argument(
+        "--select", default=None, metavar="IDS",
+        help="comma-separated checker ids to run (default: all)",
+    )
+    parser.add_argument(
+        "--list-checkers", action="store_true",
+        help="print checker ids + contracts and exit",
+    )
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+    )
+    args = parser.parse_args(argv)
+
+    checkers = all_checkers()
+    if args.list_checkers:
+        for c in checkers:
+            print(f"{c.id}: {c.contract}")
+        return 0
+    if not args.paths:
+        parser.error("no paths given")
+    known = {c.id for c in checkers}
+    select = None
+    if args.select is not None:
+        select = frozenset(s.strip() for s in args.select.split(","))
+        unknown = select - known
+        if unknown:
+            parser.error(f"unknown checker ids: {', '.join(sorted(unknown))}")
+
+    try:
+        findings = run_analysis(args.paths, checkers, select=select)
+    except (FileNotFoundError, OSError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings, justification="FIXME")
+        print(
+            f"wrote {len(findings)} entries to {args.baseline} — replace "
+            f"every FIXME with a real one-line justification"
+        )
+        return 0
+
+    stale = []
+    explicit_baseline = any(
+        a.startswith("--baseline") for a in (argv or sys.argv[1:])
+    )
+    if not args.no_baseline:
+        try:
+            entries = load_baseline(args.baseline)
+        except FileNotFoundError:
+            if explicit_baseline:
+                print(
+                    f"error: baseline {args.baseline} not found",
+                    file=sys.stderr,
+                )
+                return 2
+            entries = []
+        except BaselineError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        findings, _used, stale = apply_baseline(findings, entries)
+
+    if args.format == "json":
+        print(json.dumps(
+            {
+                "findings": [
+                    {
+                        "check": f.check, "contract": f.contract,
+                        "path": f.path, "line": f.line,
+                        "message": f.message, "hint": f.hint, "key": f.key,
+                    }
+                    for f in findings
+                ],
+                "stale_baseline": [
+                    {"check": e.check, "path": e.path, "key": e.key}
+                    for e in stale
+                ],
+            },
+            indent=2,
+        ))
+    else:
+        for f in findings:
+            print(f.render())
+        for e in stale:
+            print(
+                f"{e.path}: stale baseline entry [{e.check}] key="
+                f"{e.key!r} — the finding is gone; delete the entry"
+            )
+        if findings or stale:
+            print(
+                f"\n{len(findings)} finding(s), "
+                f"{len(stale)} stale baseline entrie(s)"
+            )
+        else:
+            print("clean: no contract violations")
+    return 1 if findings or stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Small AST helpers shared by the checker plugins."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+__all__ = [
+    "dotted_name",
+    "annotation_names",
+    "class_functions",
+    "decorator_call_name",
+    "function_scopes",
+    "positional_arity",
+    "walk_scope",
+]
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def annotation_names(node: ast.AST | None) -> set[str]:
+    """Plain type names mentioned in an annotation — handles ``X``,
+    ``"X"``, ``X | None``, ``Optional[X]``, ``list[X]`` (outer + args)."""
+    out: set[str] = set()
+    if node is None:
+        return out
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return out
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.add(sub.attr)
+    return out
+
+
+def class_functions(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    """Directly-defined methods by name (no inheritance)."""
+    return {
+        stmt.name: stmt
+        for stmt in cls.body
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def decorator_call_name(dec: ast.expr) -> str | None:
+    """The callee name of a ``@f(...)`` decorator (``f`` for ``@m.f(...)``)."""
+    if isinstance(dec, ast.Call):
+        name = dotted_name(dec.func)
+        if name is not None:
+            return name.rsplit(".", 1)[-1]
+    return None
+
+
+def function_scopes(tree: ast.Module) -> Iterator[tuple[ast.AST, list[ast.stmt]]]:
+    """Yield (scope node, body) for the module and every function in it.
+
+    Class bodies are not scopes of their own here — methods are yielded
+    individually, and class-level statements belong to the module walk.
+    """
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def walk_scope(body: list[ast.stmt]) -> Iterator[ast.AST]:
+    """Walk statements without descending into nested function/lambda
+    scopes (pair with :func:`function_scopes`, which yields each scope
+    exactly once)."""
+    stack: list[ast.AST] = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def positional_arity(fn: ast.FunctionDef) -> tuple[int, bool]:
+    """(number of named positional params, accepts-extra?) — extra means
+    ``*args``/``**kwargs`` can absorb protocol arguments."""
+    a = fn.args
+    count = len(a.posonlyargs) + len(a.args)
+    return count, a.vararg is not None or a.kwarg is not None

@@ -1,0 +1,119 @@
+"""Baseline (grandfathered-findings) support for the contract analyzer.
+
+The baseline is a committed JSON file mapping known findings to one-line
+justifications.  It exists for violations that are *correct by a
+non-local argument* the static pass cannot see — e.g. the phase-3 winner
+materialisation calling :func:`repro.core.repartition.replay` directly
+(pinned bit-identical by the equivalence tests) — so the analyzer can be
+blocking in CI without forcing no-op churn.
+
+Matching is by fingerprint ``(check, path, key)``, not line number, so
+unrelated edits don't invalidate entries.  Every entry MUST carry a
+non-empty ``justification``; stale entries (matching no current finding)
+fail the run — an expired suppression means the violation was fixed and
+the baseline must shrink with it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+from repro.analysis.framework import Finding
+
+__all__ = ["BaselineEntry", "BaselineError", "load_baseline",
+           "apply_baseline", "write_baseline"]
+
+_VERSION = 1
+
+
+class BaselineError(ValueError):
+    """Malformed baseline file (bad shape, missing justification, ...)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    check: str
+    path: str
+    key: str
+    justification: str
+
+    @property
+    def fingerprint(self) -> tuple[str, str, str]:
+        return (self.check, self.path, self.key)
+
+
+def load_baseline(path: str) -> list[BaselineEntry]:
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict) or data.get("version") != _VERSION:
+        raise BaselineError(
+            f"{path}: expected a baseline object with version={_VERSION}"
+        )
+    entries: list[BaselineEntry] = []
+    seen: set[tuple[str, str, str]] = set()
+    for i, raw in enumerate(data.get("entries", [])):
+        try:
+            entry = BaselineEntry(
+                check=raw["check"], path=raw["path"], key=raw["key"],
+                justification=raw["justification"],
+            )
+        except (TypeError, KeyError) as exc:
+            raise BaselineError(
+                f"{path}: entry {i} is missing field {exc}"
+            ) from exc
+        if not entry.justification.strip():
+            raise BaselineError(
+                f"{path}: entry {i} ({entry.check} @ {entry.path} "
+                f"[{entry.key}]) has an empty justification — every "
+                f"baselined finding needs a one-line reason"
+            )
+        if entry.fingerprint in seen:
+            raise BaselineError(
+                f"{path}: duplicate entry for {entry.fingerprint}"
+            )
+        seen.add(entry.fingerprint)
+        entries.append(entry)
+    return entries
+
+
+def apply_baseline(
+    findings: Sequence[Finding], entries: Sequence[BaselineEntry],
+) -> tuple[list[Finding], list[BaselineEntry], list[BaselineEntry]]:
+    """Split findings against the baseline.
+
+    Returns ``(unsuppressed findings, used entries, stale entries)``.
+    """
+    by_fp = {e.fingerprint: e for e in entries}
+    used: dict[tuple[str, str, str], BaselineEntry] = {}
+    out: list[Finding] = []
+    for f in findings:
+        entry = by_fp.get(f.fingerprint)
+        if entry is None:
+            out.append(f)
+        else:
+            used[entry.fingerprint] = entry
+    stale = [e for e in entries if e.fingerprint not in used]
+    return out, list(used.values()), stale
+
+
+def write_baseline(path: str, findings: Sequence[Finding],
+                   justification: str) -> None:
+    """Emit a baseline covering ``findings``, every entry stamped with
+    the same placeholder ``justification`` (meant to be hand-edited —
+    the loader rejects empty ones, and review should reject lazy ones).
+    """
+    data = {
+        "version": _VERSION,
+        "entries": [
+            {
+                "check": f.check, "path": f.path, "key": f.key,
+                "justification": justification,
+            }
+            for f in findings
+        ],
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=False)
+        fh.write("\n")

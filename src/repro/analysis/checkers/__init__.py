@@ -1,0 +1,34 @@
+"""Checker plugin registry.
+
+Adding a checker = write a :class:`~repro.analysis.framework.Checker`
+subclass in this package and list it here; the CLI, the baseline
+machinery and the test harness discover it through
+:func:`all_checkers`.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.checkers.determinism import DeterminismChecker
+from repro.analysis.checkers.engine_routing import EngineRoutingChecker
+from repro.analysis.checkers.frozen_surface import FrozenSurfaceChecker
+from repro.analysis.checkers.registry_conformance import (
+    RegistryConformanceChecker,
+)
+from repro.analysis.checkers.undo_completeness import (
+    UndoCompletenessChecker,
+)
+
+__all__ = ["all_checkers"]
+
+_CHECKERS = (
+    DeterminismChecker,
+    EngineRoutingChecker,
+    UndoCompletenessChecker,
+    FrozenSurfaceChecker,
+    RegistryConformanceChecker,
+)
+
+
+def all_checkers():
+    """Fresh instances of every registered checker, in a fixed order."""
+    return [cls() for cls in _CHECKERS]

@@ -1,0 +1,294 @@
+"""Determinism lint: plan bytes must depend only on (tasks, spec, config,
+seed).
+
+The whole evaluation methodology — replay equivalence, the fault
+injector's counterfactuals, cross-run benchmark comparisons — assumes a
+schedule is a pure function of its inputs.  This checker flags the
+syntactic ways nondeterminism leaks into that function:
+
+* **wall-clock reads** (``time.time``, ``datetime.now``, ...).
+  ``time.perf_counter`` is deliberately allowed: by repo policy it only
+  feeds the ``elapsed_s``/``phase_s`` instrumentation fields, never a
+  placement decision, and banning it would bury the real signal.
+* **unseeded RNG** — ``random.Random()`` / ``np.random.default_rng()``
+  with no seed argument, and any call through the *module-level* global
+  RNG (``random.random()``, ``np.random.shuffle`` ...).  The blessed
+  pattern (``synth.py`` / ``faults.py``) is a seeded constructor whose
+  seed arrives from the caller.
+* **iteration over sets** in ordering-sensitive positions: a ``for``
+  statement, list comprehension or generator expression whose iterable
+  is (or was assigned from) a set expression.  Set iteration order is
+  hash-layout order; for ``str``/object elements it varies per process.
+  Building an *unordered* container from a set (dict/set comprehension)
+  is allowed — order only leaks when such a derived dict is itself
+  iterated, which is flagged separately.  Wrapping the iterable in
+  ``sorted(...)`` clears the finding.
+* **``set.pop()``** — pops an arbitrary element.
+* **``id(...)``** — identity reflects memory layout; used as (part of)
+  a key it can order results by allocation history.
+
+Sites that are deterministic by a non-local argument (e.g. iteration
+over a set of int-tuples whose hash CPython pins, mirrored exactly by
+the replay reference) are suppressed inline with a justification pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.astutil import dotted_name, function_scopes, walk_scope
+from repro.analysis.framework import (
+    AnalysisContext, Checker, Finding, SourceModule,
+)
+
+__all__ = ["DeterminismChecker"]
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.localtime", "time.gmtime",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+# functions on the module-level global RNG state
+_RANDOM_MODULE_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "betavariate",
+    "expovariate", "seed", "getrandbits", "triangular",
+}
+
+# methods that return a new set from a set receiver
+_SET_RETURNING_METHODS = {
+    "union", "intersection", "difference", "symmetric_difference", "copy",
+}
+
+# repo APIs documented to return sets
+_KNOWN_SET_APIS = {"active_keys"}
+
+
+class _Scope:
+    """Flow-insensitive local type marks for one function/module scope."""
+
+    def __init__(self) -> None:
+        self.sets: set[str] = set()         # names bound to set values
+        self.set_dicts: set[str] = set()    # dicts comprehended over a set
+
+    def is_set(self, node: ast.expr) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.sets
+        if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitAnd, ast.BitOr, ast.Sub, ast.BitXor)
+        ):
+            return self.is_set(node.left) or self.is_set(node.right)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in ("set", "frozenset"):
+                return True
+            if isinstance(fn, ast.Attribute):
+                if fn.attr in _KNOWN_SET_APIS:
+                    return True
+                if fn.attr in _SET_RETURNING_METHODS and \
+                        self.is_set(fn.value):
+                    return True
+        return False
+
+    def is_set_ordered_dict(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.DictComp):
+            return any(self.is_set(g.iter) for g in node.generators)
+        if isinstance(node, ast.Name):
+            return node.id in self.set_dicts
+        return False
+
+
+def _mark_scope(body: list[ast.stmt]) -> _Scope:
+    scope = _Scope()
+    for stmt in body:
+        for node in walk_scope([stmt]):
+            targets: list[ast.expr] = []
+            value: ast.expr | None = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            if value is None:
+                continue
+            for tgt in targets:
+                if not isinstance(tgt, ast.Name):
+                    continue
+                if scope.is_set(value):
+                    scope.sets.add(tgt.id)
+                elif scope.is_set_ordered_dict(value):
+                    scope.set_dicts.add(tgt.id)
+    return scope
+
+
+def _iterables(body: list[ast.stmt]) -> Iterator[tuple[ast.expr, str]]:
+    """(iterable expression, context word) for every ordering-sensitive
+    iteration in the scope body (inner function bodies excluded)."""
+    for node in walk_scope(body):
+        if isinstance(node, ast.For):
+            yield node.iter, "for loop"
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter, "comprehension"
+
+
+def _unwrap_sorted(node: ast.expr) -> ast.expr | None:
+    """The argument of a ``sorted(...)``/``min``/``max`` wrapper, if any
+    (these are order-insensitive consumers of their iterable)."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("sorted", "min", "max", "sum", "len"):
+        return node.args[0] if node.args else None
+    return None
+
+
+class DeterminismChecker(Checker):
+    id = "determinism"
+    contract = (
+        "plan bytes are a pure function of (tasks, spec, config, seed)"
+    )
+
+    def run(self, module: SourceModule, ctx: AnalysisContext
+            ) -> Iterable[Finding]:
+        imports = _module_imports(module.tree)
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(module, node, imports)
+        for _scope_node, body in function_scopes(module.tree):
+            scope = _mark_scope(body)
+            for it, context in _iterables(body):
+                if _unwrap_sorted(it) is not None:
+                    continue
+                if scope.is_set(it):
+                    yield self.finding(
+                        module, it.lineno,
+                        f"{context} iterates a set — element order is "
+                        f"hash-layout order",
+                        "iterate sorted(...) (or restructure so order "
+                        "cannot reach a placement/tie-break decision); "
+                        "if provably deterministic, suppress with a "
+                        "justified pragma",
+                        key=f"set-iteration:{_key_expr(it)}",
+                    )
+                elif scope.is_set_ordered_dict(it) or (
+                    isinstance(it, ast.Call)
+                    and isinstance(it.func, ast.Attribute)
+                    and it.func.attr in ("values", "keys", "items")
+                    and scope.is_set_ordered_dict(it.func.value)
+                ):
+                    yield self.finding(
+                        module, it.lineno,
+                        f"{context} iterates a dict whose insertion "
+                        f"order came from a set",
+                        "sort the set before building the dict, or "
+                        "iterate sorted(d)",
+                        key=f"set-ordered-dict:{_key_expr(it)}",
+                    )
+
+    def _check_call(self, module: SourceModule, node: ast.Call,
+                    imports: set[str]) -> Iterator[Finding]:
+        name = dotted_name(node.func)
+        if name in _WALL_CLOCK:
+            yield self.finding(
+                module, node.lineno,
+                f"wall-clock read {name}() — differs per run",
+                "derive times from the simulated clock / submitted "
+                "arrival times; time.perf_counter is allowed for "
+                "elapsed_s-style instrumentation only",
+                key=f"wall-clock:{name}",
+            )
+            return
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "pop" and not node.args:
+            # .pop() with no args on a set pops an arbitrary element;
+            # only flag receivers that are syntactically sets
+            if isinstance(node.func.value, (ast.Set, ast.SetComp)) or (
+                isinstance(node.func.value, ast.Call)
+                and isinstance(node.func.value.func, ast.Name)
+                and node.func.value.func.id in ("set", "frozenset")
+            ):
+                yield self.finding(
+                    module, node.lineno,
+                    "set.pop() removes an arbitrary element",
+                    "pop from a sorted list, or min/max the set",
+                    key="set-pop",
+                )
+                return
+        if name is None:
+            return
+        head, _, tail = name.partition(".")
+        # unseeded constructors
+        if name in ("random.Random", "Random") and not node.args:
+            yield self.finding(
+                module, node.lineno,
+                "random.Random() without a seed — OS-entropy seeded",
+                "pass an explicit seed derived from config/spec "
+                "(the synth.py / faults.py pattern)",
+                key="unseeded:random.Random",
+            )
+            return
+        if name.endswith("random.default_rng") and not node.args:
+            yield self.finding(
+                module, node.lineno,
+                "np.random.default_rng() without a seed",
+                "pass an explicit seed (generate_tasks(..., seed=) "
+                "style)",
+                key="unseeded:default_rng",
+            )
+            return
+        # module-level global-RNG calls
+        if head == "random" and "random" in imports \
+                and tail in _RANDOM_MODULE_FNS:
+            yield self.finding(
+                module, node.lineno,
+                f"{name}() uses the process-global RNG",
+                "construct a seeded random.Random(seed) and call "
+                "methods on it",
+                key=f"global-rng:{name}",
+            )
+            return
+        if head in ("np", "numpy") and tail.startswith("random.") \
+                and not tail.endswith("default_rng"):
+            yield self.finding(
+                module, node.lineno,
+                f"{name}() uses numpy's process-global RNG",
+                "construct np.random.default_rng(seed) and call "
+                "methods on it",
+                key=f"global-rng:{name}",
+            )
+            return
+        if isinstance(node.func, ast.Name) and node.func.id == "id":
+            yield self.finding(
+                module, node.lineno,
+                "id(...) exposes memory layout — as a key it can order "
+                "results by allocation history",
+                "key on content (or a handed-out monotonic token); an "
+                "identity key is only safe when a strong reference "
+                "pins the object and a hit/miss cannot change output "
+                "bytes — justify with a pragma if so",
+                key="id-call",
+            )
+
+
+def _module_imports(tree: ast.Module) -> set[str]:
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                names.add(alias.asname or alias.name.partition(".")[0])
+    return names
+
+
+def _key_expr(node: ast.expr) -> str:
+    """Compact, line-free description of an iterable for fingerprints."""
+    name = dotted_name(node)
+    if name is not None:
+        return name
+    if isinstance(node, ast.Call):
+        fn = dotted_name(node.func)
+        return f"{fn or '<call>'}()"
+    return type(node).__name__.lower()

@@ -1,0 +1,110 @@
+"""Engine-routing check: all timing flows through the TimingEngine API.
+
+ROADMAP standing contract: "route any new timing consumer through the
+engine API".  The replay layer (:mod:`repro.core.repartition`) and the
+engine internals (duration chains, the undo log, the simulation caches)
+are implementation surface — a consumer that folds chain times by hand
+or replays per candidate silently forks the timing semantics, and the
+bit-identity tests only catch it on the paths they happen to cross.
+
+Rules (outside the blessed modules — ``timing.py`` itself,
+``repartition.py`` where ``replay`` lives, and ``family_eval.py`` whose
+registered evaluators are the sanctioned phase-2 scorers):
+
+* no *call* to ``replay(...)`` — use ``make_engine`` /
+  ``TimingEngine`` / ``chains_makespan`` instead.  The historical
+  winner-materialisation call sites are baselined with justifications;
+  new ones fail CI.
+* no *unused* import of ``replay`` — dead routing surface invites the
+  next call.
+* no access to engine internals (``.durs``, ``._log``, ``.stretched``,
+  simulation caches) on a receiver other than ``self`` — the engine
+  exposes ``chain_durations()`` / ``log_length`` / accessor queries for
+  every sanctioned need.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.astutil import dotted_name
+from repro.analysis.framework import (
+    AnalysisContext, Checker, Finding, SourceModule,
+)
+
+__all__ = ["EngineRoutingChecker"]
+
+BLESSED = {"timing.py", "repartition.py", "family_eval.py"}
+
+# attributes of ChainState/TimingEngine that are implementation surface
+_ENGINE_INTERNALS = {
+    "durs", "stretched", "_log", "_chain_ver", "_task_node",
+    "_invalidate", "_simulate", "_chain_folds", "_rc_starts", "_entries",
+}
+
+_REPLAY_HINT = (
+    "route through make_engine()/TimingEngine accessors or "
+    "chains_makespan(); if this site is pinned bit-identical by the "
+    "equivalence tests, baseline it with a justification"
+)
+
+
+class EngineRoutingChecker(Checker):
+    id = "engine-routing"
+    contract = (
+        "timing consumers go through the TimingEngine/chains_makespan "
+        "API, never the replay layer or engine internals"
+    )
+
+    def run(self, module: SourceModule, ctx: AnalysisContext
+            ) -> Iterable[Finding]:
+        if module.basename in BLESSED:
+            return
+        replay_imported = False
+        replay_import_line = 0
+        replay_used = False
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ImportFrom):
+                if node.module and node.module.endswith("repartition"):
+                    for alias in node.names:
+                        if alias.name == "replay" and alias.asname is None:
+                            replay_imported = True
+                            replay_import_line = node.lineno
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name == "replay" or (
+                    name is not None and name.endswith(".replay")
+                    and "repartition" in name
+                ):
+                    replay_used = True
+                    yield self.finding(
+                        module, node.lineno,
+                        "direct replay() call outside the timing layer",
+                        _REPLAY_HINT,
+                        key="call:replay",
+                    )
+            elif isinstance(node, ast.Attribute):
+                if node.attr in _ENGINE_INTERNALS and isinstance(
+                    node.value, ast.Name
+                ) and node.value.id not in ("self", "cls"):
+                    yield self.finding(
+                        module, node.lineno,
+                        f"access to engine internal "
+                        f"`.{node.attr}` on `{node.value.id}`",
+                        "use the public engine API (chain_durations(), "
+                        "log_length, task_begin_end(), ...) — extend it "
+                        "in timing.py if a query is missing",
+                        key=f"internal:{node.attr}",
+                    )
+        # package __init__ re-exports are API surface (the equivalence
+        # tests replay() against engines through it), not dead routing
+        if replay_imported and not replay_used \
+                and module.basename != "__init__.py":
+            yield self.finding(
+                module, replay_import_line,
+                "unused import of replay from the repartition layer",
+                "delete the import — unused routing surface invites "
+                "bypassing the engine API",
+                key="unused-import:replay",
+            )

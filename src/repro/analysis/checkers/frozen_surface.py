@@ -1,0 +1,175 @@
+"""Frozen-surface check: config/result/task objects are not mutated.
+
+``SchedulerConfig`` and ``Task`` are frozen dataclasses; ``PlanResult``
+is *documented* as a builder that only its producing policy finalises
+(``policy.py``'s ``BasePolicy.plan``).  An attribute assignment on any
+of them from arbitrary code would either crash at runtime (the frozen
+ones) or — worse for the reproducibility story — quietly rewrite a plan
+after the invariant harness blessed it.  dataclasses only enforce this
+dynamically and ``object.__setattr__`` bypasses even that, so the
+contract is enforced here syntactically.
+
+Type inference is local and deliberately simple: a name is considered
+one of the guarded types when it is annotated as such (parameter or
+variable), assigned from the type's constructor, from
+``dataclasses.replace`` / ``.replace()`` of a guarded value, or from a
+``.plan(...)`` / ``._plan_fresh(...)`` call (the policy protocol returns
+``PlanResult``).  Mutation inside the type's *defining module* is
+allowed — that is where the constructor/builder idiom lives.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.astutil import (
+    annotation_names, dotted_name, function_scopes, walk_scope,
+)
+from repro.analysis.framework import (
+    AnalysisContext, Checker, Finding, SourceModule,
+)
+
+__all__ = ["FrozenSurfaceChecker", "GUARDED_TYPES"]
+
+# type name -> defining module (mutation allowed there: constructors,
+# __post_init__, and the documented PlanResult builder in BasePolicy.plan)
+GUARDED_TYPES = {
+    "SchedulerConfig": "policy.py",
+    "PlanResult": "policy.py",
+    "Task": "problem.py",
+}
+
+# protocol methods whose return type is known repo-wide
+_KNOWN_RETURNS = {"plan": "PlanResult", "_plan_fresh": "PlanResult"}
+
+
+def _infer(scope_node: ast.AST, body: list[ast.stmt],
+           returns: dict[str, str]) -> dict[str, str]:
+    """name -> guarded type name, flow-insensitive, one scope."""
+    types: dict[str, str] = {}
+    if isinstance(scope_node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        args = scope_node.args
+        for arg in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            hit = annotation_names(arg.annotation) & GUARDED_TYPES.keys()
+            if hit:
+                types[arg.arg] = next(iter(hit))
+
+    def expr_type(node: ast.expr) -> str | None:
+        if isinstance(node, ast.Call):
+            fn = node.func
+            tail = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None
+            )
+            if tail is not None:
+                name = dotted_name(fn) or tail
+                if tail in GUARDED_TYPES:
+                    return tail
+                if tail in _KNOWN_RETURNS:
+                    return _KNOWN_RETURNS[tail]
+                if tail in returns:
+                    return returns[tail]
+                if tail == "replace":
+                    if name in ("dataclasses.replace", "replace"):
+                        if node.args:
+                            return expr_type(node.args[0])
+                    elif isinstance(fn, ast.Attribute):
+                        return expr_type(fn.value)
+        elif isinstance(node, ast.Name):
+            return types.get(node.id)
+        elif isinstance(node, ast.BoolOp):
+            for v in node.values:
+                t = expr_type(v)
+                if t is not None:
+                    return t
+        elif isinstance(node, ast.IfExp):
+            return expr_type(node.body) or expr_type(node.orelse)
+        return None
+
+    for stmt in body:
+        for node in walk_scope([stmt]):
+            if isinstance(node, ast.Assign):
+                t = expr_type(node.value)
+                if t is not None:
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            types[tgt.id] = t
+            elif isinstance(node, ast.AnnAssign) \
+                    and isinstance(node.target, ast.Name):
+                hit = annotation_names(node.annotation) \
+                    & GUARDED_TYPES.keys()
+                if hit:
+                    types[node.target.id] = next(iter(hit))
+                elif node.value is not None:
+                    t = expr_type(node.value)
+                    if t is not None:
+                        types[node.target.id] = t
+    return types
+
+
+class FrozenSurfaceChecker(Checker):
+    id = "frozen-surface"
+    contract = (
+        "SchedulerConfig/PlanResult/Task instances are never mutated "
+        "outside their defining module (constructors / replace / the "
+        "documented PlanResult builder)"
+    )
+
+    def run(self, module: SourceModule, ctx: AnalysisContext
+            ) -> Iterable[Finding]:
+        returns = _return_types(module.tree)
+        for scope_node, body in function_scopes(module.tree):
+            types = _infer(scope_node, body, returns)
+            fn_name = getattr(scope_node, "name", "<module>")
+            for node in walk_scope(body):
+                yield from self._check_node(module, node, types, fn_name)
+
+    def _check_node(self, module, node, types: dict[str, str],
+                    fn_name: str) -> Iterable[Finding]:
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in targets:
+                if isinstance(tgt, ast.Attribute) \
+                        and isinstance(tgt.value, ast.Name):
+                    t = types.get(tgt.value.id)
+                    if t is not None \
+                            and module.basename != GUARDED_TYPES[t]:
+                        yield self.finding(
+                            module, tgt.lineno,
+                            f"attribute assignment "
+                            f"`{tgt.value.id}.{tgt.attr} = ...` on a "
+                            f"{t} instance",
+                            f"build a new {t} via its constructor or "
+                            f"dataclasses.replace(); only the defining "
+                            f"module may mutate",
+                            key=f"mutate:{t}.{tgt.attr}",
+                        )
+        elif isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name == "object.__setattr__" and len(node.args) >= 2 \
+                    and fn_name not in ("__init__", "__post_init__",
+                                        "__setattr__"):
+                t = None
+                if isinstance(node.args[0], ast.Name):
+                    t = types.get(node.args[0].id)
+                yield self.finding(
+                    module, node.lineno,
+                    "object.__setattr__ outside __init__/__post_init__"
+                    + (f" on a {t} instance" if t else ""),
+                    "frozen means frozen — construct a new instance "
+                    "instead of bypassing the dataclass guard",
+                    key="setattr-bypass",
+                )
+
+
+def _return_types(tree: ast.Module) -> dict[str, str]:
+    """function name -> guarded return type, from annotations in this
+    module (methods included — resolution is by bare name)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            hit = annotation_names(node.returns) & GUARDED_TYPES.keys()
+            if hit:
+                out[node.name] = next(iter(hit))
+    return out

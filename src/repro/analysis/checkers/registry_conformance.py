@@ -1,0 +1,205 @@
+"""Registry-conformance check: registered plugins satisfy their protocol.
+
+``@register_policy`` / ``@register_evaluator`` wire classes into the
+string-keyed registries at import time; nothing checks the class shape
+until a benchmark or the invariant harness calls it — and a typo'd
+``SchedulerConfig`` field read (``config.max_refine_iters``) raises only
+on the config paths a test happens to exercise.  This checker validates
+statically, against the dataclass definition itself:
+
+* every ``@register_policy`` class defines ``plan(self, tasks, spec,
+  config, tail)`` or the ``BasePolicy`` hook ``_plan_fresh(self, tasks,
+  spec, config)`` with the protocol arity;
+* every ``@register_evaluator`` class defines ``evaluate(self, tasks,
+  spec, first, deltas, config)``;
+* attribute reads on a value *annotated* ``SchedulerConfig`` (or
+  assigned from its constructor / ``.replace()``) name real fields —
+  the field set is parsed from the ``SchedulerConfig`` class body
+  wherever it is defined in the analyzed file set.  Inference is
+  annotation-driven on purpose: a bare ``cfg`` name proves nothing
+  (``costmodel.py`` uses it for model configs).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.astutil import (
+    annotation_names, class_functions, decorator_call_name,
+    function_scopes, positional_arity, walk_scope,
+)
+from repro.analysis.framework import (
+    AnalysisContext, Checker, Finding, SourceModule,
+)
+
+__all__ = ["RegistryConformanceChecker"]
+
+
+
+
+def _config_surface(ctx: AnalysisContext) -> set[str] | None:
+    """Fields + methods of SchedulerConfig, or None when the class is
+    not in the analyzed file set (the field check then stays silent —
+    the analyzer never guesses an API it cannot see)."""
+    for mod in ctx.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) \
+                    and node.name == "SchedulerConfig":
+                names: set[str] = set()
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) \
+                            and isinstance(stmt.target, ast.Name):
+                        names.add(stmt.target.id)
+                    elif isinstance(stmt, ast.Assign):
+                        for tgt in stmt.targets:
+                            if isinstance(tgt, ast.Name):
+                                names.add(tgt.id)
+                    elif isinstance(
+                        stmt, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        names.add(stmt.name)
+                return names
+    return None
+
+
+class RegistryConformanceChecker(Checker):
+    id = "registry-conformance"
+    contract = (
+        "registered policies/evaluators satisfy the protocol shape and "
+        "reference only existing SchedulerConfig fields"
+    )
+
+    def run(self, module: SourceModule, ctx: AnalysisContext
+            ) -> Iterable[Finding]:
+        surface = _config_surface(ctx)
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(module, node)
+        if surface is not None and module.basename != "policy.py":
+            yield from self._check_config_reads(module, surface)
+
+    def _check_class(self, module: SourceModule, cls: ast.ClassDef
+                     ) -> Iterable[Finding]:
+        decs = {decorator_call_name(d) for d in cls.decorator_list}
+        fns = class_functions(cls)
+        if "register_policy" in decs:
+            plan, fresh = fns.get("plan"), fns.get("_plan_fresh")
+            if plan is None and fresh is None:
+                yield self.finding(
+                    module, cls.lineno,
+                    f"registered policy {cls.name} defines neither "
+                    f"plan() nor _plan_fresh()",
+                    "implement _plan_fresh(self, tasks, spec, config) "
+                    "(BasePolicy handles tails) or override plan() "
+                    "with the full protocol",
+                    key=f"policy-missing-plan:{cls.name}",
+                )
+            if plan is not None:
+                n, extra = positional_arity(plan)
+                if n < 5 and not extra:
+                    yield self.finding(
+                        module, plan.lineno,
+                        f"{cls.name}.plan takes {n} parameters; the "
+                        f"protocol is plan(self, tasks, spec, config, "
+                        f"tail)",
+                        "match the SchedulerPolicy protocol — the "
+                        "registry calls every policy identically",
+                        key=f"policy-shape:{cls.name}.plan",
+                    )
+            if fresh is not None:
+                n, extra = positional_arity(fresh)
+                if n < 4 and not extra:
+                    yield self.finding(
+                        module, fresh.lineno,
+                        f"{cls.name}._plan_fresh takes {n} parameters; "
+                        f"the hook is _plan_fresh(self, tasks, spec, "
+                        f"config)",
+                        "match the BasePolicy hook signature",
+                        key=f"policy-shape:{cls.name}._plan_fresh",
+                    )
+        if "register_evaluator" in decs:
+            ev = fns.get("evaluate")
+            if ev is None:
+                yield self.finding(
+                    module, cls.lineno,
+                    f"registered evaluator {cls.name} defines no "
+                    f"evaluate()",
+                    "implement evaluate(self, tasks, spec, first, "
+                    "deltas, config)",
+                    key=f"evaluator-missing:{cls.name}",
+                )
+            else:
+                n, extra = positional_arity(ev)
+                if n < 6 and not extra:
+                    yield self.finding(
+                        module, ev.lineno,
+                        f"{cls.name}.evaluate takes {n} parameters; "
+                        f"the protocol is evaluate(self, tasks, spec, "
+                        f"first, deltas, config)",
+                        "match the FamilyEvaluator protocol",
+                        key=f"evaluator-shape:{cls.name}.evaluate",
+                    )
+
+    def _check_config_reads(self, module: SourceModule,
+                            surface: set[str]) -> Iterable[Finding]:
+        for scope_node, body in function_scopes(module.tree):
+            receivers = _config_receivers(scope_node, body)
+            if not receivers:
+                continue
+            for node in walk_scope(body):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.value, ast.Name) \
+                        and node.value.id in receivers \
+                        and isinstance(node.ctx, ast.Load) \
+                        and not node.attr.startswith("__") \
+                        and node.attr not in surface:
+                    yield self.finding(
+                        module, node.lineno,
+                        f"`{node.value.id}.{node.attr}` is not a "
+                        f"SchedulerConfig field",
+                        "fix the field name, or add the field to "
+                        "SchedulerConfig (policy.py) with a default",
+                        key=f"unknown-field:{node.attr}",
+                    )
+
+
+def _config_receivers(scope_node: ast.AST, body: list[ast.stmt]
+                      ) -> set[str]:
+    """Names in this scope proven to hold a SchedulerConfig: parameters
+    annotated with it, and locals assigned from its constructor or from
+    ``<receiver>.replace(...)``."""
+    names: set[str] = set()
+    if isinstance(scope_node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        args = scope_node.args
+        for arg in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            if "SchedulerConfig" in annotation_names(arg.annotation):
+                names.add(arg.arg)
+
+    def is_config(node: ast.expr) -> bool:
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "SchedulerConfig":
+                return True
+            if isinstance(fn, ast.Attribute) and fn.attr in (
+                "SchedulerConfig", "replace"
+            ) and (
+                fn.attr != "replace" or is_config(fn.value)
+            ):
+                return True
+        elif isinstance(node, ast.Name):
+            return node.id in names
+        elif isinstance(node, ast.BoolOp):
+            return any(is_config(v) for v in node.values)
+        return False
+
+    for node in walk_scope(body):
+        if isinstance(node, ast.Assign) and is_config(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name) \
+                and "SchedulerConfig" in annotation_names(node.annotation):
+            names.add(node.target.id)
+    return names

@@ -1,0 +1,230 @@
+"""Undo-completeness check: every logged opcode has an exact inverse.
+
+``ChainState`` promises that after any ``apply_*`` sequence, ``undo()``
+restores bit-identical state — the speculative search paths (refinement,
+seam move/swap, cluster edits) and the serving rollback token depend on
+it.  The contract is structural: an ``apply_*`` that appends
+``("<op>", ...)`` to ``self._log`` without a matching ``kind == "<op>"``
+branch in ``undo()`` (with the same tuple arity) ships a one-way edit
+that only fails when a search path happens to roll it back.
+
+Checks, per class that appends to ``self._log``:
+
+* every logged opcode has an ``undo()`` branch (in the class or a base
+  in the same module), and the branch's ``..., = entry`` unpack arity
+  matches the logged tuple;
+* ``undo()`` branches name only opcodes that are actually logged (a
+  dead inverse is usually a renamed opcode);
+* ``undo()`` ends in an explicit ``raise`` for unknown kinds — silently
+  ignoring an unknown entry corrupts the rollback position;
+* a subclass that overrides an ``apply_*`` method must keep the
+  contract: delegate to ``super()``, log its own entry, or *explicitly
+  refuse* with ``raise NotImplementedError`` (the ``ReplayEngine``
+  pattern for ops it cannot replay).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.astutil import class_functions
+from repro.analysis.framework import (
+    AnalysisContext, Checker, Finding, SourceModule,
+)
+
+__all__ = ["UndoCompletenessChecker"]
+
+
+def _logged_ops(cls: ast.ClassDef) -> dict[str, tuple[int, int]]:
+    """opcode -> (tuple arity, line) from ``self._log.append((...))``."""
+    ops: dict[str, tuple[int, int]] = {}
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (
+            isinstance(fn, ast.Attribute) and fn.attr == "append"
+            and isinstance(fn.value, ast.Attribute)
+            and fn.value.attr == "_log"
+            and isinstance(fn.value.value, ast.Name)
+            and fn.value.value.id == "self"
+        ):
+            continue
+        if len(node.args) == 1 and isinstance(node.args[0], ast.Tuple):
+            tup = node.args[0]
+            if tup.elts and isinstance(tup.elts[0], ast.Constant) \
+                    and isinstance(tup.elts[0].value, str):
+                ops[tup.elts[0].value] = (len(tup.elts), node.lineno)
+    return ops
+
+
+def _undo_branches(fn: ast.FunctionDef
+                   ) -> tuple[dict[str, tuple[int | None, int]], bool]:
+    """opcode -> (unpack arity or None, line) plus has-final-raise."""
+    branches: dict[str, tuple[int | None, int]] = {}
+    has_raise = False
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.If):
+            continue
+        test = node.test
+        if not (
+            isinstance(test, ast.Compare)
+            and len(test.ops) == 1 and isinstance(test.ops[0], ast.Eq)
+            and isinstance(test.comparators[0], ast.Constant)
+            and isinstance(test.comparators[0].value, str)
+        ):
+            continue
+        op = test.comparators[0].value
+        arity: int | None = None
+        for sub in node.body:
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1 \
+                    and isinstance(sub.targets[0], ast.Tuple):
+                arity = len(sub.targets[0].elts)
+                break
+        branches[op] = (arity, node.lineno)
+        # the terminal else of the elif chain must raise
+        tail = node.orelse
+        if tail and not (len(tail) == 1 and isinstance(tail[0], ast.If)):
+            if any(isinstance(s, ast.Raise) for s in tail):
+                has_raise = True
+    return branches, has_raise
+
+
+def _raises_not_implemented(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Raise) and node.exc is not None:
+            exc = node.exc
+            name = exc.func if isinstance(exc, ast.Call) else exc
+            if isinstance(name, ast.Name) \
+                    and name.id == "NotImplementedError":
+                return True
+    return False
+
+
+def _calls_super(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "super":
+            return True
+    return False
+
+
+class UndoCompletenessChecker(Checker):
+    id = "undo-completeness"
+    contract = (
+        "every self._log opcode has an exact undo() inverse; engines "
+        "explicitly refuse ops they cannot honour"
+    )
+
+    def run(self, module: SourceModule, ctx: AnalysisContext
+            ) -> Iterable[Finding]:
+        classes = {
+            node.name: node
+            for node in ast.walk(module.tree)
+            if isinstance(node, ast.ClassDef)
+        }
+        bases = {
+            name: [
+                b.id for b in cls.bases if isinstance(b, ast.Name)
+            ]
+            for name, cls in classes.items()
+        }
+
+        def ancestry(name: str) -> list[str]:
+            out, todo = [], list(bases.get(name, ()))
+            while todo:
+                b = todo.pop(0)
+                if b in classes and b not in out:
+                    out.append(b)
+                    todo.extend(bases.get(b, ()))
+            return out
+
+        logging_classes = {
+            name: _logged_ops(cls) for name, cls in classes.items()
+            if _logged_ops(cls)
+        }
+
+        for name, ops in logging_classes.items():
+            cls = classes[name]
+            undo_fn = class_functions(cls).get("undo")
+            if undo_fn is None:
+                for anc in ancestry(name):
+                    undo_fn = class_functions(classes[anc]).get("undo")
+                    if undo_fn is not None:
+                        break
+            if undo_fn is None:
+                yield self.finding(
+                    module, cls.lineno,
+                    f"{name} appends to self._log but defines no undo()",
+                    "add an undo() with one exact-inverse branch per "
+                    "opcode",
+                    key=f"no-undo:{name}",
+                )
+                continue
+            branches, has_raise = _undo_branches(undo_fn)
+            for op, (arity, line) in sorted(ops.items()):
+                if op not in branches:
+                    yield self.finding(
+                        module, line,
+                        f"opcode \"{op}\" is logged by {name} but "
+                        f"undo() has no branch for it",
+                        "add an `elif kind == \"" + op + "\"` branch "
+                        "restoring the exact pre-edit state",
+                        key=f"missing-undo:{op}",
+                    )
+                elif branches[op][0] is not None \
+                        and branches[op][0] != arity:
+                    yield self.finding(
+                        module, branches[op][1],
+                        f"undo() unpacks {branches[op][0]} fields for "
+                        f"\"{op}\" but the log entry has {arity}",
+                        "make the log tuple and the undo unpack agree",
+                        key=f"arity:{op}",
+                    )
+            for op, (_a, line) in sorted(branches.items()):
+                if op not in ops:
+                    yield self.finding(
+                        module, line,
+                        f"undo() handles \"{op}\" but no apply_* in "
+                        f"{name} logs it",
+                        "delete the dead branch, or restore the "
+                        "apply_* that logged it",
+                        key=f"orphan-undo:{op}",
+                    )
+            if not has_raise:
+                yield self.finding(
+                    module, undo_fn.lineno,
+                    f"{name}.undo() has no terminal raise for unknown "
+                    f"opcodes",
+                    "end the elif chain with `else: raise "
+                    "AssertionError(...)` so a new opcode cannot be "
+                    "silently skipped",
+                    key=f"no-unknown-raise:{name}",
+                )
+
+        # subclass overrides of apply_* must keep (or refuse) the contract
+        for name, cls in classes.items():
+            inherited_ops: dict[str, tuple[int, int]] = {}
+            for anc in ancestry(name):
+                inherited_ops.update(logging_classes.get(anc, {}))
+            if not inherited_ops:
+                continue
+            own_ops = logging_classes.get(name, {})
+            for mname, fn in class_functions(cls).items():
+                if not mname.startswith("apply_"):
+                    continue
+                if _calls_super(fn) or _raises_not_implemented(fn):
+                    continue
+                if any(line for op, (_n, line) in own_ops.items()
+                       if fn.lineno <= line <= (fn.end_lineno or line)):
+                    continue  # the override logs its own entry
+                yield self.finding(
+                    module, fn.lineno,
+                    f"{name}.{mname} overrides a logged edit without "
+                    f"super(), its own log entry, or an explicit "
+                    f"NotImplementedError",
+                    "delegate to super(), log an undoable entry, or "
+                    "refuse the op outright (the ReplayEngine pattern)",
+                    key=f"override:{name}.{mname}",
+                )

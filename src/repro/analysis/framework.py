@@ -1,0 +1,285 @@
+"""Core of the scheduler contract analyzer.
+
+The analyzer is a plain-``ast`` static pass (no third-party deps) that
+walks a set of Python source files and runs every registered
+:class:`Checker` over each of them.  A checker encodes one *standing
+contract* of the scheduler core (ROADMAP "Standing contracts") as a
+syntactic rule; findings carry the offending ``file:line``, the contract
+name, and a fix hint, so a violation reads like a review comment rather
+than a stack trace.
+
+Suppression has two layers, both requiring a human-written justification:
+
+* an inline pragma on the flagged line::
+
+      x = frobnicate()  # contracts: ignore[determinism] -- why it is safe
+
+* a committed baseline file for grandfathered findings (see
+  :mod:`repro.analysis.baseline`).
+
+A pragma without a justification is itself a finding — the point of the
+pass is that every exception to a contract is explained in-tree.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Iterator, Sequence
+
+__all__ = [
+    "Finding",
+    "Checker",
+    "SourceModule",
+    "AnalysisContext",
+    "collect_files",
+    "load_module",
+    "run_analysis",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation at a source location.
+
+    ``key`` is a line-number-free fingerprint component (symbol-ish, e.g.
+    ``"call:replay"``) so baseline entries survive unrelated edits that
+    shift lines; duplicates within one ``(check, path, key)`` get an
+    ``#n`` ordinal suffix appended by the runner.
+    """
+
+    check: str      # checker id, e.g. "determinism"
+    contract: str   # human-readable contract name
+    path: str       # posix-style path as analyzed
+    line: int
+    message: str
+    hint: str       # how to fix (or how to legitimately suppress)
+    key: str        # stable fingerprint component (no line numbers)
+
+    @property
+    def fingerprint(self) -> tuple[str, str, str]:
+        return (self.check, self.path, self.key)
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}: [{self.check}] {self.message}\n"
+            f"    contract: {self.contract}\n"
+            f"    fix: {self.hint}"
+        )
+
+
+_PRAGMA_RE = re.compile(
+    r"#\s*contracts:\s*ignore\[(?P<checks>[\w\-*,\s]+)\]"
+    r"(?:\s*--\s*(?P<why>.*\S))?"
+)
+
+
+@dataclasses.dataclass
+class SourceModule:
+    """A parsed source file plus its suppression pragmas."""
+
+    path: str                  # normalized posix-style path
+    basename: str
+    text: str
+    tree: ast.Module
+    # line -> (set of check ids or {"*"}, justification or None)
+    pragmas: dict[int, tuple[frozenset[str], str | None]]
+
+    def pragma_for(self, check: str, line: int) -> tuple[bool, str | None]:
+        """(suppressed?, justification) for ``check`` at ``line``."""
+        entry = self.pragmas.get(line)
+        if entry is None:
+            return False, None
+        checks, why = entry
+        if check in checks or "*" in checks:
+            return True, why
+        return False, None
+
+
+@dataclasses.dataclass
+class AnalysisContext:
+    """Cross-module state shared by all checkers in one run."""
+
+    modules: list[SourceModule]
+
+    def module_named(self, basename: str) -> SourceModule | None:
+        for mod in self.modules:
+            if mod.basename == basename:
+                return mod
+        return None
+
+
+class Checker:
+    """Base class for checker plugins.
+
+    Subclasses set ``id`` / ``contract`` and implement :meth:`run`,
+    yielding :class:`Finding`s for one module.  ``ctx`` gives access to
+    every other module in the run for cross-file rules (e.g. resolving
+    ``SchedulerConfig`` fields from wherever the class is defined).
+    """
+
+    id: str = ""
+    contract: str = ""
+
+    def run(self, module: SourceModule, ctx: AnalysisContext
+            ) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: SourceModule, line: int, message: str,
+                hint: str, key: str) -> Finding:
+        return Finding(
+            check=self.id, contract=self.contract, path=module.path,
+            line=line, message=message, hint=hint, key=key,
+        )
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def collect_files(paths: Sequence[str]) -> list[str]:
+    """Expand files/directories into a sorted, deduplicated .py list."""
+    out: set[str] = set()
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames if d != "__pycache__"
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.add(_norm(os.path.join(dirpath, fn)))
+        elif p.endswith(".py"):
+            out.add(_norm(p))
+        else:
+            raise FileNotFoundError(f"not a .py file or directory: {p}")
+    return sorted(out)
+
+
+def _parse_pragmas(text: str) -> dict[int, tuple[frozenset[str], str | None]]:
+    pragmas: dict[int, tuple[frozenset[str], str | None]] = {}
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m is None:
+            continue
+        checks = frozenset(
+            c.strip() for c in m.group("checks").split(",") if c.strip()
+        )
+        pragmas[lineno] = (checks, m.group("why"))
+    return pragmas
+
+
+def load_module(path: str) -> SourceModule:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    tree = ast.parse(text, filename=path)
+    return SourceModule(
+        path=_norm(path),
+        basename=os.path.basename(path),
+        text=text,
+        tree=tree,
+        pragmas=_parse_pragmas(text),
+    )
+
+
+def _ordinal_keys(findings: list[Finding]) -> list[Finding]:
+    """Disambiguate repeated ``(check, path, key)`` with ``#n`` suffixes,
+    in (line, column-free) source order so the mapping is stable."""
+    seen: dict[tuple[str, str, str], int] = {}
+    out: list[Finding] = []
+    for f in findings:
+        n = seen.get(f.fingerprint, 0)
+        seen[f.fingerprint] = n + 1
+        if n:
+            f = dataclasses.replace(f, key=f"{f.key}#{n + 1}")
+        out.append(f)
+    return out
+
+
+_PRAGMA_CONTRACT = (
+    "every suppression carries a one-line justification"
+)
+
+
+def run_analysis(
+    paths: Sequence[str],
+    checkers: Sequence[Checker],
+    select: frozenset[str] | None = None,
+) -> list[Finding]:
+    """Run ``checkers`` over ``paths``; returns unsuppressed findings.
+
+    Pragma suppression is applied here; baseline suppression is the
+    caller's job (the CLI needs the used/stale entry split for
+    reporting).  Findings are sorted by (path, line, check) and carry
+    ordinal-disambiguated fingerprint keys.
+    """
+    files = collect_files(paths)
+    modules: list[SourceModule] = []
+    findings: list[Finding] = []
+    for path in files:
+        try:
+            modules.append(load_module(path))
+        except SyntaxError as exc:
+            findings.append(Finding(
+                check="parse", contract="source must parse",
+                path=_norm(path), line=exc.lineno or 0,
+                message=f"syntax error: {exc.msg}",
+                hint="fix the syntax error", key="syntax-error",
+            ))
+    ctx = AnalysisContext(modules=modules)
+    active = [
+        c for c in checkers if select is None or c.id in select
+    ]
+    for mod in modules:
+        raw: list[Finding] = []
+        for checker in active:
+            raw.extend(checker.run(mod, ctx))
+        raw.sort(key=lambda f: (f.line, f.check, f.key))
+        for f in raw:
+            suppressed, why = mod.pragma_for(f.check, f.line)
+            if not suppressed:
+                findings.append(f)
+            elif not why:
+                findings.append(Finding(
+                    check="pragma", contract=_PRAGMA_CONTRACT,
+                    path=mod.path, line=f.line,
+                    message=(
+                        f"suppression of [{f.check}] has no justification"
+                    ),
+                    hint=(
+                        "append `-- <reason>` to the contracts: ignore "
+                        "pragma"
+                    ),
+                    key=f"missing-justification:{f.check}",
+                ))
+        # a pragma that matches nothing is stale — it documents a
+        # violation that no longer exists and would silently mask a
+        # future, different one on the same line.  Only meaningful when
+        # every checker ran (a --select subset can't see all findings).
+        for lineno, (checks, _why) in (
+            sorted(mod.pragmas.items()) if select is None else ()
+        ):
+            live = {
+                f.check for f in raw if f.line == lineno
+            }
+            dead = sorted(
+                c for c in checks if c != "*" and c not in live
+            )
+            for c in dead:
+                findings.append(Finding(
+                    check="pragma", contract=_PRAGMA_CONTRACT,
+                    path=mod.path, line=lineno,
+                    message=f"stale suppression: no [{c}] finding here",
+                    hint="delete the pragma (or the stale check id)",
+                    key=f"stale:{c}",
+                ))
+    findings.sort(key=lambda f: (f.path, f.line, f.check, f.key))
+    return _ordinal_keys(findings)
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

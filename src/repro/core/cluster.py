@@ -469,9 +469,9 @@ def cluster_refine(
                 # the critical chain it frees
                 chain = dst_eng.chains.get(node.key)
                 if chain:
+                    dst_durs = dst_eng.chain_durations(node.key)
                     da = sorted(
-                        (dst_eng.durs[node.key][i], tj)
-                        for i, tj in enumerate(chain)
+                        (dst_durs[i], tj) for i, tj in enumerate(chain)
                     )
                     pair = best_swap_from(view, da, margin)
                     if pair is not None:
@@ -568,8 +568,7 @@ class FARClusterPolicy(BasePolicy):
     ) -> PlanResult:
         if not isinstance(spec, ClusterSpec):
             res = get_policy("far").plan(tasks, spec, config, tail)
-            res.policy = self.name
-            return res
+            return dataclasses.replace(res, policy=self.name)
         if tail is not None:
             raise ValueError(
                 "far-cluster carries per-device tails through "

@@ -31,7 +31,7 @@ from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec, InstanceNode
 from repro.core.problem import EPS, Schedule
-from repro.core.repartition import Assignment, NodeKey, replay
+from repro.core.repartition import Assignment, NodeKey
 from repro.core.timing import make_engine
 
 

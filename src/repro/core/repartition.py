@@ -507,7 +507,11 @@ def replay(
             walk(root, [])
 
         ready_t: dict[NodeKey, float] = {k: 0.0 for k in active}
-        for k in active:
+        # NodeKey is a tuple of small ints — CPython's int/tuple hashing
+        # is not randomized, so this set iterates identically every run,
+        # and TimingEngine._simulate seeds its reverse walk from the
+        # same iteration; see the matching pragma there.
+        for k in active:  # contracts: ignore[determinism] -- int-tuple set: hash order is run-stable and mirrored by TimingEngine's reverse seeding
             if desc_count[k] == 0:
                 push(0.0, "visit", spec.node_by_key(k))
         while heap:

@@ -51,6 +51,7 @@ import dataclasses
 import heapq
 import math
 from bisect import bisect_left
+from typing import Sequence
 
 from repro.core.device_spec import DeviceSpec, InstanceNode
 from repro.core.problem import ReconfigEvent, Schedule, ScheduledTask
@@ -339,6 +340,13 @@ class ChainState:
     def chain_version(self, key: NodeKey) -> int:
         """Monotone per-chain edit counter (for caching sorted views)."""
         return self._chain_ver.get(key, 0)
+
+    def chain_durations(self, key: NodeKey) -> Sequence[float]:
+        """Read-only view of ``key``'s per-slot durations (stretch
+        corrections applied), aligned with ``self.chains[key]`` — the
+        public way for cross-engine consumers (the cluster local search)
+        to see chain times without reaching into the duration cache."""
+        return self.durs.get(key, ())
 
     def _invalidate(self) -> None:  # overridden by timing subclasses
         pass
@@ -751,7 +759,12 @@ class TimingEngine(ChainState):
                 walk(root, [])
 
             ready_t: dict[NodeKey, float] = {k: 0.0 for k in active}
-            for k in active:
+            # NodeKey is a tuple of small ints, whose hashing CPython
+            # pins across runs (no PYTHONHASHSEED dependence), and the
+            # replay reference (repartition.py) seeds its heap from the
+            # same literal iteration — sorting here would *break* the
+            # bit-identity contract by changing the (time, seq) ties.
+            for k in active:  # contracts: ignore[determinism] -- int-tuple set: hash order is run-stable and mirrors replay()'s seq order exactly
                 if desc_count[k] == 0:
                     push(0.0, "visit", index[k])
             while heap:
@@ -854,6 +867,20 @@ class IdentityCache:
     keeps a strong reference to the anchor so its ``id`` stays valid for
     the entry's lifetime.  Shared by the batched-walk matrices below and
     the array-program caches in :mod:`repro.core.family_eval`.
+
+    Why identity keying cannot influence plan bytes (the determinism
+    contract): (1) every cached value is a *pure function of the
+    anchor's contents* — for a given spec, hit and miss produce the same
+    arrays; ``id`` only decides whether the derivation is re-run, never
+    what it returns.  (2) The strong reference in the entry pins the
+    anchor alive, so an ``id`` can never be recycled onto a different
+    live spec while its entry exists — a stale hit is impossible, the
+    ``entry[0] is anchor`` guard turns id collisions into ordinary
+    misses.  (3) Eviction is FIFO by insertion, not by key order, so
+    memory layout never chooses *which* entry survives.  Worst case for
+    an unlucky allocation pattern is a recompute, never wrong bytes.
+    ``tests/test_timing_engine.py::test_two_engines_same_spec_bit_identical``
+    pins the observable half of this argument.
     """
 
     def __init__(self, max_size: int):
@@ -861,7 +888,7 @@ class IdentityCache:
         self._entries: dict[tuple, tuple] = {}
 
     def get(self, anchor, extra=()):
-        entry = self._entries.get((id(anchor), extra))
+        entry = self._entries.get((id(anchor), extra))  # contracts: ignore[determinism] -- hit/miss parity: cached value is a pure function of the anchor, strong ref makes stale hits impossible (see class docstring)
         if entry is not None and entry[0] is anchor:
             return entry[1]
         return None
@@ -869,7 +896,7 @@ class IdentityCache:
     def put(self, anchor, value, extra=()) -> None:
         if len(self._entries) >= self._max:
             self._entries.pop(next(iter(self._entries)))
-        self._entries[(id(anchor), extra)] = (anchor, value)
+        self._entries[(id(anchor), extra)] = (anchor, value)  # contracts: ignore[determinism] -- same argument as get(): identity only gates recomputation, never the computed bytes
 
 
 #: per-spec static matrices for the batched walk

@@ -1,0 +1,25 @@
+"""Golden-bad: set iteration order reaching tie-break decisions."""
+
+
+def first_fit(nodes, used):
+    free = {n for n in nodes if n not in used}
+    for node in free:                   # finding: set iteration
+        return node
+    return None
+
+
+def order_keys(keys):
+    pending = set(keys)
+    ordered = [k for k in pending]      # finding: comprehension over set
+    pending_pop = set(keys).pop()       # finding: arbitrary element
+    return ordered, pending_pop
+
+
+def id_keyed(cache, spec):
+    cache[id(spec)] = spec              # finding: id()-based key
+    return cache
+
+
+def leaked_dict_order(active):
+    ready = {k: 0.0 for k in set(active)}
+    return [k for k in ready.values()]  # finding: set-ordered dict

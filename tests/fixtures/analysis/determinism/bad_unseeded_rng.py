@@ -1,0 +1,20 @@
+"""Golden-bad: unseeded / process-global RNG in a decision path."""
+
+import random
+
+import numpy as np
+
+
+def jitter_order(tasks):
+    rng = random.Random()               # finding: unseeded constructor
+    return sorted(tasks, key=lambda t: rng.random())
+
+
+def shuffle_batch(tasks):
+    random.shuffle(tasks)               # finding: module-global RNG
+    return tasks
+
+
+def noise():
+    gen = np.random.default_rng()       # finding: unseeded default_rng
+    return gen.random()

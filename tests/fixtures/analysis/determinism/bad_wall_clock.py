@@ -1,0 +1,13 @@
+"""Golden-bad: wall-clock reads leaking into scheduling state."""
+
+import time
+from datetime import datetime
+
+
+def stamp_arrival(task):
+    task_arrival = time.time()          # finding: wall-clock
+    return task_arrival
+
+
+def batch_label():
+    return datetime.now().isoformat()   # finding: wall-clock

@@ -1,0 +1,22 @@
+"""Golden-clean: seeded constructors and instrumentation-only timing."""
+
+import random
+import time
+
+import numpy as np
+
+
+def seeded_stream(seed):
+    rng = random.Random(seed)           # seeded constructor: blessed
+    return rng.random()
+
+
+def seeded_numpy(seed):
+    gen = np.random.default_rng(seed)   # seeded: blessed
+    return gen.random()
+
+
+def timed_plan(fn):
+    t0 = time.perf_counter()            # instrumentation-only: allowed
+    out = fn()
+    return out, time.perf_counter() - t0

@@ -1,0 +1,25 @@
+"""Golden-clean: sets consumed order-insensitively or via sorted()."""
+
+
+def deterministic_order(nodes, used):
+    free = {n for n in nodes if n not in used}
+    for node in sorted(free):           # sorted(): deterministic
+        return node
+    return None
+
+
+def membership_only(keys, candidates):
+    wanted = set(keys)
+    return [c for c in candidates if c in wanted]
+
+
+def unordered_build(active):
+    # building unordered containers from a set leaks no order
+    ready = {k: 0.0 for k in active}
+    mirror = {k for k in active}
+    return ready.get(None), len(mirror)
+
+
+def reductions(values):
+    pool = set(values)
+    return min(pool), max(pool), sum(pool), len(pool)

@@ -1,0 +1,13 @@
+"""Golden-bad: reaching into engine internals from outside timing.py."""
+
+
+def fold_chain(eng, key):
+    return sum(eng.durs[key])           # finding: .durs internal
+
+
+def peek_log(eng):
+    return len(eng._log)                # finding: ._log internal
+
+
+def corrected(eng, tid):
+    return eng.stretched.get(tid)       # finding: .stretched internal

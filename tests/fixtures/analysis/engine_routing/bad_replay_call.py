@@ -1,0 +1,11 @@
+"""Golden-bad: replaying per candidate instead of using the engine."""
+
+from repro.core.repartition import replay
+
+
+def score_candidate(assignment):
+    return replay(assignment).makespan  # finding: direct replay() call
+
+
+def score_all(assignments):
+    return [replay(a).makespan for a in assignments]  # finding

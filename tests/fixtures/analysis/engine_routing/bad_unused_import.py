@@ -1,0 +1,7 @@
+"""Golden-bad: dead import of the replay layer."""
+
+from repro.core.repartition import replay  # finding: unused import
+
+
+def makespan_of(engine):
+    return engine.makespan()

@@ -1,0 +1,20 @@
+"""Golden-clean: timing consumed through the public engine API."""
+
+from repro.core.timing import chains_makespan, make_engine
+
+
+def score_candidate(assignment):
+    eng = make_engine(assignment)
+    return eng.makespan()
+
+
+def score_chains(spec, node_tasks, node_durs):
+    return chains_makespan(spec, node_tasks, node_durs)
+
+
+def chain_view(eng, key):
+    return list(eng.chain_durations(key))
+
+
+def rollback_token(eng):
+    return eng.log_length

@@ -1,0 +1,12 @@
+"""Golden-clean: the blessed module name may use the replay layer —
+this file exists to pin the basename blessing, not as real code."""
+
+from repro.core.repartition import replay
+
+
+def reference_score(assignment):
+    return replay(assignment).makespan  # blessed: timing.py owns replay
+
+
+def internals(eng, key):
+    return eng.durs[key]                # blessed inside timing.py

@@ -1,0 +1,19 @@
+"""Golden-bad: mutating frozen-surface instances."""
+
+from repro.core.policy import SchedulerConfig
+
+
+def retune(config: SchedulerConfig):
+    config.seed = 1                     # finding: mutate SchedulerConfig
+    return config
+
+
+def rebuild():
+    cfg = SchedulerConfig(refine=False)
+    cfg.eps = 0.0                       # finding: mutate SchedulerConfig
+    return cfg
+
+
+def forced(task):
+    object.__setattr__(task, "id", 0)   # finding: frozen bypass
+    return task

@@ -1,0 +1,13 @@
+"""Golden-bad: rewriting a PlanResult after the policy produced it."""
+
+
+def relabel(policy, tasks, spec, config):
+    res = policy.plan(tasks, spec, config, None)
+    res.policy = "renamed"              # finding: mutate PlanResult
+    return res
+
+
+def clamp(policy, tasks, spec, config):
+    plan = policy.plan(tasks, spec, config, None)
+    plan.makespan = 0.0                 # finding: mutate PlanResult
+    return plan

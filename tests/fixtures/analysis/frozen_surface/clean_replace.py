@@ -1,0 +1,22 @@
+"""Golden-clean: new instances via constructors and replace()."""
+
+import dataclasses
+
+from repro.core.policy import SchedulerConfig
+
+
+def retune(config: SchedulerConfig):
+    return config.replace(seed=1)
+
+
+def relabel(policy, tasks, spec, config):
+    res = policy.plan(tasks, spec, config, None)
+    return dataclasses.replace(res, policy="renamed")
+
+
+def extras_are_fine(policy, tasks, spec, config):
+    # mutating the *contents* of a result's extras dict is the documented
+    # extension point; only attribute assignment is fenced
+    res = policy.plan(tasks, spec, config, None)
+    res.extras["note"] = "ok"
+    return res

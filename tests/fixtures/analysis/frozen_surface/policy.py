@@ -1,0 +1,10 @@
+"""Golden-clean: the defining module owns the builder idiom — this
+file pins the basename blessing (mirrors BasePolicy.plan finalising the
+PlanResult it just built)."""
+
+
+def plan(self, tasks, spec, config, tail):
+    res = self._plan_fresh(tasks, spec, config)
+    res.policy = self.name              # blessed: defining module
+    res.tail = tail
+    return res

@@ -1,0 +1,5 @@
+"""Golden-bad: a pragma on a line with no matching finding is stale."""
+
+
+def add(a, b):
+    return a + b  # contracts: ignore[determinism] -- nothing here violates anything

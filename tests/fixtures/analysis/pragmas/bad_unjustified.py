@@ -1,0 +1,7 @@
+"""Golden-bad: a pragma without a justification is itself a finding."""
+
+import time
+
+
+def stamp():
+    return time.time()  # contracts: ignore[determinism]

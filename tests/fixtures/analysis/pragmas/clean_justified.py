@@ -1,0 +1,7 @@
+"""Golden-clean: a violation suppressed with a justified pragma."""
+
+import time
+
+
+def stamp():
+    return time.time()  # contracts: ignore[determinism] -- fixture: instrumentation only, pinned by golden test

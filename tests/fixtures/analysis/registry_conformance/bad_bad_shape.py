@@ -1,0 +1,37 @@
+"""Golden-bad: registered plugins that do not satisfy the protocol."""
+
+
+def register_policy(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+def register_evaluator(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+@register_policy("stub")
+class StubPolicy:                       # finding: no plan/_plan_fresh
+    def solve(self, tasks):
+        return tasks
+
+
+@register_policy("short")
+class ShortPolicy:
+    def plan(self, tasks):              # finding: protocol arity
+        return tasks
+
+
+@register_evaluator("mute")
+class MuteEvaluator:                    # finding: no evaluate()
+    def score(self, tasks):
+        return 0.0
+
+
+@register_evaluator("narrow")
+class NarrowEvaluator:
+    def evaluate(self, tasks, spec):    # finding: protocol arity
+        return None

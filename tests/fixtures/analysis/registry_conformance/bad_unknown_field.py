@@ -1,0 +1,21 @@
+"""Golden-bad: reads of SchedulerConfig fields that do not exist."""
+
+
+class SchedulerConfig:
+    refine: bool = True
+    seed: int = 0
+    eps: float = 1e-9
+
+    def replace(self, **changes):
+        return self
+
+
+def plan_with(config: SchedulerConfig):
+    if config.refine:
+        return config.seed
+    return config.max_refine_iters      # finding: typo'd field
+
+
+def tuned(config: SchedulerConfig):
+    fresh = config.replace(seed=1)
+    return fresh.epsilon                # finding: unknown field

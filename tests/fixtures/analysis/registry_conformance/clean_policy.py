@@ -1,0 +1,39 @@
+"""Golden-clean: protocol-shaped registered plugins and real fields."""
+
+
+class SchedulerConfig:
+    refine: bool = True
+    seed: int = 0
+
+    def replace(self, **changes):
+        return self
+
+
+def register_policy(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+def register_evaluator(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+@register_policy("full")
+class FullPolicy:
+    def plan(self, tasks, spec, config=None, tail=None):
+        return tasks
+
+
+@register_policy("hooked")
+class HookedPolicy:
+    def _plan_fresh(self, tasks, spec, config):
+        return config.refine and config.seed
+
+
+@register_evaluator("proper")
+class ProperEvaluator:
+    def evaluate(self, tasks, spec, first, deltas, config):
+        return config.seed

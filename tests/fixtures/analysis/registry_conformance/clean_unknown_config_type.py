@@ -1,0 +1,15 @@
+"""Golden-clean: a `config`/`cfg` name that is NOT a SchedulerConfig is
+out of scope — inference is annotation/constructor-driven, so model
+configs sharing the variable name never false-positive."""
+
+
+class ModelConfig:
+    n_layers: int = 12
+
+
+def flops(cfg: ModelConfig):
+    return cfg.n_layers * cfg.d_model_maybe_missing
+
+
+def untyped(config):
+    return config.whatever_field

@@ -1,0 +1,47 @@
+"""Golden-bad: logged opcodes without exact undo inverses."""
+
+
+class LeakyState:
+    def __init__(self):
+        self._log = []
+        self.items = {}
+
+    def apply_put(self, key, value):
+        old = self.items.get(key)
+        self.items[key] = value
+        self._log.append(("put", key, old))
+
+    def apply_drop(self, key):
+        old = self.items.pop(key)
+        self._log.append(("drop", key, old))  # finding: no undo branch
+
+    def undo(self):
+        entry = self._log.pop()
+        kind = entry[0]
+        if kind == "put":
+            _, key, old = entry
+            if old is None:
+                del self.items[key]
+            else:
+                self.items[key] = old
+        else:
+            raise AssertionError(f"unknown log entry {kind}")
+
+
+class MisalignedState:
+    def __init__(self):
+        self._log = []
+        self.slots = []
+
+    def apply_push(self, value, marker):
+        self.slots.append(value)
+        self._log.append(("push", value, marker))
+
+    def undo(self):
+        entry = self._log.pop()
+        kind = entry[0]
+        if kind == "push":
+            _, value = entry            # finding: arity mismatch (2 vs 3)
+            self.slots.pop()
+        else:
+            raise AssertionError(f"unknown log entry {kind}")

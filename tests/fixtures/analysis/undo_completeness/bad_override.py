@@ -1,0 +1,25 @@
+"""Golden-bad: subclass silently breaking the log/undo contract, plus
+an undo() that swallows unknown opcodes."""
+
+
+class BaseState:
+    def __init__(self):
+        self._log = []
+        self.items = []
+
+    def apply_add(self, value):
+        self.items.append(value)
+        self._log.append(("add", value))
+
+    def undo(self):
+        entry = self._log.pop()
+        kind = entry[0]
+        if kind == "add":
+            _, value = entry
+            self.items.pop()
+        # finding: no terminal raise — unknown kinds silently skipped
+
+
+class QuietOverride(BaseState):
+    def apply_add(self, value):         # finding: drops the log entry
+        self.items.append(value)

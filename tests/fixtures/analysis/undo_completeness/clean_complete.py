@@ -1,0 +1,32 @@
+"""Golden-clean: every opcode has an exact inverse and unknown kinds
+raise."""
+
+
+class CompleteState:
+    def __init__(self):
+        self._log = []
+        self.items = {}
+
+    def apply_put(self, key, value):
+        old = self.items.get(key)
+        self.items[key] = value
+        self._log.append(("put", key, old))
+
+    def apply_drop(self, key):
+        old = self.items.pop(key)
+        self._log.append(("drop", key, old))
+
+    def undo(self):
+        entry = self._log.pop()
+        kind = entry[0]
+        if kind == "put":
+            _, key, old = entry
+            if old is None:
+                del self.items[key]
+            else:
+                self.items[key] = old
+        elif kind == "drop":
+            _, key, old = entry
+            self.items[key] = old
+        else:
+            raise AssertionError(f"unknown log entry {kind}")

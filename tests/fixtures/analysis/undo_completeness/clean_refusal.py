@@ -1,0 +1,33 @@
+"""Golden-clean: subclasses keep the contract by delegating or by
+explicitly refusing (the ReplayEngine pattern)."""
+
+
+class BaseState:
+    def __init__(self):
+        self._log = []
+        self.items = []
+
+    def apply_add(self, value):
+        self.items.append(value)
+        self._log.append(("add", value))
+
+    def undo(self):
+        entry = self._log.pop()
+        kind = entry[0]
+        if kind == "add":
+            _, value = entry
+            self.items.pop()
+        else:
+            raise AssertionError(f"unknown log entry {kind}")
+
+
+class Delegating(BaseState):
+    def apply_add(self, value):
+        super().apply_add(value)        # delegation keeps the log exact
+
+
+class Refusing(BaseState):
+    def apply_add(self, value):
+        raise NotImplementedError(
+            "this engine cannot honour add; use BaseState"
+        )

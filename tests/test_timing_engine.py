@@ -563,3 +563,167 @@ def test_apply_stretch_validation_and_replay_refusal():
     ref.apply_append(tasks[0].id, key)
     with pytest.raises(NotImplementedError):
         ref.apply_stretch(tasks[0].id, 5.0)
+
+
+# --- identity-cache safety + opcode-exhaustive undo ------------------------
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_two_engines_same_spec_bit_identical(spec):
+    """The observable half of the IdentityCache safety argument
+    (timing.py): whether a derived-structure lookup hits or misses the
+    identity-keyed cache, two engines built from the same spec and
+    assignment produce bit-identical schedules — identity only gates
+    recomputation, never the computed bytes."""
+    import copy
+
+    import numpy as np
+
+    from repro.core.timing import _batch_spec_arrays
+
+    tasks = generate_tasks(
+        12, spec, workload("mixed", "wide", spec), seed=21, id_offset=760
+    )
+    fam = allocation_family(tasks, spec)
+    assignment = list_schedule_allocation(tasks, fam[len(fam) // 2], spec)
+    a = TimingEngine(assignment)
+    b = TimingEngine(assignment)
+    for flag in (True, False):
+        assert a.makespan(flag) == b.makespan(flag)
+        assert a.slice_end_times(flag) == b.slice_end_times(flag)
+        assert a.node_end_times(flag) == b.node_end_times(flag)
+    sa, sb = a.schedule(), b.schedule()
+    assert sa.items == sb.items
+    assert sa.reconfigs == sb.reconfigs
+    # identical edit sequences stay bit-identical
+    occupied = sorted(k for k, v in a.chains.items() if v)
+    tid = a.chains[occupied[0]][0]
+    dst = next(n.key for n in spec.nodes if n.key != occupied[0])
+    for eng in (a, b):
+        eng.apply_move(tid, dst=dst, src=occupied[0])
+    assert a.makespan() == b.makespan()
+    assert a.schedule().items == b.schedule().items
+    # cache hit/miss parity, pinned directly: the second call for the
+    # same anchor is a hit (the same tuple object); a deep copy of the
+    # spec is a distinct anchor (forced miss) yet derives equal arrays
+    first = _batch_spec_arrays(spec)
+    assert _batch_spec_arrays(spec) is first
+    fresh = _batch_spec_arrays(copy.deepcopy(spec))
+    assert fresh is not first
+    assert len(fresh) == len(first)
+    for got, want in zip(fresh, first):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_undo_round_trip_covers_every_opcode():
+    """Exhaustive apply_*/undo round trip, with the opcode set enumerated
+    from the engine itself: every `kind == "..."` branch in undo() must
+    be exercised by some driver below, and every apply_* method must have
+    a driver.  A future opcode added without extending this test fails
+    here, not in a confusing downstream search."""
+    import ast as astmod
+    import inspect
+    import textwrap
+
+    # opcodes undo() knows how to revert, read from its source
+    undo_src = textwrap.dedent(inspect.getsource(TimingEngine.undo))
+    undo_ops = {
+        comp.value
+        for node in astmod.walk(astmod.parse(undo_src))
+        if isinstance(node, astmod.Compare)
+        and isinstance(node.left, astmod.Name) and node.left.id == "kind"
+        for comp in node.comparators
+        if isinstance(comp, astmod.Constant) and isinstance(comp.value, str)
+    }
+    apply_ops = {
+        name[len("apply_"):]
+        for name in dir(TimingEngine) if name.startswith("apply_")
+    }
+    assert apply_ops == undo_ops, (
+        "apply_* methods and undo() branches disagree — add the missing "
+        "undo branch (or remove the dead one)"
+    )
+
+    spec = A100
+    tasks = generate_tasks(
+        10, spec, workload("mixed", "wide", spec), seed=11, id_offset=780
+    )
+    fam = allocation_family(tasks, spec)
+    assignment = list_schedule_allocation(tasks, fam[0], spec)
+    eng = TimingEngine(assignment)
+    before = _snapshot(eng)
+    before_stretched = dict(eng.stretched)
+    before_times = {
+        flag: (eng.makespan(flag), eng.slice_end_times(flag))
+        for flag in (True, False)
+    }
+    before_sched = eng.schedule()
+
+    def occupied():
+        return sorted(k for k, v in eng.chains.items() if v)
+
+    def spare():
+        occ = set(occupied())
+        return next(n.key for n in spec.nodes if n.key not in occ)
+
+    def drive_move():
+        src = occupied()[0]
+        tid = eng.chains[src][0]
+        eng.apply_move(tid, dst=spare(), src=src)
+
+    def drive_swap():
+        occ = occupied()
+        if len(occ) < 2:  # single-chain layout cannot swap
+            pytest.skip("allocation placed every task on one node")
+        ka, kb = occ[0], occ[-1]
+        eng.apply_swap(eng.chains[ka][0], eng.chains[kb][0])
+
+    def drive_append():
+        key = occupied()[0]
+        tid = eng.chains[key][-1]
+        eng.apply_extract(tid)
+        eng.apply_append(tid, spare())
+
+    def drive_extract_place():
+        key = occupied()[0]
+        tid = eng.chains[key][0]
+        eng.apply_extract(tid)
+        eng.apply_place(tid, spare())
+
+    def drive_retract():
+        key = occupied()[0]
+        eng.apply_retract(eng.chains[key][-1], key)
+
+    def drive_stretch():
+        key = occupied()[0]
+        eng.apply_stretch(eng.chains[key][0], 123.456)
+
+    drivers = {
+        "move": drive_move,
+        "swap": drive_swap,
+        "append": drive_append,
+        "extract": drive_extract_place,
+        "place": drive_extract_place,
+        "retract": drive_retract,
+        "stretch": drive_stretch,
+    }
+    assert set(drivers) == apply_ops, (
+        "a new apply_* opcode has no driver here — extend the round trip"
+    )
+    for op in sorted(drivers):
+        drivers[op]()
+    logged = {entry[0] for entry in eng._log}
+    assert logged == undo_ops, (
+        f"drivers exercised {sorted(logged)} but undo() handles "
+        f"{sorted(undo_ops)}"
+    )
+    eng.undo_all()
+    assert _snapshot(eng) == before
+    assert dict(eng.stretched) == before_stretched
+    after_times = {
+        flag: (eng.makespan(flag), eng.slice_end_times(flag))
+        for flag in (True, False)
+    }
+    assert after_times == before_times
+    after_sched = eng.schedule()
+    assert after_sched.items == before_sched.items
+    assert after_sched.reconfigs == before_sched.reconfigs

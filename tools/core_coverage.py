@@ -32,7 +32,12 @@ import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 REPO = os.path.dirname(HERE)
-TARGET = os.path.join(REPO, "src", "repro", "core")
+SRC = os.path.join(REPO, "src", "repro")
+# scored trees: the scheduler core and the contract analyzer that guards it
+TARGETS = (
+    os.path.join(SRC, "core"),
+    os.path.join(SRC, "analysis"),
+)
 
 
 def executable_lines(path: str) -> set[int]:
@@ -52,7 +57,7 @@ def executable_lines(path: str) -> set[int]:
 
 
 def install_tracer(hits: dict[str, set[int]]):
-    """Record executed (file, line) pairs for files under TARGET."""
+    """Record executed (file, line) pairs for files under TARGETS."""
     # co_filename may carry unnormalized components (e.g. the conftest's
     # ``tests/../src`` sys.path entry) — resolve once per distinct string
     resolved: dict[str, str | None] = {}
@@ -61,7 +66,9 @@ def install_tracer(hits: dict[str, set[int]]):
         out = resolved.get(fname, "")
         if out == "":
             norm = os.path.abspath(fname)
-            out = norm if norm.startswith(TARGET) else None
+            out = norm if any(
+                norm.startswith(t + os.sep) for t in TARGETS
+            ) else None
             resolved[fname] = out
         return out
 
@@ -123,15 +130,19 @@ def main() -> int:
 
     rows = []
     tot_exec = tot_hit = 0
-    for name in sorted(os.listdir(TARGET)):
-        if not name.endswith(".py"):
-            continue
-        path = os.path.join(TARGET, name)
-        exe = executable_lines(path)
-        hit = hits.get(path, set()) & exe
-        rows.append((name, len(hit), len(exe)))
-        tot_exec += len(exe)
-        tot_hit += len(hit)
+    for target in TARGETS:
+        for dirpath, dirnames, filenames in os.walk(target):
+            dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+            for name in sorted(filenames):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+                exe = executable_lines(path)
+                hit = hits.get(path, set()) & exe
+                rows.append((rel, len(hit), len(exe)))
+                tot_exec += len(exe)
+                tot_hit += len(hit)
 
     width = max(len(n) for n, _, _ in rows)
     print(f"\n{'file':<{width}}  {'lines':>6}  {'hit':>6}  {'cover':>7}")
