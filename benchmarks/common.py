@@ -18,6 +18,9 @@ class Rows:
         self.title = title
         self.columns = columns
         self.rows: list[list] = []
+        # an optional companion table rendered/exported after this one
+        # (e.g. a benchmark's secondary comparison)
+        self.extra: "Rows | None" = None
 
     def add(self, *values) -> None:
         self.rows.append(list(values))
@@ -34,6 +37,9 @@ class Rows:
         for r in self.rows:
             out.append("  ".join(_fmt(v).ljust(w[i])
                                  for i, v in enumerate(r)))
+        if self.extra is not None:
+            out.append("")
+            out.append(self.extra.render())
         return "\n".join(out)
 
     def csv(self) -> list[str]:
@@ -41,6 +47,8 @@ class Rows:
         lines = []
         for r in self.rows:
             lines.append(f"{tag}," + ",".join(_fmt(v) for v in r))
+        if self.extra is not None:
+            lines.extend(self.extra.csv())
         return lines
 
 

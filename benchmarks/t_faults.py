@@ -13,12 +13,18 @@ feedback and no retries.  Emits ``BENCH_faults.json``:
   plan's makespan);
 * recovery latency p50/p95 on device-loss streams (how far an outage
   pushes the placements it withdraws);
-* retry amplification (total attempts per submitted task).
+* retry amplification (total attempts per submitted task);
+* hardening entries: the speculative-backup + checkpoint-credit loop
+  vs the stretch-only closed loop under identical seeded draws, on a
+  straggler stream and a correlated domain-outage stream — the
+  hardened loop must be strictly better on BOTH miss-rate and
+  makespan (asserted).
 
 CLI: ``PYTHONPATH=src python -m benchmarks.t_faults [--quick]``
 """
 
 import argparse
+import dataclasses
 import json
 import os
 
@@ -30,6 +36,7 @@ from repro.core.faults import (
     FaultInjector,
     FaultSpec,
     RetryPolicy,
+    SpeculationPolicy,
     execute_open_loop,
     run_with_faults,
 )
@@ -46,9 +53,12 @@ MAX_WAIT_S = 5.0
 STRAGGLER_FACTOR = 2.0
 
 
-def _stream(n, seed, mean_gap=1.0, slack=150.0):
+def _stream(n, seed, mean_gap=1.0, slack=150.0, checkpoint_s=None):
     cfg = workload("mixed", "wide", A100)
     tasks = generate_tasks(n, A100, cfg, seed=seed)
+    if checkpoint_s is not None:
+        tasks = [dataclasses.replace(t, checkpoint_period_s=checkpoint_s)
+                 for t in tasks]
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(mean_gap, size=n))
     stream, deadlines = [], {}
@@ -65,6 +75,64 @@ def _closed_cfg():
         straggler_factor=STRAGGLER_FACTOR,
         retry=RetryPolicy(max_attempts=3, backoff_base=0.5),
     )
+
+
+def _hardened_cfg():
+    """The stretch-only closed loop plus speculative backups; checkpoint
+    credit rides on the stream (``checkpoint_period_s`` per task)."""
+    cfg = _closed_cfg()
+    return dataclasses.replace(cfg, speculation=SpeculationPolicy())
+
+
+def _versus_entry(n, seed, fspec: FaultSpec, slack, pool=None,
+                  checkpoint_s=2.0, label="") -> dict:
+    """One hardening comparison: the PR 6 stretch-only closed loop vs
+    the speculation + checkpoint-credit loop, same arrivals, same seeded
+    draws.  The only stream difference is ``checkpoint_period_s`` on the
+    hardened tasks (ids, profiles, and therefore all injector draws for
+    first attempts are identical)."""
+
+    def make(cfg):
+        if pool is not None:
+            return SchedulingService(pool=cluster(*pool), config=cfg)
+        return SchedulingService(A100, config=cfg)
+
+    stream, deadlines = _stream(n, seed, slack=slack)
+    base = make(_closed_cfg())
+    base_rep = run_with_faults(base, stream, injector=FaultInjector(fspec))
+
+    hstream, hdeadlines = _stream(n, seed, slack=slack,
+                                  checkpoint_s=checkpoint_s)
+    hard = make(_hardened_cfg())
+    hard_rep = run_with_faults(hard, hstream, injector=FaultInjector(fspec))
+
+    for svc, rep in ((base, base_rep), (hard, hard_rep)):
+        resolved = (set(rep.completions) | set(rep.failed)
+                    | set(svc.stats.rejected))
+        missing = {t.id for _, t, _ in stream} - resolved
+        assert not missing, f"{label}: stranded tasks {sorted(missing)}"
+
+    base_mk = max(list(base_rep.completions.values()) or [0.0])
+    hard_mk = max(list(hard_rep.completions.values()) or [0.0])
+    spec_wins = sum(1 for ev in hard.stats.speculations
+                    if ev.winner == "backup")
+    return {
+        "label": label,
+        "n_tasks": n,
+        "pool": "+".join(s.name for s in pool) if pool else "A100",
+        "fault_seed": fspec.seed,
+        "slack_s": slack,
+        "checkpoint_period_s": checkpoint_s,
+        "domains": list(map(list, fspec.domains)),
+        "miss_rate_stretch_only": base_rep.miss_rate(deadlines),
+        "miss_rate_hardened": hard_rep.miss_rate(hdeadlines),
+        "makespan_stretch_only": base_mk,
+        "makespan_hardened": hard_mk,
+        "speculations_launched": len(hard.stats.speculations),
+        "speculation_wins": spec_wins,
+        "checkpoints_banked": len(hard.stats.checkpoints),
+        "outages": len(hard.stats.outages),
+    }
 
 
 def _entry(n, seed, fspec: FaultSpec, pool=False, label="") -> dict:
@@ -185,6 +253,40 @@ def run(quick: bool = False, reps: int | None = None) -> Rows:
         f"closed loop must beat open loop on stragglers: "
         f"{strag['miss_rate_closed']} !< {strag['miss_rate_open']}")
 
+    # hardening: speculation + checkpoint credit vs the stretch-only
+    # loop, on a straggler stream and a correlated domain-outage stream
+    hardening = [
+        _versus_entry(
+            16 if quick else 32, seed=31,
+            fspec=FaultSpec(seed=7, straggler_prob=0.25,
+                            straggler_factor=4.0),
+            slack=300.0 if quick else 550.0,
+            label="spec-ckpt-stragglers"),
+        _versus_entry(
+            16 if quick else 24, seed=31,
+            fspec=FaultSpec(seed=3, noise_sigma=0.05, task_fail_rate=0.01,
+                            domains=((1, 2),), domain_mtbf_s=30.0,
+                            domain_repair_s=10.0),
+            slack=100.0, pool=(A100, A30, A30),
+            label="spec-ckpt-domain"),
+    ]
+    for h in hardening:
+        # the acceptance bar: strictly better on BOTH metrics
+        assert h["miss_rate_hardened"] < h["miss_rate_stretch_only"], (
+            f"{h['label']}: hardened loop must strictly cut the miss "
+            f"rate: {h['miss_rate_hardened']} !< "
+            f"{h['miss_rate_stretch_only']}")
+        assert h["makespan_hardened"] < h["makespan_stretch_only"], (
+            f"{h['label']}: hardened loop must strictly cut the "
+            f"makespan: {h['makespan_hardened']} !< "
+            f"{h['makespan_stretch_only']}")
+    assert hardening[0]["speculation_wins"] >= 1, \
+        "straggler stream must resolve at least one race for the backup"
+    assert hardening[1]["checkpoints_banked"] >= 1, \
+        "domain outages must bank checkpoint credit"
+    assert hardening[1]["outages"] >= 2, \
+        "the correlated domain must shock both members"
+
     report = {
         "device": "A100 (+A30 pool for device-loss entries)",
         "metric": "closed-loop serving (feedback/retry/quarantine) vs "
@@ -199,6 +301,7 @@ def run(quick: bool = False, reps: int | None = None) -> Rows:
         "max_wait_s": MAX_WAIT_S,
         "straggler_factor": STRAGGLER_FACTOR,
         "entries": entries,
+        "hardening": hardening,
     }
     with open(JSON_PATH, "w") as fh:
         json.dump(report, fh, indent=2)
@@ -216,6 +319,20 @@ def run(quick: bool = False, reps: int | None = None) -> Rows:
                  e["retry_amplification"],
                  e["recovery_latency_p95"] if e["recovery_latency_p95"]
                  is not None else float("nan"))
+    hrows = Rows(
+        "Hardening: speculation + checkpoint credit vs stretch-only "
+        "closed loop (identical seeded draws)",
+        ["stream", "pool", "miss%_stretch", "miss%_hardened",
+         "mk_stretch", "mk_hardened", "specs", "spec_wins", "ckpts"],
+    )
+    for h in hardening:
+        hrows.add(h["label"], h["pool"],
+                  100 * h["miss_rate_stretch_only"],
+                  100 * h["miss_rate_hardened"],
+                  h["makespan_stretch_only"], h["makespan_hardened"],
+                  h["speculations_launched"], h["speculation_wins"],
+                  h["checkpoints_banked"])
+    rows.extra = hrows
     return rows
 
 

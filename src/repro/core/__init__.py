@@ -50,12 +50,15 @@ from repro.core.faults import (
     FaultInjector,
     FaultRunReport,
     FaultSpec,
+    ProfileCalibration,
     RetryPolicy,
+    SpeculationPolicy,
     demote_shrink,
     execute_open_loop,
     run_with_faults,
 )
 from repro.core.service import (
+    CheckpointEvent,
     CorrectionEvent,
     Decision,
     OutageEvent,
@@ -63,6 +66,7 @@ from repro.core.service import (
     RetryEvent,
     SchedulingService,
     ServiceStats,
+    SpeculationEvent,
 )
 from repro.core.problem import (
     InfeasibleScheduleError,
@@ -75,6 +79,8 @@ from repro.core.problem import (
     area_lower_bound,
     bind_tasks,
     lower_bound,
+    remainder_task,
+    transfer_profile,
     validate_schedule,
 )
 from repro.core.refine import RefineStats, refine_assignment
@@ -91,7 +97,8 @@ from repro.core.timing import ReplayEngine, TimingEngine, make_engine
 __all__ = [
     "A30", "A100", "H100", "SPECS", "TPU_POD_256", "TPU_SUPERPOD_512",
     "DeviceSpec", "InstanceNode", "multi_gpu",
-    "Task", "Profile", "bind_tasks", "Schedule", "ScheduledTask",
+    "Task", "Profile", "bind_tasks", "remainder_task", "transfer_profile",
+    "Schedule", "ScheduledTask",
     "ReconfigEvent", "InfeasibleScheduleError", "ProfileCoverageError",
     "validate_schedule",
     "area_lower_bound", "lower_bound",
@@ -112,7 +119,9 @@ __all__ = [
     "register_policy", "get_policy", "available_policies",
     "SchedulingService", "ServiceStats", "Decision", "ReplanEvent",
     "CorrectionEvent", "RetryEvent", "OutageEvent",
+    "SpeculationEvent", "CheckpointEvent",
     "RetryPolicy", "FaultSpec", "FaultInjector", "FaultRunReport",
     "ExecutionDraw", "demote_shrink", "run_with_faults",
     "execute_open_loop",
+    "SpeculationPolicy", "ProfileCalibration",
 ]

@@ -970,6 +970,25 @@ class ClusterMultiBatchScheduler:
             raise KeyError(f"task {task_id} has no live committed placement")
         return mb.replace_item(task_id, end_override, failed=failed)
 
+    def relabel_item(
+        self,
+        task_id: int,
+        task: Task,
+        end_override: float | None = None,
+        failed: bool = False,
+    ) -> ScheduledTask:
+        """Re-key the live placement of ``task_id`` to carry ``task`` on
+        its owning device's timeline (speculation resolution: the winning
+        backup attempt's record takes over the logical task id)."""
+        mb = self._mb_of_task(task_id)
+        if mb is None:
+            raise KeyError(f"task {task_id} has no live committed placement")
+        new = mb.relabel_item(
+            task_id, task, end_override=end_override, failed=failed
+        )
+        self.originals.setdefault(task.id, self.originals.get(task_id, task))
+        return new
+
     def remove_items(self, task_ids: set[int]) -> list[Task]:
         """Drop live placements across all devices; returns the removed
         *original* tasks ordered by old begin (ties by id)."""

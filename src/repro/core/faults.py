@@ -123,6 +123,145 @@ class RetryPolicy:
 
 
 # ---------------------------------------------------------------------------
+# SpeculationPolicy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationPolicy:
+    """Throttle for straggler speculation (``SchedulerConfig(speculation=)``).
+
+    When the service flags a straggler it may launch a *backup attempt*
+    on the best alternative placement instead of only stretching the
+    plan; the first finisher wins and the loser is cancelled.  At most
+    ``max_inflight`` backup attempts race at any instant, and a backup is
+    only launched when its planned completion beats the straggler's
+    stretched projection by at least ``min_gain_s`` seconds (checked
+    twice: against the admission lower bound first, then against the
+    actual trial placement)."""
+
+    max_inflight: int = 1
+    min_gain_s: float = 0.0
+
+    def __post_init__(self):
+        if self.max_inflight < 1:
+            raise ValueError(
+                f"SpeculationPolicy.max_inflight must be >= 1, got "
+                f"{self.max_inflight}"
+            )
+        if self.min_gain_s < 0.0:
+            raise ValueError("SpeculationPolicy.min_gain_s must be >= 0")
+
+
+# ---------------------------------------------------------------------------
+# ProfileCalibration
+# ---------------------------------------------------------------------------
+
+
+class ProfileCalibration:
+    """Online EWMA calibration of profiled durations from runtime truth
+    (``SchedulerConfig(calibration=)``).
+
+    ``report(end=)`` corrections feed actual/planned duration ratios into
+    exponentially-weighted running means keyed, most-specific first, by
+    ``(task family, device_kind, size)``, then ``(family, device_kind)``,
+    then ``family`` alone (the task family is ``task.name``); lookups
+    fall through that hierarchy and default to 1.0.  :meth:`calibrate`
+    returns a task whose profile entries are scaled by their learned
+    ratios — the service applies it at the *policy boundary* only, so the
+    stored task (and therefore the fault injector's ground truth and the
+    exactly-once bookkeeping) always keeps the raw submitted profile.
+
+    Determinism: the state is an explicit input evolved solely by the
+    ``observe`` call sequence — never wall-clock — so plan bytes remain a
+    pure function of (tasks, spec, config, seed, reports).  A freshly
+    constructed instance calibrates every task to itself, which is what
+    makes ``calibration=ProfileCalibration()`` a no-op layer until the
+    first report lands."""
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(
+                f"ProfileCalibration.alpha must be in (0, 1], got {alpha}"
+            )
+        self.alpha = alpha
+        self._exact: dict[tuple[str, str, int], float] = {}
+        self._kind: dict[tuple[str, str], float] = {}
+        self._family: dict[str, float] = {}
+        self._n_obs = 0
+
+    @staticmethod
+    def family(task: Task) -> str:
+        return task.name or ""
+
+    @property
+    def observations(self) -> int:
+        return self._n_obs
+
+    def observe(
+        self, task: Task, kind: str, size: int, planned: float, actual: float
+    ) -> None:
+        """Fold one completed attempt's actual/planned ratio into the
+        running means at every key level."""
+        if planned <= 0.0 or actual <= 0.0:
+            return
+        ratio = actual / planned
+        fam = self.family(task)
+        a = self.alpha
+        for key, store in (
+            ((fam, str(kind), int(size)), self._exact),
+            ((fam, str(kind)), self._kind),
+            (fam, self._family),
+        ):
+            old = store.get(key)
+            store[key] = ratio if old is None else (1.0 - a) * old + a * ratio
+        self._n_obs += 1
+
+    def factor(self, family: str, kind: str | None, size: int | None) -> float:
+        """The learned correction ratio, most-specific key first."""
+        if kind is not None and size is not None:
+            f = self._exact.get((family, str(kind), int(size)))
+            if f is not None:
+                return f
+        if kind is not None:
+            f = self._kind.get((family, str(kind)))
+            if f is not None:
+                return f
+        return self._family.get(family, 1.0)
+
+    def calibrate(self, task: Task, kind: str | None = None) -> Task:
+        """``task`` with every profile entry scaled by its learned ratio.
+
+        For a plain size-keyed task ``kind`` names the device kind the
+        caller plans for (``None`` falls back to family-level ratios).
+        Identity — the very same object — when nothing has been learned,
+        or when every applicable ratio is exactly 1.0."""
+        if not self._n_obs:
+            return task
+        fam = self.family(task)
+        times = task.times
+        changed = False
+        if isinstance(times, Profile):
+            table: dict[tuple[str, int], float] = {}
+            for k in times.kinds:
+                for s, t in times.for_kind(k).items():
+                    f = self.factor(fam, k, s)
+                    table[(k, s)] = t * f
+                    changed = changed or f != 1.0
+            if not changed:
+                return task
+            return dataclasses.replace(task, times=Profile(table))
+        plain: dict[int, float] = {}
+        for s, t in times.items():
+            f = self.factor(fam, kind, s)
+            plain[int(s)] = t * f
+            changed = changed or f != 1.0
+        if not changed:
+            return task
+        return dataclasses.replace(task, times=plain)
+
+
+# ---------------------------------------------------------------------------
 # FaultSpec / FaultInjector
 # ---------------------------------------------------------------------------
 
@@ -144,14 +283,33 @@ class FaultSpec:
     device_mtbf_s: float | None = None
     device_repair_s: float = 30.0
     max_device_losses: int = 2
+    # correlated failure domains: groups of device indices that share a
+    # failure source (rack PDU, driver host, NVSwitch plane).  A domain
+    # shock takes every member down *together* — one shared draw per
+    # (seed, domain, epoch), not independent per-device Poisson — so the
+    # survivor re-partition path is exercised at realistic scale.
+    domains: tuple = ()
+    domain_mtbf_s: float | None = None
+    domain_repair_s: float = 30.0
+    max_domain_shocks: int = 2
 
     def __post_init__(self):
         if self.straggler_factor <= 1.0:
             raise ValueError("FaultSpec.straggler_factor must exceed 1.0")
         for f in ("noise_sigma", "straggler_prob", "task_fail_rate",
-                  "device_repair_s"):
+                  "device_repair_s", "domain_repair_s"):
             if getattr(self, f) < 0.0:
                 raise ValueError(f"FaultSpec.{f} must be >= 0")
+        if self.domain_mtbf_s is not None and self.domain_mtbf_s <= 0.0:
+            raise ValueError("FaultSpec.domain_mtbf_s must be > 0")
+        if self.max_domain_shocks < 0:
+            raise ValueError("FaultSpec.max_domain_shocks must be >= 0")
+        domains = tuple(
+            tuple(int(d) for d in dom) for dom in self.domains
+        )
+        if any(not dom for dom in domains):
+            raise ValueError("FaultSpec.domains entries must be non-empty")
+        object.__setattr__(self, "domains", domains)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +329,7 @@ class ExecutionDraw:
 # so they are tuples of ints only (str hashing is randomized per run)
 _STREAM_EXEC = 1
 _STREAM_DEVICE = 2
+_STREAM_DOMAIN = 3
 
 
 class FaultInjector:
@@ -199,6 +358,7 @@ class FaultInjector:
         return bool(
             s.noise_sigma > 0.0 or s.straggler_prob > 0.0
             or s.task_fail_rate > 0.0 or s.device_mtbf_s is not None
+            or (s.domain_mtbf_s is not None and s.domains)
         )
 
     def draw_execution(
@@ -242,6 +402,31 @@ class FaultInjector:
             if t >= horizon:
                 break
             rec = t + s.device_repair_s
+            out.append((t, rec))
+            t = rec
+        return out
+
+    def domain_outages(
+        self, domain: int, horizon: float
+    ) -> list[tuple[float, float]]:
+        """Seeded ``(shock_at, recovered_at)`` windows for failure domain
+        index ``domain`` over ``[0, horizon)``.  Every member device of
+        the domain goes down and comes back *together* at these instants.
+        Each epoch's inter-shock gap is an independent pure draw keyed
+        ``(seed, _STREAM_DOMAIN, domain, epoch)`` — still a function of
+        integers only, so domain fates survive re-planning and processes
+        exactly like task fates do."""
+        s = self.spec
+        if s.domain_mtbf_s is None or not s.domains:
+            return []
+        out: list[tuple[float, float]] = []
+        t = 0.0
+        for epoch in range(s.max_domain_shocks):
+            rng = self._rng(_STREAM_DOMAIN, domain, epoch)
+            t += rng.expovariate(1.0 / s.domain_mtbf_s)
+            if t >= horizon:
+                break
+            rec = t + s.domain_repair_s
             out.append((t, rec))
             t = rec
         return out
@@ -314,14 +499,26 @@ def run_with_faults(
         if dl is not None:
             deadlines[task.id] = float(dl)
 
-    if injector.spec.device_mtbf_s is not None and svc.cluster is not None:
+    ispec = injector.spec
+    if svc.cluster is not None and (
+        ispec.device_mtbf_s is not None
+        or (ispec.domain_mtbf_s is not None and ispec.domains)
+    ):
         if horizon is None:
             last = max((float(a) for a, _, _ in stream), default=0.0)
             horizon = last + 10.0 * svc.config.max_wait_s + 100.0
-        for i in range(len(svc.cluster.devices)):
-            for lost, rec in injector.device_outages(i, horizon):
-                push(lost, K_LOSS, (i,))
-                push(rec, K_RECOVER, (i,))
+        if ispec.device_mtbf_s is not None:
+            for i in range(len(svc.cluster.devices)):
+                for lost, rec in injector.device_outages(i, horizon):
+                    push(lost, K_LOSS, (i,))
+                    push(rec, K_RECOVER, (i,))
+        if ispec.domain_mtbf_s is not None:
+            # correlated shocks: every member of the domain goes down and
+            # comes back together (payload carries the whole group)
+            for di, dom in enumerate(ispec.domains):
+                for lost, rec in injector.domain_outages(di, horizon):
+                    push(lost, K_LOSS, (tuple(dom),))
+                    push(rec, K_RECOVER, (tuple(dom),))
 
     factor = svc.config.straggler_factor
     attempts: dict[int, int] = {}       # task id -> current attempt number
@@ -329,14 +526,28 @@ def run_with_faults(
     reported: set[tuple[int, int]] = set()         # (tid, attempt) resolved
     loss_pending: dict[int, float] = {}  # tid -> time its placement was lost
     recovery_latency: list[float] = []
+    # device -> count of outage windows currently holding it dark: an
+    # independent MTBF loss can overlap a correlated domain shock on the
+    # same device, and the device only physically returns when its LAST
+    # overlapping window ends
+    down: dict[int, int] = {}
     n_events = 0
+
+    def true_planned(it) -> float:
+        # ground truth for the injector's draws: the *stored* profile's
+        # duration at the item's (kind, size).  With calibration on, the
+        # committed item carries corrected (belief) times — drawing from
+        # them would let the service's own beliefs bend physical reality.
+        f = getattr(svc, "true_duration", None)
+        return it.planned_duration if f is None else f(it)
 
     def sync(now: float) -> None:
         """Register runtime events for every committed placement whose
         (attempt, begin) the harness has not seen yet."""
+        done = svc.completions
         for it in svc.committed_items():
             tid = it.task.id
-            if it.failed:
+            if it.failed or tid in done:
                 continue
             att = attempts.setdefault(tid, 1)
             if (tid, att) in reported:
@@ -348,7 +559,7 @@ def run_with_faults(
             if tid in loss_pending:
                 # parked through the outage: recovered when re-committed
                 recovery_latency.append(it.begin - loss_pending.pop(tid))
-            draw = injector.draw_execution(tid, att, it.planned_duration)
+            draw = injector.draw_execution(tid, att, true_planned(it))
             if draw.fails:
                 push(it.begin + draw.fail_after, K_FAIL,
                      (tid, att, it.begin))
@@ -407,44 +618,70 @@ def run_with_faults(
                 reported.add((tid, att))
                 attempts[tid] = att + 1
         elif kind == K_LOSS:
-            dev = payload[0]
-            tree_dev = svc.cluster.tree_device
-            for it in svc.committed_items():
-                tid = it.task.id
-                if tree_dev[it.node.tree] != dev or it.begin > now:
-                    continue
-                att = attempts.get(tid, 1)
-                if (tid, att) in reported or it.end > now + 1e-9:
-                    continue
-                draw = injector.draw_execution(
-                    tid, att, it.planned_duration)
-                actual = it.begin + (draw.fail_after if draw.fails
-                                     else draw.duration)
-                if actual > now:
-                    # the books project it done, but it is physically
-                    # still running on the dying device: it dies now
-                    # (quarantine below only sees books-running work)
-                    svc.report(tid, "failed", now)
+            target = payload[0]
+            devs = target if isinstance(target, tuple) else (target,)
+            # only devices this window newly darkens: an overlapping
+            # independent loss + domain shock must not double-quarantine
+            fresh = tuple(d for d in devs if down.get(d, 0) == 0)
+            for d in devs:
+                down[d] = down.get(d, 0) + 1
+            if fresh:
+                tree_dev = svc.cluster.tree_device
+                for it in svc.committed_items():
+                    tid = it.task.id
+                    if tree_dev[it.node.tree] not in fresh \
+                            or it.begin > now:
+                        continue
+                    if tid in svc.completions:
+                        # resolved under another attempt's key (a backup
+                        # win relabels to the primary id): truly done
+                        continue
+                    att = attempts.get(tid, 1)
+                    if (tid, att) in reported or it.end > now + 1e-9:
+                        continue
+                    draw = injector.draw_execution(tid, att,
+                                                   true_planned(it))
+                    actual = it.begin + (draw.fail_after if draw.fails
+                                         else draw.duration)
+                    if actual > now:
+                        # the books project it done, but it is physically
+                        # still running on the dying device: it dies now
+                        # (quarantine below only sees books-running work)
+                        svc.report(tid, "failed", now)
+                        reported.add((tid, att))
+                        attempts[tid] = att + 1
+                n0 = len(svc.stats.outages)
+                lost = svc.quarantine(
+                    list(fresh) if isinstance(target, tuple)
+                    else fresh[0], now)
+                for tid in lost:
+                    # running attempts died with the device: the service
+                    # already routed them through the retry path
+                    att = attempts.get(tid, 1)
                     reported.add((tid, att))
                     attempts[tid] = att + 1
-            lost = svc.quarantine(dev, now)
-            for tid in lost:
-                # running attempts died with the device: the service
-                # already routed them through the retry path
-                att = attempts.get(tid, 1)
-                reported.add((tid, att))
-                attempts[tid] = att + 1
-            # recovery latency: loss pulling a placement back -> the
-            # begin of its re-committed placement (re-planning itself is
-            # synchronous; the latency is how far the outage pushed it)
-            for tid in svc.stats.outages[-1].withdrawn:
-                it = svc.committed_item(tid)
-                if it is not None:
-                    recovery_latency.append(max(0.0, it.begin - now))
-                else:
-                    loss_pending.setdefault(tid, now)
+                # recovery latency: loss pulling a placement back -> the
+                # begin of its re-committed placement (re-planning itself
+                # is synchronous; the latency is how far the outage
+                # pushed it).  A domain shock records one OutageEvent per
+                # member device.
+                for ev in svc.stats.outages[n0:]:
+                    for tid in ev.withdrawn:
+                        it = svc.committed_item(tid)
+                        if it is not None:
+                            recovery_latency.append(
+                                max(0.0, it.begin - now))
+                        else:
+                            loss_pending.setdefault(tid, now)
         elif kind == K_RECOVER:
-            svc.recover(payload[0], now)
+            target = payload[0]
+            devs = target if isinstance(target, tuple) else (target,)
+            freed = [d for d in devs if down.get(d, 0) == 1]
+            for d in devs:
+                down[d] = max(0, down.get(d, 0) - 1)
+            if freed:
+                svc.recover(freed if isinstance(target, tuple)
+                            else freed[0], now)
         sync(now)
 
     svc.drain()
@@ -532,6 +769,8 @@ def execute_open_loop(
 
 __all__ = [
     "RetryPolicy",
+    "SpeculationPolicy",
+    "ProfileCalibration",
     "FaultSpec",
     "FaultInjector",
     "ExecutionDraw",

@@ -452,6 +452,32 @@ class MultiBatchScheduler:
                     return new
         raise KeyError(f"task {task_id} has no live committed placement")
 
+    def relabel_item(
+        self,
+        task_id: int,
+        task: Task,
+        end_override: float | None = None,
+        failed: bool = False,
+    ) -> ScheduledTask:
+        """Rewrite the live placement of ``task_id`` to carry ``task``
+        (keeping node/begin/size) — the speculation-resolution primitive:
+        when a backup attempt wins its race, its committed record is
+        re-keyed to the logical task id it raced for, so the combined
+        schedule keeps exactly one live record per logical task."""
+        for seg in reversed(self.segments):
+            for i, it in enumerate(seg.items):
+                if it.task.id == task_id and not it.failed:
+                    new = dataclasses.replace(
+                        it, task=task,
+                        end_override=(end_override if end_override is not None
+                                      else it.end_override),
+                        failed=failed,
+                    )
+                    seg.items[i] = new
+                    self.rebuild_tail()
+                    return new
+        raise KeyError(f"task {task_id} has no live committed placement")
+
     def remove_items(self, task_ids: set[int]) -> list[Task]:
         """Drop the live placements of ``task_ids`` from the committed
         segments (failed occupancy records stay) and rebuild the tail.
@@ -484,16 +510,39 @@ class MultiBatchScheduler:
         correction changed an item's end, or a removal dropped one).
         ``reset_at`` (a device-loss recovery) stays applied: releases are
         floored there, and instances whose busy-until predates the reset
-        stay dead — the outage destroyed the physical partition."""
+        stay dead — the outage destroyed the physical partition.
+
+        An instance survives the reset only if its latest *creation
+        began* at or after ``reset_at``: a creation window still in
+        progress when the device was lost was aborted by the outage, yet
+        its busy-until extends past the reset, so testing busy-until
+        alone would leave it alive and let the very next flush place
+        work — starting as early as the recovery instant itself — on an
+        instance that was never re-created.  The boundary is inclusive:
+        ``begin == reset_at`` is legitimate post-recovery work."""
         tail = Tail.empty(self.spec)
         for seg in self.segments:
             tail = tail_after(seg, tail)
         if self.reset_at > 0.0:
+            created_at: dict = {}
+            for seg in self.segments:
+                for rc in seg.reconfigs:
+                    if rc.kind == "create":
+                        prev = created_at.get(rc.node.key)
+                        if prev is None or rc.begin > prev:
+                            created_at[rc.node.key] = rc.begin
+            alive: dict = {}
+            for k, v in tail.alive.items():
+                if v <= self.reset_at + 1e-12:
+                    continue  # busy-until predates the reset: died with it
+                born = created_at.get(k)
+                if born is None or born < self.reset_at - 1e-12:
+                    continue  # creation began before the reset: aborted
+                alive[k] = v
             tail = Tail(
                 release={k: max(float(v), self.reset_at)
                          for k, v in tail.release.items()},
-                alive={k: v for k, v in tail.alive.items()
-                       if v > self.reset_at + 1e-12},
+                alive=alive,
             )
         self.tail = tail
 

@@ -170,6 +170,24 @@ class OnlineScheduler:
         self.placements.append(placement)
         return placement
 
+    def cancel(self, task_id: int, at: float) -> OnlinePlacement:
+        """Cancel a committed placement at absolute time ``at`` — the
+        losing attempt of a speculation race.  The slot becomes a failed
+        occupancy record truncated to the span it physically held the
+        slice (engine op :meth:`~repro.core.timing.ChainState.apply_cancel`,
+        logged and undo-exact), successors re-time, and ``schedule()``
+        materialises it with ``failed=True``."""
+        eng = self._eng
+        begin, _ = eng.task_begin_end(task_id)
+        eng.apply_cancel(task_id, max(at - begin, 1e-9))
+        placement = None
+        for p in self.placements:  # cancelled + successors all re-time
+            p.begin, p.end = eng.task_begin_end(p.task_id)
+            if p.task_id == task_id:
+                placement = p
+        assert placement is not None, f"task {task_id} has no placement"
+        return placement
+
     def withdraw_not_started(self, t: float, eps: float = 1e-9) -> list[Task]:
         """Pull back every placement that has not started by time ``t``.
 

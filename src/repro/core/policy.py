@@ -100,6 +100,23 @@ class SchedulerConfig:
     # failed: capped exponential backoff on the re-release time, optional
     # demotion.  None = no retries; a failed task is permanently failed.
     retry: object | None = None
+    # straggler speculation (repro.core.faults.SpeculationPolicy): when a
+    # straggler is flagged, race a backup attempt on the best alternative
+    # placement; first finisher wins, the loser is cancelled.  None =
+    # stretch-only straggler handling (the PR 6 behaviour, bit-identical).
+    speculation: object | None = None
+    # online profile calibration (repro.core.faults.ProfileCalibration):
+    # EWMA duration-correction state fed by report(end=) and applied at
+    # the policy boundary only — the stored tasks keep their raw profiles.
+    # None = plan straight from the submitted profiles, bit-identically.
+    calibration: object | None = None
+    # profile transfer fallback: derive missing (device_kind, size)
+    # profile entries from the nearest measured kind at submit time
+    # (repro.core.problem.transfer_profile).  False = off (a task must
+    # cover its devices, PR 5 behaviour); True enables derivation with
+    # unit speed factors; a {device_kind: relative_speed} mapping scales
+    # cross-kind transfers by speed[donor] / speed[target].
+    profile_transfer: object = False
 
     def __post_init__(self):
         if self.straggler_factor is not None and self.straggler_factor <= 1.0:

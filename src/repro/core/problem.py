@@ -172,6 +172,12 @@ class Task:
     id: int
     times: Mapping  # size -> seconds, or a Profile ((kind, size) -> s)
     name: str = ""
+    # Optional checkpoint cadence (seconds of *work on the placed size*).
+    # When set, a failed or speculation-preempted attempt earns credit for
+    # every completed checkpoint period, and retries resume from the last
+    # checkpoint boundary via :func:`remainder_task`.  ``None`` (default)
+    # keeps the PR 6 restart-from-zero semantics bit-identically.
+    checkpoint_period_s: float | None = None
 
     def time(self, size: int) -> float:
         return self.times[size]
@@ -238,6 +244,124 @@ def bind_tasks(tasks: Sequence[Task], spec: DeviceSpec) -> Sequence[Task]:
     if all(not isinstance(t.times, Profile) for t in tasks):
         return tasks
     return [t.bind(spec) for t in tasks]
+
+
+def _scale_times(times: Mapping, factor: float) -> Mapping:
+    """Every profile entry multiplied by ``factor``, preserving the
+    representation (Profile stays a Profile, plain dict stays a dict)."""
+    if isinstance(times, Profile):
+        return Profile({
+            (kind, s): t * factor
+            for kind in times.kinds
+            for s, t in times.for_kind(kind).items()
+        })
+    return {s: t * factor for s, t in times.items()}
+
+
+def remainder_task(task: Task, remaining: float) -> Task:
+    """``task`` shrunk to its un-finished fraction — the checkpoint-credit
+    retry transform.  ``remaining`` is the fraction of the *current*
+    profile still to run (``0 < remaining <= 1``); every profile entry is
+    scaled by it, which is exact for checkpoint credit expressed as a
+    fraction of the planned duration on the failed placement (the fraction
+    is size- and kind-independent by the proportional-progress model, the
+    same modelling move as :func:`demote_shrink <repro.core.faults.demote_shrink>`
+    for size demotion).  Identity at ``remaining == 1``."""
+    if not 0.0 < remaining <= 1.0:
+        raise ValueError(
+            f"remaining fraction must be in (0, 1]; got {remaining!r}"
+        )
+    if remaining == 1.0:
+        return task
+    return dataclasses.replace(task, times=_scale_times(task.times, remaining))
+
+
+def transfer_profile(
+    task: Task,
+    kind_sizes: Mapping[str, Sequence[int]],
+    speed: Mapping[str, float] | None = None,
+) -> Task:
+    """``task`` with missing ``(device_kind, size)`` profile entries derived
+    from its nearest measured ones — the profile-transfer fallback behind
+    ``SchedulerConfig(profile_transfer=...)``.
+
+    ``kind_sizes`` names the instance types the fleet can offer
+    (``{device_kind: sizes}``).  Derivation, per target kind:
+
+    * a kind with *some* measured sizes fills the missing ones from the
+      nearest measured size ``s0``: for ``s > s0`` keep ``t(s0)``
+      (conservative — monotone profiles never get slower with more
+      slices), for ``s < s0`` use ``t(s0) * s0 / s`` (the work-conserving
+      upper estimate under linear speedup);
+    * a wholly-unmeasured kind first copies the donor kind with the
+      widest measured coverage (ties broken lexicographically for
+      determinism), scaled by the per-kind speed factor
+      ``speed[donor] / speed[target]`` (missing entries count as 1.0),
+      then fills sizes as above.
+
+    Measured entries are never altered, so transfer is the identity for a
+    task that already covers the fleet, and the calibration layer refines
+    transferred estimates exactly like measured ones.  Raises
+    :class:`ProfileCoverageError` only when nothing is derivable (the
+    task has no measured entries at all)."""
+    times = task.times
+    if isinstance(times, Profile):
+        measured = {k: dict(times.for_kind(k)) for k in times.kinds}
+    else:
+        # a plain size-keyed task supports every kind by definition; the
+        # only derivable gap is a missing size within that shared table.
+        measured = {None: dict(times)}
+    measured = {k: v for k, v in measured.items() if v}
+    if not measured:
+        any_kind = next(iter(kind_sizes), "?")
+        raise ProfileCoverageError(
+            task.id, str(any_kind),
+            detail="profile has no measured entries to transfer from",
+        )
+
+    def fill_sizes(table: dict[int, float], sizes: Sequence[int]) -> bool:
+        grew = False
+        base = sorted(table)
+        for s in sizes:
+            s = int(s)
+            if s in table:
+                continue
+            s0 = min(base, key=lambda b: (abs(b - s), b))
+            t0 = table[s0]
+            table[s] = t0 if s > s0 else t0 * (s0 / s)
+            grew = True
+        return grew
+
+    speed = dict(speed or {})
+
+    def rate(kind) -> float:
+        return float(speed.get(kind, 1.0))
+
+    if None in measured:  # plain task: only within-table size fill
+        table = measured[None]
+        needed = sorted({int(s) for sizes in kind_sizes.values() for s in sizes})
+        if not fill_sizes(table, needed):
+            return task
+        return dataclasses.replace(task, times=table)
+
+    derived: dict[tuple[str, int], float] = {}
+    changed = False
+    for kind, sizes in sorted(kind_sizes.items()):
+        table = dict(measured.get(kind, {}))
+        if not table:
+            donor = max(sorted(measured), key=lambda k: len(measured[k]))
+            factor = rate(donor) / rate(kind)
+            table = {s: t * factor for s, t in measured[donor].items()}
+            changed = True
+        changed |= fill_sizes(table, sizes)
+        for s, t in table.items():
+            derived[(kind, s)] = t
+    if not changed:
+        return task
+    for kind, tab in measured.items():  # measured entries always win, verbatim
+        for s, t in tab.items():
+            derived[(kind, s)] = t
+    return dataclasses.replace(task, times=Profile(derived))
 
 
 @dataclasses.dataclass(frozen=True)

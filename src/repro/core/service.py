@@ -84,7 +84,19 @@ from repro.core.cluster import ClusterMultiBatchScheduler, ClusterSpec
 from repro.core.device_spec import DeviceSpec, multi_gpu
 from repro.core.multibatch import MultiBatchScheduler
 from repro.core.policy import SchedulerConfig
-from repro.core.problem import EPS, Schedule, ScheduledTask, Task
+from repro.core.problem import (
+    EPS,
+    Schedule,
+    ScheduledTask,
+    Task,
+    remainder_task,
+    transfer_profile,
+)
+
+#: backup attempts get ids far above any plausible user task id so the
+#: primary/backup records coexist on the committed timeline without
+#: colliding in any id-keyed bookkeeping
+_BACKUP_ID_BASE = 1 << 48
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +106,7 @@ class Decision:
     task_id: int
     arrival: float        # virtual time the task was submitted
     decided_at: float     # virtual time the placement decision fired
-    route: str            # "batch" | "online" | "replan" | "fault"
+    route: str            # "batch" | "online" | "replan" | "fault" | "speculate"
     flush_id: int         # which flush carried it
     plan_wall_s: float    # wall-clock seconds the scheduler spent deciding
     deadline: float | None = None  # the task's SLO, if it kept one
@@ -157,6 +169,37 @@ class OutageEvent:
     parked: tuple[int, ...]      # withdrawn tasks no surviving device fits
 
 
+@dataclasses.dataclass(frozen=True)
+class SpeculationEvent:
+    """One straggler-speculation race: a backup attempt launched against
+    a stretched primary.  ``winner`` stays ``None`` while the race is in
+    flight, then records who finished first — ``"backup"`` (the backup's
+    record was re-keyed to the logical task), ``"primary"`` (the backup
+    was cancelled), or ``"cancelled"`` (the backup died or was withdrawn
+    before either finished; the primary, or its retry, carries on)."""
+
+    task_id: int                  # the straggling primary
+    backup_id: int                # the backup attempt's committed id
+    at: float                     # launch time
+    primary_end: float            # the primary's stretched projection then
+    backup_end: float             # the backup's planned end at launch
+    winner: str | None = None     # "primary" | "backup" | "cancelled"
+    resolved_at: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointEvent:
+    """One grant of partial-progress credit: a failed (or speculation-
+    cancelled) attempt banked its completed checkpoint periods, so the
+    task's next attempt resumes from that boundary."""
+
+    task_id: int                  # the logical task earning credit
+    attempt: int                  # attempt number current at the grant
+    at: float                     # when the attempt ended
+    credit_s: float               # completed-checkpoint seconds banked
+    progress: float               # cumulative fraction of the ORIGINAL work
+
+
 @dataclasses.dataclass
 class ServiceStats:
     submitted: int = 0
@@ -176,6 +219,8 @@ class ServiceStats:
     corrections: list[CorrectionEvent] = dataclasses.field(default_factory=list)
     retries: list[RetryEvent] = dataclasses.field(default_factory=list)
     outages: list[OutageEvent] = dataclasses.field(default_factory=list)
+    speculations: list[SpeculationEvent] = dataclasses.field(default_factory=list)
+    checkpoints: list[CheckpointEvent] = dataclasses.field(default_factory=list)
 
     def queue_delays(self) -> list[float]:
         return [d.queue_delay for d in self.decisions]
@@ -259,6 +304,14 @@ class SchedulingService:
         # is a counterfactual over profiled durations and cannot absorb
         # runtime truth, so it is dropped and never re-materialised
         self._fault_mode = False
+        # -- speculation / checkpoint state ---------------------------------
+        self._backups: dict[int, int] = {}       # primary id -> LIVE backup id
+        self._backup_of: dict[int, int] = {}     # backup id -> primary (forever)
+        self._spec_events: dict[int, int] = {}   # backup id -> stats index
+        self._spec_seq = 0                       # backup id sequence
+        self._progress: dict[int, float] = {}    # banked fraction of original
+        self._attempt_base: dict[int, float] = {}  # progress the attempt began at
+        self._primary_down: set[int] = set()     # primaries dead, backup racing
 
     # -- intake ------------------------------------------------------------
     def submit(
@@ -283,6 +336,7 @@ class SchedulingService:
                 f"arrivals must be non-decreasing: {arrival} < {self.now}"
             )
         self._validate_task(task)
+        task = self._maybe_transfer(task)
         if deadline is not None and float(deadline) < arrival - 1e-9:
             raise ValueError(
                 f"task {task.id}: deadline {deadline} precedes its "
@@ -368,6 +422,12 @@ class SchedulingService:
                     f"for profile entry {key!r}; execution times must "
                     f"be strictly positive"
                 )
+        if task.checkpoint_period_s is not None \
+                and not task.checkpoint_period_s > 0.0:
+            raise ValueError(
+                f"task {task.id} has non-positive checkpoint period "
+                f"{task.checkpoint_period_s!r}"
+            )
 
     # -- runtime feedback ---------------------------------------------------
     def report(
@@ -395,16 +455,33 @@ class SchedulingService:
         if t < self.now - 1e-9:
             raise ValueError(f"time must be non-decreasing: {t} < {self.now}")
         self.now = max(self.now, t)
-        if event == "completed":
-            self._report_completed(task_id, t, end)
-        elif event == "failed":
-            self._report_failed(task_id, t)
-        else:
+        if event not in ("completed", "failed"):
             raise ValueError(
                 f"unknown runtime event {event!r}; expected 'completed' "
                 f"or 'failed' (stragglers are detected implicitly via "
                 f"config.straggler_factor)"
             )
+        primary = self._backup_of.get(task_id)
+        if primary is not None and self._backups.get(primary) == task_id:
+            # runtime truth about a LIVE backup attempt resolves its race
+            if event == "completed":
+                self._backup_won(task_id, t, end)
+            else:
+                self._backup_failed(task_id, t)
+            self._advance(self.now)
+            return
+        if event == "completed":
+            bid = self._backups.get(task_id)
+            if bid is not None:
+                # the primary beat its backup: cancel the backup first so
+                # the completion lands on a race-free timeline
+                self._cancel_backup(bid, t, "primary")
+            self._report_completed(task_id, t, end)
+        else:
+            if self._backups.get(task_id) is not None:
+                self._primary_failed_racing(task_id, t)
+            else:
+                self._report_failed(task_id, t)
         self._advance(self.now)
 
     def _device_index(self, device) -> int:
@@ -420,15 +497,23 @@ class SchedulingService:
         )
 
     def quarantine(self, device, t: float) -> list[int]:
-        """Device ``device`` of the pool (index or ``DeviceSpec``) is
-        lost at time ``t``.
+        """Device(s) ``device`` of the pool are lost at time ``t``.
 
-        Not-yet-started placements on it are withdrawn and re-partitioned
-        onto the surviving devices via the flush partitioner (tasks no
-        survivor supports are parked for :meth:`recover`); attempts
-        RUNNING on it at ``t`` died with it and go through the retry
-        path.  Admission floors stop counting the device until recovery.
-        Returns the ids of the attempts that died running.
+        ``device`` is a pool index, a ``DeviceSpec``, or — for a
+        correlated failure *domain* — a sequence of either: every listed
+        device is quarantined atomically before anything is re-planned,
+        so a shared-shock outage exercises one joint survivor
+        re-partition instead of N independent ones.
+
+        Not-yet-started placements on the lost devices are withdrawn and
+        re-partitioned onto the survivors via the flush partitioner
+        (tasks no survivor supports are parked for :meth:`recover`);
+        attempts RUNNING at ``t`` died and go through the retry path.
+        Backup attempts caught in the outage are speculation-cancelled,
+        never retried in their own right — the logical task's recovery
+        routes through its primary.  Admission floors stop counting the
+        devices until recovery.  Returns the ids of the attempts that
+        died running.
         """
         t = float(t)
         if t < self.now - 1e-9:
@@ -439,49 +524,122 @@ class SchedulingService:
                 "(SchedulingService(pool=cluster(...))): losing the only "
                 "device leaves no surviving capacity to re-partition onto"
             )
-        device = self._device_index(device)
+        if isinstance(device, (list, tuple, set, frozenset)):
+            # domain form: overlapping shocks may list an already-lost
+            # device — skip it rather than refuse the whole domain
+            devices = sorted({
+                dev for dev in (self._device_index(d) for d in device)
+                if self.mb.active[dev]
+            })
+            if not devices:
+                return []
+        else:
+            devices = [self._device_index(device)]
         self.now = max(self.now, t)
         self._enter_fault_mode()
-        withdrawn, running = self.mb.quarantine_device(device, t)
-        for tid in running:
-            it = self.mb.find_item(tid)
-            self.mb.replace_item(
-                tid, end_override=max(t, it.begin), failed=True
-            )
-            self._handle_failure(tid, t)
+        # phase 1 — take every listed device down and truncate the
+        # attempts that died on it, BEFORE any re-planning: the joint
+        # re-partition must only see surviving capacity
+        per_dev: list[tuple[int, list[Task], list[int]]] = []
+        all_running: list[int] = []
+        items_by_tid: dict[int, ScheduledTask] = {}
+        for dev in devices:
+            withdrawn, running = self.mb.quarantine_device(dev, t)
+            per_dev.append((dev, withdrawn, running))
+            for tid in running:
+                it = self.mb.find_item(tid)
+                items_by_tid[tid] = it
+                self.mb.replace_item(
+                    tid, end_override=max(t, it.begin), failed=True
+                )
+            all_running.extend(running)
+        # phase 2 — resolve speculation races the outage decided.
+        # Killed/withdrawn backups first: cancelling a backup routes its
+        # down primary's retry, which must not race the primary's own
+        # kill handling below.
+        for _, _, running in per_dev:
+            for tid in running:
+                if tid in self._backup_of:
+                    self._backup_caught_in_outage(
+                        tid, t, item=items_by_tid[tid]
+                    )
+        replace: list[Task] = []
+        for _, withdrawn, _ in per_dev:
+            for task in withdrawn:
+                if task.id in self._backup_of:
+                    # a not-yet-started backup was withdrawn with the
+                    # device: cancel the race, don't re-place it
+                    if self._backups.get(self._backup_of[task.id]) \
+                            == task.id:
+                        self._backup_caught_in_outage(task.id, t, item=None)
+                else:
+                    replace.append(task)
+        for _, _, running in per_dev:
+            for tid in running:
+                if tid in self._backup_of:
+                    continue  # handled above
+                if self._backups.get(tid) is not None:
+                    # the primary died but its backup survives elsewhere:
+                    # bank its checkpoints and let the backup carry the
+                    # race — no retry unless the backup also dies
+                    self._bank_checkpoints(tid, t, items_by_tid[tid])
+                    self._primary_down.add(tid)
+                else:
+                    self._handle_failure(
+                        tid, t, item=items_by_tid.get(tid)
+                    )
+        # phase 3 — one joint re-partition of everything withdrawn
         parked_before = len(self._parked)
-        self._replace_tasks(withdrawn, t)
-        self.stats.outages.append(OutageEvent(
-            device, t, None,
-            withdrawn=tuple(task.id for task in withdrawn),
-            died_running=tuple(running),
-            parked=tuple(
-                task.id for task in self._parked[parked_before:]
-            ),
-        ))
+        self._replace_tasks(replace, t)
+        newly_parked = {
+            task.id for task in self._parked[parked_before:]
+        }
+        for dev, withdrawn, running in per_dev:
+            wd_ids = tuple(
+                task.id for task in withdrawn
+                if task.id not in self._backup_of
+            )
+            self.stats.outages.append(OutageEvent(
+                dev, t, None,
+                withdrawn=wd_ids,
+                died_running=tuple(running),
+                parked=tuple(
+                    tid for tid in wd_ids if tid in newly_parked
+                ),
+            ))
         self._advance(self.now)
-        return list(running)
+        return all_running
 
     def recover(self, device, t: float) -> None:
-        """Quarantined device ``device`` (index or ``DeviceSpec``)
-        returns to service at ``t``: its seam tail is floored at ``t``
-        (alive instances cleared — the outage reset the partition) and
-        parked tasks that fit again are re-admitted and re-planned."""
+        """Quarantined device(s) ``device`` (index, ``DeviceSpec``, or a
+        sequence of either — the same domain shape :meth:`quarantine`
+        accepts) return to service at ``t``: each seam tail is floored at
+        ``t`` (alive instances cleared — the outage reset the partition)
+        and parked tasks that fit again are re-admitted and re-planned."""
         t = float(t)
         if t < self.now - 1e-9:
             raise ValueError(f"time must be non-decreasing: {t} < {self.now}")
         if self.cluster is None:
             raise ValueError("recover() needs a heterogeneous pool")
-        device = self._device_index(device)
+        if isinstance(device, (list, tuple, set, frozenset)):
+            devices = sorted({
+                dev for dev in (self._device_index(d) for d in device)
+                if not self.mb.active[dev]
+            })
+            if not devices:
+                return
+        else:
+            devices = [self._device_index(device)]
         self.now = max(self.now, t)
-        self.mb.recover_device(device, t)
-        for i in range(len(self.stats.outages) - 1, -1, -1):
-            ev = self.stats.outages[i]
-            if ev.device == device and ev.recovered_at is None:
-                self.stats.outages[i] = dataclasses.replace(
-                    ev, recovered_at=t
-                )
-                break
+        for dev in devices:
+            self.mb.recover_device(dev, t)
+            for i in range(len(self.stats.outages) - 1, -1, -1):
+                ev = self.stats.outages[i]
+                if ev.device == dev and ev.recovered_at is None:
+                    self.stats.outages[i] = dataclasses.replace(
+                        ev, recovered_at=t
+                    )
+                    break
         if self._parked:
             still: list[Task] = []
             readmit: list[Task] = []
@@ -550,6 +708,7 @@ class SchedulingService:
             )
         self._completions[task_id] = actual
         self.stats.completed += 1
+        self._feed_calibration(it, actual)
         old_end = it.end  # current projection (may already carry a stretch)
         if abs(actual - old_end) <= 1e-9:
             return  # runtime matched the books exactly: nothing to correct
@@ -588,15 +747,24 @@ class SchedulingService:
         self.stats.corrections.append(CorrectionEvent(
             task_id, t, "failure", old_end, new_end, ()
         ))
-        self._handle_failure(task_id, t)
+        self._handle_failure(task_id, t, item=it)
         if self.config.replan:
             # the truncated attempt freed committed room — optional
             # strict-win reclaim, same rule as flush re-planning
             self._strict_win_replan(t)
 
-    def _handle_failure(self, task_id: int, t: float) -> None:
+    def _handle_failure(
+        self, task_id: int, t: float, item: ScheduledTask | None = None
+    ) -> None:
         """Route one failed attempt through the retry policy (or record
-        it permanently failed)."""
+        it permanently failed).  ``item`` is the attempt's placement at
+        the failure instant (when the caller has it): checkpoint
+        credit earned by the dying attempt is banked from it, and the
+        retry re-enters the queue as a *remainder* task resuming from
+        the last checkpoint boundary."""
+        progress = self._progress.get(task_id, 0.0)
+        if item is not None:
+            progress = self._bank_checkpoints(task_id, t, item)
         attempt = self._attempts.get(task_id, 1)
         retry = self.config.retry
         task = self._tasks.get(task_id)
@@ -605,6 +773,16 @@ class SchedulingService:
             return
         nxt = attempt + 1
         self._attempts[task_id] = nxt
+        base_prev = self._attempt_base.get(task_id, 0.0)
+        if progress > base_prev + 1e-12:
+            # the dying attempt carried the task from base_prev to
+            # `progress` of the ORIGINAL work; its profile covered
+            # (1 - base_prev), so the relative remainder shrinks the
+            # CURRENT task (composing with any earlier demotion)
+            rel = (1.0 - progress) / (1.0 - base_prev)
+            task = remainder_task(task, rel)
+            self._tasks[task_id] = task
+            self._attempt_base[task_id] = progress
         demoted = False
         if retry.demote is not None:
             cand = retry.task_for_attempt(task, nxt)
@@ -656,6 +834,7 @@ class SchedulingService:
             self.stats.corrections.append(CorrectionEvent(
                 tid, now, "straggler", old_end, new_end, withdrawn
             ))
+            self._maybe_speculate(tid, now)
 
     def _forced_replan(self, t: float, corrected_tid: int) -> tuple[int, ...]:
         """After a stretch the committed tail may be invalid (successors
@@ -697,7 +876,7 @@ class SchedulingService:
         if not placeable:
             return
         t0 = time.perf_counter()
-        self.mb.add_batch(placeable, not_before=t)
+        self.mb.add_batch(self._plan_tasks(placeable), not_before=t)
         wall = time.perf_counter() - t0
         fid = self._next_flush_id()
         for task in placeable:
@@ -746,7 +925,7 @@ class SchedulingService:
         self.stats.replan_attempts += 1
         t0 = time.perf_counter()
         plain_makespan = self.mb.makespan
-        trial.add_batch(wd, not_before=t)
+        trial.add_batch(self._plan_tasks(wd), not_before=t)
         if trial.makespan >= plain_makespan - self.config.eps:
             return
         wall = time.perf_counter() - t0
@@ -763,6 +942,395 @@ class SchedulingService:
             fid, t, tuple(task.id for task in wd),
             trial.makespan, plain_makespan,
         ))
+
+    # -- speculation / checkpoint credit / calibration ---------------------
+    def true_duration(self, item: ScheduledTask) -> float:
+        """The RAW profiled duration of ``item``'s placement — from the
+        stored (uncalibrated) task, looked up by the placement's device
+        kind and size.  The committed item may carry a calibrated task
+        (``config.calibration`` rewrites profiles at the policy
+        boundary), so harnesses that model ground truth must draw from
+        here, not from ``item.planned_duration`` (the belief)."""
+        task = self._tasks.get(item.task.id)
+        if task is None:
+            return item.planned_duration
+        if self.cluster is not None:
+            dev = self.cluster.devices[
+                self.cluster.tree_device[item.node.tree]
+            ]
+            kind = dev.device_kind
+        else:
+            kind = self.spec.device_kind
+        try:
+            times = task.times_for(kind)
+        except (KeyError, ValueError):
+            return item.planned_duration
+        dur = times.get(item.size)
+        return item.planned_duration if dur is None else float(dur)
+
+    def _plan_tasks(self, tasks: list[Task]) -> list[Task]:
+        """Apply online profile calibration at the policy boundary: the
+        planner sees EWMA-corrected durations, while the stored tasks
+        (and therefore retries, ground-truth draws, and the exactly-once
+        books) keep their raw profiles.  With ``config.calibration``
+        unset this returns ``tasks`` unchanged — same list object, so
+        the calibration-off service is bit-identical to PR 6."""
+        cal = self.config.calibration
+        if cal is None:
+            return tasks
+        kind = None if self.cluster is not None \
+            else self.spec.device_kind
+        return [
+            cal.calibrate(self._tasks.get(task.id, task), kind=kind)
+            for task in tasks
+        ]
+
+    def _calibrated_batch(self, batch):
+        """The tuple-shaped sibling of :meth:`_plan_tasks` for the
+        online-routing path (task, arrival, deadline)."""
+        cal = self.config.calibration
+        if cal is None:
+            return batch
+        kind = None if self.cluster is not None \
+            else self.spec.device_kind
+        return [
+            (cal.calibrate(self._tasks.get(task.id, task), kind=kind),
+             arrival, deadline)
+            for task, arrival, deadline in batch
+        ]
+
+    def _feed_calibration(self, item: ScheduledTask, actual: float) -> None:
+        """One completion report becomes one EWMA observation: the raw
+        profiled duration vs the observed one, keyed by (task family,
+        device kind, size)."""
+        cal = self.config.calibration
+        if cal is None:
+            return
+        task = self._tasks.get(item.task.id)
+        if task is None:
+            return
+        if self.cluster is not None:
+            dev = self.cluster.devices[
+                self.cluster.tree_device[item.node.tree]
+            ]
+            kind = dev.device_kind
+        else:
+            kind = self.spec.device_kind
+        planned = self.true_duration(item)
+        observed = actual - item.begin
+        if planned > 0.0 and observed > 0.0:
+            cal.observe(task, kind, item.size, planned, observed)
+
+    def _maybe_transfer(self, task: Task) -> Task:
+        """Profile-transfer fallback at intake: derive the task's missing
+        ``(device_kind, size)`` entries from its nearest measured kind,
+        scaled by the per-kind relative speed (``config.profile_transfer``
+        as a mapping; ``True`` = unit factors).  Measured entries always
+        win; a task with nothing to transfer from still raises
+        :class:`~repro.core.problem.ProfileCoverageError`."""
+        if not self.config.profile_transfer:
+            return task
+        pt = self.config.profile_transfer
+        speed = pt if isinstance(pt, dict) else None
+        if self.cluster is not None:
+            merged: dict[str, set] = {}
+            for dev in self.cluster.devices:
+                merged.setdefault(dev.device_kind, set()).update(dev.sizes)
+            kind_sizes = {
+                kind: tuple(sorted(sizes))
+                for kind, sizes in merged.items()
+            }
+        else:
+            kind_sizes = {
+                self.spec.device_kind: tuple(self.spec.sizes)
+            }
+        return transfer_profile(task, kind_sizes, speed=speed)
+
+    def _bank_checkpoints(
+        self,
+        attempt_id: int,
+        t: float,
+        item: ScheduledTask,
+        target: int | None = None,
+    ) -> float:
+        """Bank the checkpoint credit a dying attempt earned and return
+        the target task's cumulative progress fraction.
+
+        ``attempt_id`` is the record that just died (a primary id or a
+        backup id); ``target`` is the logical task the credit accrues to
+        (defaults to the attempt itself).  Credit is the completed
+        checkpoint periods of the attempt's RAW planned duration,
+        composed onto the progress the attempt started from — and the
+        cumulative fraction is monotone (a later bank never lowers it),
+        so replayed or overlapping failure paths can never double-count.
+        """
+        if target is None:
+            target = attempt_id
+        old = self._progress.get(target, 0.0)
+        task = self._tasks.get(attempt_id)
+        if task is None or task.checkpoint_period_s is None:
+            return old
+        period = float(task.checkpoint_period_s)
+        planned = self.true_duration(item)
+        elapsed = max(0.0, t - item.begin)
+        credit = math.floor((elapsed + 1e-9) / period) * period
+        if credit <= 0.0 or planned <= 0.0:
+            return old
+        frac = min(credit / planned, 1.0 - 1e-9)
+        base = self._attempt_base.get(attempt_id, 0.0)
+        cand = base + (1.0 - base) * frac
+        if cand <= old + 1e-12:
+            return old
+        self._progress[target] = cand
+        self.stats.checkpoints.append(CheckpointEvent(
+            target, self._attempts.get(target, 1), t,
+            credit_s=credit, progress=cand,
+        ))
+        return cand
+
+    def _maybe_speculate(self, tid: int, now: float) -> None:
+        """Straggler hook: race a backup attempt against the stretched
+        primary on the best alternative placement, if the books prove a
+        gain of at least ``speculation.min_gain_s`` and the in-flight
+        throttle has room.  First finisher wins; the loser's record is
+        truncated into a failed occupancy slab."""
+        pol = self.config.speculation
+        if pol is None:
+            return
+        if tid in self._backup_of or tid in self._backups:
+            return  # backups don't speculate; one race per task
+        if len(self._backups) >= pol.max_inflight:
+            return
+        task = self._tasks.get(tid)
+        if task is None or tid in self._completions:
+            return
+        it_p = self.mb.find_item(tid)
+        if it_p is None or it_p.failed:
+            return
+        primary_end = it_p.end  # the just-stretched projection
+        backup = task
+        base = self._attempt_base.get(tid, 0.0)
+        if task.checkpoint_period_s is not None:
+            # the backup resumes from the primary's last checkpoint
+            # boundary, not from zero: shrink its profile to the true
+            # remainder and remember the progress it starts from
+            period = float(task.checkpoint_period_s)
+            planned = self.true_duration(it_p)
+            elapsed = max(0.0, now - it_p.begin)
+            credit = math.floor((elapsed + 1e-9) / period) * period
+            if credit > 0.0 and planned > 0.0:
+                frac = min(credit / planned, 1.0 - 1e-9)
+                backup = remainder_task(task, 1.0 - frac)
+                base = base + (1.0 - base) * frac
+        if not (self._coverable(backup) and self._placeable_now(backup)):
+            return
+        # admissible pre-filter: if even the provable floor cannot beat
+        # the stretched primary by min_gain_s, skip the trial plan
+        if self.completion_lower_bound(backup, now) \
+                >= primary_end - pol.min_gain_s:
+            return
+        self._spec_seq += 1
+        bid = _BACKUP_ID_BASE + self._spec_seq
+        backup = dataclasses.replace(backup, id=bid)
+        self._tasks[bid] = backup
+        t0 = time.perf_counter()
+        trial = self.mb.clone()
+        try:
+            trial.online_place(
+                self._calibrated_batch([(backup, now, None)]), now
+            )
+        except (AssertionError, ValueError):
+            self._tasks.pop(bid, None)
+            return
+        it_b = trial.find_item(bid)
+        if it_b is None or it_b.end >= primary_end - pol.min_gain_s:
+            # the trial could not realise the provable gain (capacity is
+            # busier than the floor): drop the clone, no race
+            self._tasks.pop(bid, None)
+            return
+        wall = time.perf_counter() - t0
+        self.mb = trial
+        self._arrivals[bid] = now
+        self._attempt_base[bid] = base
+        self._backups[tid] = bid
+        self._backup_of[bid] = tid
+        self._spec_events[bid] = len(self.stats.speculations)
+        self.stats.speculations.append(SpeculationEvent(
+            tid, bid, now, primary_end, it_b.end
+        ))
+        self.stats.decisions.append(Decision(
+            bid, now, now, "speculate", self._next_flush_id(), wall,
+        ))
+
+    def _resolve_spec_event(self, bid: int, t: float, winner: str) -> None:
+        i = self._spec_events.get(bid)
+        if i is None:
+            return
+        self.stats.speculations[i] = dataclasses.replace(
+            self.stats.speculations[i], winner=winner, resolved_at=t
+        )
+
+    def _backup_won(self, bid: int, t: float, end: float | None) -> None:
+        """The backup attempt finished first: its record is re-keyed to
+        the logical task (exactly one completion record survives), the
+        primary's record is truncated into a failed occupancy slab, and
+        the correction machinery runs against the backup's projection."""
+        primary = self._backup_of[bid]
+        it_b = self.mb.find_item(bid)
+        if it_b is None:
+            raise ValueError(
+                f"backup attempt {bid} has no live committed placement"
+            )
+        if primary in self._completions:
+            raise ValueError(
+                f"task {primary} was already reported completed"
+            )
+        actual = t if end is None else float(end)
+        if actual > t + 1e-9:
+            raise ValueError(
+                f"completion end {actual} lies in the future of the "
+                f"report time {t}"
+            )
+        if it_b.begin > t + EPS:
+            raise ValueError(
+                f"backup {bid} is not running at {t}: its committed "
+                f"placement begins at {it_b.begin}"
+            )
+        if actual < it_b.begin - EPS:
+            raise ValueError(
+                f"completion end {actual} precedes backup {bid}'s "
+                f"begin {it_b.begin}"
+            )
+        self._enter_fault_mode()
+        self._feed_calibration(it_b, actual)
+        it_p = self.mb.find_item(primary)
+        if it_p is not None:
+            # the loser: cancelled, kept as an occupancy record
+            old_p = it_p.end
+            new_p = max(t, it_p.begin)
+            self.mb.replace_item(primary, end_override=new_p, failed=True)
+            self.stats.corrections.append(CorrectionEvent(
+                primary, t, "failure", old_p, new_p, ()
+            ))
+        old_end = it_b.end
+        winner_task = dataclasses.replace(it_b.task, id=primary)
+        self.mb.relabel_item(bid, winner_task, end_override=actual)
+        self._completions[primary] = actual
+        self.stats.completed += 1
+        self._backups.pop(primary, None)
+        self._primary_down.discard(primary)
+        self._resolve_spec_event(bid, t, "backup")
+        if abs(actual - old_end) <= 1e-9:
+            return
+        if actual > old_end + EPS:
+            withdrawn = self._forced_replan(t, primary)
+            kind = "stretch"
+        else:
+            withdrawn = ()
+            kind = "shrink"
+            if self.config.replan:
+                self._strict_win_replan(t)
+        self.stats.corrections.append(CorrectionEvent(
+            primary, t, kind, old_end, actual, withdrawn
+        ))
+
+    def _backup_failed(self, bid: int, t: float) -> None:
+        """The backup attempt itself died (execution failure): resolve
+        the race as cancelled, bank any checkpoint credit it earned for
+        the primary, and — if the primary already failed while racing —
+        route the primary's retry now."""
+        primary = self._backup_of[bid]
+        it = self.mb.find_item(bid)
+        if it is None:
+            raise ValueError(
+                f"backup attempt {bid} has no live committed placement"
+            )
+        self._enter_fault_mode()
+        if it.begin > t + EPS:
+            self.mb.remove_items({bid})
+        else:
+            old_end = it.end
+            new_end = max(t, it.begin)
+            self.mb.replace_item(bid, end_override=new_end, failed=True)
+            self.stats.corrections.append(CorrectionEvent(
+                bid, t, "failure", old_end, new_end, ()
+            ))
+            self._bank_checkpoints(bid, t, it, target=primary)
+        self._backups.pop(primary, None)
+        self._resolve_spec_event(bid, t, "cancelled")
+        if primary in self._primary_down:
+            self._primary_down.discard(primary)
+            self._handle_failure(primary, t)
+        if self.config.replan:
+            self._strict_win_replan(t)
+
+    def _cancel_backup(self, bid: int, t: float, winner: str) -> None:
+        """Cancel a live backup because its race resolved elsewhere (the
+        primary completed, or an outage withdrew the backup unstarted).
+        A begun backup leaves a failed occupancy record and banks its
+        checkpoint credit; an unstarted one is removed outright."""
+        primary = self._backup_of[bid]
+        it = self.mb.find_item(bid)
+        if it is not None:
+            if it.begin > t + EPS:
+                self.mb.remove_items({bid})
+            else:
+                self._enter_fault_mode()
+                self.mb.replace_item(
+                    bid, end_override=max(t, it.begin), failed=True
+                )
+                self._bank_checkpoints(bid, t, it, target=primary)
+        self._backups.pop(primary, None)
+        self._resolve_spec_event(bid, t, winner)
+
+    def _backup_caught_in_outage(
+        self, bid: int, t: float, item: ScheduledTask | None
+    ) -> None:
+        """A device loss took the backup down (running — ``item`` is its
+        pre-truncation record — or withdrawn unstarted).  The race
+        resolves as cancelled; the backup is NEVER retried in its own
+        right — if its primary already failed, the primary's retry is
+        routed instead."""
+        primary = self._backup_of[bid]
+        if self._backups.get(primary) != bid:
+            return  # a stale id from an already-resolved race
+        if item is not None:
+            self._bank_checkpoints(bid, t, item, target=primary)
+        self._backups.pop(primary, None)
+        self._resolve_spec_event(bid, t, "cancelled")
+        if primary in self._primary_down:
+            self._primary_down.discard(primary)
+            self._handle_failure(primary, t)
+
+    def _primary_failed_racing(self, tid: int, t: float) -> None:
+        """The primary died while its backup races on: truncate the
+        primary's record and bank its credit, but do NOT requeue — the
+        backup is the recovery.  Only if the backup also dies does the
+        task fall back to the retry path (see :meth:`_backup_failed`)."""
+        it = self.mb.find_item(tid)
+        if it is None:
+            raise ValueError(
+                f"task {tid} has no live committed placement to "
+                f"report on (never committed, withdrawn, or failed)"
+            )
+        if tid in self._completions:
+            raise ValueError(f"task {tid} was already reported completed")
+        if it.begin > t + EPS:
+            raise ValueError(
+                f"task {tid} is not running at {t}: its committed "
+                f"placement begins at {it.begin}"
+            )
+        self._enter_fault_mode()
+        old_end = it.end
+        new_end = max(t, it.begin)
+        self.mb.replace_item(tid, end_override=new_end, failed=True)
+        self.stats.corrections.append(CorrectionEvent(
+            tid, t, "failure", old_end, new_end, ()
+        ))
+        self._bank_checkpoints(tid, t, it)
+        self._primary_down.add(tid)
+        if self.config.replan:
+            self._strict_win_replan(t)
 
     # -- admission ---------------------------------------------------------
     def completion_lower_bound(self, task: Task, at: float) -> float:
@@ -879,7 +1447,7 @@ class SchedulingService:
             self._route_online(batch, decided_at)
             return
         t0 = time.perf_counter()
-        arrivals = [task for task, _, _ in batch]
+        arrivals = self._plan_tasks([task for task, _, _ in batch])
         if self._baseline is not None:  # chains diverged: mirror the flush
             self._baseline.add_batch(arrivals, not_before=decided_at)
         # nothing may start before the flush decision that placed it
@@ -925,7 +1493,9 @@ class SchedulingService:
             self.mb = plain
             return [], 0.0
         self.stats.replan_attempts += 1
-        trial.add_batch(withdrawn + arrivals, not_before=decided_at)
+        trial.add_batch(
+            self._plan_tasks(withdrawn) + arrivals, not_before=decided_at
+        )
         if trial.makespan < plain.makespan - self.config.eps:
             if self._baseline is None and not self._fault_mode:
                 # first divergence: the plain candidate IS the
@@ -971,6 +1541,7 @@ class SchedulingService:
         batch = self._park_unplaceable(batch)
         if not batch:
             return
+        batch = self._calibrated_batch(batch)
         t0 = time.perf_counter()
         withdrawn: list[Task] = []
         plain_makespan = 0.0
@@ -989,7 +1560,7 @@ class SchedulingService:
             if wd:
                 self.stats.replan_attempts += 1
                 trial.add_batch(
-                    wd + [task for task, _, _ in batch],
+                    self._plan_tasks(wd) + [task for task, _, _ in batch],
                     not_before=decided_at,
                 )
                 if trial.makespan < plain.makespan - self.config.eps:
@@ -1120,4 +1691,6 @@ __all__ = [
     "CorrectionEvent",
     "RetryEvent",
     "OutageEvent",
+    "SpeculationEvent",
+    "CheckpointEvent",
 ]

@@ -23,6 +23,10 @@ consumes (per-node task chains + the device tree + the seam carry-over
   closed-loop feedback correction, logged and undo-exact like every
   other edit; ``schedule()`` marks corrected items via
   ``ScheduledTask.end_override``;
+* ``apply_cancel(tid, duration)`` / ``apply_credit(tid, credit_s)`` —
+  the speculation/checkpoint primitives: truncate a slot into a failed
+  occupancy record (the losing attempt of a first-finisher race), or
+  shorten a not-yet-started retry by its banked checkpoint credit;
 * ``undo()`` — speculative evaluation: apply an edit, read the timing,
   undo, bit-for-bit back to the previous state;
 * ``makespan()`` / ``slice_end_times()`` / ``node_end_times()`` /
@@ -98,6 +102,11 @@ class ChainState:
         # consulted whenever a chain slot is (re)built so undo of a
         # retract/extract restores the corrected duration, not the profile
         self.stretched: dict[int, float] = {}
+        # tids whose slot is a *cancelled occupancy record* (the losing
+        # attempt of a speculation race): the slice stays busy for the
+        # truncated span but the task did not complete there, so
+        # schedule() materialises the slot with failed=True
+        self.cancelled: set[int] = set()
         self._task_node: dict[int, NodeKey] | None = None  # built lazily
         self._chain_ver: dict[NodeKey, int] = {}  # bumped per chain edit
         self._log: list[tuple] = []
@@ -248,6 +257,61 @@ class ChainState:
         self._log.append(("stretch", tid, key, idx, old_dur, old_mark))
         self._invalidate()
 
+    def apply_cancel(self, tid: int, duration: float) -> None:
+        """Cancel ``tid`` mid-run: its chain slot is truncated to
+        ``duration`` — the span the slice was physically occupied before
+        the cancellation — and marked as a failed occupancy record.  This
+        is the speculation primitive: when the first finisher of a
+        primary/backup race wins, the loser is cancelled through this
+        logged op so successors re-time against the truncated slot and
+        ``undo()`` restores the race state bit-exactly.  Like
+        :meth:`apply_stretch`, the truncation sticks through later
+        retract/undo cycles via ``self.stretched``."""
+        if duration <= 0.0:
+            raise ValueError(
+                f"cancel duration must be positive, got {duration}"
+            )
+        key = self.task_node[tid]
+        idx = self.chains[key].index(tid)
+        old_dur = self.durs[key][idx]
+        old_mark = self.stretched.get(tid)
+        was_cancelled = tid in self.cancelled
+        self.durs[key][idx] = duration
+        self.stretched[tid] = duration
+        self.cancelled.add(tid)
+        self._bump(key)
+        self._log.append(
+            ("cancel", tid, key, idx, old_dur, old_mark, was_cancelled)
+        )
+        self._invalidate()
+
+    def apply_credit(self, tid: int, credit_s: float) -> None:
+        """Shorten ``tid``'s not-yet-started slot by ``credit_s`` seconds
+        of banked checkpoint progress — the partial-progress primitive: a
+        retried attempt that resumes from its last checkpoint boundary
+        occupies only the remainder of its profiled duration.  The credit
+        must leave a strictly positive remainder (a fully-credited task
+        is a completion, not a placement)."""
+        if credit_s <= 0.0:
+            raise ValueError(
+                f"checkpoint credit must be positive, got {credit_s}"
+            )
+        key = self.task_node[tid]
+        idx = self.chains[key].index(tid)
+        old_dur = self.durs[key][idx]
+        if credit_s >= old_dur - 1e-12:
+            raise ValueError(
+                f"checkpoint credit {credit_s} must leave a positive "
+                f"remainder of the slot duration {old_dur}"
+            )
+        old_mark = self.stretched.get(tid)
+        remainder = old_dur - credit_s
+        self.durs[key][idx] = remainder
+        self.stretched[tid] = remainder
+        self._bump(key)
+        self._log.append(("credit", tid, key, idx, old_dur, old_mark))
+        self._invalidate()
+
     def retract_suffix(self, key: NodeKey, count: int) -> list[int]:
         """Retract the last ``count`` tasks of ``key``'s chain (newest
         first); returns the retracted task ids in retraction order.  Each
@@ -301,6 +365,24 @@ class ChainState:
             _, tid, key = entry
             self._insert(key, len(self.chains[key]), tid)
         elif kind == "stretch":
+            _, tid, key, idx, old_dur, old_mark = entry
+            self.durs[key][idx] = old_dur
+            if old_mark is None:
+                self.stretched.pop(tid, None)
+            else:
+                self.stretched[tid] = old_mark
+            self._bump(key)
+        elif kind == "cancel":
+            _, tid, key, idx, old_dur, old_mark, was_cancelled = entry
+            self.durs[key][idx] = old_dur
+            if old_mark is None:
+                self.stretched.pop(tid, None)
+            else:
+                self.stretched[tid] = old_mark
+            if not was_cancelled:
+                self.cancelled.discard(tid)
+            self._bump(key)
+        elif kind == "credit":
             _, tid, key, idx, old_dur, old_mark = entry
             self.durs[key][idx] = old_dur
             if old_mark is None:
@@ -489,10 +571,13 @@ class TimingEngine(ChainState):
             for i in rng:
                 tid = chain[i]
                 if tid in stretched:
-                    # runtime-corrected placement: carry the actual end
+                    # runtime-corrected placement: carry the actual end;
+                    # a cancelled slot is a failed occupancy record (the
+                    # losing attempt of a speculation race)
                     items.append(ScheduledTask(
                         tasks[tid], node, t, size,
                         end_override=t + durs[i],
+                        failed=tid in self.cancelled,
                     ))
                 else:
                     items.append(ScheduledTask(tasks[tid], node, t, size))
@@ -1064,6 +1149,18 @@ class ReplayEngine(ChainState):
         raise NotImplementedError(
             "ReplayEngine scores every query with a profile-driven "
             "replay(); runtime duration corrections need TimingEngine"
+        )
+
+    def apply_cancel(self, tid: int, duration: float) -> None:
+        raise NotImplementedError(
+            "ReplayEngine scores every query with a profile-driven "
+            "replay(); cancelled occupancy records need TimingEngine"
+        )
+
+    def apply_credit(self, tid: int, credit_s: float) -> None:
+        raise NotImplementedError(
+            "ReplayEngine scores every query with a profile-driven "
+            "replay(); checkpoint-credit corrections need TimingEngine"
         )
 
     def _replay(self, include_reconfig: bool | None = None):

@@ -188,7 +188,16 @@ def assert_fault_invariants(svc) -> None:
       no earlier than its latest retry release;
     * **no stranding** — every task withdrawn by an outage is either
       live again in the combined schedule, permanently failed, or
-      explicitly rejected at drain.
+      explicitly rejected at drain;
+    * **backup-attempt exclusivity** — every resolved speculation race
+      names exactly one winner (``"primary"``, ``"backup"`` or
+      ``"cancelled"``), no backup id survives as a live record after its
+      race resolved, and a task never has two simultaneously-unresolved
+      races;
+    * **checkpoint-credit monotonicity** — per task, the banked progress
+      fraction is strictly increasing in event order, stays inside
+      ``(0, 1)``, and every grant carries positive credit seconds —
+      replayed failure paths can never double-count credit.
     """
     items = [it for seg in svc.mb.segments for it in seg.items]
     live = {}
@@ -234,6 +243,46 @@ def assert_fault_invariants(svc) -> None:
             _fail(f"tasks {sorted(stranded)} withdrawn by device "
                   f"{ev.device}'s outage were never re-placed, failed, "
                   f"or rejected")
+
+    # backup-attempt exclusivity
+    specs = getattr(svc.stats, "speculations", ())
+    open_races: set[int] = set()
+    for ev in specs:
+        if ev.winner is None:
+            if ev.task_id in open_races:
+                _fail(f"task {ev.task_id} has two unresolved speculation "
+                      f"races at once")
+            open_races.add(ev.task_id)
+            continue
+        if ev.winner not in ("primary", "backup", "cancelled"):
+            _fail(f"speculation race for task {ev.task_id} resolved with "
+                  f"unknown winner {ev.winner!r}")
+        if ev.resolved_at is None or ev.resolved_at < ev.at - EPS:
+            _fail(f"speculation race for task {ev.task_id} resolved at "
+                  f"{ev.resolved_at} before it launched at {ev.at}")
+        if ev.backup_id in live:
+            _fail(f"backup attempt {ev.backup_id} of task {ev.task_id} "
+                  f"is still a live record after its race resolved "
+                  f"({ev.winner!r} won)")
+        if ev.winner == "backup" and ev.task_id not in svc.completions:
+            _fail(f"backup of task {ev.task_id} won its race but the "
+                  f"task has no reported completion")
+
+    # checkpoint-credit monotonicity
+    progress: dict[int, float] = {}
+    for ev in getattr(svc.stats, "checkpoints", ()):
+        if not ev.credit_s > 0.0:
+            _fail(f"checkpoint grant for task {ev.task_id} carries "
+                  f"non-positive credit {ev.credit_s}")
+        if not 0.0 < ev.progress < 1.0:
+            _fail(f"checkpoint progress {ev.progress} of task "
+                  f"{ev.task_id} is outside (0, 1)")
+        prev = progress.get(ev.task_id)
+        if prev is not None and ev.progress <= prev + 1e-12:
+            _fail(f"checkpoint progress of task {ev.task_id} did not "
+                  f"increase: {prev} -> {ev.progress} (double-counted "
+                  f"credit?)")
+        progress[ev.task_id] = ev.progress
 
 
 __all__ = [

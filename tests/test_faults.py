@@ -23,16 +23,20 @@ from repro.core import (
     FaultInjector,
     FaultSpec,
     Profile,
+    ProfileCalibration,
     ProfileCoverageError,
     RetryPolicy,
     SchedulerConfig,
     SchedulingService,
+    SpeculationPolicy,
     Task,
     cluster,
     demote_shrink,
     execute_open_loop,
     partition_batch,
+    remainder_task,
     run_with_faults,
+    transfer_profile,
 )
 from repro.core.synth import generate_tasks, workload
 
@@ -578,3 +582,569 @@ def test_harness_run_is_reproducible():
     assert reps[0].completions == reps[1].completions
     assert reps[0].failed == reps[1].failed
     assert reps[0].recovery_latency == reps[1].recovery_latency
+
+
+# --- straggler speculation (backup attempts) -------------------------------
+
+def _speculating_service(n=2, seed=0, **cfg_kw):
+    """A sparse A100 stream whose earliest placement, straggled past the
+    3x boundary, deterministically launches a backup attempt."""
+    base = dict(straggler_factor=3.0, speculation=SpeculationPolicy(),
+                retry=RetryPolicy(max_attempts=3, backoff_base=0.5))
+    base.update(cfg_kw)
+    tasks = _tasks(n, seed=seed)
+    svc = SchedulingService(A100, config=_cfg(**base))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=float(i) * 0.1)
+    svc.flush()
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    svc.poll(it.begin + 3.5 * it.planned_duration)
+    return svc, tasks, it.task.id
+
+
+def _resolve_open_races(svc):
+    """Reports the primary of every unresolved race as completed (at its
+    current planned end), so a drained schedule covers the batch exactly.
+    Later reports may straggle siblings into new races — loop to a fixed
+    point."""
+    while True:
+        opened = [e for e in svc.stats.speculations if e.winner is None]
+        if not opened:
+            return
+        for e in opened:
+            it = svc.mb.find_item(e.task_id)
+            t_done = max(svc.now, it.end)
+            svc.report(e.task_id, "completed", t=t_done, end=t_done)
+
+
+def test_straggler_launches_backup_with_provable_gain():
+    svc, tasks, tid = _speculating_service()
+    [ev] = svc.stats.speculations
+    assert ev.task_id == tid and ev.winner is None
+    assert ev.backup_end < ev.primary_end - 1e-9
+    # both records are live and disjoint: the race is on
+    it_p = svc.mb.find_item(tid)
+    it_b = svc.mb.find_item(ev.backup_id)
+    assert it_p is not None and it_b is not None
+    assert not set(it_p.node.blocked_cells) & set(it_b.node.blocked_cells) \
+        or it_b.begin >= it_p.end - 1e-9
+    [d] = [d for d in svc.stats.decisions if d.route == "speculate"]
+    assert d.task_id == ev.backup_id
+
+
+def test_backup_wins_relabels_record_and_cancels_primary():
+    svc, tasks, tid = _speculating_service()
+    [ev] = svc.stats.speculations
+    it_b = svc.mb.find_item(ev.backup_id)
+    actual = it_b.begin + 0.9 * it_b.planned_duration
+    svc.report(ev.backup_id, "completed", t=max(svc.now, actual), end=actual)
+    [ev] = [e for e in svc.stats.speculations if e.task_id == tid]
+    assert ev.winner == "backup" and ev.resolved_at is not None
+    # exactly one live record for the logical task: the re-keyed winner
+    assert svc.completions[tid] == actual
+    cur = svc.mb.find_item(tid)
+    assert cur is not None and cur.end == actual
+    assert cur.node.key == it_b.node.key
+    assert svc.mb.find_item(ev.backup_id) is None
+    # the losing primary stays behind as a failed occupancy record
+    losers = [i for seg in svc.mb.segments for i in seg.items
+              if i.task.id == tid and i.failed]
+    assert len(losers) == 1
+    # no retry was spawned: the task COMPLETED (via its backup)
+    assert all(r.task_id != tid for r in svc.stats.retries)
+    _resolve_open_races(svc)
+    combined = svc.drain()
+    assert_fault_invariants(svc)
+    assert_valid_schedule(combined, A100, tasks=tasks,
+                          floors=service_floors(svc))
+
+
+def test_primary_wins_cancels_backup_attempt():
+    svc, tasks, tid = _speculating_service()
+    [ev] = svc.stats.speculations
+    t_done = svc.now + 1.0
+    svc.report(tid, "completed", t=t_done, end=t_done)
+    [ev] = [e for e in svc.stats.speculations if e.task_id == tid]
+    assert ev.winner == "primary"
+    assert svc.completions[tid] == t_done
+    # the backup is gone from the live plan (removed if unstarted,
+    # truncated to an occupancy record if it had begun)
+    assert svc.mb.find_item(ev.backup_id) is None
+    _resolve_open_races(svc)
+    combined = svc.drain()
+    assert_fault_invariants(svc)
+    assert_valid_schedule(combined, A100, tasks=tasks,
+                          floors=service_floors(svc))
+
+
+def test_backup_failure_resolves_race_and_primary_survives():
+    svc, tasks, tid = _speculating_service()
+    [ev] = svc.stats.speculations
+    it_b = svc.mb.find_item(ev.backup_id)
+    t_fail = max(svc.now, it_b.begin + 0.1)
+    svc.report(ev.backup_id, "failed", t=t_fail)
+    # first race resolved "cancelled"; the still-straggling primary may
+    # legitimately open a NEW race afterwards
+    ev = [e for e in svc.stats.speculations if e.task_id == tid][0]
+    assert ev.winner == "cancelled"
+    # the backup is never retried in its own right
+    assert all(r.task_id != ev.backup_id for r in svc.stats.retries)
+    # the primary still runs and can complete normally
+    t_done = svc.now + 1.0
+    svc.report(tid, "completed", t=t_done, end=t_done)
+    assert svc.completions[tid] == t_done
+    _resolve_open_races(svc)
+    svc.drain()
+    assert_fault_invariants(svc)
+
+
+def test_speculation_throttles_on_max_inflight_and_min_gain():
+    # min_gain_s too large for any backup to promise: no race launches
+    svc, _, _ = _speculating_service(
+        speculation=SpeculationPolicy(min_gain_s=10_000.0))
+    assert svc.stats.speculations == []
+    # one race per task: a re-fired straggler never stacks backups
+    svc2, _, tid2 = _speculating_service()
+    assert len(svc2.stats.speculations) == 1
+    it = svc2.mb.find_item(tid2)
+    svc2.poll(svc2.now + 3.5 * it.planned_duration)
+    assert len([e for e in svc2.stats.speculations
+                if e.task_id == tid2 and e.winner is None]) <= 1
+
+
+# --- speculation x outage interleavings ------------------------------------
+
+def _cluster_race(seed=0):
+    """Heterogeneous race: the straggling primary sits on the A30, the
+    backup lands on the (faster) A100 — so either device can then be
+    lost to probe both interleavings."""
+    cs = cluster(A100, A30)
+    tasks = _tasks(3, seed=seed)
+    svc = SchedulingService(pool=cs, config=_cfg(
+        straggler_factor=3.0, speculation=SpeculationPolicy(),
+        retry=RetryPolicy(max_attempts=3, backoff_base=0.5)))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=float(i) * 0.1)
+    svc.flush()
+    it = min(svc.committed_items(), key=lambda it: it.begin)
+    svc.poll(it.begin + 3.5 * it.planned_duration)
+    [ev] = svc.stats.speculations
+    tid = ev.task_id
+    it_p = svc.mb.find_item(tid)
+    it_b = svc.mb.find_item(ev.backup_id)
+    pdev = svc.cluster.tree_device[it_p.node.tree]
+    bdev = svc.cluster.tree_device[it_b.node.tree]
+    assert pdev != bdev, "race must span two devices for the outage tests"
+    return svc, tasks, ev, pdev, bdev
+
+
+def test_outage_kills_backup_device_before_primary_resolves():
+    svc, tasks, ev, pdev, bdev = _cluster_race()
+    svc.quarantine(bdev, svc.now + 0.5)
+    [sev] = [e for e in svc.stats.speculations if e.task_id == ev.task_id]
+    assert sev.winner == "cancelled"
+    assert svc.mb.find_item(ev.backup_id) is None
+    # the backup is not stranded, not retried, not an outage casualty
+    # to re-place: the primary is still the live hope
+    assert all(r.task_id != ev.backup_id for r in svc.stats.retries)
+    for oev in svc.stats.outages:
+        assert ev.backup_id not in oev.withdrawn
+    it_p = svc.mb.find_item(ev.task_id)
+    assert it_p is not None and not it_p.failed
+    t_done = svc.now + 1.0
+    svc.report(ev.task_id, "completed", t=t_done, end=t_done)
+    assert svc.completions[ev.task_id] == t_done
+    _resolve_open_races(svc)
+    svc.drain()
+    assert_fault_invariants(svc)
+
+
+def test_outage_kills_primary_device_backup_carries_the_task():
+    svc, tasks, ev, pdev, bdev = _cluster_race()
+    svc.quarantine(pdev, svc.now + 0.5)
+    # the race is still open: the backup is the recovery, so the
+    # primary's death spawns NO retry yet
+    [sev] = [e for e in svc.stats.speculations if e.task_id == ev.task_id]
+    assert sev.winner is None
+    assert all(r.task_id != ev.task_id for r in svc.stats.retries)
+    it_b = svc.mb.find_item(ev.backup_id)
+    assert it_b is not None
+    actual = max(svc.now, it_b.begin + 0.9 * it_b.planned_duration)
+    svc.report(ev.backup_id, "completed", t=actual, end=actual)
+    [sev] = [e for e in svc.stats.speculations if e.task_id == ev.task_id]
+    assert sev.winner == "backup"
+    assert svc.completions[ev.task_id] == actual
+    _resolve_open_races(svc)
+    svc.drain()
+    assert_fault_invariants(svc)
+
+
+def test_backup_dies_after_primary_died_routes_the_retry():
+    svc, tasks, ev, pdev, bdev = _cluster_race()
+    svc.quarantine(pdev, svc.now + 0.5)
+    it_b = svc.mb.find_item(ev.backup_id)
+    t_fail = max(svc.now, it_b.begin + 0.1)
+    svc.report(ev.backup_id, "failed", t=t_fail)
+    [sev] = [e for e in svc.stats.speculations if e.task_id == ev.task_id]
+    assert sev.winner == "cancelled"
+    # both attempts are dead: NOW the logical task re-enters the queue
+    assert any(r.task_id == ev.task_id for r in svc.stats.retries)
+    _resolve_open_races(svc)
+    svc.drain()
+    assert_fault_invariants(svc)
+    again = svc.mb.find_item(ev.task_id)
+    assert again is not None and not again.failed
+
+
+# --- checkpoint / partial-progress credit ----------------------------------
+
+def _checkpoint_service(period=1.0):
+    svc = SchedulingService(A100, config=_cfg(
+        min_batch=1, retry=RetryPolicy(max_attempts=3, backoff_base=0.5)))
+    t = Task(id=1, times={1: 10.0, 2: 6.0, 3: 5.0, 4: 4.0, 7: 3.0},
+             checkpoint_period_s=period)
+    svc.submit(t, arrival=0.0)
+    svc.flush()
+    return svc, t, svc.mb.find_item(1)
+
+
+def test_checkpoint_credit_shrinks_the_retry_to_the_remainder():
+    svc, t, it = _checkpoint_service(period=1.0)
+    planned = it.planned_duration
+    # die 1.5 periods in: exactly ONE whole period is banked
+    svc.report(1, "failed", t=it.begin + 1.5)
+    [cp] = svc.stats.checkpoints
+    assert cp.task_id == 1 and cp.attempt == 1
+    assert cp.credit_s == pytest.approx(1.0)
+    assert cp.progress == pytest.approx(1.0 / planned)
+    svc.drain()
+    it2 = svc.mb.find_item(1)
+    # the retry is the REMAINDER, not a restart: every profile entry
+    # scaled by the un-finished fraction
+    frac = 1.0 - cp.progress
+    for s, dur in t.times.items():
+        assert it2.task.times[s] == pytest.approx(dur * frac)
+    assert it2.planned_duration == pytest.approx(planned - 1.0)
+    assert_fault_invariants(svc)
+
+
+def test_checkpoint_credit_composes_across_failures_without_double_count():
+    svc, t, it = _checkpoint_service(period=1.0)
+    planned = it.planned_duration        # 3.0 at size 7
+    svc.report(1, "failed", t=it.begin + 1.5)
+    svc.drain()
+    it2 = svc.mb.find_item(1)
+    # second attempt (2.0s remainder) dies 1.2 periods in: one more
+    # period banked, expressed on the ORIGINAL work — total 2/3
+    svc.report(1, "failed", t=it2.begin + 1.2)
+    cps = svc.stats.checkpoints
+    assert len(cps) == 2
+    assert cps[0].progress == pytest.approx(1.0 / planned)
+    assert cps[1].progress == pytest.approx(2.0 / planned)
+    assert cps[1].credit_s == pytest.approx(1.0)
+    svc.drain()
+    it3 = svc.mb.find_item(1)
+    assert it3.planned_duration == pytest.approx(planned - 2.0)
+    # and the third attempt completes: exactly-once accounting holds
+    svc.report(1, "completed", t=it3.end, end=it3.end)
+    assert svc.completions[1] == it3.end
+    assert_fault_invariants(svc)
+
+
+def test_no_checkpoint_period_restarts_from_zero():
+    svc = SchedulingService(A100, config=_cfg(
+        min_batch=1, retry=RetryPolicy(max_attempts=3, backoff_base=0.5)))
+    t = Task(id=1, times={1: 10.0, 2: 6.0, 3: 5.0, 4: 4.0, 7: 3.0})
+    svc.submit(t, arrival=0.0)
+    svc.flush()
+    it = svc.mb.find_item(1)
+    planned = it.planned_duration
+    svc.report(1, "failed", t=it.begin + 1.5)
+    assert svc.stats.checkpoints == []
+    svc.drain()
+    it2 = svc.mb.find_item(1)
+    assert it2.planned_duration == pytest.approx(planned)  # full restart
+
+
+def test_checkpoint_period_must_be_positive():
+    svc = SchedulingService(A100, config=_cfg())
+    bad = Task(id=1, times={1: 5.0}, checkpoint_period_s=0.0)
+    with pytest.raises(ValueError, match="checkpoint"):
+        svc.submit(bad, arrival=0.0)
+
+
+# --- correlated failure domains --------------------------------------------
+
+def test_domain_outage_draws_are_deterministic_and_disjoint():
+    spec = FaultSpec(seed=5, domains=((0, 1), (2,)), domain_mtbf_s=40.0,
+                     domain_repair_s=5.0, max_domain_shocks=3)
+    w = FaultInjector(spec).domain_outages(0, 500.0)
+    assert w == FaultInjector(spec).domain_outages(0, 500.0)
+    assert w, "MTBF 40s over 500s must shock at least once"
+    for (lost, rec) in w:
+        assert 0.0 <= lost < 500.0 and rec == pytest.approx(lost + 5.0)
+    for (_, ra), (b, _) in zip(w, w[1:]):
+        assert ra <= b, "shock windows of one domain must be disjoint"
+    # distinct domains draw from distinct streams
+    assert FaultInjector(spec).domain_outages(1, 500.0) != w
+    # an undomained spec never shocks
+    assert FaultInjector(FaultSpec(seed=5)).domain_outages(0, 500.0) == []
+
+
+def test_fault_spec_validates_domains():
+    with pytest.raises(ValueError, match="domain_mtbf_s"):
+        FaultSpec(domain_mtbf_s=0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        FaultSpec(domains=((0,), ()), domain_mtbf_s=10.0)
+
+
+def test_joint_domain_quarantine_repartitions_on_the_survivor():
+    cs = cluster(A100, A30, A30)
+    tasks = _tasks(12, seed=3)
+    svc = SchedulingService(pool=cs, config=_cfg(
+        retry=RetryPolicy(max_attempts=3)))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=i * 0.2)
+    svc.flush()
+    t0 = svc.now + 1.0
+    svc.quarantine([1, 2], t0)
+    assert sorted(ev.device for ev in svc.stats.outages) == [1, 2]
+    assert all(ev.lost_at == t0 for ev in svc.stats.outages)
+    # everything live after the shock sits on the lone survivor
+    for it in svc.committed_items():
+        if it.begin >= t0:
+            assert svc.cluster.tree_device[it.node.tree] == 0
+    # a second shock on an already-dark member is a no-op, not an error
+    assert svc.quarantine([2], t0 + 0.5) == []
+    svc.recover([1, 2], t0 + 10.0)
+    svc.drain()
+    assert_fault_invariants(svc)
+    resolved = (set(svc.completions) | set(svc.stats.failed)
+                | set(svc.stats.rejected)
+                | {it.task.id for it in svc.committed_items()})
+    assert {t.id for t in tasks} <= resolved
+
+
+def test_correlated_domain_outage_end_to_end():
+    spec = FaultSpec(seed=3, domains=((1, 2),), domain_mtbf_s=25.0,
+                     domain_repair_s=8.0)
+    cs = cluster(A100, A30, A30)
+    tasks = _tasks(14, seed=7)
+    stream = _stream(tasks, gap=1.0)
+    svc = SchedulingService(pool=cs, config=_cfg(
+        retry=RetryPolicy(max_attempts=3)))
+    rep = run_with_faults(svc, stream, injector=FaultInjector(spec))
+    # both domain members go down and come back TOGETHER, twice
+    by_time: dict[float, set] = {}
+    for ev in svc.stats.outages:
+        by_time.setdefault(ev.lost_at, set()).add(ev.device)
+    assert by_time and all(devs == {1, 2} for devs in by_time.values())
+    assert_fault_invariants(svc)
+    resolved = set(rep.completions) | set(rep.failed) | set(svc.stats.rejected)
+    assert resolved == {t.id for t in tasks}
+
+
+# --- online profile calibration --------------------------------------------
+
+def test_calibration_learns_a_systematic_bias_between_waves():
+    import dataclasses as dc
+
+    svc = SchedulingService(A100, config=_cfg(
+        calibration=ProfileCalibration()))
+    w1 = _tasks(4, seed=11)
+    ids1 = {t.id for t in w1}
+    for i, t in enumerate(w1):
+        svc.submit(t, arrival=i * 0.1)
+    svc.flush()
+    # wave 1 systematically runs 1.5x its profile; report in actual-end
+    # order (each correction may replan the survivors, so re-fetch)
+    while True:
+        live = [it for it in svc.committed_items()
+                if it.task.id in ids1 and it.task.id not in svc.completions]
+        if not live:
+            break
+        nxt = min(live, key=lambda it: it.begin + 1.5 * svc.true_duration(it))
+        actual = nxt.begin + 1.5 * svc.true_duration(nxt)
+        svc.report(nxt.task.id, "completed", t=max(svc.now, actual),
+                   end=actual)
+    assert svc.config.calibration.observations == 4
+    # wave 2 re-submits the same task FAMILIES (same names): the planner
+    # now budgets the learned 1.5x, while the stored profiles stay raw
+    w2 = [dc.replace(t, id=t.id + 100) for t in w1]
+    for i, t in enumerate(w2):
+        svc.submit(t, arrival=svc.now + i * 0.1)
+    svc.flush()
+    placed = [it for it in svc.committed_items() if it.task.id >= 100]
+    assert len(placed) == 4
+    for it in placed:
+        assert it.planned_duration == pytest.approx(
+            1.5 * svc.true_duration(it))
+
+
+def test_fresh_calibration_plans_bit_identical():
+    tasks = _tasks(10, seed=17)
+    ref = SchedulingService(A100, config=_cfg())
+    svc = SchedulingService(A100, config=_cfg(
+        calibration=ProfileCalibration()))
+    for s in (ref, svc):
+        for i, t in enumerate(tasks):
+            s.submit(t, arrival=i * 0.3)
+        s.drain()
+    assert _plan_signature(svc) == _plan_signature(ref)
+
+
+def test_calibration_validation():
+    with pytest.raises(ValueError, match="alpha"):
+        ProfileCalibration(alpha=0.0)
+
+
+# --- profile transfer fallback ---------------------------------------------
+
+def test_transfer_profile_fills_sizes_and_unmeasured_kinds():
+    t = Task(id=1, times=Profile({"A100": {2: 6.0}}))
+    out = transfer_profile(
+        t, {"A100": (1, 2, 4), "A30": (1, 2)},
+        speed={"A100": 1.0, "A30": 0.5})
+    a100 = dict(out.times.for_kind("A100"))
+    # measured entry untouched; s < s0 upscaled by s0/s; s > s0 kept
+    assert a100[2] == 6.0
+    assert a100[1] == pytest.approx(12.0)
+    assert a100[4] == pytest.approx(6.0)
+    # the A30 copies the donor scaled by relative speed (2x slower)
+    a30 = dict(out.times.for_kind("A30"))
+    assert a30[2] == pytest.approx(12.0)
+    assert a30[1] == pytest.approx(24.0)
+    # identity for a task that already covers the fleet
+    full = Task(id=2, times=Profile({"A100": {1: 3.0, 2: 2.0}}))
+    same = transfer_profile(full, {"A100": (1, 2)})
+    assert dict(same.times.for_kind("A100")) == {1: 3.0, 2: 2.0}
+
+
+def test_transfer_profile_raises_only_when_nothing_is_measured():
+    empty = Task(id=9, times=Profile({"A100": {}}))
+    with pytest.raises(ProfileCoverageError, match="no measured entries"):
+        transfer_profile(empty, {"A100": (1, 2)})
+
+
+def test_profile_transfer_gates_admission_at_the_service():
+    partial = Task(id=50, times=Profile({"A100": {1: 8.0, 2: 5.0}}))
+    # off: no device fully covers the profile -> rejected at flush
+    svc = SchedulingService(pool=cluster(A100, A30), config=_cfg())
+    svc.submit(partial, arrival=0.0)
+    svc.drain()
+    assert svc.stats.rejected == [50]
+    # on: missing entries are derived at intake and the task is served
+    svc2 = SchedulingService(pool=cluster(A100, A30), config=_cfg(
+        min_batch=1, profile_transfer=True))
+    svc2.submit(partial, arrival=0.0)
+    svc2.flush()
+    it = svc2.mb.find_item(50)
+    assert it is not None
+    stored = svc2._tasks[50].times
+    assert set(stored.for_kind("A100")) == {1, 2, 3, 4, 7}
+    assert set(stored.for_kind("A30")) == {1, 2, 4}
+    # measured entries always win
+    assert stored.for_kind("A100")[1] == 8.0
+
+
+# --- all mechanisms armed but idle == PR 6 bit-identical -------------------
+
+def test_all_mechanisms_armed_but_idle_plan_bit_identical():
+    tasks = _tasks(12, seed=9)
+    stream = _stream(tasks)
+    ref = SchedulingService(A100, config=_cfg(replan=True))
+    for a, t, dl in stream:
+        ref.submit(t, arrival=a, deadline=dl)
+    ref.drain()
+    svc = SchedulingService(A100, config=_cfg(
+        replan=True, straggler_factor=3.0,
+        retry=RetryPolicy(max_attempts=3),
+        speculation=SpeculationPolicy(),
+        calibration=ProfileCalibration(),
+        profile_transfer=True))
+    run_with_faults(svc, stream, injector=FaultInjector())
+    assert _plan_signature(svc) == _plan_signature(ref)
+    assert svc.stats.speculations == [] and svc.stats.checkpoints == []
+
+
+def test_all_mechanisms_armed_but_idle_cluster_bit_identical():
+    tasks = _tasks(10, seed=13)
+    stream = _stream(tasks)
+    ref = SchedulingService(pool=cluster(A100, A30), config=_cfg())
+    for a, t, dl in stream:
+        ref.submit(t, arrival=a, deadline=dl)
+    ref.drain()
+    svc = SchedulingService(pool=cluster(A100, A30), config=_cfg(
+        straggler_factor=3.0, retry=RetryPolicy(max_attempts=3),
+        speculation=SpeculationPolicy(),
+        calibration=ProfileCalibration(),
+        profile_transfer=True))
+    run_with_faults(svc, stream, injector=FaultInjector())
+    assert _plan_signature(svc) == _plan_signature(ref)
+    assert svc.stats.speculations == [] and svc.stats.checkpoints == []
+
+
+# --- recovery boundary regressions -----------------------------------------
+
+def test_rebuild_tail_reset_boundary_is_inclusive():
+    """An instance whose latest creation BEGAN exactly at ``reset_at``
+    is legitimate post-recovery work and must survive the reset; one
+    whose creation began any earlier was aborted by the outage and must
+    die even though its busy-until extends past the reset."""
+    from repro.core import MultiBatchScheduler
+
+    mb = MultiBatchScheduler(A100)
+    mb.add_batch(_tasks(6, seed=5))
+    created: dict = {}
+    for seg in mb.segments:
+        for rc in seg.reconfigs:
+            if rc.kind == "create":
+                prev = created.get(rc.node.key)
+                if prev is None or rc.begin > prev:
+                    created[rc.node.key] = rc.begin
+    cand = [(k, b) for k, b in created.items()
+            if k in mb.tail.alive and mb.tail.alive[k] > b + 1e-3
+            and b > 0.0]
+    assert cand, "plan must keep at least one created instance alive"
+    key, born = max(cand, key=lambda kb: kb[1])
+    # boundary-inclusive: begin == reset_at survives
+    mb.reset_at = born
+    mb.rebuild_tail()
+    assert key in mb.tail.alive
+    # creation began strictly before the reset: aborted by the outage
+    mb.reset_at = born + 1e-6
+    mb.rebuild_tail()
+    assert key not in mb.tail.alive
+
+
+def test_quarantine_arriving_mid_reconfiguration_window():
+    cs = cluster(A100, A30)
+    tasks = _tasks(10, seed=3)
+    svc = SchedulingService(pool=cs, config=_cfg(
+        retry=RetryPolicy(max_attempts=3)))
+    for i, t in enumerate(tasks):
+        svc.submit(t, arrival=i * 0.2)
+    svc.flush()
+    windows = [
+        (svc.cluster.tree_device[rc.node.tree], rc)
+        for seg in svc.mb.segments for rc in seg.reconfigs
+        if rc.begin > svc.now + 1e-9 and rc.end > rc.begin + 1e-9
+    ]
+    assert windows, "plan must contain a future reconfiguration window"
+    dev, rc = min(windows, key=lambda w: w[1].begin)
+    mid = 0.5 * (rc.begin + rc.end)
+    withdrawn = svc.quarantine(dev, mid)
+    [oev] = svc.stats.outages
+    assert oev.device == dev and oev.lost_at == mid
+    svc.recover(dev, mid + 20.0)
+    more = _tasks(4, seed=77, id_offset=500)
+    for t in more:
+        svc.submit(t, arrival=svc.now + 0.1)
+    svc.flush()
+    svc.drain()
+    assert_fault_invariants(svc)
+    resolved = (set(svc.completions) | set(svc.stats.failed)
+                | set(svc.stats.rejected)
+                | {it.task.id for it in svc.committed_items()})
+    want = {t.id for t in tasks} | {t.id for t in more}
+    assert want <= resolved

@@ -565,6 +565,103 @@ def test_apply_stretch_validation_and_replay_refusal():
         ref.apply_stretch(tasks[0].id, 5.0)
 
 
+def test_apply_cancel_marks_record_failed_and_undoes_exactly():
+    spec = A100
+    tasks = generate_tasks(
+        4, spec, workload("mixed", "wide", spec), seed=3, id_offset=745
+    )
+    from repro.core.repartition import Assignment
+
+    eng = TimingEngine(Assignment(spec, {t.id: t for t in tasks}, {}))
+    key = spec.nodes[0].key
+    for t in tasks:
+        eng.apply_append(t.id, key)
+    before = _snapshot(eng)
+    m0 = eng.makespan()
+    loser = tasks[0]
+    eng.apply_cancel(loser.id, 2.5)
+    # the cancelled occupancy record is truncated: successors move up
+    sched = eng.schedule()
+    rec = next(it for it in sched.items if it.task.id == loser.id)
+    assert rec.failed and rec.corrected
+    assert rec.duration == pytest.approx(2.5)
+    assert eng.makespan() < m0
+    live = [it for it in sched.items if not it.failed]
+    assert loser.id not in {it.task.id for it in live}
+    # cancel on top of cancel: latest truncation wins, undo unwinds both
+    eng.apply_cancel(loser.id, 1.25)
+    assert next(
+        it for it in eng.schedule().items if it.task.id == loser.id
+    ).duration == pytest.approx(1.25)
+    eng.undo()
+    assert next(
+        it for it in eng.schedule().items if it.task.id == loser.id
+    ).duration == pytest.approx(2.5)
+    assert loser.id in eng.cancelled  # first cancel still holds
+    eng.undo()
+    assert _snapshot(eng) == before
+    assert eng.makespan() == m0
+    assert loser.id not in eng.cancelled
+    assert all(not it.failed for it in eng.schedule().items)
+
+
+def test_apply_credit_shrinks_to_remainder_and_undoes_exactly():
+    spec = A100
+    tasks = generate_tasks(
+        3, spec, workload("mixed", "wide", spec), seed=6, id_offset=750
+    )
+    from repro.core.repartition import Assignment
+
+    eng = TimingEngine(Assignment(spec, {t.id: t for t in tasks}, {}))
+    key = spec.nodes[0].key
+    for t in tasks:
+        eng.apply_append(t.id, key)
+    before = _snapshot(eng)
+    m0 = eng.makespan()
+    first = tasks[0]
+    planned = first.times[spec.nodes[0].size]
+    eng.apply_credit(first.id, 0.25 * planned)
+    # checkpoint credit shrinks the record to its remainder; the task
+    # stays LIVE (unlike cancel) and the chain behind it moves up
+    sched = eng.schedule()
+    rec = next(it for it in sched.items if it.task.id == first.id)
+    assert not rec.failed and rec.corrected
+    assert rec.duration == pytest.approx(0.75 * planned)
+    assert eng.makespan() == pytest.approx(m0 - 0.25 * planned)
+    eng.undo()
+    assert _snapshot(eng) == before
+    assert eng.makespan() == m0
+    assert first.id not in eng.stretched
+
+
+def test_apply_cancel_credit_validation_and_replay_refusal():
+    spec = A100
+    tasks = generate_tasks(
+        2, spec, workload("mixed", "wide", spec), seed=2, id_offset=755
+    )
+    from repro.core.repartition import Assignment
+
+    asgn = Assignment(spec, {t.id: t for t in tasks}, {})
+    eng = TimingEngine(asgn)
+    key = spec.nodes[0].key
+    eng.apply_append(tasks[0].id, key)
+    with pytest.raises(ValueError, match="positive"):
+        eng.apply_cancel(tasks[0].id, 0.0)
+    with pytest.raises(ValueError, match="positive"):
+        eng.apply_credit(tasks[0].id, -1.0)
+    # credit must leave a positive remainder: crediting the whole
+    # duration (or more) would erase the placement instead of shrinking
+    planned = tasks[0].times[spec.nodes[0].size]
+    with pytest.raises(ValueError, match="remainder"):
+        eng.apply_credit(tasks[0].id, planned)
+    ref = ReplayEngine(asgn)
+    ref.apply_append(tasks[0].id, key)
+    with pytest.raises(NotImplementedError):
+        ref.apply_cancel(tasks[0].id, 5.0)
+    with pytest.raises(NotImplementedError):
+        ref.apply_credit(tasks[0].id, 5.0)
+
+
 # --- identity-cache safety + opcode-exhaustive undo ------------------------
 
 @pytest.mark.parametrize("spec", SPECS)
@@ -697,6 +794,16 @@ def test_undo_round_trip_covers_every_opcode():
         key = occupied()[0]
         eng.apply_stretch(eng.chains[key][0], 123.456)
 
+    def drive_cancel():
+        key = occupied()[0]
+        eng.apply_cancel(eng.chains[key][0], 7.875)
+
+    def drive_credit():
+        key = occupied()[-1]
+        tid = eng.chains[key][-1]
+        begin, end = eng.task_begin_end(tid)
+        eng.apply_credit(tid, (end - begin) * 0.5)
+
     drivers = {
         "move": drive_move,
         "swap": drive_swap,
@@ -705,6 +812,8 @@ def test_undo_round_trip_covers_every_opcode():
         "place": drive_extract_place,
         "retract": drive_retract,
         "stretch": drive_stretch,
+        "cancel": drive_cancel,
+        "credit": drive_credit,
     }
     assert set(drivers) == apply_ops, (
         "a new apply_* opcode has no driver here — extend the round trip"

@@ -5,24 +5,31 @@ invariants.
 
   PYTHONPATH=src:tests python tools/fault_matrix.py --seed 3 --fail-rate 0.02
 
-Per cell this drives a two-device pool (A100 + A30) through a Poisson
-deadline stream under the deterministic injector (profile noise,
-stragglers, Poisson task failures at ``--fail-rate``, device MTBF
-outages), then checks:
+Per cell this drives a three-device pool (A100 + 2x A30, the two A30s
+sharing a correlated failure domain) through a Poisson deadline stream
+under the deterministic injector (profile noise, stragglers, Poisson
+task failures at ``--fail-rate``, device MTBF outages, correlated
+domain shocks), with the hardened recovery layer armed — speculative
+backup attempts plus per-task checkpoint credit — then checks:
 
 * ``assert_fault_invariants`` — quarantine honoured (no placement inside
   an outage window, nothing spans a loss un-failed), retry backoff
-  floors, no stranded withdrawals;
+  floors, no stranded withdrawals, backup-attempt exclusivity, and
+  checkpoint-credit monotonicity;
+* **correlated shocks** — every domain outage takes both members down
+  (and back up) at the same seeded instants;
 * **resolution coverage** — every submitted task ends completed,
   permanently failed, or explicitly rejected;
 * **reproducibility** — a second run of the same cell produces the
-  identical completion map (the draws are pure functions of
+  identical completion map AND the identical speculation/checkpoint
+  event logs (the draws are pure functions of
   ``(seed, stream, task_id, attempt)``).
 
 Exit code 0 = all invariants hold; any violation raises.
 """
 
 import argparse
+import dataclasses
 import os
 import sys
 
@@ -39,6 +46,7 @@ from repro.core import (
     RetryPolicy,
     SchedulerConfig,
     SchedulingService,
+    SpeculationPolicy,
     cluster,
     run_with_faults,
 )
@@ -48,21 +56,27 @@ from repro.core.synth import generate_tasks, workload
 def run_cell(seed: int, fail_rate: float, n: int = 24):
     tasks = generate_tasks(n, A100, workload("mixed", "wide", A100),
                            seed=seed)
+    tasks = [dataclasses.replace(t, checkpoint_period_s=2.0)
+             for t in tasks]
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.2, size=n))
     stream = [(float(a), t, float(a) + 150.0)
               for a, t in zip(arrivals, tasks)]
+    # devices 1 and 2 (the two A30s) share a rack-style failure domain
     fspec = FaultSpec(seed=seed, noise_sigma=0.08, straggler_prob=0.15,
                       straggler_factor=3.0, task_fail_rate=fail_rate,
-                      device_mtbf_s=80.0, device_repair_s=25.0)
+                      device_mtbf_s=80.0, device_repair_s=25.0,
+                      domains=((1, 2),), domain_mtbf_s=90.0,
+                      domain_repair_s=20.0)
 
     def one_run():
         svc = SchedulingService(
-            pool=cluster(A100, A30),
+            pool=cluster(A100, A30, A30),
             config=SchedulerConfig(
                 max_wait_s=5.0, max_batch=8, min_batch=2, replan=True,
                 straggler_factor=2.5,
                 retry=RetryPolicy(max_attempts=3, backoff_base=0.5),
+                speculation=SpeculationPolicy(),
             ),
         )
         rep = run_with_faults(svc, stream, injector=FaultInjector(fspec))
@@ -74,10 +88,30 @@ def run_cell(seed: int, fail_rate: float, n: int = 24):
                 | set(svc.stats.rejected))
     missing = {t.id for t in tasks} - resolved
     assert not missing, f"stranded tasks: {sorted(missing)}"
+    # correlated shocks: at every seeded domain-shock instant BOTH
+    # members must be dark — either freshly quarantined by the shock or
+    # already inside an overlapping independent device-MTBF window
+    domain = (1, 2)
+    horizon = max(a for a, _, _ in stream) + 10.0 * 5.0 + 100.0
+    shocks = FaultInjector(fspec).domain_outages(0, horizon)
+    for t_lost, _rec in shocks:
+        for dev in domain:
+            dark = any(
+                ev.device == dev and ev.lost_at <= t_lost + 1e-9
+                and (ev.recovered_at is None
+                     or ev.recovered_at >= t_lost - 1e-9)
+                for ev in svc.stats.outages)
+            assert dark, (
+                f"domain shock at t={t_lost}: member device {dev} "
+                f"was not dark")
     svc2, rep2 = one_run()
     assert rep.completions == rep2.completions, "run is not reproducible"
     assert rep.failed == rep2.failed
-    return svc, rep
+    assert svc.stats.speculations == svc2.stats.speculations, \
+        "speculation log is not reproducible"
+    assert svc.stats.checkpoints == svc2.stats.checkpoints, \
+        "checkpoint log is not reproducible"
+    return svc, rep, len(shocks)
 
 
 def main() -> None:
@@ -86,13 +120,19 @@ def main() -> None:
     ap.add_argument("--fail-rate", type=float, required=True)
     ap.add_argument("--n", type=int, default=24)
     args = ap.parse_args()
-    svc, rep = run_cell(args.seed, args.fail_rate, args.n)
+    svc, rep, domain_shocks = run_cell(args.seed, args.fail_rate, args.n)
+    spec_wins = sum(1 for ev in svc.stats.speculations
+                    if ev.winner == "backup")
     print(f"seed={args.seed} fail_rate={args.fail_rate}: "
           f"{len(rep.completions)} completed, {len(rep.failed)} failed, "
           f"{len(svc.stats.rejected)} rejected, "
           f"{svc.stats.stragglers} stragglers, "
-          f"{len(svc.stats.outages)} outages, "
-          f"{len(svc.stats.retries)} retries — invariants OK")
+          f"{len(svc.stats.outages)} outages "
+          f"({domain_shocks} correlated shocks), "
+          f"{len(svc.stats.retries)} retries, "
+          f"{len(svc.stats.speculations)} speculations "
+          f"({spec_wins} backup wins), "
+          f"{len(svc.stats.checkpoints)} checkpoints — invariants OK")
 
 
 if __name__ == "__main__":
