@@ -10,11 +10,17 @@ Two experiments:
    budget and flush through multi-batch FAR, a trickle falls back to
    greedy placement.  Each stream runs twice — ``replan=False`` and
    ``replan=True`` — and the run asserts the re-planning contract
-   (replan makespan <= plain makespan on every stream).  The run emits
-   ``BENCH_online.json`` (service p50/p95 wall-clock decision latency,
-   virtual queueing delay, makespan ratio vs offline FAR, deadline
-   miss-rates under both settings and the replan win counters) so the
-   serving trajectory is tracked like ``BENCH_sched_cost.json``.
+   (replan makespan <= plain makespan on every stream).  A third run per
+   stream serves with ``edf=True`` (earliest-deadline-first ordering of
+   deadline carriers within each flush chain) to track what the EDF
+   toggle buys on miss rate.  The run emits ``BENCH_online.json``
+   (service p50/p95 wall-clock decision latency, virtual queueing delay,
+   makespan ratio vs offline FAR, deadline miss-rates under all three
+   settings and the replan win counters) so the serving trajectory is
+   tracked like ``BENCH_sched_cost.json``.  The policy sweep iterates
+   every registered schedule-producing policy, so the ``auto-serve``
+   selector (fix-part when sparse, FAR when dense) is scored against its
+   two delegates on the identical streams.
 """
 
 import json
@@ -36,12 +42,12 @@ JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
 CFG = SchedulerConfig()
 
 
-def _run_stream(tasks, arrivals, deadlines, max_wait_s, replan):
+def _run_stream(tasks, arrivals, deadlines, max_wait_s, replan, edf=False):
     svc = SchedulingService(
         A100,
         policy="far",
         config=SchedulerConfig(
-            max_wait_s=max_wait_s, max_batch=16, replan=replan,
+            max_wait_s=max_wait_s, max_batch=16, replan=replan, edf=edf,
         ),
     )
     for task, arr in zip(tasks, arrivals):
@@ -68,6 +74,10 @@ def _service_entry(scaling: str, n_tasks: int, mean_gap: float,
     }
     plain = _run_stream(tasks, arrivals, deadlines, max_wait_s, replan=False)
     re = _run_stream(tasks, arrivals, deadlines, max_wait_s, replan=True)
+    # EDF within-batch flush ordering (SchedulerConfig.edf): deadline
+    # carriers run earliest-deadline-first within each flush chain
+    edf = _run_stream(tasks, arrivals, deadlines, max_wait_s, replan=False,
+                      edf=True)
     # the re-planning contract, enforced on every benchmark stream: the
     # shadowed no-replan chain guarantees replan can only ever help
     assert re.makespan <= plain.makespan + 1e-9, \
@@ -94,6 +104,7 @@ def _service_entry(scaling: str, n_tasks: int, mean_gap: float,
         # -- deadline-aware serving + tail re-planning ----------------------
         "deadline_miss_rate_noreplan": plain.deadline_report()["miss_rate"],
         "deadline_miss_rate_replan": re.deadline_report()["miss_rate"],
+        "deadline_miss_rate_edf": edf.deadline_report()["miss_rate"],
         "makespan_ratio_replan_vs_noreplan": float(
             re.makespan / plain.makespan
         ),
@@ -216,7 +227,7 @@ def run(reps: int = 40) -> Rows:
         "SchedulingService (Poisson arrivals, latency budget, deadlines)",
         ["workload", "n", "batches", "online", "wall_p95_ms",
          "makespan/offline_FAR", "replan/plain", "miss%_plain",
-         "miss%_replan", "replan_wins"],
+         "miss%_replan", "miss%_edf", "replan_wins"],
     )
     for e in report["entries"]:
         svc_rows.add(e["workload"], e["n_tasks"], e["batches"],
@@ -225,6 +236,7 @@ def run(reps: int = 40) -> Rows:
                      e["makespan_ratio_replan_vs_noreplan"],
                      100 * e["deadline_miss_rate_noreplan"],
                      100 * e["deadline_miss_rate_replan"],
+                     100 * e["deadline_miss_rate_edf"],
                      e["replan_wins"])
     print(svc_rows.render())
     sweep_rows = Rows(

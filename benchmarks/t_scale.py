@@ -1,0 +1,165 @@
+"""Sharded async serving vs the synchronous service at trace scale.
+
+Streams 10^4-10^5 tasks from the deterministic trace harness
+(:mod:`repro.core.traces` — seeded Poisson/bursty/diurnal arrival mixes
+with capped heavy-tailed durations) through both serving frontends on
+the same four-device pool:
+
+* **sync** — ``SchedulingService``: planning runs inline inside
+  ``submit`` whenever a batch fires, so the submit-path p99 is a planner
+  flush;
+* **sharded** — ``ShardedSchedulingService(defer=True)``: ``submit`` is
+  the fast admission path only (shard pick + inbox append), planning
+  happens in ``pump()`` off the submit path, work-stealing between the
+  shard inboxes.
+
+Reported per ``(mix, n)`` entry: sustained tasks/sec (total ingest wall
+time, pumps included — the planning work does not disappear, it just
+moves off the submit path), p50/p99 *decision latency* (wall time of
+each ``submit`` call), peak/mean queue depth at the pump cadence, and
+the p99 speedup of the fast path over the synchronous submit.  The
+acceptance gate asserted here: on the 10^5-task stream the sharded p99
+decision latency is **>= 5x** below the synchronous p99 at the same
+arrival rate.  Each entry also records the trace digest prefix (over
+the first 10k events) so the stream is pinned to ``(seed, mix, n)``.
+
+Emits ``BENCH_scale.json``.  ``--quick`` shrinks the streams for the CI
+bench-smoke job (the acceptance ratio is asserted at every size).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.cluster import cluster
+from repro.core.device_spec import A30, A100
+from repro.core.policy import SchedulerConfig
+from repro.core.service import SchedulingService
+from repro.core.sharded import ShardedSchedulingService
+from repro.core.traces import TraceSpec, trace_digest, trace_events
+
+from benchmarks.common import Rows
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_scale.json")
+
+POOL = cluster(A100, A30, A30, A100)
+PUMP_EVERY = 256
+MIN_P99_SPEEDUP = 5.0
+
+
+def _cfg() -> SchedulerConfig:
+    return SchedulerConfig(max_wait_s=10.0, max_batch=64, min_batch=2,
+                           replan=False)
+
+
+def _run_sync(spec: TraceSpec) -> dict:
+    svc = SchedulingService(pool=POOL, policy="auto-serve", config=_cfg())
+    lat = []
+    t0 = time.perf_counter()
+    for ev in trace_events(POOL, spec):
+        s = time.perf_counter()
+        svc.submit(ev.task, arrival=ev.arrival)
+        lat.append(time.perf_counter() - s)
+    svc.drain()
+    wall = time.perf_counter() - t0
+    return {"svc": svc, "wall_s": wall, "lat": np.asarray(lat)}
+
+
+def _run_sharded(spec: TraceSpec, shards: int) -> dict:
+    svc = ShardedSchedulingService(POOL, shards=shards, policy="auto-serve",
+                                   config=_cfg(), defer=True)
+    t0 = time.perf_counter()
+    i = 0
+    for ev in trace_events(POOL, spec):
+        svc.submit(ev.task, arrival=ev.arrival)
+        i += 1
+        if i % PUMP_EVERY == 0:
+            svc.pump(ev.arrival)
+    svc.drain()
+    wall = time.perf_counter() - t0
+    return {"svc": svc, "wall_s": wall,
+            "lat": np.asarray(svc.scale.admit_wall_s())}
+
+
+def _entry(mix: str, n: int, shards: int, seed: int = 2026) -> dict:
+    spec = TraceSpec(seed=seed, mix=mix, n=n, rate=8.0)
+    sync = _run_sync(spec)
+    shard = _run_sharded(spec, shards)
+    sync_lat_us = sync["lat"] * 1e6
+    shard_lat_us = shard["lat"] * 1e6
+    p99_sync = float(np.percentile(sync_lat_us, 99))
+    p99_shard = float(np.percentile(shard_lat_us, 99))
+    speedup = p99_sync / p99_shard if p99_shard > 0 else float("inf")
+    assert speedup >= MIN_P99_SPEEDUP, (
+        f"{mix}/n={n}: sharded p99 decision latency {p99_shard:.1f}us is "
+        f"only {speedup:.1f}x below sync {p99_sync:.1f}us "
+        f"(gate: >= {MIN_P99_SPEEDUP}x)"
+    )
+    depths = [d for _, d in shard["svc"].scale.queue_depths]
+    placed = sum(len(s.items) for s in (
+        shard["svc"].shard_schedules()))
+    assert placed == n, f"{mix}/n={n}: placed {placed} of {n} tasks"
+    return {
+        "mix": mix,
+        "n_tasks": n,
+        "rate_per_s": spec.rate,
+        "seed": seed,
+        "shards": shards,
+        "pump_every": PUMP_EVERY,
+        "trace_digest_10k": trace_digest(POOL, spec, limit=10_000)[:16],
+        "sync_tasks_per_s": n / sync["wall_s"],
+        "sharded_tasks_per_s": n / shard["wall_s"],
+        "sync_decision_us_p50": float(np.percentile(sync_lat_us, 50)),
+        "sync_decision_us_p99": p99_sync,
+        "sharded_decision_us_p50": float(np.percentile(shard_lat_us, 50)),
+        "sharded_decision_us_p99": p99_shard,
+        "p99_speedup": speedup,
+        "queue_depth_peak": int(max(depths)) if depths else 0,
+        "queue_depth_mean": float(np.mean(depths)) if depths else 0.0,
+        "steals": shard["svc"].scale.steals,
+        "pumps": shard["svc"].scale.pumps,
+    }
+
+
+def run(reps: int = 0, quick: bool = False) -> Rows:
+    sizes = {
+        "poisson": 20_000 if quick else 100_000,
+        "bursty": 10_000 if quick else 30_000,
+        "diurnal": 10_000 if quick else 30_000,
+    }
+    entries = [_entry(mix, n, shards=2) for mix, n in sizes.items()]
+    report = {
+        "pool": "A100+A30+A30+A100",
+        "metric": (
+            "sync vs sharded-deferred serving on deterministic traces: "
+            "sustained tasks/s, submit-path decision latency p50/p99 "
+            "(us), queue depth at the pump cadence; gate asserted: "
+            f"sharded p99 >= {MIN_P99_SPEEDUP}x below sync p99"
+        ),
+        "entries": entries,
+    }
+    with open(JSON_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows = Rows(
+        "Sharded async serving vs sync at trace scale",
+        ["mix", "n", "sync_t/s", "shard_t/s", "sync_p99_us",
+         "shard_p99_us", "p99_speedup", "q_peak", "steals"],
+    )
+    for e in entries:
+        rows.add(e["mix"], e["n_tasks"], e["sync_tasks_per_s"],
+                 e["sharded_tasks_per_s"], e["sync_decision_us_p99"],
+                 e["sharded_decision_us_p99"], e["p99_speedup"],
+                 e["queue_depth_peak"], e["steals"])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller streams (CI bench-smoke)")
+    args = ap.parse_args()
+    print(run(quick=args.quick).render())

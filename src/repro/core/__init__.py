@@ -84,6 +84,17 @@ from repro.core.problem import (
     validate_schedule,
 )
 from repro.core.refine import RefineStats, refine_assignment
+from repro.core.sharded import (
+    FastDecision,
+    ScaleStats,
+    ShardedSchedulingService,
+)
+from repro.core.traces import (
+    TraceEvent,
+    TraceSpec,
+    trace_digest,
+    trace_events,
+)
 from repro.core.repartition import (
     Assignment,
     LPTGroups,
@@ -124,4 +135,6 @@ __all__ = [
     "ExecutionDraw", "demote_shrink", "run_with_faults",
     "execute_open_loop",
     "SpeculationPolicy", "ProfileCalibration",
+    "ShardedSchedulingService", "ScaleStats", "FastDecision",
+    "TraceSpec", "TraceEvent", "trace_events", "trace_digest",
 ]

@@ -763,21 +763,43 @@ class ClusterMultiBatchScheduler:
             out.append(max(slice_rel) if slice_rel else 0.0)
         return out
 
-    def add_batch(self, tasks: Sequence[Task], not_before: float = 0.0
-                  ) -> Schedule:
+    def add_batch(self, tasks: Sequence[Task], not_before: float = 0.0,
+                  deadlines: dict[int, float] | None = None) -> Schedule:
         """Partition one flush across the pool and splice each part after
         its device's tail; returns the merged absolute-timed segment."""
-        for t in tasks:
-            self.originals[t.id] = t
+        return self.commit_parts(
+            self.plan_parts(tasks), not_before, deadlines=deadlines
+        )
+
+    def plan_parts(self, tasks: Sequence[Task]) -> list[tuple]:
+        """Stage 1 of a cluster flush: phase-0-partition the batch across
+        the active pool and plan every device's part cold.  The per-device
+        plans only depend on the partition (itself a function of the
+        committed tail pressures at call time), not on each other's
+        commits, so all of them run before any tail moves — the pipelined
+        form of the old plan-one-commit-one loop, bit-identical because
+        per-device plans never read other devices' tails."""
         parts = partition_batch(
             tasks, self.cluster, self.device_pressures(), active=self.active
         )
+        return [
+            (mb, part, mb.plan_batch(part) if part else None)
+            for mb, part in zip(self.mbs, parts)
+        ]
+
+    def commit_parts(self, planned: list[tuple], not_before: float = 0.0,
+                     deadlines: dict[int, float] | None = None) -> Schedule:
+        """Stage 2 of a cluster flush: splice every planned part after its
+        device's tail and merge the absolute-timed segments."""
         items: list = []
         reconfigs: list = []
-        for mb, part in zip(self.mbs, parts):
+        for mb, part, plan in planned:
             if not part:
                 continue
-            out = mb.add_batch(part, not_before=not_before)
+            for t in part:
+                self.originals[t.id] = t
+            out = mb.commit_plan(plan, not_before=not_before,
+                                 deadlines=deadlines)
             items.extend(out.schedule.items)
             reconfigs.extend(out.schedule.reconfigs)
         merged = Schedule(spec=self.cluster, items=items, reconfigs=reconfigs)
@@ -786,7 +808,7 @@ class ClusterMultiBatchScheduler:
             schedule=merged,
             makespan=merged.makespan,
             extras={"partition": tuple(
-                tuple(t.id for t in p) for p in parts
+                tuple(t.id for t in part) for _, part, _ in planned
             )},
         ))
         return merged

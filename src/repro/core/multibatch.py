@@ -267,6 +267,40 @@ def seam_refine(
     return eng.export_assignment(), eng.schedule(), moves, swaps
 
 
+def edf_order(assignment: Assignment,
+              deadlines: dict[int, float]) -> Assignment:
+    """Reorder each node chain earliest-deadline-first (stable: ties and
+    deadline-free tasks keep their plan order, after the deadline
+    carriers).
+
+    Tasks on one chain run back-to-back on the same instance, so any
+    permutation of a chain leaves every chain's *end* — and therefore
+    the batch makespan, the seam tail and feasibility — exactly as the
+    makespan-only policy planned them.  Only the per-task completion
+    order inside the chain changes, which is the whole point: a task
+    with an SLO finishes before the best-effort work sharing its
+    instance.  Chains without any deadline carrier are returned as the
+    same list object, so a deadline-free batch commits bit-identically.
+    """
+    changed = False
+    node_tasks: dict[NodeKey, list[int]] = {}
+    for key, tids in assignment.node_tasks.items():
+        if len(tids) > 1 and any(t in deadlines for t in tids):
+            order = sorted(
+                range(len(tids)),
+                key=lambda i: (deadlines.get(tids[i], float("inf")), i),
+            )
+            reordered = [tids[i] for i in order]
+            if reordered != tids:
+                changed = True
+            node_tasks[key] = reordered
+        else:
+            node_tasks[key] = tids
+    if not changed:
+        return assignment
+    return Assignment(assignment.spec, assignment.tasks, node_tasks)
+
+
 class MultiBatchScheduler:
     """Online driver: one plan per batch + intelligent concatenation (§4).
 
@@ -310,19 +344,48 @@ class MultiBatchScheduler:
         self.reset_at = 0.0
 
     def add_batch(
-        self, tasks: Sequence[Task], not_before: float = 0.0
+        self, tasks: Sequence[Task], not_before: float = 0.0,
+        deadlines: dict[int, float] | None = None,
     ) -> ConcatResult:
         """Plan ``tasks`` cold and splice them after the tail.
 
         ``not_before`` floors every release time (slices and the
         reconfiguration sequence) — the serving facade passes its flush
         time so nothing is scheduled before the decision that placed it.
+        ``deadlines`` (task id -> absolute SLO) triggers the EDF
+        within-batch reorder before the splice; see :func:`edf_order`.
         """
-        plan = get_policy(self.policy).plan(tasks, self.spec, self.config)
+        return self.commit_plan(
+            self.plan_batch(tasks), not_before, deadlines=deadlines
+        )
+
+    def plan_batch(self, tasks: Sequence[Task]) -> PlanResult:
+        """Stage 1 of a flush: plan ``tasks`` cold under the registered
+        policy.  Tail-independent by construction (the §4 seam only
+        enters at commit), so several batches can be planned while
+        earlier commits are still outstanding — the pipelining seam the
+        sharded service and the cluster driver exploit."""
+        return get_policy(self.policy).plan(tasks, self.spec, self.config)
+
+    def commit_plan(
+        self, plan: PlanResult, not_before: float = 0.0,
+        deadlines: dict[int, float] | None = None,
+    ) -> ConcatResult:
+        """Stage 2 of a flush: splice a cold plan after the committed
+        tail.  ``add_batch`` is exactly ``commit_plan(plan_batch(...))``,
+        so pipelined and monolithic flushes commit bit-identically."""
+        if plan.assignment is None:
+            raise ValueError(
+                f"policy {plan.policy!r} produced no assignment; "
+                "tail-aware planning is unsupported"
+            )
         self.results.append(plan)
+        assignment = plan.assignment
+        if deadlines:
+            assignment = edf_order(assignment, deadlines)
         tail = self.tail.floored(not_before) if not_before > 0.0 else self.tail
         out = concatenate(
-            plan.assignment, tail, mode=self.mode, reverse=self._flip,
+            assignment, tail, mode=self.mode, reverse=self._flip,
             use_engine=self.config.use_engine,
         )
         if self.mode != "trivial":

@@ -58,6 +58,35 @@ class OnlinePlacement:
     end: float
 
 
+def completion_floor(candidates, busy, at: float) -> float:
+    """Greedy completion bound: the earliest any candidate instance can
+    finish the task given per-cell busy-until times.
+
+    ``candidates`` yields ``(node, size_keyed_times)`` pairs (every
+    instance node the task could be molded to); ``busy`` maps blocked
+    ``(tree, slice)`` cells to the time they clear.  Each candidate can
+    start no earlier than ``max(at, cell clear times)`` and runs its
+    profiled duration; the floor is the minimum completion over all
+    candidates.  Whether this is an admissible lower bound or a
+    conservative envelope is decided entirely by what ``busy`` contains:
+    the synchronous service feeds work *running* at ``at`` (provable
+    floor, admission-safe), the sharded fast path feeds every committed
+    placement (dominating envelope, so a fast-path admit never lets in
+    a task the exact check would provably reject).
+    """
+    best = float("inf")
+    for node, times in candidates:
+        floor = at
+        for cell in node.blocked_cells:
+            b = busy.get(cell, 0.0)
+            if b > floor:
+                floor = b
+        done = floor + times[node.size]
+        if done < best:
+            best = done
+    return best
+
+
 class OnlineScheduler:
     """Arrival-driven moldable placement on the repartitioning tree.
 

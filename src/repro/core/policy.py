@@ -68,6 +68,13 @@ class SchedulerConfig:
     # -- strategy-specific --------------------------------------------------
     partition: tuple | None = None    # fix-part: instances to pin (None -> 1s)
     seed: int | None = None           # reserved for randomized strategies
+    # "auto-serve" meta-policy: batches at least this dense flush through
+    # FAR, sparser ones through fix-part.  The threshold comes from the
+    # BENCH_online policy sweep: FAR's molding wins on dense batches
+    # (gap 0.5s, ~16-task flushes) while its reconfiguration overhead
+    # loses to a pinned all-1s partition at sparse rates (gaps 2–8s,
+    # <=5-task flushes, fix-part ratios 0.75–0.84 vs FAR).
+    auto_dense_batch: int = 12
 
     # -- online serving (SchedulingService latency budget) ------------------
     max_wait_s: float = 0.25          # accumulate arrivals this long
@@ -88,6 +95,14 @@ class SchedulerConfig:
     # replan on, online-fallback (trickle) flushes also try a withdrawn-
     # tail re-plan under the same strict-win rule.
     replan: bool = False
+    # EDF within-batch ordering: before a flush commits, each planned
+    # node chain is stably reordered earliest-deadline-first (deadline
+    # carriers ahead of best-effort work; see multibatch.edf_order).
+    # Chain ends — and therefore makespan, the seam tail and every
+    # never-worse guarantee — are order-invariant, only per-task
+    # completion times inside a chain move.  False = bit-identical to
+    # the makespan-only commit order.
+    edf: bool = False
 
     # -- fault tolerance (closed-loop runtime feedback) ---------------------
     # implicit straggler detection: a committed placement whose observed
@@ -322,6 +337,39 @@ def available_policies() -> list[str]:
     """Sorted names of every registered policy."""
     _ensure_builtins()
     return sorted(_REGISTRY)
+
+
+@register_policy("auto-serve")
+class AutoServePolicy:
+    """Per-flush policy selector driven by batch density.
+
+    The BENCH_online policy sweep shows a regime split: FAR's moldable
+    packing wins when flushes are dense (many tasks per batch amortise
+    its reconfiguration overhead), while a pinned all-1s fix-part
+    partition wins at sparse arrival rates where FAR's reconfigurations
+    dominate the short chains.  This meta-policy picks per batch —
+    ``len(tasks) >= config.auto_dense_batch`` flushes through ``"far"``,
+    anything sparser through ``"fix-part"`` — so a serving stream whose
+    rate drifts across regimes gets the right planner at every flush
+    without a config change.  The chosen name is recorded in
+    ``extras["auto_choice"]``.
+    """
+
+    name = "auto-serve"
+
+    def plan(
+        self,
+        tasks: Sequence[Task],
+        spec: DeviceSpec,
+        config: SchedulerConfig | None = None,
+        tail: object | None = None,
+    ) -> PlanResult:
+        cfg = config or SchedulerConfig()
+        choice = "far" if len(tasks) >= cfg.auto_dense_batch else "fix-part"
+        res = get_policy(choice).plan(tasks, spec, cfg, tail)
+        res.policy = self.name
+        res.extras["auto_choice"] = choice
+        return res
 
 
 __all__ = [

@@ -83,6 +83,7 @@ from typing import Sequence
 from repro.core.cluster import ClusterMultiBatchScheduler, ClusterSpec
 from repro.core.device_spec import DeviceSpec, multi_gpu
 from repro.core.multibatch import MultiBatchScheduler
+from repro.core.online import completion_floor
 from repro.core.policy import SchedulerConfig
 from repro.core.problem import (
     EPS,
@@ -876,7 +877,8 @@ class SchedulingService:
         if not placeable:
             return
         t0 = time.perf_counter()
-        self.mb.add_batch(self._plan_tasks(placeable), not_before=t)
+        self.mb.add_batch(self._plan_tasks(placeable), not_before=t,
+                          deadlines=self._edf_deadlines(placeable))
         wall = time.perf_counter() - t0
         fid = self._next_flush_id()
         for task in placeable:
@@ -925,7 +927,8 @@ class SchedulingService:
         self.stats.replan_attempts += 1
         t0 = time.perf_counter()
         plain_makespan = self.mb.makespan
-        trial.add_batch(self._plan_tasks(wd), not_before=t)
+        trial.add_batch(self._plan_tasks(wd), not_before=t,
+                        deadlines=self._edf_deadlines(wd))
         if trial.makespan >= plain_makespan - self.config.eps:
             return
         wall = time.perf_counter() - t0
@@ -1384,17 +1387,7 @@ class SchedulingService:
                     for cell in it.node.blocked_cells:
                         if it.end > busy.get(cell, 0.0):
                             busy[cell] = it.end
-        best = math.inf
-        for node, times in self._node_candidates(task):
-            floor = at
-            for cell in node.blocked_cells:
-                b = busy.get(cell, 0.0)
-                if b > floor:
-                    floor = b
-            done = floor + times[node.size]
-            if done < best:
-                best = done
-        return best
+        return completion_floor(self._node_candidates(task), busy, at)
 
     def _admit(self, task: Task, arrival: float, deadline: float) -> str:
         if self.config.admission == "none":
@@ -1449,7 +1442,10 @@ class SchedulingService:
         t0 = time.perf_counter()
         arrivals = self._plan_tasks([task for task, _, _ in batch])
         if self._baseline is not None:  # chains diverged: mirror the flush
-            self._baseline.add_batch(arrivals, not_before=decided_at)
+            self._baseline.add_batch(
+                arrivals, not_before=decided_at,
+                deadlines=self._edf_deadlines(arrivals),
+            )
         # nothing may start before the flush decision that placed it
         withdrawn, plain_makespan = self._flush_batch(arrivals, decided_at)
         wall = time.perf_counter() - t0
@@ -1479,11 +1475,13 @@ class SchedulingService:
         a kept re-plan pulled back (empty without ``config.replan``) and
         the plain candidate's combined makespan for the event log."""
         if not self.config.replan:
-            self.mb.add_batch(arrivals, not_before=decided_at)
+            self.mb.add_batch(arrivals, not_before=decided_at,
+                              deadlines=self._edf_deadlines(arrivals))
             return [], 0.0
         # candidate A — the plain flush: arrivals against the committed tail
         plain = self.mb.clone()
-        plain.add_batch(arrivals, not_before=decided_at)
+        plain.add_batch(arrivals, not_before=decided_at,
+                        deadlines=self._edf_deadlines(arrivals))
         # candidate B — the re-plan: pull the not-yet-started tail back and
         # schedule it together with the arrivals under the same policy
         trial = self.mb.clone()
@@ -1493,9 +1491,9 @@ class SchedulingService:
             self.mb = plain
             return [], 0.0
         self.stats.replan_attempts += 1
-        trial.add_batch(
-            self._plan_tasks(withdrawn) + arrivals, not_before=decided_at
-        )
+        replanned = self._plan_tasks(withdrawn) + arrivals
+        trial.add_batch(replanned, not_before=decided_at,
+                        deadlines=self._edf_deadlines(replanned))
         if trial.makespan < plain.makespan - self.config.eps:
             if self._baseline is None and not self._fault_mode:
                 # first divergence: the plain candidate IS the
@@ -1509,6 +1507,19 @@ class SchedulingService:
             return withdrawn, plain.makespan
         self.mb = plain
         return [], 0.0
+
+    def _edf_deadlines(self, tasks: Sequence[Task]) -> dict[int, float] | None:
+        """The deadline map a flush hands to ``add_batch`` when EDF
+        within-batch ordering is on — ``None`` (bit-identical commit
+        order) when ``config.edf`` is off or no task of the batch
+        retained an SLO."""
+        if not self.config.edf:
+            return None
+        deadlines = {
+            t.id: self._deadlines[t.id] for t in tasks
+            if t.id in self._deadlines
+        }
+        return deadlines or None
 
     def _attach_deadline_extras(self, tasks: Sequence[Task]) -> None:
         """Record the flushed batch's SLO picture on its PlanResult: the
@@ -1559,10 +1570,11 @@ class SchedulingService:
             wd = trial.withdraw_uncommitted(decided_at)
             if wd:
                 self.stats.replan_attempts += 1
-                trial.add_batch(
-                    self._plan_tasks(wd) + [task for task, _, _ in batch],
-                    not_before=decided_at,
-                )
+                replanned = self._plan_tasks(wd) + [
+                    task for task, _, _ in batch
+                ]
+                trial.add_batch(replanned, not_before=decided_at,
+                                deadlines=self._edf_deadlines(replanned))
                 if trial.makespan < plain.makespan - self.config.eps:
                     if self._baseline is None and not self._fault_mode:
                         self._baseline = plain

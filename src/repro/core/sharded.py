@@ -1,0 +1,674 @@
+"""Sharded, asynchronous serving on top of :class:`SchedulingService`.
+
+The synchronous service is one object whose ``submit`` can block on an
+inline planner flush — decision latency on the submit path is bounded by
+planner cost, exactly what MISO-style online serving systems cannot
+afford.  :class:`ShardedSchedulingService` splits that into
+
+* a **fast admission path**: ``submit`` picks the least-loaded shard
+  whose pool supports the task (O(#shards), constant in queue length),
+  runs an engine-derived greedy completion-bound admission check against
+  a cached busy envelope (:func:`~repro.core.online.completion_floor`)
+  and appends to the shard's inbox — no planning, no tail mutation;
+* **background planning**: ``pump()`` (the virtual-time stand-in for a
+  background worker loop) drains inboxes into the per-shard inner
+  :class:`SchedulingService` objects, where the existing batching /
+  deadline / admission / replan / fault machinery runs unchanged.
+  Flush planning inside each inner service is pipelined with commit via
+  the ``plan_batch`` / ``commit_plan`` split (see
+  :mod:`repro.core.multibatch`);
+* **work stealing**: before forwarding, queued work migrates from the
+  heaviest shard's inbox to the lightest shard that supports it, so one
+  hot shard cannot starve the pool.
+
+Two operating modes, chosen at construction:
+
+``defer=False`` (immediate mode) makes the facade a *transparent proxy*:
+every ``submit``/``poll``/``report``/... forwards synchronously to the
+inner service(s).  With one shard this is **bit-identical** to driving a
+:class:`SchedulingService` directly — the differential suite in
+``tests/test_scale.py`` pins ``_plan_signature`` equality with
+deadlines, admission, replan and fault reporting enabled.
+
+``defer=True`` (async mode) enables the fast path.  Placement decisions
+then happen at pump time: a task's causal floor is still its submit
+stamp (``admission_stamps``), and the inner decision time can only be
+later, so nothing ever begins before its submit decision.  The fast
+admission check uses an *envelope* over every committed placement of the
+shard (not just running work): the envelope dominates the exact
+running-work lower bound at any later instant, so the fast path never
+admits a task the exact check would provably reject at the same moment —
+the price is that it may conservatively shed a task the exact check
+would still have squeezed in.
+
+**Shard layout**: a ClusterSpec pool's devices are dealt round-robin —
+global device ``g`` lives on shard ``g % shards`` at local index
+``g // shards`` — and each shard serves its devices as an independent
+ClusterSpec (one shard reuses the pool object itself, which is what
+makes the one-shard differential exact).  ``quarantine``/``recover``
+accept pool-global device indices (or DeviceSpecs, or failure-domain
+sequences) and route each member to its shard.
+
+**Drain semantics**: ``drain()`` forwards every inbox (after a final
+steal pass), then drains each inner service — retries play out, parked
+tasks are rejected, nothing is stranded.  With one shard it returns the
+combined :class:`~repro.core.problem.Schedule`; with many it returns one
+schedule per shard (their timelines share virtual time but separate
+device pools, so a merged Schedule would lie about tree identity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.cluster import ClusterSpec, cluster
+from repro.core.device_spec import DeviceSpec
+from repro.core.online import completion_floor
+from repro.core.policy import SchedulerConfig
+from repro.core.problem import EPS, Schedule, Task
+from repro.core.service import SchedulingService, ServiceStats
+
+__all__ = [
+    "FastDecision",
+    "ScaleStats",
+    "ShardedSchedulingService",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FastDecision:
+    """One fast-path intake decision (defer mode)."""
+
+    task_id: int
+    arrival: float
+    shard: int                  # -1: rejected before shard assignment
+    verdict: str                # "queued" | "placed" | "demoted" | "rejected"
+    admit_wall_s: float         # wall-clock cost of the submit call
+
+
+@dataclasses.dataclass
+class ScaleStats:
+    """Sharded-layer counters (the per-shard ServiceStats live on the
+    inner services; see :meth:`ShardedSchedulingService.stats`)."""
+
+    submitted: int = 0
+    forwarded: int = 0
+    pumps: int = 0
+    steals: int = 0              # tasks migrated between shard inboxes
+    fast_rejected: list[int] = dataclasses.field(default_factory=list)
+    fast_demoted: list[int] = dataclasses.field(default_factory=list)
+    expired: list[int] = dataclasses.field(default_factory=list)
+    intake: list[FastDecision] = dataclasses.field(default_factory=list)
+    queue_depths: list[tuple[float, int]] = dataclasses.field(
+        default_factory=list)  # (virtual time, total inbox depth) per pump
+
+    def admit_wall_s(self) -> list[float]:
+        return [d.admit_wall_s for d in self.intake]
+
+
+def _work_estimate(task: Task) -> float:
+    """Best-case seconds of the task — the load currency of shard
+    selection and stealing (cheap, profile-only, device-agnostic)."""
+    return min(task.times.values())
+
+
+class ShardedSchedulingService:
+    """Shard a device pool across independent serving cores.
+
+    Args:
+      pool: the full :class:`DeviceSpec` or :class:`ClusterSpec`.
+      shards: number of serving cores; a ClusterSpec pool supports up to
+        one shard per device, a bare DeviceSpec exactly one.
+      policy / config: forwarded to every inner service unchanged.
+      defer: ``True`` = async fast path + ``pump()`` (the serving mode),
+        ``False`` = transparent synchronous proxy (the differential
+        mode; with one shard, bit-identical to SchedulingService).
+    """
+
+    def __init__(
+        self,
+        pool: DeviceSpec | ClusterSpec,
+        shards: int = 1,
+        policy: str = "far",
+        config: SchedulerConfig | None = None,
+        defer: bool = True,
+    ):
+        self.config = config or SchedulerConfig()
+        self.policy = policy
+        self.pool = pool
+        self.defer = defer
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if isinstance(pool, ClusterSpec):
+            if shards > len(pool.devices):
+                raise ValueError(
+                    f"cannot split {len(pool.devices)} devices into "
+                    f"{shards} shards"
+                )
+            if shards == 1:
+                pools: list[DeviceSpec | ClusterSpec] = [pool]
+            else:
+                pools = [
+                    cluster(*pool.devices[i::shards],
+                            name=f"{pool.name}/shard{i}")
+                    for i in range(shards)
+                ]
+        else:
+            if shards != 1:
+                raise ValueError(
+                    "a single DeviceSpec pool cannot be sharded; pass a "
+                    "ClusterSpec to serve more than one shard"
+                )
+            pools = [pool]
+        self._k = shards
+        self._shards = [
+            SchedulingService(pool=p, policy=policy, config=self.config)
+            for p in pools
+        ]
+        self.now = 0.0
+        self.scale = ScaleStats()
+        self._inbox: list[list[tuple[Task, float, float | None]]] = [
+            [] for _ in range(shards)
+        ]
+        self._inbox_work = [0.0] * shards
+        self._tail_load = [0.0] * shards
+        self._owner: dict[int, int] = {}
+        self._stamps: dict[int, float] = {}      # task id -> submit stamp
+        self._envelopes: list[dict | None] = [None] * shards
+        self._unforwarded: set[int] = set()
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def shards(self) -> int:
+        return self._k
+
+    @property
+    def shard_services(self) -> list[SchedulingService]:
+        """The inner per-shard services (read-only access for tests and
+        reporting; driving them directly voids the causal bookkeeping)."""
+        return list(self._shards)
+
+    def admission_stamps(self) -> dict[int, float]:
+        """Submit-decision virtual times — the causal floor of every task
+        that entered through this facade (``tests/invariants.shard_floors``
+        folds these under the inner flush-decision floors)."""
+        return dict(self._stamps)
+
+    # -- intake -------------------------------------------------------------
+    def submit(
+        self,
+        task: Task,
+        arrival: float | None = None,
+        urgent: bool = False,
+        deadline: float | None = None,
+    ) -> str:
+        """Fast-path intake: shard selection + admission gate + inbox
+        append in defer mode, a transparent forward otherwise.  Returns
+        the intake verdict (same vocabulary as the inner service)."""
+        t0 = time.perf_counter()
+        arrival = self.now if arrival is None else float(arrival)
+        if arrival < self.now - 1e-9:
+            raise ValueError(
+                f"arrivals must be non-decreasing: {arrival} < {self.now}"
+            )
+        self.now = max(self.now, arrival)
+        self.scale.submitted += 1
+
+        if not self.defer:
+            shard = self._select_shard(task)
+            if shard is None:
+                self.scale.intake.append(FastDecision(
+                    task.id, arrival, -1, "rejected",
+                    time.perf_counter() - t0))
+                # mirror the sync intake verdict exactly: the inner
+                # service records the rejection itself when it owns the
+                # full pool, so only multi-shard selection rejects here
+                if self._k == 1:
+                    return self._shards[0].submit(
+                        task, arrival=arrival, urgent=urgent,
+                        deadline=deadline)
+                self.scale.fast_rejected.append(task.id)
+                return "rejected"
+            self._owner[task.id] = shard
+            self._stamps[task.id] = arrival
+            verdict = self._shards[shard].submit(
+                task, arrival=arrival, urgent=urgent, deadline=deadline
+            )
+            self._touch(shard)
+            self.scale.intake.append(FastDecision(
+                task.id, arrival, shard, verdict,
+                time.perf_counter() - t0))
+            return verdict
+
+        # same API-boundary validation as the sync service (a malformed
+        # profile must fail the submit, not a later pump)
+        self._shards[0]._validate_task(task)
+        shard = self._select_shard(task)
+        if shard is None:
+            self.scale.fast_rejected.append(task.id)
+            self.scale.intake.append(FastDecision(
+                task.id, arrival, -1, "rejected", time.perf_counter() - t0))
+            return "rejected"
+        verdict = "queued"
+        if deadline is not None:
+            deadline = float(deadline)
+            if deadline < arrival - 1e-9:
+                raise ValueError(
+                    f"task {task.id}: deadline {deadline} precedes its "
+                    f"arrival {arrival}"
+                )
+            verdict = self._fast_admit(shard, task, arrival, deadline)
+            if verdict == "rejected":
+                self.scale.intake.append(FastDecision(
+                    task.id, arrival, shard, verdict,
+                    time.perf_counter() - t0))
+                return verdict
+            if verdict == "demoted":
+                deadline = None
+        self._owner[task.id] = shard
+        self._stamps[task.id] = arrival
+        if urgent:
+            # urgency bypasses the inbox by definition: forward now
+            self._touch(shard)
+            inner = self._shards[shard]
+            inner.submit(task, arrival=max(arrival, inner.now),
+                         urgent=True, deadline=deadline)
+            self.scale.forwarded += 1
+            verdict = "placed" if verdict == "queued" else verdict
+        else:
+            self._inbox[shard].append((task, arrival, deadline))
+            self._inbox_work[shard] += _work_estimate(task)
+            self._unforwarded.add(task.id)
+        self.scale.intake.append(FastDecision(
+            task.id, arrival, shard, verdict, time.perf_counter() - t0))
+        return verdict
+
+    def _select_shard(self, task: Task) -> int | None:
+        """Least-loaded supporting shard (load = cached committed-tail
+        pressure + queued inbox work; ties to the lower index)."""
+        best = None
+        best_load = 0.0
+        for i in range(self._k):
+            if not self._shard_supports(i, task):
+                continue
+            load = self._tail_load[i] + self._inbox_work[i]
+            if best is None or load < best_load - 1e-12:
+                best, best_load = i, load
+        return best
+
+    def _shard_supports(self, i: int, task: Task) -> bool:
+        inner = self._shards[i]
+        if inner.cluster is not None:
+            return inner.cluster.supports(task)
+        return True  # single device: the sync service defers validation too
+
+    def _fast_admit(self, shard: int, task: Task, arrival: float,
+                    deadline: float) -> str:
+        """The O(#nodes) admission gate: greedy completion floor against
+        the shard's committed-work envelope.  Envelope >= exact running-
+        work bound, so an admit here can never contradict a provable
+        exact-check reject; a reject here is load shedding, not proof."""
+        if self.config.admission == "none":
+            return "queued"
+        inner = self._shards[shard]
+        bound = completion_floor(
+            inner._node_candidates(task), self._envelope(shard), arrival
+        )
+        if bound <= deadline + EPS:
+            return "queued"
+        if self.config.admission == "reject":
+            self.scale.fast_rejected.append(task.id)
+            return "rejected"
+        self.scale.fast_demoted.append(task.id)
+        return "demoted"
+
+    def _envelope(self, i: int) -> dict:
+        """Per-cell busy-until envelope over EVERY committed placement of
+        shard ``i`` (running or queued), rebuilt lazily after any inner-
+        state change.  Folding queued placements in is what makes the
+        cache sound between pumps: the inner timeline is frozen except
+        for already-committed begins, all of which the envelope covers."""
+        env = self._envelopes[i]
+        if env is None:
+            inner = self._shards[i]
+            env = {}
+            for seg in inner.mb.segments:
+                if seg.makespan <= inner.now:
+                    continue  # fully drained: cannot constrain the future
+                for it in seg.items:
+                    for cell in it.node.blocked_cells:
+                        if it.end > env.get(cell, 0.0):
+                            env[cell] = it.end
+            self._envelopes[i] = env
+        return env
+
+    def _touch(self, i: int) -> None:
+        self._envelopes[i] = None
+
+    # -- background planning ------------------------------------------------
+    def pump(self, now: float | None = None) -> None:
+        """The background worker's turn: steal across inboxes, forward
+        every inbox into its inner service (planning happens there, off
+        the submit path) and advance the shards to ``now``."""
+        if now is not None:
+            if now < self.now - 1e-9:
+                raise ValueError(
+                    f"time must be non-decreasing: {now} < {self.now}"
+                )
+            self.now = max(self.now, now)
+        self.scale.pumps += 1
+        self.scale.queue_depths.append(
+            (self.now, sum(len(b) for b in self._inbox))
+        )
+        self.scale.steals += self._steal()
+        for i in range(self._k):
+            self._forward(i)
+            inner = self._shards[i]
+            if self.now > inner.now:
+                inner.poll(self.now)
+            self._touch(i)
+            self._tail_load[i] = max(0.0, inner.makespan - self.now)
+
+    def poll(self, now: float) -> None:
+        """Advance virtual time (defer mode: one pump; immediate mode: a
+        transparent forward)."""
+        if now < self.now - 1e-9:
+            raise ValueError(f"time must be non-decreasing: {now} < {self.now}")
+        self.now = max(self.now, now)
+        if self.defer:
+            self.pump(now)
+            return
+        for i in range(self._k):
+            inner = self._shards[i]
+            if now > inner.now:
+                inner.poll(now)
+            self._touch(i)
+
+    def flush(self) -> None:
+        """Force-flush: forward every inbox and flush every shard."""
+        if self.defer:
+            self.pump(self.now)
+        for i in range(self._k):
+            self._shards[i].flush()
+            self._touch(i)
+
+    def drain(self) -> Schedule | list[Schedule]:
+        """Forward everything still queued, then drain every shard (see
+        the module docstring for the one-vs-many return shape)."""
+        if self.defer:
+            self.pump(self.now)
+        out = [s.drain() for s in self._shards]
+        for i in range(self._k):
+            self._touch(i)
+        return out[0] if self._k == 1 else out
+
+    def _forward(self, i: int) -> None:
+        inbox = self._inbox[i]
+        if not inbox:
+            return
+        self._inbox[i] = []
+        self._inbox_work[i] = 0.0
+        inner = self._shards[i]
+        self._touch(i)
+        for task, arrival, deadline in inbox:
+            self._unforwarded.discard(task.id)
+            # a stolen task may carry an arrival this shard's clock has
+            # already passed: it reaches THIS planner at forward time
+            a = arrival if arrival >= inner.now else inner.now
+            if deadline is not None and deadline < a - 1e-9:
+                # the SLO expired while queued: a placement can only
+                # begin at or after the forward decision, so the miss is
+                # already certain — track it, plan best-effort
+                self.scale.expired.append(task.id)
+                deadline = None
+            inner.submit(task, arrival=a, deadline=deadline)
+            self.scale.forwarded += 1
+
+    def _steal(self) -> int:
+        """Deterministic load balancing: migrate queued (never planned)
+        tasks from the heaviest shard's inbox to the lightest supporting
+        shard until their load gap halves.  Newest work moves first —
+        the oldest tasks keep their position near the front of the
+        donor's queue, preserving its budget-flush cadence."""
+        if self._k == 1:
+            return 0
+        moved = 0
+        for _ in range(self._k):
+            loads = [
+                self._tail_load[i] + self._inbox_work[i]
+                for i in range(self._k)
+            ]
+            donor = max(range(self._k), key=lambda i: (loads[i], -i))
+            recv = min(range(self._k), key=lambda i: (loads[i], i))
+            gap = loads[donor] - loads[recv]
+            if donor == recv or len(self._inbox[donor]) < 2 or gap <= 1e-9:
+                break
+            budget = gap / 2.0
+            taken: list[int] = []
+            for idx in range(len(self._inbox[donor]) - 1, -1, -1):
+                task, _, _ = self._inbox[donor][idx]
+                w = _work_estimate(task)
+                if w > budget:
+                    continue
+                if not self._shard_supports(recv, task):
+                    continue
+                taken.append(idx)
+                budget -= w
+            if not taken:
+                break
+            for idx in taken:  # descending: pops stay positional
+                entry = self._inbox[donor].pop(idx)
+                task = entry[0]
+                w = _work_estimate(task)
+                self._inbox_work[donor] -= w
+                self._inbox_work[recv] += w
+                self._inbox[recv].append(entry)
+                self._owner[task.id] = recv
+                moved += 1
+        return moved
+
+    # -- runtime feedback ---------------------------------------------------
+    def report(self, task_id: int, event: str, t: float,
+               end: float | None = None):
+        """Route a runtime report to the owning shard (forwarding its
+        inbox first if the task somehow has not been planned yet)."""
+        shard = self._owner_of(task_id)
+        if task_id in self._unforwarded:
+            self.now = max(self.now, t)
+            self._forward(shard)
+        self._touch(shard)
+        out = self._shards[shard].report(task_id, event, t, end=end)
+        self.now = max(self.now, t)
+        return out
+
+    def _owner_of(self, task_id: int) -> int:
+        shard = self._owner.get(task_id)
+        if shard is None:
+            # backup-attempt ids and other service-minted ids belong to
+            # whichever shard committed them
+            for i in range(self._k):
+                if self._shards[i].committed_item(task_id) is not None:
+                    return i
+            raise KeyError(f"task {task_id} was never submitted here")
+        return shard
+
+    def quarantine(self, device, t: float) -> list[int]:
+        """Pool-global device loss: accepts an index, a DeviceSpec or a
+        failure-domain sequence, splits it per shard and quarantines each
+        member on its owner.  Returns the merged running-attempt ids."""
+        running: list[int] = []
+        for shard, local in self._locate(device):
+            self._touch(shard)
+            running.extend(self._shards[shard].quarantine(local, t))
+        self.now = max(self.now, t)
+        return running
+
+    def recover(self, device, t: float) -> None:
+        for shard, local in self._locate(device):
+            self._touch(shard)
+            self._shards[shard].recover(local, t)
+        self.now = max(self.now, t)
+
+    def _locate(self, device) -> list[tuple[int, int]]:
+        """(shard, local device index) for a pool-global device argument;
+        domain sequences map member-wise, grouped per shard so correlated
+        members of one shard go down in a single call."""
+        if isinstance(device, (list, tuple)):
+            members = [self._global_index(d) for d in device]
+        else:
+            members = [self._global_index(device)]
+        if self._k == 1:
+            return [(0, g) for g in members]
+        grouped: dict[int, list[int]] = {}
+        for g in members:
+            grouped.setdefault(g % self._k, []).append(g // self._k)
+        out: list[tuple[int, object]] = []
+        for shard in sorted(grouped):
+            locals_ = grouped[shard]
+            out.append((shard, locals_ if len(locals_) > 1 else locals_[0]))
+        return out  # type: ignore[return-value]
+
+    def _global_index(self, device) -> int:
+        if isinstance(device, int):
+            return device
+        if not isinstance(self.pool, ClusterSpec):
+            raise ValueError("device arguments need a ClusterSpec pool")
+        for i, dev in enumerate(self.pool.devices):
+            if dev is device:
+                return i
+        raise ValueError(f"device {device!r} is not in pool {self.pool.name!r}")
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def cluster(self) -> ClusterSpec | None:
+        return self.pool if isinstance(self.pool, ClusterSpec) else None
+
+    @property
+    def mb(self):
+        """One-shard compatibility hook (``assert_fault_invariants`` and
+        the closed-loop harness read ``svc.mb``)."""
+        if self._k != 1:
+            raise AttributeError(
+                "mb is per-shard on a multi-shard service; use "
+                "shard_services"
+            )
+        return self._shards[0].mb
+
+    @property
+    def pending(self) -> list:
+        out: list = []
+        for i in range(self._k):
+            out.extend(self._inbox[i])
+            out.extend(self._shards[i].pending)
+        return out
+
+    @property
+    def completions(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        for s in self._shards:
+            out.update(s.completions)
+        return out
+
+    @property
+    def stats(self) -> ServiceStats:
+        """One shard: the inner stats object itself (differential tests
+        compare it field-for-field).  Many shards: a merged snapshot —
+        counters summed, event lists concatenated in (decided_at, task)
+        order."""
+        if self._k == 1:
+            return self._shards[0].stats
+        merged = ServiceStats()
+        for s in self._shards:
+            st = s.stats
+            merged.submitted += st.submitted
+            merged.batches += st.batches
+            merged.online_placements += st.online_placements
+            merged.replan_attempts += st.replan_attempts
+            merged.replan_wins += st.replan_wins
+            merged.withdrawn += st.withdrawn
+            merged.completed += st.completed
+            merged.stragglers += st.stragglers
+            merged.decisions.extend(st.decisions)
+            merged.rejected.extend(st.rejected)
+            merged.demoted.extend(st.demoted)
+            merged.replan_events.extend(st.replan_events)
+            merged.failed.extend(st.failed)
+            merged.corrections.extend(st.corrections)
+            merged.retries.extend(st.retries)
+            merged.outages.extend(st.outages)
+            merged.speculations.extend(st.speculations)
+            merged.checkpoints.extend(st.checkpoints)
+        merged.rejected.extend(self.scale.fast_rejected)
+        merged.demoted.extend(self.scale.fast_demoted)
+        merged.decisions.sort(key=lambda d: (d.decided_at, d.task_id))
+        return merged
+
+    def committed_items(self) -> list:
+        out: list = []
+        for s in self._shards:
+            out.extend(s.committed_items())
+        return out
+
+    def committed_item(self, task_id: int):
+        for s in self._shards:
+            it = s.committed_item(task_id)
+            if it is not None:
+                return it
+        return None
+
+    def true_duration(self, item) -> float:
+        shard = self._owner_of(item.task.id)
+        return self._shards[shard].true_duration(item)
+
+    def next_wakeup(self) -> float | None:
+        cands = [
+            w for w in (s.next_wakeup() for s in self._shards)
+            if w is not None
+        ]
+        for box in self._inbox:
+            if box:
+                cands.append(box[0][1] + self.config.max_wait_s)
+        return min(cands) if cands else None
+
+    @property
+    def makespan(self) -> float:
+        return max((s.makespan for s in self._shards), default=0.0)
+
+    def combined_schedule(self) -> Schedule:
+        if self._k != 1:
+            raise ValueError(
+                "a multi-shard service has one timeline per shard; use "
+                "shard_schedules()"
+            )
+        return self._shards[0].combined_schedule()
+
+    def shard_schedules(self) -> list[Schedule]:
+        return [s.combined_schedule() for s in self._shards]
+
+    def deadline_report(self) -> dict:
+        """The inner services' reports merged with the fast-gate verdicts
+        (gate-rejected tasks never reach a shard; inbox-expired deadlines
+        are certain misses by construction — see ``_forward``)."""
+        if self._k == 1 and not self.defer:
+            return self._shards[0].deadline_report()
+        reports = [s.deadline_report() for s in self._shards]
+        tracked = sum(r["tracked"] for r in reports) + len(self.scale.expired)
+        missed = sorted(
+            {tid for r in reports for tid in r["missed"]}
+            | set(self.scale.expired)
+        )
+        return {
+            "tracked": tracked,
+            "missed": missed,
+            "miss_rate": len(missed) / tracked if tracked else 0.0,
+            "rejected": sorted(
+                {tid for r in reports for tid in r["rejected"]}
+                | set(self.scale.fast_rejected)
+            ),
+            "demoted": sorted(
+                {tid for r in reports for tid in r["demoted"]}
+                | set(self.scale.fast_demoted)
+            ),
+            "failed": sorted({tid for r in reports for tid in r["failed"]}),
+        }

@@ -71,11 +71,41 @@ def assert_valid_schedule(schedule, spec, *, tasks=None, floors=None) -> None:
       schedule: a :class:`repro.core.problem.Schedule`.
       spec: the :class:`repro.core.device_spec.DeviceSpec` it must obey
         (checked against ``spec``, not ``schedule.spec`` — a schedule
-        smuggling foreign nodes must fail).
+        smuggling foreign nodes must fail).  A
+        :class:`~repro.core.cluster.ClusterSpec` is accepted too: items
+        are split by owning device (via ``tree_device``) and each
+        device's slice is checked under its own spec, with the
+        exactly-once and batch-coverage checks applied pool-wide.
       tasks: optional batch; when given, scheduled ids must match it.
       floors: optional ``{task_id: time}`` causal floors (flush decision
         times in the serving model).
     """
+    if hasattr(spec, "devices"):  # ClusterSpec: per-device + pool-wide
+        tree_dev = spec.tree_device
+        groups: dict[int, list] = {}
+        for it in schedule.items:
+            dev = tree_dev.get(it.node.tree)
+            if dev is None:
+                _fail(f"task {it.task.id} placed on tree {it.node.tree}, "
+                      f"owned by no device of pool {spec.name}")
+            groups.setdefault(dev, []).append(it)
+        seen_pool: dict[int, object] = {}
+        for dev_idx in sorted(groups):
+            items = groups[dev_idx]
+            sub = type("_Items", (), {"items": items})()
+            assert_valid_schedule(sub, spec.devices[dev_idx], floors=floors)
+            for it in items:
+                if not _is_failed(it):
+                    if it.task.id in seen_pool:
+                        _fail(f"task {it.task.id} scheduled on two devices "
+                              f"of pool {spec.name}")
+                    seen_pool[it.task.id] = it
+        if tasks is not None:
+            want = sorted(t.id for t in tasks)
+            got = sorted(seen_pool)
+            if want != got:
+                _fail(f"scheduled ids {got} != batch ids {want}")
+        return
     node_index = spec.node_index
 
     # 1 + 5a: membership, molding, duration honesty, single placement
@@ -175,6 +205,31 @@ def service_floors(svc) -> dict[int, float]:
         if d.task_id not in floors:
             floors[d.task_id] = d.decided_at
     return floors
+
+
+def shard_floors(sharded) -> list[dict[int, float]]:
+    """Causal floors for a
+    :class:`~repro.core.sharded.ShardedSchedulingService`, one dict per
+    shard: each task's fast-path submit stamp folded under the owning
+    shard's flush decision floors.  The sharded fast path admits and
+    queues without planning, so the *submit* stamp is the earliest
+    instant the system knew of the task — nothing may begin before it,
+    and the inner flush decision (always >= the stamp after inbox
+    forwarding) only tightens the floor.  Feed each dict to
+    ``assert_valid_schedule(floors=...)`` against the matching entry of
+    ``sharded.shard_schedules()``."""
+    stamps = sharded.admission_stamps()
+    out: list[dict[int, float]] = []
+    for inner in sharded.shard_services:
+        floors = service_floors(inner)
+        for tid, stamp in stamps.items():
+            if tid in floors and floors[tid] < stamp - EPS:
+                _fail(f"task {tid}'s flush decision at {floors[tid]} "
+                      f"precedes its sharded submit stamp {stamp}")
+            if tid in floors:
+                floors[tid] = max(floors[tid], stamp)
+        out.append(floors)
+    return out
 
 
 def assert_fault_invariants(svc) -> None:
@@ -290,4 +345,5 @@ __all__ = [
     "assert_valid_schedule",
     "assert_fault_invariants",
     "service_floors",
+    "shard_floors",
 ]

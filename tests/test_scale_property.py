@@ -1,0 +1,136 @@
+"""Hypothesis property tests for the sharded fast admission path.
+
+Generative counterparts of the deterministic loops in
+``tests/test_scale.py`` — random streams, random pump cadence, random
+shard counts:
+
+1. **envelope dominance / admission soundness** — at every submit
+   instant the fast path's committed-work envelope bound is >= the
+   owning shard's exact running-work lower bound, so the fast gate never
+   admits a task the exact completion-bound check would provably reject;
+2. **causality** — no placement ever begins before the fast-path submit
+   decision that accepted it (planning is deferred, the stamp is not);
+3. **quiescence** — draining after an arbitrary submit/pump interleaving
+   yields per-shard schedules that pass the independent feasibility
+   checker, with every admitted task placed exactly once pool-wide.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from invariants import assert_valid_schedule, shard_floors
+from repro.core import SchedulerConfig, Task, cluster
+from repro.core.device_spec import A30, A100
+from repro.core.online import completion_floor
+from repro.core.sharded import ShardedSchedulingService
+
+EPS = 1e-9
+POOL = cluster(A100, A30, A30, A100)
+
+
+@st.composite
+def sharded_streams(draw, max_tasks=14):
+    """A random stream over the 4-device pool: per-task monotone-in-size
+    profiles on the sizes A100 and A30 share, bursty-or-sparse gaps,
+    optional deadlines, plus a shard count and a random pump schedule."""
+    n = draw(st.integers(4, max_tasks))
+    sizes = sorted(set(A100.sizes) & set(A30.sizes))
+    tasks, arrivals, deadlines = [], [], {}
+    now = 0.0
+    for i in range(n):
+        t1 = draw(st.floats(0.5, 40.0, allow_nan=False))
+        times, cur = {}, t1
+        for s in sizes:
+            if s != sizes[0]:
+                cur = cur * draw(st.floats(0.3, 1.0))
+            times[s] = cur
+        tasks.append(Task(id=i, times=times))
+        now += draw(st.sampled_from([0.0, 0.2, 1.0, 5.0, 40.0]))
+        arrivals.append(now)
+        slack = draw(st.sampled_from([None, 0.5, 3.0, 50.0, 1e6]))
+        if slack is not None:
+            deadlines[i] = now + slack
+    shards = draw(st.sampled_from([1, 2, 4]))
+    budget = draw(st.sampled_from([1.0, 4.0, 15.0]))
+    max_batch = draw(st.sampled_from([3, 6, 32]))
+    pump_after = draw(st.sets(st.integers(0, n - 1)))
+    return tasks, arrivals, deadlines, shards, budget, max_batch, pump_after
+
+
+def _service(stream, admission):
+    tasks, arrivals, deadlines, shards, budget, max_batch, _ = stream
+    return ShardedSchedulingService(
+        POOL, shards=shards, policy="far",
+        config=SchedulerConfig(max_wait_s=budget, max_batch=max_batch,
+                               admission=admission),
+        defer=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sharded_streams())
+def test_fast_gate_never_contradicts_exact_check(stream):
+    tasks, arrivals, deadlines, shards, budget, max_batch, pumps = stream
+    sh = _service(stream, admission="reject")
+    for i, (t, a) in enumerate(zip(tasks, arrivals)):
+        sh.now = max(sh.now, a)
+        shard = sh._select_shard(t)
+        if shard is not None:
+            inner = sh.shard_services[shard]
+            fast = completion_floor(
+                inner._node_candidates(t), sh._envelope(shard), a)
+            exact = inner.completion_lower_bound(t, a)
+            # dominance: the envelope bound can only be the stricter one
+            assert fast >= exact - EPS
+            dl = deadlines.get(t.id)
+            if dl is not None and fast <= dl + EPS:
+                # the gate admits -> the exact check must admit too
+                assert exact <= dl + EPS
+        sh.submit(t, arrival=a, deadline=deadlines.get(t.id))
+        if i in pumps:
+            sh.pump(a)
+    sh.drain()
+
+
+@settings(max_examples=25, deadline=None)
+@given(sharded_streams())
+def test_no_placement_before_submit_decision(stream):
+    tasks, arrivals, deadlines, shards, budget, max_batch, pumps = stream
+    sh = _service(stream, admission="none")
+    for i, (t, a) in enumerate(zip(tasks, arrivals)):
+        sh.submit(t, arrival=a, deadline=deadlines.get(t.id))
+        if i in pumps:
+            sh.pump(a)
+    sh.drain()
+    floors = shard_floors(sh)
+    for inner, schedule, fl in zip(
+            sh.shard_services, sh.shard_schedules(), floors):
+        assert_valid_schedule(schedule, inner.spec, floors=fl)
+    stamps = sh.admission_stamps()
+    for schedule in sh.shard_schedules():
+        for it in schedule.items:
+            assert it.begin >= stamps[it.task.id] - EPS
+
+
+@settings(max_examples=25, deadline=None)
+@given(sharded_streams())
+def test_quiescing_yields_valid_covering_schedules(stream):
+    tasks, arrivals, deadlines, shards, budget, max_batch, pumps = stream
+    sh = _service(stream, admission="reject")
+    for i, (t, a) in enumerate(zip(tasks, arrivals)):
+        sh.submit(t, arrival=a, deadline=deadlines.get(t.id))
+        if i in pumps:
+            sh.pump(a)
+    sh.drain()
+    placed = {}
+    for inner, schedule in zip(sh.shard_services, sh.shard_schedules()):
+        assert_valid_schedule(schedule, inner.spec)
+        for it in schedule.items:
+            assert it.task.id not in placed
+            placed[it.task.id] = it
+    rejected = set(sh.deadline_report()["rejected"])
+    assert set(placed) == {t.id for t in tasks} - rejected
+    assert not sh.pending
