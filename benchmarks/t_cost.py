@@ -8,17 +8,20 @@ and a jax array-program family evaluator (core/family_eval.py) selectable
 via ``SchedulerConfig(evaluator=...)``.
 
 Besides the printed table, the run emits ``BENCH_sched_cost.json`` in the
-repo root: per batch size and per evaluator (sequential / vectorized),
-p50/p95 scheduler latency with per-phase breakdown (family / evaluate /
-refine), the *paired* evaluate-phase speedup of the vectorized evaluator
-(both sides of every ratio measured back-to-back — the container wall
-clock drifts far too much for independent medians), and the same paired
-comparison for the unpruned full-family regime where the array program
-does its real work.
+repo root: per batch size and per evaluator (sequential / incremental /
+vectorized), p50/p95 scheduler latency with per-phase breakdown (family /
+evaluate / refine), *paired* evaluate-phase speedups (both sides of every
+ratio measured back-to-back — the container wall clock drifts far too
+much for independent medians), and a dedicated ``phase2_sweep`` section:
+n in {500, 1000, 2000} x {pruned, full-family} paired speedups of every
+evaluator against sequential.  CI's bench-smoke gates on that sweep
+(incremental >= 2x sequential at n=1000 pruned; the recorded number on
+the reference box is ~4x).
 
 CLI: ``PYTHONPATH=src python -m benchmarks.t_cost [--quick] [--reps N]``
-— ``--quick`` restricts to n <= 200 with few reps (the CI bench-smoke
-step).
+— ``--quick`` restricts the latency table to n <= 200 with few reps and
+trims the sweep reps (the CI bench-smoke step still runs the full sweep
+sizes, the speedup gate needs n=1000).
 """
 
 import argparse
@@ -39,7 +42,8 @@ from benchmarks.common import Rows
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_sched_cost.json")
 
-EVALUATORS = ("sequential", "vectorized")
+EVALUATORS = ("sequential", "incremental", "vectorized")
+SWEEP_SIZES = (500, 1000, 2000)
 
 
 def _timed_runs(tasks, reps: int, config: SchedulerConfig):
@@ -58,30 +62,55 @@ def _timed_runs(tasks, reps: int, config: SchedulerConfig):
     return np.asarray(times) * 1e3, med_phase, res
 
 
-def _paired_evaluate_speedup(tasks, reps: int, **config_kwargs):
-    """Median of per-pair evaluate-phase ratios, sequential/vectorized.
+def _paired_evaluate_speedups(tasks, reps: int, evaluators=EVALUATORS,
+                              **config_kwargs):
+    """Median per-pair evaluate-phase ratios of every evaluator against
+    sequential.
 
-    The two configs run in strict alternation so both sides of every
-    ratio see the same machine state (the container clock drifts ±30%+).
+    All configs run in strict alternation so both sides of every ratio
+    see the same machine state (the container clock drifts ±30%+).
+    Returns ``({evaluator: speedup}, {evaluator: median_ms})``.
     """
     cfgs = {
         ev: SchedulerConfig(evaluator=ev, **config_kwargs)
-        for ev in EVALUATORS
+        for ev in evaluators
     }
     for cfg in cfgs.values():
         schedule_batch(tasks, A100, cfg)
-    ratios, med = [], {ev: [] for ev in EVALUATORS}
+    med = {ev: [] for ev in evaluators}
+    ratios = {ev: [] for ev in evaluators if ev != "sequential"}
     for _ in range(reps):
         step = {}
         for ev, cfg in cfgs.items():
             res = schedule_batch(tasks, A100, cfg)
             step[ev] = res.phase_s["evaluate"] * 1e3
             med[ev].append(step[ev])
-        ratios.append(step["sequential"] / step["vectorized"])
+        for ev in ratios:
+            ratios[ev].append(step["sequential"] / step[ev])
     return (
-        float(np.median(ratios)),
+        {ev: float(np.median(v)) for ev, v in ratios.items()},
         {ev: float(np.median(v)) for ev, v in med.items()},
     )
+
+
+def _phase2_sweep(reps: int) -> list:
+    """The per-evaluator phase-2 sweep CI's speedup gate reads: paired
+    evaluate-phase medians and ratios over n x {pruned, full-family}."""
+    cfg = workload("mixed", "wide", A100)
+    out = []
+    for n in SWEEP_SIZES:
+        ts = generate_tasks(n, A100, cfg, seed=0)
+        for prune in (True, False):
+            speedups, med = _paired_evaluate_speedups(
+                ts, reps, prune=prune, refine=False
+            )
+            out.append({
+                "n": n,
+                "prune": prune,
+                "evaluate_median_ms": med,
+                "paired_speedup_vs_sequential": speedups,
+            })
+    return out
 
 
 def run(reps: int = 5, quick: bool = False) -> Rows:
@@ -117,14 +146,14 @@ def run(reps: int = 5, quick: bool = False) -> Rows:
             }
             rows.add(n, ev, p50, p95, med_phase["evaluate"],
                      f"{res.evaluated}/{res.family_size}", paper[n])
-        speedup, eval_med = _paired_evaluate_speedup(ts, reps)
+        speedups, eval_med = _paired_evaluate_speedups(ts, reps)
         entry = {"n": n, "evaluators": per_eval,
-                 "evaluate_paired_speedup_vec_vs_seq": speedup,
+                 "evaluate_paired_speedup_vs_seq": speedups,
                  "evaluate_paired_median_ms": eval_med}
         if not quick:
             # the unpruned full-family regime (policy sweeps / research
-            # runs score every candidate) is where the array program wins
-            fspeed, fmed = _paired_evaluate_speedup(
+            # runs score every candidate) scores every single candidate
+            fspeed, fmed = _paired_evaluate_speedups(
                 ts, max(3, reps // 2), prune=False, refine=False)
             entry["full_family_evaluate_paired_speedup"] = fspeed
             entry["full_family_evaluate_paired_median_ms"] = fmed
@@ -173,16 +202,23 @@ def run(reps: int = 5, quick: bool = False) -> Rows:
         for count, n in (((2, 24), (4, 48)) if quick else ((2, 48), (4, 96)))
     ]
 
+    # the per-evaluator phase-2 sweep (n x prune grid) CI's paired
+    # speedup gate asserts against — incremental >= 2x sequential at
+    # n=1000 pruned
+    report["phase2_sweep"] = _phase2_sweep(max(3, reps if not quick else 3))
+
     report["note"] = (
         "evaluator entries are bit-identical in output (enforced by "
-        "tests/test_family_eval.py); the vectorized evaluator amortizes a "
-        "fixed per-step array-program cost across the scored candidates, "
-        "so it pays off where many candidates are scored (unpruned "
-        "full-family runs, very large pruned batches) while the default "
-        "admissible prune keeps small/medium batches on the sequential "
-        "path via evaluator='auto'.  The replay path (use_engine=False) "
-        "includes PR 1's replay micro-optimisations, so that ratio "
-        "understates the speedup over the true pre-change code."
+        "tests/test_family_eval.py); the incremental evaluator replays "
+        "only the post-divergence suffix of each candidate in a compiled "
+        "delta engine, so it wins across the board once candidates are "
+        "expensive enough (n>=~256) and is auto's first choice; the "
+        "vectorized evaluator amortizes a fixed per-step array-program "
+        "cost across the scored candidates, so it pays off where many "
+        "candidates are scored and no C compiler is available.  The "
+        "replay path (use_engine=False) includes PR 1's replay "
+        "micro-optimisations, so that ratio understates the speedup over "
+        "the true pre-change code."
     )
     with open(JSON_PATH, "w") as fh:
         json.dump(report, fh, indent=2)

@@ -1,0 +1,425 @@
+/* Algorithm 1's heap phase as a compiled, resumable state machine.
+ *
+ * A bit-exact replica of `_list_schedule_arrays` in repartition.py,
+ * restricted to what the incremental phase-2 evaluator needs: the visit
+ * trace (node, slice start, slice end) and the end-of-run state.  Every
+ * floating-point operation (`reconfig_end` maxing, `end += dur` chain
+ * additions) is the same IEEE double op in the same order as the Python
+ * loop, and the heap tie-break is the lexicographic (end, seq) order the
+ * Python tuples give, so the emitted visit trace is identical pop for
+ * pop.  Compiled with -ffp-contract=off so no FMA contraction can change
+ * a rounding (see fastsim.py, which owns the build line).
+ *
+ * The state (cursors, created flags, heap, counters) lives in
+ * caller-owned arrays so the caller can snapshot it mid-run with plain
+ * memcpy and resume from a snapshot later — that is the delta-replay
+ * mechanism.  `fastsim_run` takes a *trigger* derived from the next
+ * family candidate's one-task delta (the LPT ranks the moved task
+ * leaves and enters): while the live trajectory is still a shared
+ * prefix of the next candidate's, the state is copied into the snapshot
+ * buffers before every visit that could cross the divergence point, and
+ * the snapshot freezes on the visit that actually crosses.  Evaluating
+ * candidate i+1 then means: restore the snapshot, swap in the patched
+ * duration rows, and run to completion.
+ *
+ * Divergence rules (sizes are size-axis indices, ranks are positions in
+ * the *current* candidate's LPT rows; the delta removes the moved task
+ * at `rank_a` of row `size_a` and inserts it at `rank_b` of `size_b`):
+ *   - a prefix visit only placing row slots < rank_a of size_a and
+ *     < rank_b of size_b is identical under both candidates (removal /
+ *     insertion shifts only the slots at or past the rank);
+ *   - so a placement visit of size_a entering with cursor <= rank_a (or
+ *     size_b with cursor <= rank_b) *may* cross: snapshot before it,
+ *     and freeze once its placed range actually covers the rank;
+ *   - when rank_b equals the size_b row length (tail append), no
+ *     size_b placement covers it — the first *non-placement* visit of a
+ *     size_b node is where the trajectories part (the next candidate
+ *     places there); `trig_visit_b` arms that case.
+ */
+
+#include <math.h>
+#include <string.h>
+
+typedef struct {
+    double end;
+    long long seq;
+    int nidx;
+    int pad;
+} Ent;
+
+/* strict lexicographic (end, seq) — seqs are unique, so this is total */
+static int ent_lt(const Ent *a, const Ent *b)
+{
+    if (a->end != b->end)
+        return a->end < b->end;
+    return a->seq < b->seq;
+}
+
+static void heap_swap(Ent *h, int i, int j)
+{
+    Ent t = h[i];
+    h[i] = h[j];
+    h[j] = t;
+}
+
+static void sift_down(Ent *h, int n, int i)
+{
+    for (;;) {
+        int l = 2 * i + 1, r = l + 1, m = i;
+        if (l < n && ent_lt(&h[l], &h[m])) m = l;
+        if (r < n && ent_lt(&h[r], &h[m])) m = r;
+        if (m == i) return;
+        heap_swap(h, i, m);
+        i = m;
+    }
+}
+
+static void sift_up(Ent *h, int i)
+{
+    while (i > 0) {
+        int p = (i - 1) / 2;
+        if (!ent_lt(&h[i], &h[p])) return;
+        heap_swap(h, i, p);
+        i = p;
+    }
+}
+
+/* Resumable simulation state, caller-owned flat arrays:
+ *   cursor   int32[S]       per-size-index group cursor
+ *   created  int8[N]        node has a chain already (charged creation)
+ *   exh      int8[S]        a node of this size ever popped with its row
+ *                           exhausted (the caller's start-validity check
+ *                           needs this to rule out prefix divergence on
+ *                           tail-append deltas)
+ *   heap     Ent[N]         live heap entries (count in *heap_len)
+ *   scalars  double[1]      reconfig_end
+ *   counters int64[3]       {seq, remaining, visit_count}
+ *
+ * Spec context (constant across a family):
+ *   ns       int32[N]       size index of node n
+ *   tc, td   double[S]      creation / destruction charges per size index
+ *   ch_off   int32[N+1]     CSR offsets into ch_idx
+ *   ch_idx   int32[...]     children node indices, in spec order
+ *
+ * Candidate data:
+ *   gdurs    double[S*lmax] per-size LPT duration rows (row stride lmax)
+ *   glens    int32[S]       row lengths
+ *
+ * Trigger (-1 sizes disarm):  see the divergence rules above.
+ *
+ * Snapshot out: mirrors of the state arrays plus
+ *   snap_flags int32[2]     {snapshot recorded, snapshot frozen}
+ *
+ * Visits out (appended from counters[2], which is updated):
+ *   v_node, v_start, v_end  int32[max_visits]
+ *
+ * Returns 0 on completion, -1 if max_visits would overflow.
+ */
+int fastsim_run(
+    /* state (in/out) */
+    int *cursor, signed char *created, signed char *exh,
+    Ent *heap, int *heap_len,
+    double *scalars, long long *counters,
+    /* spec context */
+    int n_nodes, int n_sizes,
+    const int *ns, const double *tc, const double *td,
+    const int *ch_off, const int *ch_idx,
+    /* candidate data */
+    const double *gdurs, const int *glens, int lmax,
+    /* trigger */
+    int trig_size_a, int trig_rank_a,
+    int trig_size_b, int trig_rank_b, int trig_visit_b,
+    /* snapshot out */
+    int *s_cursor, signed char *s_created, signed char *s_exh,
+    Ent *s_heap, int *s_heap_len,
+    double *s_scalars, long long *s_counters, int *snap_flags,
+    /* visits out */
+    int *v_node, int *v_start, int *v_end, long long max_visits)
+{
+    double reconfig_end = scalars[0];
+    long long seq = counters[0];
+    long long remaining = counters[1];
+    long long nv = counters[2];
+    int hlen = *heap_len;
+    int frozen = snap_flags[1];
+
+#define TAKE_SNAPSHOT() do { \
+        memcpy(s_cursor, cursor, sizeof(int) * n_sizes); \
+        memcpy(s_created, created, sizeof(signed char) * n_nodes); \
+        memcpy(s_exh, exh, sizeof(signed char) * n_sizes); \
+        memcpy(s_heap, heap, sizeof(Ent) * hlen); \
+        *s_heap_len = hlen; \
+        s_scalars[0] = reconfig_end; \
+        s_counters[0] = seq; \
+        s_counters[1] = remaining; \
+        s_counters[2] = nv; \
+        snap_flags[0] = 1; \
+    } while (0)
+
+    while (hlen > 0) {
+        Ent top = heap[0];
+        double end = top.end;
+        int nidx = top.nidx;
+        int si = ns[nidx];
+        int cur = cursor[si];
+        int n_grp = glens[si];
+        if (cur < n_grp) {
+            /* placement visit — snapshot before mutating anything when
+             * this visit could cross the divergence point (overwritten
+             * by later candidates until the crossing freezes it) */
+            int qual_a = si == trig_size_a && cur <= trig_rank_a;
+            int qual_b = si == trig_size_b && cur <= trig_rank_b;
+            if (!frozen && (qual_a || qual_b))
+                TAKE_SNAPSHOT();
+            if (!created[nidx]) {
+                if (end > reconfig_end)
+                    reconfig_end = end;
+                reconfig_end += tc[si];
+                end = reconfig_end;
+                created[nidx] = 1;
+            }
+            /* back-to-back run while strictly earliest (repartition.py's
+             * runs-with-shortcut loop): `nxt` = min end among the other
+             * heap entries = min over the root's two children */
+            double nxt;
+            if (hlen > 2) {
+                double t1 = heap[1].end, t2 = heap[2].end;
+                nxt = t2 < t1 ? t2 : t1;
+            } else if (hlen == 2) {
+                nxt = heap[1].end;
+            } else {
+                nxt = INFINITY;
+            }
+            const double *gd = gdurs + (size_t)si * (size_t)lmax;
+            int start = cur;
+            for (;;) {
+                end += gd[cur];
+                cur += 1;
+                if (cur >= n_grp || end >= nxt)
+                    break;
+            }
+            cursor[si] = cur;
+            /* freeze on the crossing visit; a tail-append delta also
+             * freezes when a qualifying visit exhausts the row — under
+             * the patched row the run would continue into the appended
+             * slot, so divergence can sit inside this very visit */
+            if ((qual_a && cur > trig_rank_a) ||
+                (qual_b && (cur > trig_rank_b ||
+                            (trig_visit_b && cur >= n_grp))))
+                frozen = 1;
+            if (nv >= max_visits)
+                return -1;
+            v_node[nv] = nidx;
+            v_start[nv] = start;
+            v_end[nv] = cur;
+            nv += 1;
+            remaining -= cur - start;
+            if (remaining == 0)
+                break;  /* drain pops place nothing: early stop */
+            heap[0].end = end;
+            heap[0].seq = seq;
+            seq += 1;
+            sift_down(heap, hlen, 0);
+        } else if (remaining > 0) {
+            if (trig_visit_b && !frozen && si == trig_size_b) {
+                /* tail-append delta: this pop repartitions/retires under
+                 * the current rows but would place under the patched
+                 * ones — the shared prefix ends exactly here */
+                TAKE_SNAPSHOT();
+                frozen = 1;
+            }
+            exh[si] = 1;
+            if (created[nidx]) {
+                if (end > reconfig_end)
+                    reconfig_end = end;
+                reconfig_end += td[si];
+            }
+            int c0 = ch_off[nidx], c1 = ch_off[nidx + 1];
+            if (c1 > c0) {
+                heap[0].end = end;
+                heap[0].seq = seq;
+                heap[0].nidx = ch_idx[c0];
+                seq += 1;
+                sift_down(heap, hlen, 0);
+                for (int c = c0 + 1; c < c1; c++) {
+                    heap[hlen].end = end;
+                    heap[hlen].seq = seq;
+                    heap[hlen].nidx = ch_idx[c];
+                    seq += 1;
+                    hlen += 1;
+                    sift_up(heap, hlen - 1);
+                }
+            } else {
+                heap[0] = heap[hlen - 1];
+                hlen -= 1;
+                if (hlen > 0)
+                    sift_down(heap, hlen, 0);
+            }
+        } else {
+            break;  /* every task placed: remaining pops only retire */
+        }
+    }
+
+#undef TAKE_SNAPSHOT
+    scalars[0] = reconfig_end;
+    counters[0] = seq;
+    counters[1] = remaining;
+    counters[2] = nv;
+    *heap_len = hlen;
+    snap_flags[1] = frozen;
+    return 0;
+}
+
+/* ------------------------------------------------------------------ */
+/* `chains_makespan` (timing.py) as a compiled scorer over the visit
+ * trace `fastsim_run` emits.  Same event heap — (when, seq) is a total
+ * order because seqs are unique, so any correct binary heap pops in
+ * exactly the order Python's heapq does on the (when, seq, what, node)
+ * tuples — and the chain fold `sum(node_durs[key], r)` is the same
+ * left-to-right double additions over the same row values (the rows
+ * back both the Python duration lists and `gdurs`).  One call per
+ * candidate replaces the O(n)-visit Python chain rebuild that would
+ * otherwise dominate the delta-replay path. */
+
+typedef struct {
+    double when;
+    long long seq;
+    int what;   /* 0 = visit, 1 = done */
+    int nidx;
+} Evt;
+
+static int evt_lt(const Evt *a, const Evt *b)
+{
+    if (a->when != b->when)
+        return a->when < b->when;
+    return a->seq < b->seq;
+}
+
+static void evt_sift_down(Evt *h, int n, int i)
+{
+    for (;;) {
+        int l = 2 * i + 1, r = l + 1, m = i;
+        if (l < n && evt_lt(&h[l], &h[m])) m = l;
+        if (r < n && evt_lt(&h[r], &h[m])) m = r;
+        if (m == i) return;
+        Evt t = h[i]; h[i] = h[m]; h[m] = t;
+        i = m;
+    }
+}
+
+static void evt_push(Evt *h, int *n, Evt e)
+{
+    int i = (*n)++;
+    h[i] = e;
+    while (i > 0) {
+        int p = (i - 1) / 2;
+        if (!evt_lt(&h[i], &h[p])) return;
+        Evt t = h[i]; h[i] = h[p]; h[p] = t;
+        i = p;
+    }
+}
+
+/* Scratch (caller-owned): act/sub_act int8[N]; head/tail int32[N];
+ * nxt int32[>=nv] (per-node visit chains); heap Evt[N] (each node is in
+ * the event heap at most once); rc_end double[n_trees or 1].  Returns
+ * the makespan. */
+double fastsim_score(
+    int n_nodes, int n_sizes,
+    const int *ns, const int *tree, int per_tree, int n_trees,
+    const double *tc, const double *td,
+    const int *ch_off, const int *ch_idx,
+    const int *roots, int n_roots,
+    const double *gdurs, int lmax,
+    const int *v_node, const int *v_start, const int *v_end, long long nv,
+    signed char *act, signed char *sub_act,
+    int *head, int *tail, int *nxt,
+    Evt *heap, double *rc_end)
+{
+    (void)n_sizes;
+    if (nv == 0)
+        return 0.0;
+    memset(act, 0, (size_t)n_nodes);
+    for (int i = 0; i < n_nodes; i++)
+        head[i] = -1;
+    for (long long v = 0; v < nv; v++) {
+        int nidx = v_node[v];
+        act[nidx] = 1;  /* every visit places >= 1 slot */
+        if (head[nidx] < 0)
+            head[nidx] = (int)v;
+        else
+            nxt[tail[nidx]] = (int)v;
+        tail[nidx] = (int)v;
+        nxt[v] = -1;
+    }
+    /* children follow parents in spec.nodes order, so a reverse sweep
+     * sees every child's sub_act before its parent's */
+    for (int i = n_nodes - 1; i >= 0; i--) {
+        int sub = act[i];
+        for (int c = ch_off[i]; !sub && c < ch_off[i + 1]; c++)
+            sub = sub_act[ch_idx[c]];
+        sub_act[i] = (signed char)sub;
+    }
+    for (int t = 0; t < (per_tree ? n_trees : 1); t++)
+        rc_end[t] = 0.0;
+    int hlen = 0;
+    long long seq = 0;
+    double makespan = 0.0;
+    for (int r = 0; r < n_roots; r++)
+        if (sub_act[roots[r]]) {
+            Evt e = {0.0, seq++, 0, roots[r]};
+            evt_push(heap, &hlen, e);
+        }
+    while (hlen > 0) {
+        Evt top = heap[0];
+        heap[0] = heap[--hlen];
+        if (hlen > 0)
+            evt_sift_down(heap, hlen, 0);
+        int nidx = top.nidx;
+        int g = per_tree ? tree[nidx] : 0;
+        if (top.what == 0) {
+            Evt e;
+            if (act[nidx]) {
+                double r = rc_end[g];
+                if (top.when > r)
+                    r = top.when;
+                r += tc[ns[nidx]];
+                rc_end[g] = r;
+                double t = r;
+                const double *gd = gdurs + (size_t)ns[nidx] * (size_t)lmax;
+                for (int v = head[nidx]; v >= 0; v = nxt[v])
+                    for (int k = v_start[v]; k < v_end[v]; k++)
+                        t += gd[k];
+                if (t > makespan)
+                    makespan = t;
+                e.when = t;
+            } else {
+                e.when = top.when;
+            }
+            e.seq = seq++;
+            e.what = 1;
+            e.nidx = nidx;
+            evt_push(heap, &hlen, e);
+        } else {
+            int go = 0;
+            for (int c = ch_off[nidx]; c < ch_off[nidx + 1]; c++)
+                if (sub_act[ch_idx[c]]) {
+                    go = 1;
+                    break;
+                }
+            if (!go)
+                continue;
+            if (act[nidx]) {
+                double r = rc_end[g];
+                if (top.when > r)
+                    r = top.when;
+                rc_end[g] = r + td[ns[nidx]];
+            }
+            for (int c = ch_off[nidx]; c < ch_off[nidx + 1]; c++)
+                if (sub_act[ch_idx[c]]) {
+                    Evt e = {top.when, seq++, 0, ch_idx[c]};
+                    evt_push(heap, &hlen, e);
+                }
+        }
+    }
+    return makespan;
+}

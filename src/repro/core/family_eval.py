@@ -12,6 +12,21 @@ exactly one place (:func:`_winner_scan`):
   ``config.use_engine`` is off).  The admissible prune area is maintained
   incrementally from the one-task family deltas (O(1) per candidate)
   instead of re-summing all tasks each iteration.
+* ``"incremental"`` — delta-replay scoring: consecutive family candidates
+  differ by one task's allocation, so each simulation snapshots its state
+  right before the next delta's divergence point (derived from the LPT
+  ranks the moved task leaves and enters) and the next candidate replays
+  only the suffix.  The post-divergence resimulation runs in a small
+  compiled C replica of Algorithm 1's heap loop
+  (:mod:`repro.core.fastsim`, built on demand with the system compiler,
+  strict IEEE flags); without a compiler a pure-Python full resimulation
+  per candidate keeps the results identical.
+* ``"parallel"`` — family sharding across a ``concurrent.futures``
+  process pool: workers score contiguous candidate chunks with the
+  sequential pipeline, the parent reduces the ordered scores through
+  :func:`_winner_scan`, so selection (prune break, EPS rule, tie-break,
+  ``evaluated``) is bit-identical and independent of worker count or
+  completion order.
 * ``"vectorized"`` — an array program that scores *chunks of candidates at
   once*.  Algorithm 1's heap is replaced by a ``(chunk, nodes)`` tensor
   lockstep: the device tree is tiny and fixed, so the event queue holds at
@@ -28,12 +43,15 @@ exactly one place (:func:`_winner_scan`):
   :func:`~repro.core.timing.chains_makespan_batch`.  Without jax the
   evaluator transparently falls back to sequential scoring — same
   results, no speedup.
-* ``"auto"`` — picks ``"vectorized"`` when jax is importable, the engine
-  path is on and the batch/family are large enough to amortize the array
-  program (``AUTO_MIN_TASKS`` pruned / ``AUTO_MIN_TASKS_UNPRUNED``
-  full-family, with ``AUTO_MIN_FAMILY``), else ``"sequential"``.
+* ``"auto"`` — three-way dispatch: ``"incremental"`` when the C backend
+  is buildable and the batch clears ``AUTO_MIN_TASKS_INCREMENTAL``,
+  else ``"vectorized"`` when jax is importable and the batch/family are
+  large enough to amortize the array program (``AUTO_MIN_TASKS`` pruned
+  / ``AUTO_MIN_TASKS_UNPRUNED`` full-family, with ``AUTO_MIN_FAMILY``),
+  else ``"sequential"``.  ``SchedulerConfig(evaluator_floor=)``
+  overrides the task floors.
 
-**Equivalence contract:** both evaluators return bit-identical winners —
+**Equivalence contract:** every evaluator returns a bit-identical winner —
 index, allocation, assignment and makespan — for any workload and spec.
 The vectorized path earns this by construction rather than by tolerance:
 every floating-point accumulation (chain folds, the serialized
@@ -46,7 +64,10 @@ winner/prune scan is the shared :func:`_winner_scan` driver.  Enforced by
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
+import os
 from typing import Callable, Sequence
 
 import numpy as np
@@ -86,14 +107,22 @@ def _jax_modules():
     return jax, jnp, enable_x64
 
 #: "auto" dispatch thresholds, calibrated on the container benchmarks
-#: (benchmarks/t_cost.py, paired medians).  The array program's per-step
-#: cost is fixed per chunk while the sequential cost is per *scored*
-#: candidate, so vectorized wins where many candidates are actually
-#: scored: unpruned (full-family) runs from moderate sizes on (1.2-1.6x
-#: at n=500-2000 on the 2-vCPU CI box), and pruned runs only once the
-#: batch is so large that the ~2-dozen-candidate prune window still
-#: carries enough per-candidate Python cost to beat the scan's fixed
-#: dispatch floor (crossover measured at n~2000; margin added).
+#: (benchmarks/t_cost.py, paired medians).  The incremental evaluator's
+#: compiled delta-replay wins as soon as candidates are expensive enough
+#: to amortise its buffer setup (n>=256 with the usual prune window;
+#: measured ~2.2x at n=500 pruned, ~4x at n=1000, ~5.7x at n=2000, and
+#: up to ~8x full-family), so it is auto's first choice whenever the C
+#: backend is buildable.  The
+#: vectorized array program is the fallback tier (jax present, no C
+#: compiler): its per-step cost is fixed per chunk while the sequential
+#: cost is per *scored* candidate, so it wins where many candidates are
+#: actually scored — unpruned (full-family) runs from moderate sizes on
+#: (1.2-1.6x at n=500-2000 on the 2-vCPU CI box), pruned runs only once
+#: the batch is so large that the ~2-dozen-candidate prune window still
+#: beats the scan's fixed dispatch floor (crossover n~2000; margin
+#: added).  ``SchedulerConfig(evaluator_floor=)`` overrides the task
+#: floors without touching these module constants.
+AUTO_MIN_TASKS_INCREMENTAL = 256  # delta-replay: wins from small batches
 AUTO_MIN_TASKS = 3072          # pruned runs: scored window stays ~20-30
 AUTO_MIN_TASKS_UNPRUNED = 512  # full-family runs: every candidate scored
 AUTO_MIN_FAMILY = 48
@@ -152,16 +181,26 @@ def resolve_evaluator(config, n_tasks: int, family_size: int) -> str:
     """
     name = config.evaluator
     if name == "auto":
-        floor = AUTO_MIN_TASKS if config.prune else AUTO_MIN_TASKS_UNPRUNED
-        if (
-            HAVE_JAX
-            and config.use_engine
-            and n_tasks >= floor
-            and family_size >= AUTO_MIN_FAMILY
-        ):
+        if not config.use_engine or family_size < AUTO_MIN_FAMILY:
+            return "sequential"
+        floor = getattr(config, "evaluator_floor", None)
+        floor_inc = AUTO_MIN_TASKS_INCREMENTAL if floor is None else floor
+        if floor is None:
+            floor_vec = (
+                AUTO_MIN_TASKS if config.prune else AUTO_MIN_TASKS_UNPRUNED
+            )
+        else:
+            floor_vec = floor
+        if n_tasks >= floor_inc:
+            from repro.core import fastsim
+
+            if fastsim.available():
+                return "incremental"
+        if HAVE_JAX and n_tasks >= floor_vec:
             return "vectorized"
         return "sequential"
-    if name == "vectorized" and not config.use_engine:
+    if name in ("vectorized", "incremental", "parallel") \
+            and not config.use_engine:
         return "sequential"
     return name
 
@@ -286,6 +325,546 @@ class SequentialEvaluator(FamilyEvaluator):
         winner_alloc = list(first)
         for j, s_new in deltas[:win]:
             winner_alloc[j] = s_new
+        return FamilyWinner(
+            makespan, win, assignment, tuple(winner_alloc), evaluated
+        )
+
+
+# -- incremental delta-replay evaluator -------------------------------------
+
+_SIM_CACHE = IdentityCache(16)  # spec -> _SimContext
+
+
+@dataclasses.dataclass
+class _SimContext:
+    """Flat per-spec arrays of Algorithm 1's heap phase (C + Python)."""
+
+    spec: DeviceSpec
+    n_nodes: int
+    n_sizes: int
+    sizeidx: dict              # instance size -> size-axis index
+    node_keys: list            # node index -> NodeKey
+    ns_list: list              # node index -> size-axis index
+    tc_list: list              # size-axis index -> creation charge
+    td_list: list
+    children: list             # node index -> [child node indices]
+    roots: list                # root node indices, spec order
+    ns: np.ndarray             # the same, as C-ready arrays
+    tc: np.ndarray
+    td: np.ndarray
+    ch_off: np.ndarray
+    ch_idx: np.ndarray
+    tree: np.ndarray           # node index -> forest tree index
+    n_trees: int
+
+
+def _sim_context(spec: DeviceSpec) -> _SimContext:
+    cached = _SIM_CACHE.get(spec)
+    if cached is not None:
+        return cached
+    nodes = spec.nodes
+    sizeidx = {s: k for k, s in enumerate(spec.sizes)}
+    index = {node.key: i for i, node in enumerate(nodes)}
+    ns_list = [sizeidx[node.size] for node in nodes]
+    tc_list = [spec.t_create[s] for s in spec.sizes]
+    td_list = [spec.t_destroy[s] for s in spec.sizes]
+    children = [[index[c.key] for c in node.children] for node in nodes]
+    ch_off = np.zeros(len(nodes) + 1, dtype=np.int32)
+    for i, ch in enumerate(children):
+        ch_off[i + 1] = ch_off[i] + len(ch)
+    flat = [c for ch in children for c in ch]
+    tree_list = [node.tree for node in nodes]
+    ctx = _SimContext(
+        spec, len(nodes), len(spec.sizes), sizeidx,
+        [node.key for node in nodes], ns_list, tc_list, td_list, children,
+        [index[r.key] for r in spec.roots],
+        np.array(ns_list, dtype=np.int32),
+        np.array(tc_list), np.array(td_list),
+        ch_off, np.array(flat or [0], dtype=np.int32),
+        np.array(tree_list, dtype=np.int32),
+        max(tree_list) + 1 if tree_list else 1,
+    )
+    _SIM_CACHE.put(spec, ctx)
+    return ctx
+
+
+def _py_sim(ctx: _SimContext, durs_rows: list, n_tasks: int) -> list:
+    """Pure-Python cold run of the C loop: Algorithm 1's heap phase over
+    size-indexed duration rows, returning the placement visit trace
+    ``[(node index, slice start, slice end), ...]``.  Same pops, same
+    IEEE additions, same early stop as ``_fastsim.c`` — the incremental
+    evaluator's fallback when no C compiler is available."""
+    ns_list = ctx.ns_list
+    tc_list = ctx.tc_list
+    td_list = ctx.td_list
+    children = ctx.children
+    INF = float("inf")
+    cursor = [0] * ctx.n_sizes
+    created = bytearray(ctx.n_nodes)
+    lens = [len(r) for r in durs_rows]
+    reconfig_end = 0.0
+    heap = [(0.0, k, r) for k, r in enumerate(ctx.roots)]
+    seq = len(heap)
+    remaining = n_tasks
+    visits: list[tuple[int, int, int]] = []
+    heapreplace = heapq.heapreplace
+    heappush = heapq.heappush
+    heappop = heapq.heappop
+    while heap:
+        end, _, nidx = heap[0]
+        si = ns_list[nidx]
+        cur = cursor[si]
+        n_grp = lens[si]
+        if cur < n_grp:
+            if not created[nidx]:
+                if end > reconfig_end:
+                    reconfig_end = end
+                reconfig_end += tc_list[si]
+                end = reconfig_end
+                created[nidx] = 1
+            L = len(heap)
+            if L > 2:
+                t1 = heap[1][0]
+                t2 = heap[2][0]
+                nxt = t2 if t2 < t1 else t1
+            elif L == 2:
+                nxt = heap[1][0]
+            else:
+                nxt = INF
+            row = durs_rows[si]
+            start = cur
+            while True:
+                end += row[cur]
+                cur += 1
+                if cur >= n_grp or end >= nxt:
+                    break
+            cursor[si] = cur
+            visits.append((nidx, start, cur))
+            remaining -= cur - start
+            if not remaining:
+                break  # drain pops place nothing: early stop
+            heapreplace(heap, (end, seq, nidx))
+            seq += 1
+        elif remaining:
+            if created[nidx]:
+                if end > reconfig_end:
+                    reconfig_end = end
+                reconfig_end += td_list[si]
+            ch = children[nidx]
+            if ch:
+                heapreplace(heap, (end, seq, ch[0]))
+                seq += 1
+                for c in ch[1:]:
+                    heappush(heap, (end, seq, c))
+                    seq += 1
+            else:
+                heappop(heap)
+        else:
+            break  # every task placed: remaining pops only retire
+    return visits
+
+
+@register_evaluator("incremental")
+class IncrementalEvaluator(FamilyEvaluator):
+    """Delta-replay family scoring: patch the previous trajectory.
+
+    Consecutive family candidates differ by one task's allocation
+    (``allocation_family_deltas``), so their Algorithm-1 trajectories
+    share a prefix up to the first heap pop whose outcome the delta
+    changes.  While simulating candidate ``i``, the compiled backend
+    (:mod:`repro.core.fastsim`) snapshots the live state right before
+    that divergence point — derived exactly from the LPT ranks the moved
+    task leaves and enters, not from fixed checkpoint strides — and
+    candidate ``i+1`` restores the snapshot and replays only the
+    suffix.  The per-node duration chains come straight from the visit
+    trace and are scored by the same :func:`chains_makespan` left folds
+    as the sequential path; the winner's assignment is materialised
+    lazily, only when an incumbent improves, with the same strict-EPS
+    comparison :func:`_winner_scan` applies.  Bit-identical winners by
+    construction: same pops, same IEEE additions, same selection scan.
+
+    Without a C compiler the evaluator degrades to a full pure-Python
+    resimulation per candidate (:func:`_py_sim`) — still bit-identical,
+    only the speedup is gone.  ``use_engine=False`` delegates to
+    sequential like the vectorized path does.
+    """
+
+    def evaluate(self, tasks, spec, first, deltas, config):
+        if not config.use_engine:
+            return EVALUATORS["sequential"].evaluate(
+                tasks, spec, first, deltas, config
+            )
+        from repro.core import fastsim
+
+        lib = fastsim.load()
+        n = len(tasks)
+        F = len(deltas) + 1
+        ctx = _sim_context(spec)
+        S, N = ctx.n_sizes, ctx.n_nodes
+        sizes = spec.sizes
+        sizeidx = ctx.sizeidx
+        node_keys = ctx.node_keys
+        ns_list = ctx.ns_list
+        groups = LPTGroups(tasks, first, spec)
+        alloc = list(first)
+        eps = config.eps
+        # live per-size rows, ordered by size index: LPTGroups mutates
+        # these list objects in place, so the references stay current
+        durs_rows = [groups._durs[s] for s in sizes]
+        ids_rows = [groups._ids[s] for s in sizes]
+
+        if lib is not None:
+            lmax = max(1, n)
+            gdurs = np.zeros((S, lmax))
+            glens = np.zeros(S, dtype=np.int32)
+            for k in range(S):
+                row = durs_rows[k]
+                glens[k] = len(row)
+                if row:
+                    gdurs[k, : len(row)] = row
+            hdt = fastsim.heap_dtype()
+            cursor = np.zeros(S, dtype=np.int32)
+            created = np.zeros(N, dtype=np.int8)
+            exh = np.zeros(S, dtype=np.int8)
+            heap = np.zeros(N, dtype=hdt)
+            heap_len = np.zeros(1, dtype=np.int32)
+            scalars = np.zeros(1)
+            counters = np.zeros(3, dtype=np.int64)
+            s_cursor = np.zeros_like(cursor)
+            s_created = np.zeros_like(created)
+            s_exh = np.zeros_like(exh)
+            s_heap = np.zeros_like(heap)
+            s_heap_len = np.zeros(1, dtype=np.int32)
+            s_scalars = np.zeros(1)
+            s_counters = np.zeros(3, dtype=np.int64)
+            snap_flags = np.zeros(2, dtype=np.int32)
+            v_node = np.zeros(max(1, n), dtype=np.int32)
+            v_start = np.zeros_like(v_node)
+            v_end = np.zeros_like(v_node)
+            roots = np.array(ctx.roots, dtype=np.int32)
+            # chains_makespan scorer scratch (see fastsim_score)
+            sc_act = np.zeros(N, dtype=np.int8)
+            sc_sub = np.zeros(N, dtype=np.int8)
+            sc_head = np.zeros(N, dtype=np.int32)
+            sc_tail = np.zeros(N, dtype=np.int32)
+            sc_nxt = np.zeros(max(1, n), dtype=np.int32)
+            sc_heap = np.zeros(N, dtype=fastsim.evt_dtype())
+            sc_rc = np.zeros(max(1, ctx.n_trees))
+            per_tree = 1 if spec.reconfig_scope != "global" else 0
+
+            def _cold():
+                R = len(roots)
+                cursor[:] = 0
+                created[:] = 0
+                exh[:] = 0
+                heap["end"][:R] = 0.0
+                heap["seq"][:R] = np.arange(R)
+                heap["nidx"][:R] = roots
+                heap_len[0] = R
+                scalars[0] = 0.0
+                counters[0] = R
+                counters[1] = n
+                counters[2] = 0
+
+            def _run_c(trig):
+                a_si, a_rk, b_si, b_rk, b_visit = trig
+                rc = lib.run(
+                    cursor.ctypes.data, created.ctypes.data,
+                    exh.ctypes.data,
+                    heap.ctypes.data, heap_len.ctypes.data,
+                    scalars.ctypes.data, counters.ctypes.data,
+                    N, S,
+                    ctx.ns.ctypes.data, ctx.tc.ctypes.data,
+                    ctx.td.ctypes.data, ctx.ch_off.ctypes.data,
+                    ctx.ch_idx.ctypes.data,
+                    gdurs.ctypes.data, glens.ctypes.data, lmax,
+                    a_si, a_rk, b_si, b_rk, b_visit,
+                    s_cursor.ctypes.data, s_created.ctypes.data,
+                    s_exh.ctypes.data,
+                    s_heap.ctypes.data, s_heap_len.ctypes.data,
+                    s_scalars.ctypes.data, s_counters.ctypes.data,
+                    snap_flags.ctypes.data,
+                    v_node.ctypes.data, v_start.ctypes.data,
+                    v_end.ctypes.data, len(v_node),
+                )
+                assert rc == 0, "fastsim visit buffer overflow"
+
+            def _score_c(nv):
+                return lib.score(
+                    N, S,
+                    ctx.ns.ctypes.data, ctx.tree.ctypes.data,
+                    per_tree, ctx.n_trees,
+                    ctx.tc.ctypes.data, ctx.td.ctypes.data,
+                    ctx.ch_off.ctypes.data, ctx.ch_idx.ctypes.data,
+                    roots.ctypes.data, len(roots),
+                    gdurs.ctypes.data, lmax,
+                    v_node.ctypes.data, v_start.ctypes.data,
+                    v_end.ctypes.data, nv,
+                    sc_act.ctypes.data, sc_sub.ctypes.data,
+                    sc_head.ctypes.data, sc_tail.ctypes.data,
+                    sc_nxt.ctypes.data, sc_heap.ctypes.data,
+                    sc_rc.ctypes.data,
+                )
+
+        tasks_by_id = groups.tasks_by_id
+        best_state = {"mk": None, "assignment": None, "snap": False}
+
+        def _score_visits(visits):
+            node_durs: dict = {}
+            for nidx, sv, ev in visits:
+                key = node_keys[nidx]
+                lst = node_durs.get(key)
+                if lst is None:
+                    node_durs[key] = durs_rows[ns_list[nidx]][sv:ev]
+                else:
+                    lst.extend(durs_rows[ns_list[nidx]][sv:ev])
+            return chains_makespan(spec, node_durs, node_durs)
+
+        def _materialize(visits):
+            node_tasks: dict = {}
+            for nidx, sv, ev in visits:
+                key = node_keys[nidx]
+                lst = node_tasks.get(key)
+                if lst is None:
+                    node_tasks[key] = ids_rows[ns_list[nidx]][sv:ev]
+                else:
+                    lst.extend(ids_rows[ns_list[nidx]][sv:ev])
+            return Assignment(spec, tasks_by_id, node_tasks)
+
+        state = {"idx": 0}
+
+        def score(i):
+            assert i == state["idx"]
+            # the *next* delta's divergence trigger, in candidate i's rows
+            if i < len(deltas):
+                j, s_new = deltas[i]
+                s_old = alloc[j]
+                task = tasks[j]
+                keys_old = groups._keys[s_old]
+                r_old = bisect.bisect_left(
+                    keys_old, (-task.times[s_old], task.id)
+                )
+                keys_new = groups._keys[s_new]
+                r_new = bisect.bisect_left(
+                    keys_new, (-task.times[s_new], task.id)
+                )
+                trig = (
+                    sizeidx[s_old], r_old, sizeidx[s_new], r_new,
+                    1 if r_new == len(keys_new) else 0,
+                )
+            else:
+                task = r_old = r_new = None
+                trig = (-1, -1, -1, -1, 0)
+            if lib is not None:
+                if i == 0 or not best_state["snap"]:
+                    _cold()
+                else:
+                    # restore the snapshot taken during candidate i-1
+                    L = int(s_heap_len[0])
+                    cursor[:] = s_cursor
+                    created[:] = s_created
+                    exh[:] = s_exh
+                    heap[:L] = s_heap[:L]
+                    heap_len[0] = L
+                    scalars[0] = s_scalars[0]
+                    counters[:] = s_counters
+                # a snapshot produced by this run is only trustworthy
+                # when the run *starts* at a shared-prefix point of the
+                # next delta — a resume point past the delta's ranks (or
+                # past an exhausted-row pop, for tail appends) would hide
+                # an earlier divergence, so disarm and resimulate the
+                # next candidate cold instead
+                trusted = True
+                if trig[0] >= 0:
+                    a_si, a_rk, b_si, b_rk, b_visit = trig
+                    if (
+                        cursor[a_si] > a_rk
+                        or cursor[b_si] > b_rk
+                        or (b_visit and exh[b_si])
+                    ):
+                        trig = (-1, -1, -1, -1, 0)
+                        trusted = False
+                snap_flags[:] = 0
+                _run_c(trig)
+                nv = int(counters[2])
+                best_state["snap"] = trusted and bool(snap_flags[0])
+                makespan = _score_c(nv)
+                visits = None  # materialised only for improving incumbents
+            else:
+                visits = _py_sim(ctx, durs_rows, n)
+                makespan = _score_visits(visits)
+            # mirror _winner_scan's replacement comparison exactly, so
+            # the assignment is built only for improving incumbents
+            if best_state["mk"] is None or makespan < best_state["mk"] - eps:
+                best_state["mk"] = makespan
+                if visits is None:
+                    visits = list(zip(
+                        v_node[:nv].tolist(), v_start[:nv].tolist(),
+                        v_end[:nv].tolist(),
+                    ))
+                best_state["assignment"] = _materialize(visits)
+            if i < len(deltas):
+                groups.move(task, s_old, s_new)
+                alloc[j] = s_new
+                if lib is not None:
+                    a, b = sizeidx[s_old], sizeidx[s_new]
+                    la = int(glens[a])
+                    row = gdurs[a]
+                    row[r_old:la - 1] = row[r_old + 1:la]
+                    row[la - 1] = 0.0
+                    glens[a] = la - 1
+                    lb = int(glens[b])
+                    row = gdurs[b]
+                    row[r_new + 1:lb + 1] = row[r_new:lb]
+                    row[r_new] = task.times[s_new]
+                    glens[b] = lb + 1
+                state["idx"] = i + 1
+            return makespan, None
+
+        areas = family_areas(tasks, first, deltas) if config.prune else None
+        best, evaluated = _winner_scan(
+            score, areas, config.eps, spec.n_slices, F
+        )
+        makespan, win, _ = best
+        winner_alloc = list(first)
+        for j, s_new in deltas[:win]:
+            winner_alloc[j] = s_new
+        return FamilyWinner(
+            makespan, win, best_state["assignment"], tuple(winner_alloc),
+            evaluated,
+        )
+
+
+# -- parallel family sharding -----------------------------------------------
+
+#: candidates per worker chunk on pruned runs (the prune break usually
+#: lands inside the first chunk, so small chunks bound wasted scoring)
+PARALLEL_PRUNED_CHUNK = 32
+
+
+def _parallel_chunk_scores(payload):
+    """Pool worker: full Algorithm-1 scores of family chunk ``[lo, hi)``.
+
+    Warm-starts :class:`LPTGroups` at candidate ``lo`` (the maintained
+    order is bit-identical to a cold sort) and scores every candidate of
+    the chunk with the exact sequential pipeline — no pruning in the
+    worker, the parent's reduce owns the selection semantics.
+    """
+    tasks, spec, first, deltas, lo, hi = payload
+    alloc = list(first)
+    for j, s_new in deltas[:lo]:
+        alloc[j] = s_new
+    groups = LPTGroups(tasks, tuple(alloc), spec)
+    out = []
+    for i in range(lo, hi):
+        assignment, node_durs = groups.schedule_with_durs()
+        out.append(chains_makespan(spec, assignment.node_tasks, node_durs))
+        if i < len(deltas):
+            j, s_new = deltas[i]
+            groups.move(tasks[j], alloc[j], s_new)
+            alloc[j] = s_new
+    return out
+
+
+@register_evaluator("parallel")
+class ParallelEvaluator(FamilyEvaluator):
+    """Process-pool family sharding with a deterministic ordered reduce.
+
+    The family is cut into contiguous index chunks; pool workers score
+    whole chunks with the sequential pipeline (LPT warm-start inside the
+    chunk, no pruning) and return plain makespan lists.  The parent
+    walks those scores through the shared :func:`_winner_scan` in family
+    order, so the prune break, the strict-EPS incumbent rule, the
+    family-index tie-break and the ``evaluated`` count are reproduced
+    bit-identically no matter how many workers run or in which order
+    chunks complete — results are keyed by chunk index, never by
+    arrival.  Only the winner is resimulated (once, in-process) to
+    materialise its assignment.
+
+    ``SchedulerConfig(parallel_workers=)`` sizes the pool (0 = all
+    cores); one worker or a one-candidate family short-circuits to the
+    sequential evaluator.  Chunks are dispatched lazily a pool-width
+    ahead of the scan so pruned runs do not score the whole family.
+
+    Like any forkserver/spawn ``multiprocessing`` use, calling this
+    evaluator from a script requires the usual
+    ``if __name__ == "__main__":`` entry guard — the workers re-import
+    ``__main__``.
+    """
+
+    def evaluate(self, tasks, spec, first, deltas, config):
+        workers = getattr(config, "parallel_workers", 0) or (
+            os.cpu_count() or 1
+        )
+        F = len(deltas) + 1
+        if not config.use_engine or workers <= 1 or F <= 1:
+            return EVALUATORS["sequential"].evaluate(
+                tasks, spec, first, deltas, config
+            )
+        import concurrent.futures as cf
+        import multiprocessing as mp
+
+        # fork would clone whatever thread pools the parent has running
+        # (jax's in particular — a known deadlock); the forkserver is a
+        # clean process forked before any of that, with spawn as the
+        # portable fallback
+        try:
+            mp_ctx = mp.get_context("forkserver")
+        except ValueError:  # pragma: no cover - platform without it
+            mp_ctx = mp.get_context("spawn")
+
+        chunk = (
+            PARALLEL_PRUNED_CHUNK if config.prune
+            else max(1, -(-F // workers))
+        )
+        bounds = [
+            (lo, min(lo + chunk, F)) for lo in range(0, F, chunk)
+        ]
+        scores: dict[int, float] = {}
+        futures: dict[int, object] = {}
+        submitted = {"next": 0}
+
+        with cf.ProcessPoolExecutor(
+            max_workers=workers, mp_context=mp_ctx
+        ) as pool:
+
+            def _submit_ahead(upto_chunk: int) -> None:
+                # keep a pool-width of chunks in flight past the scan
+                while (
+                    submitted["next"] < len(bounds)
+                    and submitted["next"] <= upto_chunk + workers
+                ):
+                    lo, hi = bounds[submitted["next"]]
+                    futures[submitted["next"]] = pool.submit(
+                        _parallel_chunk_scores,
+                        (tasks, spec, first, deltas, lo, hi),
+                    )
+                    submitted["next"] += 1
+
+            def score(i):
+                k = i // chunk
+                _submit_ahead(k)
+                if i not in scores:
+                    lo = bounds[k][0]
+                    for off, mk in enumerate(futures[k].result()):
+                        scores[lo + off] = mk
+                return scores[i], None
+
+            areas = (
+                family_areas(tasks, first, deltas) if config.prune else None
+            )
+            best, evaluated = _winner_scan(
+                score, areas, config.eps, spec.n_slices, F
+            )
+        makespan, win, _ = best
+        winner_alloc = list(first)
+        for j, s_new in deltas[:win]:
+            winner_alloc[j] = s_new
+        # one in-process resimulation materialises the winner (the
+        # maintained LPT order is bit-identical to this cold build)
+        assignment = LPTGroups(
+            tasks, tuple(winner_alloc), spec
+        ).schedule()
         return FamilyWinner(
             makespan, win, assignment, tuple(winner_alloc), evaluated
         )
@@ -491,6 +1070,22 @@ def _pow2(x: int) -> int:
     return 1 << max(1, (x - 1).bit_length())
 
 
+def _score_chains_batch(spec, chain_durs, chain_len):
+    """Batched chain scoring backend: the fused Pallas kernel on
+    accelerator backends (``repro.kernels.chains_makespan``), the numpy
+    lockstep otherwise.  Both are pinned bit-identical per candidate to
+    :func:`chains_makespan`, so the dispatch cannot change a winner."""
+    try:
+        from repro.kernels.chains_makespan import ops as _cm_ops
+    except ImportError:  # pragma: no cover - kernels package stripped
+        _cm_ops = None
+    if _cm_ops is not None and _cm_ops.pallas_usable():
+        return _cm_ops.chains_makespan_batch_pallas(
+            spec, chain_durs, chain_len
+        )
+    return chains_makespan_batch(spec, chain_durs, chain_len)
+
+
 @register_evaluator("vectorized")
 class VectorizedEvaluator(FamilyEvaluator):
     """Chunked array-program scorer (module docstring has the design).
@@ -615,7 +1210,7 @@ class VectorizedEvaluator(FamilyEvaluator):
             Lc = max(1, int(chain_len.max()))
             cd = np.zeros((Cb, N, Lc))
             cd[cols, nodes, cpos[valid]] = dv[valid]
-            scores = chains_makespan_batch(spec, cd, chain_len)
+            scores = _score_chains_batch(spec, cd, chain_len)
             for k in range(count):
                 state["scores"][i0 + k] = float(scores[k])
             state["chunk"] = (i0, mem0, nid)
@@ -684,11 +1279,14 @@ class VectorizedEvaluator(FamilyEvaluator):
 __all__ = [
     "AUTO_MIN_FAMILY",
     "AUTO_MIN_TASKS",
+    "AUTO_MIN_TASKS_INCREMENTAL",
     "AUTO_MIN_TASKS_UNPRUNED",
     "EVALUATORS",
     "FamilyEvaluator",
     "FamilyWinner",
     "HAVE_JAX",
+    "IncrementalEvaluator",
+    "ParallelEvaluator",
     "SequentialEvaluator",
     "VectorizedEvaluator",
     "family_areas",

@@ -1,0 +1,187 @@
+"""On-demand compiled backend for the incremental phase-2 evaluator.
+
+``_fastsim.c`` (next to this module) is a bit-exact replica of Algorithm
+1's heap phase (``repartition._list_schedule_arrays``) with resumable
+state and mid-run snapshotting — the delta-replay engine of
+``family_eval.IncrementalEvaluator``.  This module owns its build and
+loading:
+
+* compiled lazily with the system C compiler (``cc``/``gcc``/``clang``)
+  into a user-cache ``.so`` keyed by the source hash, so a source edit
+  invalidates the cache and concurrent builds race benignly through an
+  atomic ``os.replace``;
+* ``-O2 -ffp-contract=off``: optimisation must not fuse the chain
+  additions into FMAs or the roundings would diverge from CPython's
+  plain double adds (the bit-identical-winner contract);
+* no compiler, no write access, or a failed smoke call all degrade to
+  ``load() -> None`` — the evaluator then runs its pure-Python fallback
+  with identical results.
+
+Nothing here imports numpy at module load; the heap record dtype is
+built on first use.
+"""
+
+from __future__ import annotations
+
+import ctypes
+import hashlib
+import os
+import shutil
+import subprocess
+import tempfile
+
+_SOURCE = os.path.join(os.path.dirname(__file__), "_fastsim.c")
+_CFLAGS = ["-O2", "-fPIC", "-shared", "-ffp-contract=off"]
+
+#: tri-state: unset / (lib, fn) / None after a failed build
+_LOADED: object = False
+
+_HEAP_DTYPE = None
+_EVT_DTYPE = None
+
+
+def heap_dtype():
+    """numpy dtype matching the C ``Ent`` heap record (24 bytes)."""
+    global _HEAP_DTYPE
+    if _HEAP_DTYPE is None:
+        import numpy as np
+
+        _HEAP_DTYPE = np.dtype(
+            [("end", "<f8"), ("seq", "<i8"), ("nidx", "<i4"), ("pad", "<i4")]
+        )
+        assert _HEAP_DTYPE.itemsize == 24
+    return _HEAP_DTYPE
+
+
+def evt_dtype():
+    """numpy dtype matching the C ``Evt`` event record (24 bytes)."""
+    global _EVT_DTYPE
+    if _EVT_DTYPE is None:
+        import numpy as np
+
+        _EVT_DTYPE = np.dtype(
+            [("when", "<f8"), ("seq", "<i8"), ("what", "<i4"), ("nidx", "<i4")]
+        )
+        assert _EVT_DTYPE.itemsize == 24
+    return _EVT_DTYPE
+
+
+def _cache_dir() -> str:
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache"
+    )
+    return os.path.join(base, "repro-fastsim")
+
+
+def _find_compiler() -> str | None:
+    for cand in ("cc", "gcc", "clang"):
+        path = shutil.which(cand)
+        if path:
+            return path
+    return None
+
+
+def _build() -> str | None:
+    """Compile (or reuse) the shared object; returns its path or None."""
+    try:
+        with open(_SOURCE, "rb") as fh:
+            src = fh.read()
+    except OSError:
+        return None
+    digest = hashlib.sha256(src).hexdigest()[:16]
+    cachedir = _cache_dir()
+    so_path = os.path.join(cachedir, f"fastsim-{digest}.so")
+    if os.path.exists(so_path):
+        return so_path
+    compiler = _find_compiler()
+    if compiler is None:
+        return None
+    try:
+        os.makedirs(cachedir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(suffix=".so", dir=cachedir)
+        os.close(fd)
+        proc = subprocess.run(
+            [compiler, *_CFLAGS, "-o", tmp, _SOURCE],
+            capture_output=True,
+            timeout=120,
+        )
+        if proc.returncode != 0:
+            os.unlink(tmp)
+            return None
+        os.replace(tmp, so_path)  # atomic: concurrent builds race benignly
+        return so_path
+    except (OSError, subprocess.SubprocessError):
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        return None
+
+
+class _Lib:
+    """The two compiled entry points: ``run`` (Algorithm 1's heap phase)
+    and ``score`` (``chains_makespan`` over a visit trace)."""
+
+    __slots__ = ("run", "score", "_cdll")
+
+    def __init__(self, cdll, run, score):
+        self._cdll = cdll  # keep the dlopen handle alive
+        self.run = run
+        self.score = score
+
+
+def load():
+    """A :class:`_Lib` with the compiled entry points, or ``None``.
+
+    The first call builds/loads and smoke-checks; the outcome (including
+    failure) is cached for the process.
+    """
+    global _LOADED
+    if _LOADED is not False:
+        return _LOADED
+    _LOADED = None
+    so_path = _build()
+    if so_path is None:
+        return None
+    try:
+        lib = ctypes.CDLL(so_path)
+        run = lib.fastsim_run
+        score = lib.fastsim_score
+    except (OSError, AttributeError):
+        return None
+    c = ctypes
+    p = c.c_void_p
+    run.restype = c.c_int
+    run.argtypes = [
+        p, p, p, p, p, p, p,                   # state
+        c.c_int, c.c_int, p, p, p, p, p,       # spec context
+        p, p, c.c_int,                         # candidate data
+        c.c_int, c.c_int, c.c_int, c.c_int, c.c_int,  # trigger
+        p, p, p, p, p, p, p, p,                # snapshot out
+        p, p, p, c.c_longlong,                 # visits out
+    ]
+    score.restype = c.c_double
+    score.argtypes = [
+        c.c_int, c.c_int, p, p, c.c_int, c.c_int,  # nodes/sizes/trees
+        p, p, p, p,                            # charges + children CSR
+        p, c.c_int,                            # roots
+        p, c.c_int,                            # candidate rows
+        p, p, p, c.c_longlong,                 # visit trace
+        p, p, p, p, p, p, p,                   # scratch
+    ]
+    _LOADED = _Lib(lib, run, score)
+    return _LOADED
+
+
+def available() -> bool:
+    """Whether the compiled backend can be (or already is) loaded."""
+    return load() is not None
+
+
+def reset_for_tests() -> None:
+    """Drop the cached load outcome (test hook)."""
+    global _LOADED
+    _LOADED = False
+
+
+__all__ = ["available", "evt_dtype", "heap_dtype", "load", "reset_for_tests"]

@@ -35,7 +35,9 @@ from repro.core.repartition import Assignment
 #: valid SchedulerConfig.evaluator values (the family-evaluator registry
 #: in repro.core.family_eval may grow beyond these for custom plugins;
 #: config validation names only the built-ins plus "auto")
-_EVALUATOR_CHOICES = frozenset({"sequential", "vectorized", "auto"})
+_EVALUATOR_CHOICES = frozenset(
+    {"sequential", "incremental", "parallel", "vectorized", "auto"}
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,10 +58,20 @@ class SchedulerConfig:
     use_engine: bool = True           # incremental TimingEngine vs replays
     eps: float = EPS                  # float tolerance for comparisons
     # phase-2 family evaluator: "sequential" (one Algorithm-1 simulation
-    # per candidate), "vectorized" (chunked array-program scoring,
-    # bit-identical winners — see repro.core.family_eval), or "auto"
-    # (vectorized when jax is available and the batch is large enough).
+    # per candidate), "incremental" (compiled delta-replay of the shared
+    # trajectory prefix), "parallel" (process-pool family sharding),
+    # "vectorized" (chunked array-program scoring), or "auto" (the best
+    # available tier for the batch size).  All evaluators return
+    # bit-identical winners — see repro.core.family_eval.
     evaluator: str = "auto"
+    # "auto" task-count floor override: when set, replaces the module
+    # constants (AUTO_MIN_TASKS*) gating the accelerated evaluators, so
+    # deployments on bigger boxes can tune dispatch without
+    # monkeypatching.  None keeps the calibrated defaults.
+    evaluator_floor: int | None = None
+    # pool width for evaluator="parallel": 0 = one worker per CPU core;
+    # 1 short-circuits to sequential scoring in-process.
+    parallel_workers: int = 0
 
     # -- seam concatenation (tail-aware planning) ---------------------------
     concat_mode: str = "move_swap"    # "trivial" | "reverse" | "move_swap" | "auto"

@@ -472,7 +472,14 @@ class ShardedSchedulingService:
     def report(self, task_id: int, event: str, t: float,
                end: float | None = None):
         """Route a runtime report to the owning shard (forwarding its
-        inbox first if the task somehow has not been planned yet)."""
+        inbox first if the task somehow has not been planned yet).
+
+        The routing refreshes the shard's cached admission state: the
+        busy envelope is dropped (so the next fast admit rebuilds it
+        from the corrected placements — an early completion immediately
+        widens the admission window instead of waiting for the next
+        pump) and the tail-load figure shard selection reads is
+        re-derived from the corrected inner makespan."""
         shard = self._owner_of(task_id)
         if task_id in self._unforwarded:
             self.now = max(self.now, t)
@@ -480,6 +487,9 @@ class ShardedSchedulingService:
         self._touch(shard)
         out = self._shards[shard].report(task_id, event, t, end=end)
         self.now = max(self.now, t)
+        self._tail_load[shard] = max(
+            0.0, self._shards[shard].makespan - self.now
+        )
         return out
 
     def _owner_of(self, task_id: int) -> int:

@@ -1,0 +1,11 @@
+from repro.kernels.chains_makespan.ops import (
+    chains_makespan_batch_pallas,
+    pallas_usable,
+)
+from repro.kernels.chains_makespan.ref import chains_makespan_batch_ref
+
+__all__ = [
+    "chains_makespan_batch_pallas",
+    "chains_makespan_batch_ref",
+    "pallas_usable",
+]

@@ -1,0 +1,185 @@
+"""Batched chains-makespan Pallas kernel (phase-2 candidate scoring).
+
+One fused kernel replaces the per-step numpy dispatch of
+:func:`repro.core.timing.chains_makespan_batch`: grid over candidate
+blocks, each grid step running the whole replay-semantics event walk for
+its ``blk`` candidates in lockstep.  The device tree is tiny (N <= ~16
+nodes for every shipped spec), so the event queue holds at most one
+pending event per node and a pop is a masked argmin over the node axis —
+exactly the lockstep the numpy walk performs, which in turn reproduces
+the scalar ``chains_makespan`` heap order because ``(when, seq)`` is a
+total order (seqs are unique).
+
+Bit-exactness is by construction, not tolerance:
+
+* the chain fold is a sequential ``fori_loop`` of double additions —
+  the same left fold as ``np.add.accumulate`` / Python's ``sum`` — never
+  a ``cumsum``/associative scan, whose re-association would change
+  roundings;
+* all selects are one-hot masked sums where the masked-out lanes
+  contribute exact ``+0.0`` (durations and reconfiguration ends are
+  non-negative), so gathers introduce no arithmetic;
+* the walk runs a fixed ``2 * N`` iterations — each live candidate pops
+  exactly one event per iteration and every node contributes at most one
+  visit and one done pop, so trailing iterations are masked no-ops.
+
+``chain_durs`` rows must be zero-padded past ``chain_len`` (the fold
+runs the full row; trailing zeros are exact no-op additions).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cm_kernel(
+    durs_ref,    # [blk, N, L] f64, zero-padded chains
+    len_ref,     # [blk, N] i32
+    tc_ref,      # [N] f64 creation charge per node
+    td_ref,      # [N] f64 destruction charge per node
+    child_ref,   # [N, N] i32, child_ref[p, c]: c is a child of p
+    desc_ref,    # [N, N] i32, desc_ref[a, b]: b in subtree(a)
+    grp_ref,     # [N] i32 reconfiguration-sequence group per node
+    out_ref,     # [blk] f64 makespans
+    *,
+    root_idx: tuple,
+    n_groups: int,
+    blk: int,
+    n_nodes: int,
+    chain_cap: int,
+):
+    durs = durs_ref[...]
+    lens = len_ref[...]
+    tc = tc_ref[...]
+    td = td_ref[...]
+    child = child_ref[...] > 0
+    desc = desc_ref[...] > 0
+    grp = grp_ref[...]
+    f64 = durs.dtype
+
+    active = lens > 0                                        # (blk, N)
+    # 0/1 matmuls: counts <= N, exact in f64
+    sub_act = jnp.dot(active.astype(f64), desc.T.astype(f64)) > 0
+    goflag = jnp.dot(sub_act.astype(f64), child.T.astype(f64)) > 0
+
+    BIG = jnp.int32(2**30)
+    tevt = jnp.full((blk, n_nodes), jnp.inf, f64)
+    sevt = jnp.full((blk, n_nodes), BIG, jnp.int32)
+    wevt = jnp.zeros((blk, n_nodes), jnp.int32)              # 0=visit 1=done
+    seqctr = jnp.zeros((blk,), jnp.int32)
+    for i in root_idx:  # static unroll: roots pushed in spec order
+        pushed = sub_act[:, i]
+        tevt = tevt.at[:, i].set(jnp.where(pushed, 0.0, tevt[:, i]))
+        sevt = sevt.at[:, i].set(jnp.where(pushed, seqctr, sevt[:, i]))
+        seqctr = seqctr + pushed.astype(jnp.int32)
+    re = jnp.zeros((blk, n_groups), f64)
+    mk = jnp.zeros((blk,), f64)
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (blk, n_nodes), 1)
+    iota_g = jax.lax.broadcasted_iota(jnp.int32, (blk, n_groups), 1)
+
+    def step(_, carry):
+        tevt, sevt, wevt, seqctr, re, mk = carry
+        rows = jnp.isfinite(tevt).any(1)
+        when = tevt.min(1)
+        cand = tevt == when[:, None]
+        seqm = jnp.where(cand, sevt, BIG)
+        sel = cand & (seqm == seqm.min(1)[:, None]) & rows[:, None]
+        n_star = jnp.argmax(sel, 1).astype(jnp.int32)
+        onehot = iota_n == n_star[:, None]
+        ohf = onehot.astype(f64)
+        g_star = jnp.sum(jnp.where(onehot, grp[None, :], 0), 1)
+        oh_g = iota_g == g_star[:, None]
+        re_cur = jnp.sum(jnp.where(oh_g, re, 0.0), 1)
+        what = jnp.sum(jnp.where(onehot, wevt, 0), 1)
+        act = (onehot & active).any(1)
+        m_visit = rows & (what == 0)
+        m_va = m_visit & act
+        m_done = rows & (what == 1)
+        tc_star = jnp.sum(jnp.where(onehot, tc[None, :], 0.0), 1)
+        td_star = jnp.sum(jnp.where(onehot, td[None, :], 0.0), 1)
+
+        # visit of an active node: creation charge + exact chain fold
+        t0 = jnp.maximum(re_cur, when) + tc_star
+        chosen = jnp.sum(durs * ohf[:, :, None], 1)          # (blk, L)
+        end = jax.lax.fori_loop(
+            0, chain_cap, lambda l, t: t + chosen[:, l], t0
+        )
+        re = jnp.where(oh_g & m_va[:, None], t0[:, None], re)
+        mk = jnp.where(m_va & (end > mk), end, mk)
+        # visit -> done event in place (chain end if active, else when)
+        upd_v = onehot & m_visit[:, None]
+        tevt = jnp.where(upd_v, jnp.where(m_va, end, when)[:, None], tevt)
+        wevt = jnp.where(upd_v, 1, wevt)
+        sevt = jnp.where(upd_v, seqctr[:, None], sevt)
+        seqctr = seqctr + m_visit.astype(jnp.int32)
+
+        # done: destroy (active node, active subtree remains) + children
+        go = (onehot & goflag).any(1)
+        m_dgo = m_done & go
+        m_destroy = m_dgo & act
+        re_d = jnp.maximum(re_cur, when) + td_star
+        re = jnp.where(oh_g & m_destroy[:, None], re_d[:, None], re)
+        tevt = jnp.where(onehot & m_done[:, None], jnp.inf, tevt)
+        childrow = jnp.dot(ohf, child.astype(f64)) > 0       # (blk, N)
+        push = childrow & sub_act & m_dgo[:, None]
+        rank = jnp.cumsum(push.astype(jnp.int32), 1) - 1
+        tevt = jnp.where(push, when[:, None], tevt)
+        wevt = jnp.where(push, 0, wevt)
+        sevt = jnp.where(push, seqctr[:, None] + rank, sevt)
+        seqctr = seqctr + jnp.sum(
+            push.astype(jnp.int32), 1, dtype=jnp.int32
+        )
+        return tevt, sevt, wevt, seqctr, re, mk
+
+    carry = (tevt, sevt, wevt, seqctr, re, mk)
+    carry = jax.lax.fori_loop(0, 2 * n_nodes, step, carry)
+    out_ref[...] = carry[5]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("root_idx", "n_groups", "blk", "interpret")
+)
+def chains_makespan_scan(
+    durs,        # [C, N, L] f64, C a multiple of blk
+    lens,        # [C, N] i32
+    tc,          # [N] f64
+    td,          # [N] f64
+    childmask,   # [N, N] i32
+    descmask,    # [N, N] i32
+    grp_idx,     # [N] i32
+    *,
+    root_idx: tuple,
+    n_groups: int,
+    blk: int = 8,
+    interpret: bool = False,
+):
+    C, N, L = durs.shape
+    assert C % blk == 0, (C, blk)
+    kernel = functools.partial(
+        _cm_kernel,
+        root_idx=root_idx,
+        n_groups=n_groups,
+        blk=blk,
+        n_nodes=N,
+        chain_cap=L,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(C // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, N, L), lambda b: (b, 0, 0)),
+            pl.BlockSpec((blk, N), lambda b: (b, 0)),
+            pl.BlockSpec((N,), lambda b: (0,)),
+            pl.BlockSpec((N,), lambda b: (0,)),
+            pl.BlockSpec((N, N), lambda b: (0, 0)),
+            pl.BlockSpec((N, N), lambda b: (0, 0)),
+            pl.BlockSpec((N,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((C,), durs.dtype),
+        interpret=interpret,
+    )(durs, lens, tc, td, childmask, descmask, grp_idx)

@@ -1,0 +1,91 @@
+"""Public wrapper for the batched chains-makespan kernel.
+
+``chains_makespan_batch_pallas`` matches
+:func:`repro.core.timing.chains_makespan_batch` bit for bit (see
+kernel.py for why).  ``pallas_usable`` is the dispatch gate the
+vectorized family evaluator consults: the fused kernel only pays off on
+an accelerator backend — on CPU the interpret-mode emulation is far
+slower than the numpy lockstep, so CPU runs keep numpy and CI verifies
+the kernel through ``interpret=True`` instead.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_PALLAS_OK: bool | None = None
+
+
+def pallas_usable() -> bool:
+    """True when the compiled kernel is worth dispatching to."""
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        try:
+            import jax
+            from jax.experimental import pallas  # noqa: F401
+
+            _PALLAS_OK = jax.default_backend() in ("gpu", "tpu")
+        except Exception:  # pragma: no cover - no jax / broken backend
+            _PALLAS_OK = False
+    return _PALLAS_OK
+
+
+def reset_for_tests() -> None:
+    """Drop the cached backend probe (test hook)."""
+    global _PALLAS_OK
+    _PALLAS_OK = None
+
+
+def chains_makespan_batch_pallas(
+    spec, chain_durs, chain_len, *, blk: int = 8, interpret=None
+):
+    """``(C,)`` makespans for ``(C, N, L)`` zero-padded duration chains.
+
+    ``interpret=None`` follows the repo's kernel idiom (compile only on
+    TPU); tests pass ``interpret=True`` explicitly for the CPU
+    bit-exactness check.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.timing import _batch_spec_arrays
+    from repro.kernels.chains_makespan.kernel import chains_makespan_scan
+
+    (tc, td, childmask, descmask, root_idx, grp_idx,
+     n_groups) = _batch_spec_arrays(spec)
+    C, N, L = chain_durs.shape
+    if C == 0:
+        return np.zeros(0)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Cp = -(-C // blk) * blk  # pad with all-empty (makespan 0) candidates
+    durs = np.zeros((Cp, N, L))
+    durs[:C] = chain_durs
+    lens = np.zeros((Cp, N), dtype=np.int32)
+    lens[:C] = chain_len
+    # constants, tracing and execution must all sit inside the x64
+    # scope, or the program silently truncates to float32
+    with enable_x64():
+        out = chains_makespan_scan(
+            jnp.asarray(durs),
+            jnp.asarray(lens),
+            jnp.asarray(np.asarray(tc, dtype=np.float64)),
+            jnp.asarray(np.asarray(td, dtype=np.float64)),
+            jnp.asarray(childmask.astype(np.int32)),
+            jnp.asarray(descmask.astype(np.int32)),
+            jnp.asarray(np.asarray(grp_idx, dtype=np.int32)),
+            root_idx=tuple(int(i) for i in root_idx),
+            n_groups=int(n_groups),
+            blk=blk,
+            interpret=bool(interpret),
+        )
+        res = np.asarray(out)
+    return res[:C]
+
+
+__all__ = [
+    "chains_makespan_batch_pallas",
+    "pallas_usable",
+    "reset_for_tests",
+]

@@ -1,0 +1,15 @@
+"""Numpy oracle for the batched chains-makespan kernel.
+
+The reference is the lockstep event walk in
+:func:`repro.core.timing.chains_makespan_batch`, itself pinned
+bit-identical per candidate to the scalar :func:`chains_makespan`
+scorer — so kernel == ref == scalar is one transitive contract.
+"""
+
+from __future__ import annotations
+
+from repro.core.timing import chains_makespan_batch
+
+
+def chains_makespan_batch_ref(spec, chain_durs, chain_len):
+    return chains_makespan_batch(spec, chain_durs, chain_len)

@@ -171,27 +171,45 @@ def test_size_sorted_orders_layout():
 def test_config_validation():
     with pytest.raises(ValueError, match="evaluator"):
         SchedulerConfig(evaluator="nope")
-    for name in ("sequential", "vectorized", "auto"):
+    for name in ("sequential", "incremental", "parallel", "vectorized",
+                 "auto"):
         assert SchedulerConfig(evaluator=name).evaluator == name
 
 
 def test_get_evaluator_unknown():
     with pytest.raises(KeyError, match="unknown family evaluator"):
         get_evaluator("nope")
-    assert set(EVALUATORS) >= {"sequential", "vectorized"}
+    assert set(EVALUATORS) >= {
+        "sequential", "incremental", "parallel", "vectorized",
+    }
 
 
 def test_resolve_evaluator_dispatch():
+    from repro.core import fastsim
+
     big_n = AUTO_MIN_TASKS
     big_f = AUTO_MIN_FAMILY
     auto = SchedulerConfig(evaluator="auto")
-    expected = "vectorized" if HAVE_JAX else "sequential"
+    if fastsim.available():
+        expected = "incremental"
+    elif HAVE_JAX:
+        expected = "vectorized"
+    else:
+        expected = "sequential"
     assert resolve_evaluator(auto, big_n, big_f) == expected
     # small problems stay sequential under auto
     assert resolve_evaluator(auto, 8, 4) == "sequential"
+    # config-overridable floor: a tiny floor admits the compiled tier on
+    # small batches, a huge floor pushes auto back to sequential
+    low = SchedulerConfig(evaluator="auto", evaluator_floor=8)
+    if fastsim.available():
+        assert resolve_evaluator(low, 8, big_f) == "incremental"
+    high = SchedulerConfig(evaluator="auto", evaluator_floor=10**9)
+    assert resolve_evaluator(high, big_n, big_f) == "sequential"
     # the replay reference path always scores sequentially
-    ref = SchedulerConfig(evaluator="vectorized", use_engine=False)
-    assert resolve_evaluator(ref, big_n, big_f) == "sequential"
+    for name in ("vectorized", "incremental", "parallel"):
+        ref = SchedulerConfig(evaluator=name, use_engine=False)
+        assert resolve_evaluator(ref, big_n, big_f) == "sequential"
     forced = SchedulerConfig(evaluator="vectorized")
     assert resolve_evaluator(forced, 1, 1) == "vectorized"
 
@@ -199,3 +217,114 @@ def test_resolve_evaluator_dispatch():
 def test_empty_batch():
     res = schedule_batch([], A100, SchedulerConfig(evaluator="vectorized"))
     assert res.makespan == 0.0 and res.family_size == 1
+
+
+# -- incremental delta-replay evaluator -------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+@pytest.mark.parametrize("n", [1, 2, 7, 24, 60])
+@pytest.mark.parametrize("integer", [False, True])
+def test_incremental_matches_sequential(spec_name, n, integer):
+    """The delta-replay evaluator inherits the full bit-identity
+    contract, including the tie-dense integer workloads that stress the
+    snapshot/restore divergence rules at every rank."""
+    spec = SPECS[spec_name]
+    tasks = make_tasks(n, spec, seed=n * 7 + integer, integer=integer)
+    for prune in (True, False):
+        rs = schedule_batch(tasks, spec, SchedulerConfig(
+            evaluator="sequential", prune=prune, refine=False))
+        ri = schedule_batch(tasks, spec, SchedulerConfig(
+            evaluator="incremental", prune=prune, refine=False))
+        assert_identical(rs, ri)
+
+
+@pytest.mark.parametrize("spec_name", ["A100", "TPU"])
+def test_incremental_python_fallback_matches(spec_name):
+    """Without a C compiler the evaluator resimulates in pure Python —
+    identical winners, no compiled backend involved."""
+    from repro.core import fastsim
+
+    spec = SPECS[spec_name]
+    tasks = make_tasks(24, spec, seed=5)
+    saved = fastsim._LOADED
+    fastsim._LOADED = None  # simulate a failed build for this process
+    try:
+        for prune in (True, False):
+            rs = schedule_batch(tasks, spec, SchedulerConfig(
+                evaluator="sequential", prune=prune, refine=False))
+            ri = schedule_batch(tasks, spec, SchedulerConfig(
+                evaluator="incremental", prune=prune, refine=False))
+            assert_identical(rs, ri)
+    finally:
+        fastsim._LOADED = saved
+
+
+def test_incremental_with_refine():
+    spec = A100
+    tasks = make_tasks(40, spec, seed=3)
+    rs = schedule_batch(tasks, spec, SchedulerConfig(evaluator="sequential"))
+    ri = schedule_batch(tasks, spec, SchedulerConfig(evaluator="incremental"))
+    assert rs.makespan == ri.makespan
+    assert rs.schedule.items == ri.schedule.items
+    assert rs.schedule.reconfigs == ri.schedule.reconfigs
+
+
+def test_incremental_single_candidate_family():
+    """A family of one (no deltas) never arms a trigger."""
+    spec = A100
+    tasks = [Task(id=0, times={s: 10.0 / s for s in spec.sizes})]
+    first, deltas = allocation_family_deltas(tasks, spec)
+    sub = deltas[:0]
+    cfg = SchedulerConfig(evaluator="incremental", refine=False)
+    rs = EVALUATORS["sequential"].evaluate(tasks, spec, first, sub, cfg)
+    ri = EVALUATORS["incremental"].evaluate(tasks, spec, first, sub, cfg)
+    assert rs.makespan == ri.makespan
+    assert rs.index == ri.index == 0
+    assert rs.assignment.node_tasks == ri.assignment.node_tasks
+
+
+def test_incremental_pruned_to_zero_window():
+    """All-ties integer durations can prune every non-first candidate;
+    the winner scan must still agree after the first score."""
+    spec = A30
+    tasks = [Task(id=i, times={s: 8.0 for s in spec.sizes})
+             for i in range(6)]  # no speedup: wider is strictly worse area
+    first, deltas = allocation_family_deltas(tasks, spec)
+    cfg = SchedulerConfig(evaluator="incremental", prune=True, refine=False)
+    rs = EVALUATORS["sequential"].evaluate(tasks, spec, first, deltas, cfg)
+    ri = EVALUATORS["incremental"].evaluate(tasks, spec, first, deltas, cfg)
+    assert rs.makespan == ri.makespan
+    assert rs.index == ri.index
+    assert rs.evaluated == ri.evaluated
+    assert rs.assignment.node_tasks == ri.assignment.node_tasks
+
+
+# -- parallel family sharding -----------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", ["A100", "TPU"])
+@pytest.mark.parametrize("prune", [True, False])
+def test_parallel_matches_sequential(spec_name, prune):
+    spec = SPECS[spec_name]
+    tasks = make_tasks(40, spec, seed=11)
+    rs = schedule_batch(tasks, spec, SchedulerConfig(
+        evaluator="sequential", prune=prune, refine=False))
+    rp = schedule_batch(tasks, spec, SchedulerConfig(
+        evaluator="parallel", prune=prune, refine=False,
+        parallel_workers=2))
+    assert_identical(rs, rp)
+
+
+def test_parallel_worker_count_invariance():
+    """The deterministic reduce makes the winner independent of the
+    worker count (chunk boundaries move, the ordered scan does not)."""
+    spec = A100
+    tasks = make_tasks(30, spec, seed=2)
+    results = [
+        schedule_batch(tasks, spec, SchedulerConfig(
+            evaluator="parallel", refine=False, parallel_workers=w))
+        for w in (1, 2, 3)
+    ]
+    for other in results[1:]:
+        assert_identical(results[0], other)

@@ -1,0 +1,111 @@
+"""Hypothesis property suite for evaluator bit-identity at scale.
+
+Randomized counterpart of the deterministic matrix in
+``test_family_eval.py``: on arbitrary specs and workloads — including
+all-ties integer durations, empty families, single-candidate families
+and pruned-to-zero windows — ``incremental`` (compiled or pure-Python
+fallback) and sharded-``parallel`` (2 workers) must return the exact
+winner tuple ``sequential`` does: index, allocation, makespan,
+``evaluated`` and assignment chains.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.allocations import allocation_family_deltas
+from repro.core.device_spec import A30, A100, H100, TPU_POD_256
+from repro.core.family_eval import EVALUATORS
+from repro.core.policy import SchedulerConfig
+from repro.core.problem import Task
+
+SPECS = {"A30": A30, "A100": A100, "H100": H100, "TPU": TPU_POD_256}
+
+
+@st.composite
+def family_cases(draw, max_tasks=24):
+    """(spec, tasks, prune): monotone profiles, sometimes integer-valued
+    (dense in exact duration and area ties, the divergence-rule stress),
+    sometimes empty or singleton batches (degenerate families)."""
+    spec = SPECS[draw(st.sampled_from(sorted(SPECS)))]
+    n = draw(st.integers(0, max_tasks))
+    integer = draw(st.booleans())
+    tasks = []
+    for i in range(n):
+        if integer:
+            t1 = float(draw(st.integers(1, 12)))
+        else:
+            t1 = draw(st.floats(0.5, 100.0, allow_nan=False))
+        times, cur = {}, t1
+        for s in spec.sizes:
+            if s == min(spec.sizes):
+                times[s] = cur
+            else:
+                if integer:
+                    cur = cur * (float(draw(st.integers(1, 4))) / 4.0)
+                else:
+                    cur = cur * draw(st.floats(0.3, 1.0))
+                times[s] = cur
+        tasks.append(Task(id=i, times=times))
+    return spec, tasks, draw(st.booleans())
+
+
+def _winner_tuple(res):
+    return (
+        res.makespan,
+        res.index,
+        res.allocation,
+        res.evaluated,
+        res.assignment.node_tasks if res.assignment is not None else None,
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(family_cases())
+def test_incremental_bit_identical(case):
+    spec, tasks, prune = case
+    first, deltas = allocation_family_deltas(tasks, spec)
+    cfg = SchedulerConfig(
+        evaluator="incremental", prune=prune, refine=False
+    )
+    rs = EVALUATORS["sequential"].evaluate(tasks, spec, first, deltas, cfg)
+    ri = EVALUATORS["incremental"].evaluate(tasks, spec, first, deltas, cfg)
+    assert _winner_tuple(rs) == _winner_tuple(ri)
+
+
+@settings(max_examples=25, deadline=None)
+@given(family_cases())
+def test_incremental_python_fallback_bit_identical(case):
+    from repro.core import fastsim
+
+    spec, tasks, prune = case
+    first, deltas = allocation_family_deltas(tasks, spec)
+    cfg = SchedulerConfig(
+        evaluator="incremental", prune=prune, refine=False
+    )
+    rs = EVALUATORS["sequential"].evaluate(tasks, spec, first, deltas, cfg)
+    saved = fastsim._LOADED
+    fastsim._LOADED = None
+    try:
+        ri = EVALUATORS["incremental"].evaluate(
+            tasks, spec, first, deltas, cfg
+        )
+    finally:
+        fastsim._LOADED = saved
+    assert _winner_tuple(rs) == _winner_tuple(ri)
+
+
+@settings(max_examples=15, deadline=None)
+@given(family_cases(max_tasks=16))
+def test_parallel_two_workers_bit_identical(case):
+    spec, tasks, prune = case
+    first, deltas = allocation_family_deltas(tasks, spec)
+    cfg = SchedulerConfig(
+        evaluator="parallel", prune=prune, refine=False, parallel_workers=2
+    )
+    rs = EVALUATORS["sequential"].evaluate(tasks, spec, first, deltas, cfg)
+    rp = EVALUATORS["parallel"].evaluate(tasks, spec, first, deltas, cfg)
+    assert _winner_tuple(rs) == _winner_tuple(rp)

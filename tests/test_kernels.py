@@ -133,3 +133,49 @@ def test_slstm_cell_vs_ref(b, t, h, d, chunk, dtype):
     ref = slstm_cell_ref(zx, ix, fx, ox, rz, ri, rf, ro)
     err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
     assert float(err) < (5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("spec_name", ["A30", "A100", "TPU"])
+@pytest.mark.parametrize("C,L,integer", [
+    (1, 1, False), (3, 7, True), (8, 21, False), (13, 40, True),
+])
+def test_chains_makespan_vs_ref_bit_exact(spec_name, C, L, integer):
+    """Unlike the model kernels, the scheduler kernel's contract is
+    bit-exactness, not a tolerance: phase-2 winner selection breaks EPS
+    ties by index, so a single ulp could flip a winner."""
+    import numpy as np
+
+    from repro.core.device_spec import A30, A100, TPU_POD_256
+    from repro.kernels.chains_makespan.ops import chains_makespan_batch_pallas
+    from repro.kernels.chains_makespan.ref import chains_makespan_batch_ref
+
+    spec = {"A30": A30, "A100": A100, "TPU": TPU_POD_256}[spec_name]
+    N = len(spec.nodes)
+    rng = np.random.default_rng(C * 31 + L)
+    lens = rng.integers(0, L + 1, size=(C, N)).astype(np.int32)
+    lens[0] = 0  # empty candidate: makespan 0 by definition
+    durs = np.zeros((C, N, L))
+    for c in range(C):
+        for j in range(N):
+            k = lens[c, j]
+            vals = rng.uniform(0.5, 4.0, size=k)
+            if integer:  # tie-dense chains stress the (when, seq) order
+                vals = np.floor(vals * 2.0) / 2.0
+            durs[c, j, :k] = vals
+    ref = chains_makespan_batch_ref(spec, durs, lens)
+    out = chains_makespan_batch_pallas(spec, durs, lens, interpret=True)
+    assert np.array_equal(ref, out)
+
+
+def test_chains_makespan_pallas_empty_batch():
+    import numpy as np
+
+    from repro.core.device_spec import A100
+    from repro.kernels.chains_makespan.ops import chains_makespan_batch_pallas
+
+    N = len(A100.nodes)
+    out = chains_makespan_batch_pallas(
+        A100, np.zeros((0, N, 1)), np.zeros((0, N), dtype=np.int32),
+        interpret=True,
+    )
+    assert out.shape == (0,)

@@ -41,6 +41,7 @@ from repro.core.faults import (
 )
 from repro.core.online import completion_floor
 from repro.core.policy import SchedulerConfig, get_policy
+from repro.core.problem import Task
 from repro.core.service import SchedulingService
 from repro.core.sharded import ShardedSchedulingService
 from repro.core.synth import generate_cluster_tasks, generate_tasks, workload
@@ -210,6 +211,33 @@ def test_fast_reject_implies_no_placement():
     assert rejected, "stream was meant to saturate the admission gate"
     placed = {it.task.id for s in sh.shard_schedules() for it in s.items}
     assert not rejected & placed
+
+
+def test_envelope_refreshes_on_completion_report():
+    """Runtime completions widen the admission window immediately: a
+    deadline task fast-rejected against a committed long-running
+    placement is admitted once that placement's early completion lands
+    via ``report(..., "completed")`` — with no ``pump()`` in between, so
+    the refresh must come from the report routing itself."""
+    cfg = SchedulerConfig(admission="reject", max_wait_s=0.0,
+                          min_batch=1, max_batch=8)
+    sh = ShardedSchedulingService(A100, shards=1, config=cfg, defer=True)
+    # strong scaling -> molded to the full GPU, blocking every cell
+    hog = Task(id=0, times={s: 700.0 / s for s in A100.sizes})
+    assert sh.submit(hog, arrival=0.0) == "queued"
+    sh.pump(0.5)  # commit the hog; it now runs until ~t=100
+    probe = {s: 5.0 for s in A100.sizes}
+    late = sh.submit(Task(id=1, times=probe), arrival=1.0, deadline=20.0)
+    assert late == "rejected"
+    assert sh.scale.fast_rejected == [1]
+    # the hog finishes early; the completion report alone (no pump)
+    # must drop the stale envelope so the retry clears the gate
+    sh.report(0, "completed", 2.0, end=2.0)
+    retry = sh.submit(Task(id=2, times=probe), arrival=2.0, deadline=20.0)
+    assert retry == "queued"
+    assert sh.scale.fast_rejected == [1]
+    # shard selection's tail-load figure tracked the shrink too
+    assert sh._tail_load[0] == 0.0
 
 
 def test_no_placement_before_submit_decision():
